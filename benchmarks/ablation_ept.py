@@ -1,0 +1,69 @@
+"""Tables 2-3 + App. B: EPT count / knowledge-distillation ablations.
+
+Trains prompt tokens under each setting on the shared frozen base model
+and reports prediction accuracy at distances 1-2 (the paper's metric) —
+EPT in {1, 2, 4}, KD on vs off (hard labels), and the ensemble-mask
+variants (App. B.5) via the mask_mode switch.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from repro.core import init_prompt_params
+from repro.training.train_loop import train_prompt_tokens
+
+from .common import M, RESULTS, csv_line, get_trained, pipeline
+from .fig6_accuracy import _eval_sequences, ppd_accuracy
+
+
+def run(fast: bool = False):
+    params, _, _, cfg = get_trained(fast)
+    pipe = pipeline()
+    steps = 80 if fast else 150
+    seqs = _eval_sequences(params, cfg, pipe, *((3, 24, 40) if fast
+                                                else (6, 32, 56)))
+    plen = 24 if fast else 32
+
+    out = {}
+    csv_line("ablation", "setting", "@1top1", "@1top5", "@2top1", "@2top5")
+
+    def evaluate(tag, ppd, n_ept):
+        acc = ppd_accuracy(params, ppd, cfg, seqs, plen, n_ept=n_ept)
+        csv_line("ablation", tag, f"{acc[0, 0]:.3f}", f"{acc[0, 4]:.3f}",
+                 f"{acc[1, 0]:.3f}", f"{acc[1, 4]:.3f}")
+        out[tag] = acc.tolist()
+        return acc
+
+    for n_ept in (1, 2, 4):
+        ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=M,
+                                 n_ept=n_ept, base_embed=params["embed"])
+        ppd, _ = train_prompt_tokens(params, ppd, cfg, pipe, steps=steps,
+                                     m=M, n_ept=n_ept, lr=3e-2,
+                                     verbose=False)
+        evaluate(f"ept{n_ept}_kd", ppd, n_ept)
+
+    # KD off (hard labels)
+    ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=M,
+                             base_embed=params["embed"])
+    ppd, _ = train_prompt_tokens(params, ppd, cfg, pipe, steps=steps, m=M,
+                                 lr=3e-2, verbose=False, hard_labels=True)
+    evaluate("ept1_nokd", ppd, 1)
+
+    # short vs long training (epochs ablation analogue)
+    ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=M,
+                             base_embed=params["embed"])
+    ppd, _ = train_prompt_tokens(params, ppd, cfg, pipe, steps=steps // 4,
+                                 m=M, lr=3e-2, verbose=False)
+    evaluate("ept1_kd_quarter_steps", ppd, 1)
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "ablation_ept.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,179 @@
+"""Shared benchmark substrate.
+
+Trains the demo-scale base model + PPD prompt tokens + Medusa heads ONCE
+and caches everything under ``benchmarks/results/bench_ckpt`` — every
+paper-table benchmark then reuses the same trained artifacts (mirroring
+the paper, where all tables share one trained PPD/Vicuna pair).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.demo import CONFIG as DEMO_CFG
+from repro.core import (device_buffers, init_ppd_state, init_prompt_params,
+                        mk_default_tree, ppd_decode_step,
+                        vanilla_decode_step)
+from repro.data.pipeline import DataPipeline
+from repro.models import forward, init_cache, init_params
+
+M = 3
+CKPT = os.path.join(os.path.dirname(__file__), "results", "bench_ckpt")
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def pipeline(seq_len=192, batch=8):
+    return DataPipeline(DEMO_CFG.vocab_size, seq_len, batch, seed=0)
+
+
+def get_trained(fast: bool = False, n_ept: int = 1, force: bool = False):
+    """Returns (params, ppd, medusa_heads, cfg); trains + caches on first
+    call.  ``fast`` shrinks steps for smoke runs."""
+    from repro.models.medusa import init_medusa, medusa_distill_loss
+    from repro.training.optim import adamw_init, adamw_update
+    from repro.training.train_loop import pretrain_base, train_prompt_tokens
+
+    tag = f"ept{n_ept}" + ("_fast" if fast else "")
+    path = f"{CKPT}_{tag}"
+    cfg = DEMO_CFG
+    if os.path.exists(os.path.join(path, "manifest.json")) and not force:
+        tree, meta = load_checkpoint(path)
+        return (jax.tree.map(jnp.asarray, tree["params"]),
+                jax.tree.map(jnp.asarray, tree["ppd"]),
+                jax.tree.map(jnp.asarray, tree["medusa"]), cfg)
+
+    base_steps, ppd_steps, med_steps = ((80, 100, 60) if fast
+                                        else (300, 400, 200))
+    pipe = pipeline()
+    print(f"[common] training bench artifacts ({tag}): base {base_steps} "
+          f"/ ppd {ppd_steps} / medusa {med_steps} steps")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    params = pretrain_base(params, cfg, pipe, steps=base_steps, lr=3e-3,
+                           verbose=False)
+    ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=M, n_ept=n_ept,
+                             base_embed=params["embed"])
+    ppd, _ = train_prompt_tokens(params, ppd, cfg, pipe, steps=ppd_steps,
+                                 m=M, n_ept=n_ept, lr=3e-2, verbose=False)
+
+    heads = init_medusa(cfg, jax.random.PRNGKey(2), m=M)
+    opt = adamw_init(heads)
+
+    @jax.jit
+    def mstep(heads, opt, toks):
+        loss, g = jax.value_and_grad(
+            lambda h: medusa_distill_loss(params, h, cfg, toks, m=M))(heads)
+        heads, opt = adamw_update(g, opt, heads, lr=2e-3)
+        return heads, opt, loss
+
+    for batch in pipe.batches(med_steps):
+        heads, opt, _ = mstep(heads, opt, jnp.asarray(batch))
+
+    save_checkpoint(path, {"params": params, "ppd": ppd, "medusa": heads},
+                    {"tag": tag})
+    return params, ppd, heads, cfg
+
+
+# ------------------------------------------------------------- generation
+def generate_vanilla(params, cfg, prompt, n_new, capacity=512):
+    cache = init_cache(cfg, 1, capacity)
+    t0 = time.time()
+    logits, cache, _, _ = forward(params, cfg, prompt, cache=cache)
+    tok = jnp.argmax(logits[:, -1], -1)
+    out = [int(tok[0])]
+    step = jax.jit(lambda c, t: vanilla_decode_step(params, cfg, c, t))
+    while len(out) < n_new:
+        cache, tok, _ = step(cache, tok)
+        out.append(int(tok[0]))
+    return out, len(out), time.time() - t0
+
+
+def generate_ppd(params, ppd, cfg, prompt, n_new, bufs=None, n_ept=1,
+                 capacity=512, temperature=0.0):
+    bufs = bufs if bufs is not None else device_buffers(
+        mk_default_tree(M, n_ept=n_ept), M, n_ept)
+    cache = init_cache(cfg, 1, capacity)
+    t0 = time.time()
+    logits, cache, _, _ = forward(params, cfg, prompt, cache=cache)
+    first = jnp.argmax(logits[:, -1], -1)
+    st = init_ppd_state(cfg, cache, first, M, n_ept,
+                        kmax=bufs.get("_kmax", 10))
+    out, steps = [int(first[0])], 1
+    key = jax.random.PRNGKey(0)
+    step = jax.jit(lambda s, k: ppd_decode_step(
+        params, ppd, cfg, bufs, s, m=M, n_ept=n_ept,
+        temperature=temperature, key=k))
+    while len(out) < n_new:
+        key, sub = jax.random.split(key)
+        st, info = step(st, sub)
+        steps += 1
+        for t in np.asarray(info["accepted_path_tokens"])[0][1:]:
+            if t >= 0:
+                out.append(int(t))
+        out.append(int(np.asarray(st.root_token)[0]))
+    return out[:n_new], steps, time.time() - t0
+
+
+def generate_medusa(params, heads, cfg, prompt, n_new, capacity=512):
+    from repro.models.medusa import (medusa_decode_step, medusa_heads,
+                                     medusa_states)
+    bufs = device_buffers(medusa_states(M), M)
+    cache = init_cache(cfg, 1, capacity)
+    t0 = time.time()
+    logits, cache, _, _, hidden = forward(params, cfg, prompt, cache=cache,
+                                          return_hidden=True)
+    first = jnp.argmax(logits[:, -1], -1)
+    st = init_ppd_state(cfg, cache, first, M, kmax=bufs.get("_kmax", 10))
+    g0 = medusa_heads(heads, hidden[:, -1])
+    gv, gi = jax.lax.top_k(g0, bufs.get("_kmax", 10))
+    st = st._replace(guess_vals=gv.astype(jnp.float32), guess_idx=gi)
+    out, steps = [int(first[0])], 1
+    step = jax.jit(lambda s: medusa_decode_step(params, heads, cfg, bufs, s,
+                                                m=M))
+    while len(out) < n_new:
+        st, info = step(st)
+        steps += 1
+        for t in np.asarray(info["accepted_path_tokens"])[0][1:]:
+            if t >= 0:
+                out.append(int(t))
+        out.append(int(np.asarray(st.root_token)[0]))
+    return out[:n_new], steps, time.time() - t0
+
+
+def measure_acc_curve(params, guess_fn, cfg, pipe, m=M, n_prompts=8,
+                      plen=48, steps=10, topk=10):
+    """Accumulative accuracy acc[d][topk] of ``guess_fn(state) -> [m,V]``
+    guesses against the model's own greedy continuation (Fig. 6)."""
+    hits = np.zeros((m, topk))
+    total = 0
+    prompts = pipe.val_prompts(n_prompts, plen)
+    for i in range(n_prompts):
+        p = jnp.asarray(prompts[i:i + 1])
+        cache = init_cache(cfg, 1, 512)
+        logits, cache, _, _ = forward(params, cfg, p, cache=cache)
+        tok = jnp.argmax(logits[:, -1], -1)
+        ref = []
+        c2, t2 = cache, tok
+        sv = jax.jit(lambda c, t: vanilla_decode_step(params, cfg, c, t))
+        for _ in range(steps + m + 1):
+            c2, t2, _ = sv(c2, t2)
+            ref.append(int(t2[0]))
+        for ptr, g in guess_fn(cache, tok, steps, ref):
+            if ptr + m >= len(ref):
+                break
+            top = np.argsort(-g, axis=-1)[:, :topk]
+            for d in range(m):
+                truth = ref[ptr + d]
+                hit = np.where(top[d] == truth)[0]
+                if hit.size:
+                    hits[d, hit[0]:] += 1
+            total += 1
+    return hits / max(total, 1)
+
+
+def csv_line(*fields):
+    print(",".join(str(f) for f in fields), flush=True)

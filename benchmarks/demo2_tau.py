@@ -1,0 +1,60 @@
+"""Supplementary: acceptance length at the LARGER demo scale (10L/d512).
+
+The paper (§D.1) and our fig6 both show prompt tokens need model
+depth/width; this table measures PPD τ / speedup on the bigger
+demo2 base (trained by the scale study) when its checkpoints exist.
+Skips silently otherwise.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint
+from repro.configs.demo import CONFIG
+from repro.data.pipeline import DataPipeline
+
+from .common import M, RESULTS, csv_line, generate_ppd, generate_vanilla
+
+BASE = os.path.join(RESULTS, "demo2_base")
+PPD = os.path.join(RESULTS, "demo2_ppd")
+
+
+def run(fast: bool = False):
+    if not (os.path.exists(os.path.join(BASE, "manifest.json"))
+            and os.path.exists(os.path.join(PPD, "manifest.json"))):
+        csv_line("demo2", "SKIPPED (no demo2 checkpoints — run the scale "
+                 "study first)")
+        return {}
+    cfg = CONFIG.replace(name="ppd-demo2-25m", n_layers=10, d_model=512,
+                         n_heads=8, n_kv_heads=8, head_dim=64, d_ff=1280)
+    params = jax.tree.map(jnp.asarray, load_checkpoint(BASE)[0]["params"])
+    ppd = jax.tree.map(jnp.asarray, load_checkpoint(PPD)[0]["ppd"])
+    pipe = DataPipeline(cfg.vocab_size, 32, 2, seed=0)
+    prompts = pipe.val_prompts(2, 32)
+    n_new = 48 if fast else 64
+    toks = steps = 0
+    wall_p = wall_v = 0.0
+    for i in range(2):
+        p = jnp.asarray(prompts[i:i + 1])
+        o, s, w = generate_ppd(params, ppd, cfg, p, n_new)
+        ref, _, wv = generate_vanilla(params, cfg, p, n_new)
+        assert o == ref, "PPD must match vanilla"
+        toks += len(o)
+        steps += s
+        wall_p += w
+        wall_v += wv
+    csv_line("demo2", "arch", "tau", "speedup_wall", "exact_match")
+    csv_line("demo2", cfg.name, f"{toks / steps:.2f}",
+             f"{wall_v / wall_p:.2f}", True)
+    out = {"tau": toks / steps, "speedup": wall_v / wall_p}
+    with open(os.path.join(RESULTS, "demo2_tau.json"), "w") as f:
+        json.dump(out, f)
+    return out
+
+
+if __name__ == "__main__":
+    run()

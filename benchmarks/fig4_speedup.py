@@ -1,0 +1,96 @@
+"""Fig. 4: latency speedup of PPD vs other guess-and-verify methods on the
+same trained base model: Medusa (trained heads), PLD (retrieval), classic
+spec-decode (trained small draft), and PPD.  All greedy, exact-match."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device_buffers, mk_default_tree, init_prompt_params
+from repro.models import init_params
+from repro.serving.pld import PromptLookupDecoder
+from repro.serving.spec_decode import SpeculativeDecoder
+from repro.training.train_loop import pretrain_base
+
+from .common import (M, RESULTS, csv_line, generate_medusa, generate_ppd,
+                     generate_vanilla, get_trained, pipeline)
+
+
+def run(fast: bool = False):
+    params, ppd, heads, cfg = get_trained(fast)
+    pipe = pipeline()
+    n_new = 48 if fast else 96
+    n_prompts = 2 if fast else 3
+    prompts = pipe.val_prompts(n_prompts, 32)
+
+    # small trained draft for classic spec-decode
+    dcfg = cfg.replace(name="demo-draft", n_layers=2, d_model=160,
+                       n_heads=4, n_kv_heads=4, head_dim=40, d_ff=384)
+    dparams = init_params(dcfg, jax.random.PRNGKey(3))
+    dparams = pretrain_base(dparams, dcfg, pipe,
+                            steps=(40 if fast else 150), lr=3e-3,
+                            verbose=False)
+
+    bufs = device_buffers(mk_default_tree(M), M)
+    res = {}
+
+    def record(name, toks, steps, wall, outs):
+        res[name] = dict(tok_per_s=toks / wall, steps=steps,
+                         tau=toks / steps, wall=wall,
+                         same=outs == res.get("vanilla", {}).get("_outs",
+                                                                 outs))
+        res[name]["_outs"] = outs
+
+    for name in ("vanilla", "ppd", "medusa", "pld", "spec"):
+        toks = steps = 0
+        wall = 0.0
+        outs = []
+        for i in range(n_prompts):
+            p = jnp.asarray(prompts[i:i + 1])
+            if name == "vanilla":
+                o, s, w = generate_vanilla(params, cfg, p, n_new)
+            elif name == "ppd":
+                o, s, w = generate_ppd(params, ppd, cfg, p, n_new, bufs)
+            elif name == "medusa":
+                o, s, w = generate_medusa(params, heads, cfg, p, n_new)
+            elif name == "pld":
+                dec = PromptLookupDecoder(params, cfg, gamma=4)
+                t0 = time.time()
+                o, s = dec.generate(prompts[i], n_new)
+                w = time.time() - t0
+                o = [int(x) for x in o]
+            else:
+                sd = SpeculativeDecoder(params, cfg, dparams, dcfg,
+                                        gamma=4)
+                t0 = time.time()
+                o, st = sd.generate(prompts[i], n_new)
+                w = time.time() - t0
+                s = st.target_steps + 1
+                o = [int(x) for x in o]
+            outs.append(list(o))
+            toks += len(o)
+            steps += s
+            wall += w
+        record(name, toks, steps, wall, outs)
+
+    base = res["vanilla"]["tok_per_s"]
+    csv_line("fig4", "method", "speedup", "tau", "same_output")
+    out = {}
+    for name, r in res.items():
+        csv_line("fig4", name, f"{r['tok_per_s'] / base:.2f}",
+                 f"{r['tau']:.2f}", r["same"])
+        out[name] = {k: v for k, v in r.items() if not k.startswith("_")}
+        out[name]["speedup"] = r["tok_per_s"] / base
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "fig4.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,171 @@
+"""Fig. 6 / Tables 2-3: accumulative (top-k) accuracy of the guesses at
+token distances 1..m — PPD prompt tokens vs Medusa heads, plus the EPT
+count sweep.
+
+Method: teacher-forced evaluation on [prompt ++ greedy continuation]:
+prompt-token chains are inserted at R known positions in ONE forward per
+sequence (the distillation layout), and guesses at distance d are scored
+against the actual token at p+d.  Medusa heads score from the hidden state
+at the same positions.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import forward, init_cache
+from repro.core import vanilla_decode_step
+from repro.models.medusa import medusa_heads
+from repro.training.distill import plan_insertions
+
+from .common import M, RESULTS, csv_line, get_trained, pipeline
+
+
+def _eval_sequences(params, cfg, pipe, n_prompts, plen, glen):
+    """Greedy continuations: returns [n, plen+glen] token matrix."""
+    seqs = []
+    prompts = pipe.val_prompts(n_prompts, plen)
+    step = jax.jit(lambda c, t: vanilla_decode_step(params, cfg, c, t))
+    for i in range(n_prompts):
+        p = jnp.asarray(prompts[i:i + 1])
+        cache = init_cache(cfg, 1, plen + glen + 8)
+        logits, cache, _, _ = forward(params, cfg, p, cache=cache)
+        tok = jnp.argmax(logits[:, -1], -1)
+        seq = list(prompts[i]) + [int(tok[0])]
+        while len(seq) < plen + glen:
+            cache, tok, _ = step(cache, tok)
+            seq.append(int(tok[0]))
+        seqs.append(seq)
+    return np.asarray(seqs, np.int32)
+
+
+def ppd_accuracy(params, ppd, cfg, seqs, plen, *, m=M, n_ept=1, R=8,
+                 topk=10):
+    """acc[d][k]: prompt-token guesses vs actual continuation tokens."""
+    B, S = seqs.shape
+    rng = np.random.default_rng(0)
+    points = np.stack([rng.choice(np.arange(plen, S - m - 1), size=R,
+                                  replace=False) for _ in range(B)])
+    plan = plan_insertions(None, B, S, R, m, n_ept, points=points)
+    emb = params["embed"]
+    tok_emb = emb[jnp.asarray(seqs)]
+    if cfg.scale_embeddings:
+        tok_emb = tok_emb * jnp.asarray(cfg.d_model ** 0.5, tok_emb.dtype)
+    pe = ppd["prompt_embed"].astype(tok_emb.dtype)
+    if cfg.scale_embeddings:
+        pe = pe * jnp.asarray(cfg.d_model ** 0.5, tok_emb.dtype)
+    block = jnp.tile(pe.transpose(1, 0, 2).reshape(1, n_ept * m, -1),
+                     (B, R, 1))
+    embeds = jnp.concatenate([tok_emb, block], axis=1)
+    logits, _, _, _ = forward(params, cfg, positions=plan.positions,
+                              embeds=embeds, extra_mask=plan.extra_mask,
+                              moe_exact=True)
+    student = logits[:, S:].reshape(B, R, n_ept, m, -1).mean(axis=2)
+    # truth at distance d for insertion point p is seqs[p + d]
+    hits = np.zeros((m, topk))
+    total = 0
+    st = np.asarray(student)
+    for b in range(B):
+        for r in range(R):
+            p = points[b, r]
+            for d in range(m):
+                truth = seqs[b, p + 2 + d]    # row p+1+d predicts p+2+d
+                top = np.argsort(-st[b, r, d])[:topk]
+                w = np.where(top == truth)[0]
+                if w.size:
+                    hits[d, w[0]:] += 1
+            total += 1
+    return hits / total
+
+
+def oracle_accuracy(params, cfg, seqs, plen, *, m=M, R=8, topk=10):
+    """Skyline: the TRUE future tokens' embeddings as the prompt chain.
+    By the oracle-plumbing identity (tests/test_training.py) this equals
+    the teacher's own accuracy at those rows — the upper bound any
+    trained prompt token can approach (paper §3.1)."""
+    B, S = seqs.shape
+    rng = np.random.default_rng(1)
+    points = np.stack([rng.choice(np.arange(plen, S - m - 2), size=R,
+                                  replace=False) for _ in range(B)])
+    plan = plan_insertions(None, B, S, R, m, 1, points=points)
+    emb = params["embed"]
+    blocks = []
+    for b in range(B):
+        rows = [np.asarray(emb[seqs[b, points[b, r] + j]])
+                for r in range(R) for j in range(1, m + 1)]
+        blocks.append(np.stack(rows))
+    embeds = jnp.concatenate([emb[jnp.asarray(seqs)],
+                              jnp.asarray(np.stack(blocks))], axis=1)
+    logits, _, _, _ = forward(params, cfg, positions=plan.positions,
+                              embeds=embeds, extra_mask=plan.extra_mask,
+                              moe_exact=True)
+    st = np.asarray(logits[:, S:]).reshape(B, R, m, -1)
+    hits = np.zeros((m, topk))
+    total = 0
+    for b in range(B):
+        for r in range(R):
+            p = points[b, r]
+            for d in range(m):
+                truth = seqs[b, p + 2 + d]     # row p+1+d predicts p+2+d
+                top = np.argsort(-st[b, r, d])[:topk]
+                w = np.where(top == truth)[0]
+                if w.size:
+                    hits[d, w[0]:] += 1
+            total += 1
+    return hits / total
+
+
+def medusa_accuracy(params, heads, cfg, seqs, plen, *, m=M, topk=10):
+    """acc[d][k]: head guesses from the hidden state at each position."""
+    B, S = seqs.shape
+    _, _, _, _, hidden = forward(params, cfg, jnp.asarray(seqs),
+                                 moe_exact=True, return_hidden=True)
+    hl = np.asarray(medusa_heads(heads, hidden))          # [B,m,S,V]
+    hits = np.zeros((m, topk))
+    total = 0
+    for b in range(B):
+        for p in range(plen, S - m - 2):
+            for d in range(m):
+                truth = seqs[b, p + 2 + d]    # head d at p predicts p+2+d
+                top = np.argsort(-hl[b, d, p])[:topk]
+                w = np.where(top == truth)[0]
+                if w.size:
+                    hits[d, w[0]:] += 1
+            total += 1
+    return hits / total
+
+
+def run(fast: bool = False):
+    params, ppd, heads, cfg = get_trained(fast)
+    pipe = pipeline()
+    n_prompts, plen, glen = (4, 24, 40) if fast else (8, 32, 64)
+    seqs = _eval_sequences(params, cfg, pipe, n_prompts, plen, glen)
+
+    acc_ppd = ppd_accuracy(params, ppd, cfg, seqs, plen)
+    acc_med = medusa_accuracy(params, heads, cfg, seqs, plen)
+    acc_orc = oracle_accuracy(params, cfg, seqs, plen)
+
+    csv_line("fig6", "method", "dist", "top1", "top5", "top10")
+    for name, acc in (("ppd", acc_ppd), ("medusa", acc_med),
+                      ("oracle_skyline", acc_orc)):
+        for d in range(M):
+            csv_line("fig6", name, d + 1, f"{acc[d, 0]:.3f}",
+                     f"{acc[d, 4]:.3f}", f"{acc[d, 9]:.3f}")
+    out = {"ppd": acc_ppd.tolist(), "medusa": acc_med.tolist(),
+           "oracle_skyline": acc_orc.tolist()}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "fig6.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    # paper claim (Fig. 6a): PPD's advantage GROWS with distance
+    gap = acc_ppd[:, 9] - acc_med[:, 9]
+    csv_line("fig6", "top10_gap_by_dist",
+             *[f"{g:+.3f}" for g in gap])
+    return out
+
+
+if __name__ == "__main__":
+    run()

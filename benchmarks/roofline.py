@@ -1,0 +1,85 @@
+"""Roofline report: reads the dry-run artifacts and prints the per-
+(arch x shape x mesh) three-term roofline table (EXPERIMENTS.md §Roofline).
+Run the dry-runs first:  python -m repro.launch.dryrun --all [--multi-pod].
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import RESULTS, csv_line
+
+DRYRUN_DIR = os.path.join(RESULTS, "dryrun")
+
+
+def scan_correction(arch: str) -> float:
+    """XLA's cost_analysis counts a lax.scan body ONCE, not n_rep times.
+    The dry-run compiles layers as a scan (HLO-size optimization), so the
+    reported flops/bytes undercount the layer stack by roughly
+    (total layers) / (layers outside scan + scan period).  This factor
+    corrects the COMPUTE and MEMORY terms; collectives inside the scan are
+    similarly undercounted, so the correction is applied to all three.
+    (Vocab/embedding work outside the scan is counted once correctly —
+    the correction is an upper bound for vocab-heavy archs.)"""
+    from repro.configs import get_config
+    from repro.models.config import scan_plan
+    cfg = get_config(arch)
+    o, per, n_rep = scan_plan(cfg)
+    if n_rep == 0:
+        return 1.0
+    tail = cfg.n_layers - o - per * n_rep
+    compiled_layers = o + per + tail
+    return cfg.n_layers / max(compiled_layers, 1)
+
+
+def load_records(mesh=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh is None or r["mesh"] == mesh:
+            recs.append(r)
+    return recs
+
+
+def run(fast: bool = False):
+    recs = load_records()
+    if not recs:
+        csv_line("roofline", "NO DRY-RUN RESULTS — run "
+                 "python -m repro.launch.dryrun --all first")
+        return {}
+    csv_line("roofline", "arch", "shape", "mesh", "variant", "t_compute_s",
+             "t_memory_s", "t_collective_s", "dominant", "scan_corr",
+             "useful_ratio", "peak_GB_per_dev")
+    out = {}
+    for r in recs:
+        roof = r["roofline"]
+        mem = r["bytes_per_device"]
+        peak = max(v for v in (mem.get("temp") or 0,
+                               mem.get("argument") or 0) if v is not None)
+        corr = scan_correction(r["arch"])
+        csv_line("roofline", r["arch"], r["shape"], r["mesh"],
+                 r.get("variant", "") or "base",
+                 f"{roof['t_compute_s'] * corr:.2e}",
+                 f"{roof['t_memory_s'] * corr:.2e}",
+                 f"{roof['t_collective_s'] * corr:.2e}", roof["dominant"],
+                 f"{corr:.1f}",
+                 f"{r['model_flops_ratio'] / corr:.2f}",
+                 f"{peak / 2**30:.1f}")
+        key = f"{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("variant"):
+            key += "_" + r["variant"]
+        out[key] = dict(roof, scan_corr=corr)
+    # aggregate: dominant-term histogram
+    hist = {}
+    for r in recs:
+        hist[r["roofline"]["dominant"]] = hist.get(
+            r["roofline"]["dominant"], 0) + 1
+    csv_line("roofline", "dominant_histogram",
+             *[f"{k}={v}" for k, v in sorted(hist.items())])
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  python -m benchmarks.run [--fast] [--only table1,fig4,...]
+
+Emits CSV lines (``<table>,<fields...>``) and writes per-table JSON under
+benchmarks/results/.  The roofline table reads the dry-run artifacts
+(python -m repro.launch.dryrun --all).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+SUITES = ("table1", "fig4", "fig6", "fig7", "fig8", "ablation",
+          "demo2", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced steps/prompts (smoke run)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    from . import (ablation_ept, demo2_tau, fig4_speedup, fig6_accuracy,
+                   fig7_memory, fig8_tree, roofline, table1_throughput)
+    mods = {"table1": table1_throughput, "fig4": fig4_speedup,
+            "fig6": fig6_accuracy, "fig7": fig7_memory,
+            "fig8": fig8_tree, "ablation": ablation_ept,
+            "demo2": demo2_tau, "roofline": roofline}
+
+    failures = []
+    for name in SUITES:
+        if name not in only:
+            continue
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mods[name].run(fast=args.fast)
+            print(f"=== {name} done in {time.time() - t0:.0f}s ===",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("all benchmarks OK")
+
+
+if __name__ == "__main__":
+    main()

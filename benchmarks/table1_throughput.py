@@ -1,0 +1,83 @@
+"""Table 1: throughput T, accept length tau, forward-pass latency L_fp,
+trainable-parameter %, tree size and input length — vanilla vs Medusa vs
+PPD on the shared trained demo model (greedy; PPD output == vanilla)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device_buffers, mk_default_tree, prompt_param_count
+from repro.models.config import param_count
+from repro.models.medusa import medusa_param_count
+
+from .common import (CKPT, M, RESULTS, csv_line, generate_medusa,
+                     generate_ppd, generate_vanilla, get_trained, pipeline)
+
+
+def run(fast: bool = False):
+    params, ppd, heads, cfg = get_trained(fast)
+    pipe = pipeline()
+    n_new = 48 if fast else 96
+    n_prompts = 2 if fast else 4
+    prompts = pipe.val_prompts(n_prompts, 32)
+
+    bufs = device_buffers(mk_default_tree(M), M)
+    tree_nodes = int(bufs["node_type"].shape[1])
+
+    rows = {}
+    for name in ("vanilla", "medusa", "ppd"):
+        toks = steps = wall = 0
+        outs = []
+        for i in range(n_prompts):
+            p = jnp.asarray(prompts[i:i + 1])
+            if name == "vanilla":
+                o, s, w = generate_vanilla(params, cfg, p, n_new)
+            elif name == "medusa":
+                o, s, w = generate_medusa(params, heads, cfg, p, n_new)
+            else:
+                o, s, w = generate_ppd(params, ppd, cfg, p, n_new, bufs)
+            outs.append(o)
+            toks += len(o)
+            steps += s
+            wall += w
+        n_base = param_count(cfg)
+        p_tr = {"vanilla": 0,
+                "medusa": medusa_param_count(cfg, M),
+                "ppd": prompt_param_count(cfg, M)}[name]
+        rows[name] = dict(
+            throughput=toks / wall, tau=toks / steps,
+            l_fp=wall / steps, p_tr_pct=100.0 * p_tr / n_base,
+            s_tree=(tree_nodes if name != "vanilla" else 1),
+            s_input=(tree_nodes if name != "vanilla" else 1),
+            outputs=outs)
+
+    # quality: greedy outputs must match vanilla exactly for PPD
+    same_ppd = rows["ppd"]["outputs"] == rows["vanilla"]["outputs"]
+    same_med = rows["medusa"]["outputs"] == rows["vanilla"]["outputs"]
+
+    csv_line("table1", "method", "tok_per_s", "speedup", "tau", "l_fp_s",
+             "p_tr_pct", "tree_size", "output_same_as_vanilla")
+    base_tp = rows["vanilla"]["throughput"]
+    out = {}
+    for name, r in rows.items():
+        same = {"vanilla": True, "ppd": same_ppd, "medusa": same_med}[name]
+        csv_line("table1", name, f"{r['throughput']:.2f}",
+                 f"{r['throughput'] / base_tp:.2f}", f"{r['tau']:.2f}",
+                 f"{r['l_fp']:.4f}", f"{r['p_tr_pct']:.2e}", r["s_tree"],
+                 same)
+        out[name] = {k: v for k, v in r.items() if k != "outputs"}
+        out[name]["same_output"] = bool(same)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "table1.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    assert same_ppd, "PPD greedy output must equal vanilla (paper: 'Same')"
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""PPD x speculative decoding (paper §5.3).
+
+PPD is orthogonal to classic draft-model speculative decoding: the paper
+applies PPD to the *draft* (Vicuna-68M) and uses it to speculate for the
+*target* (Vicuna-7B), gaining up to 1.22x over spec-decode alone.  This
+example reproduces the composition at CPU scale:
+
+  * target  = demo decoder (6L/320d)
+  * draft   = same-family 2L/128d model, distilled from nothing (random
+    proxy here; the benchmark uses trained models)
+  * spec-decode with a vanilla draft   vs   spec-decode with a PPD draft
+
+The composition's win: the PPD draft produces its gamma proposals in
+fewer draft forward passes, so the draft-side latency drops while the
+target-side acceptance stays the same.
+
+Run:  PYTHONPATH=src python examples/ppd_plus_spec_decode.py
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.demo import CONFIG as TARGET_CFG
+from repro.core import init_prompt_params
+from repro.data.pipeline import DataPipeline
+from repro.models import init_params
+from repro.serving.spec_decode import SpeculativeDecoder
+from repro.training.train_loop import pretrain_base, train_prompt_tokens
+
+DRAFT_CFG = TARGET_CFG.replace(name="ppd-demo-draft", n_layers=3,
+                               d_model=160, n_heads=4, n_kv_heads=4,
+                               head_dim=40, d_ff=384)
+M, GAMMA = 3, 4
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train-steps", type=int, default=120,
+                    help="quick co-training so draft/target agree")
+    ap.add_argument("--n-new", type=int, default=64)
+    args = ap.parse_args()
+
+    pipe = DataPipeline(TARGET_CFG.vocab_size, 160, 8, seed=0)
+    print("== training target + draft on the same synthetic language ==")
+    tparams = init_params(TARGET_CFG, jax.random.PRNGKey(0))
+    tparams = pretrain_base(tparams, TARGET_CFG, pipe,
+                            steps=args.train_steps, lr=3e-3, verbose=False)
+    dparams = init_params(DRAFT_CFG, jax.random.PRNGKey(1))
+    dparams = pretrain_base(dparams, DRAFT_CFG, pipe,
+                            steps=args.train_steps, lr=3e-3, verbose=False)
+    print("== distilling prompt tokens into the DRAFT (paper §5.3) ==")
+    ppd = init_prompt_params(DRAFT_CFG, jax.random.PRNGKey(2), m=M,
+                             base_embed=dparams["embed"])
+    ppd, _ = train_prompt_tokens(dparams, ppd, DRAFT_CFG, pipe, steps=100,
+                                 m=M, lr=3e-2, verbose=False)
+
+    prompt = pipe.val_prompts(1, 32)[0]
+
+    print("== spec-decode: vanilla draft ==")
+    sd = SpeculativeDecoder(tparams, TARGET_CFG, dparams, DRAFT_CFG,
+                            gamma=GAMMA)
+    t0 = time.time()
+    out_v, st_v = sd.generate(prompt, args.n_new)
+    t_v = time.time() - t0
+    print(f"  {st_v.tokens} tokens | target steps {st_v.target_steps} "
+          f"(accept-len {st_v.accept_len:.2f}) | draft steps "
+          f"{st_v.draft_steps} | {t_v:.1f}s")
+
+    print("== spec-decode: PPD-accelerated draft ==")
+    sp = SpeculativeDecoder(tparams, TARGET_CFG, dparams, DRAFT_CFG,
+                            gamma=GAMMA, ppd_params=ppd, m=M)
+    t0 = time.time()
+    out_p, st_p = sp.generate(prompt, args.n_new)
+    t_p = time.time() - t0
+    print(f"  {st_p.tokens} tokens | target steps {st_p.target_steps} "
+          f"(accept-len {st_p.accept_len:.2f}) | draft steps "
+          f"{st_p.draft_steps} | {t_p:.1f}s")
+
+    same = np.array_equal(out_v, out_p)
+    print(f"outputs identical: {same} "
+          "(both equal the target's greedy output by construction)")
+    saved = 1 - st_p.draft_steps / max(st_v.draft_steps, 1)
+    print(f"draft forward passes saved by PPD: {saved:.0%} "
+          f"-> combined speedup {t_v / t_p:.2f}x over vanilla-draft "
+          "spec-decode")
+
+
+if __name__ == "__main__":
+    main()

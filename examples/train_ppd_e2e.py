@@ -1,0 +1,165 @@
+"""End-to-end PPD pipeline (the paper's full recipe at CPU-runnable scale):
+
+  1. pretrain a base decoder on the synthetic dialogue language (stands in
+     for the published Vicuna checkpoint — offline environment);
+  2. freeze it and distill 3 prompt-token embeddings against its own
+     logits (paper §3.3: KD loss w/ per-distance decay, random insertion);
+  3. calibrate per-distance accumulative accuracy on a validation split
+     and build the DYNAMIC SPARSE TREE (paper §4, Props 4.1-4.4);
+  4. measure acceptance length + walltime speedup vs vanilla decoding,
+     and save the trained prompt tokens.
+
+Run:  PYTHONPATH=src python examples/train_ppd_e2e.py [--fast]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.demo import CONFIG
+from repro.core import (best_split, device_buffers, init_ppd_state,
+                        init_prompt_params, mk_default_tree, ppd_decode_step,
+                        vanilla_decode_step)
+from repro.data.pipeline import DataPipeline
+from repro.models import forward, init_cache, init_params
+from repro.training.train_loop import pretrain_base, train_prompt_tokens
+
+M = 3
+
+
+def measure_accuracy(params, ppd, cfg, pipe, m, n_prompts=16, plen=48,
+                     steps=12, topk=10):
+    """Accumulative accuracy acc[d][j] of the prompt-token guesses vs the
+    model's own greedy continuation (the paper's Fig. 6 measurement)."""
+    from repro.core import mk_default_tree, device_buffers
+    bufs = device_buffers(mk_default_tree(m), m)
+    prompts = pipe.val_prompts(n_prompts, plen)
+    hits = np.zeros((m, topk))
+    total = 0
+    step = jax.jit(lambda s: ppd_decode_step(params, ppd, cfg, bufs, s,
+                                             m=m))
+    for i in range(n_prompts):
+        cache = init_cache(cfg, 1, 512)
+        logits, cache, _, _ = forward(params, cfg,
+                                      jnp.asarray(prompts[i:i + 1]),
+                                      cache=cache)
+        tok = jnp.argmax(logits[:, -1], -1)
+        st = init_ppd_state(cfg, cache, tok, m, kmax=bufs["_kmax"])
+        # greedy reference continuation
+        ref = []
+        c2 = cache
+        t2 = tok
+        for _ in range(steps + m + 1):
+            c2, t2, _ = vanilla_decode_step(params, cfg, c2, t2)
+            ref.append(int(t2[0]))
+        # walk PPD steps; compare guess top-k at each distance
+        ptr = 0
+        for _ in range(steps):
+            st, info = step(st)
+            top = np.asarray(st.guess_idx)[0]               # [m,kmax] ranked
+            acc_path = np.asarray(info["accepted_path_tokens"])[0]
+            n_adv = sum(1 for t in acc_path[1:] if t >= 0) + 1
+            ptr += n_adv
+            if ptr + m >= len(ref):
+                break
+            for d in range(m):
+                truth = ref[ptr + d]
+                for j in range(min(topk, top.shape[1])):
+                    if truth in top[d, :j + 1]:
+                        hits[d, j:] += 1
+                        break
+            total += 1
+    return hits / max(total, 1)
+
+
+def generate_ppd(params, ppd, cfg, bufs, prompt, n_new, m):
+    cache = init_cache(cfg, 1, 512)
+    logits, cache, _, _ = forward(params, cfg, prompt, cache=cache)
+    first = jnp.argmax(logits[:, -1], -1)
+    st = init_ppd_state(cfg, cache, first, m, kmax=bufs["_kmax"])
+    out, steps = [int(first[0])], 0
+    step = jax.jit(lambda s: ppd_decode_step(params, ppd, cfg, bufs, s, m=m))
+    while len(out) < n_new:
+        st, info = step(st)
+        steps += 1
+        for t in np.asarray(info["accepted_path_tokens"])[0][1:]:
+            if t >= 0:
+                out.append(int(t))
+        out.append(int(np.asarray(st.root_token)[0]))
+    return out[:n_new], steps + 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="shrink steps for a <5 min run")
+    ap.add_argument("--base-steps", type=int, default=400)
+    ap.add_argument("--ppd-steps", type=int, default=600)
+    ap.add_argument("--ckpt", default="benchmarks/results/ppd_demo_ckpt")
+    args = ap.parse_args()
+    if args.fast:
+        args.base_steps, args.ppd_steps = 120, 150
+
+    cfg = CONFIG
+    pipe = DataPipeline(cfg.vocab_size, seq_len=192, batch_size=8, seed=0)
+    print(f"== 1. pretraining base model ({cfg.name}, "
+          f"{args.base_steps} steps) ==")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    params = pretrain_base(params, cfg, pipe, steps=args.base_steps,
+                           lr=3e-3)
+
+    print(f"== 2. distilling {M} prompt tokens ({args.ppd_steps} steps, "
+          "base frozen) ==")
+    ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=M,
+                             base_embed=params["embed"])
+    ppd, _ = train_prompt_tokens(params, ppd, cfg, pipe,
+                                 steps=args.ppd_steps, m=M, lr=3e-2)
+
+    print("== 3. calibrating accuracies + building the dynamic tree ==")
+    acc = measure_accuracy(params, ppd, cfg, pipe, M)
+    np.set_printoptions(precision=3, suppress=True)
+    print("accumulative accuracy acc[d][j] (rows: distance; cols: top-k):")
+    print(acc)
+    states, (n_c, n_p), r = best_split(24, M, acc)
+    print(f"best split of 24 tree nodes: {n_c} candidates + {n_p} prompt "
+          f"tokens, R(T) = {r:.2f} tokens/step")
+    bufs = device_buffers(states, M)
+
+    print("== 4. acceptance + speedup vs vanilla ==")
+    n_new = 96
+    prompts = pipe.val_prompts(4, 32)
+    tv = tp = 0.0
+    steps_total = 0
+    for i in range(4):
+        p = jnp.asarray(prompts[i:i + 1])
+        t0 = time.time()
+        out_p, steps = generate_ppd(params, ppd, cfg, bufs, p, n_new, M)
+        tp += time.time() - t0
+        steps_total += steps
+        # vanilla
+        cache = init_cache(cfg, 1, 512)
+        t0 = time.time()
+        logits, cache, _, _ = forward(params, cfg, p, cache=cache)
+        tok = jnp.argmax(logits[:, -1], -1)
+        ref = [int(tok[0])]
+        sv = jax.jit(lambda c, t: vanilla_decode_step(params, cfg, c, t))
+        while len(ref) < n_new:
+            cache, tok, _ = sv(cache, tok)
+            ref.append(int(tok[0]))
+        tv += time.time() - t0
+        assert out_p == ref, "PPD output must match vanilla exactly"
+    tau = 4 * n_new / steps_total
+    print(f"acceptance length tau = {tau:.2f} tokens/step")
+    print(f"walltime: vanilla {tv:.1f}s -> PPD {tp:.1f}s "
+          f"(speedup {tv / tp:.2f}x; outputs identical)")
+
+    save_checkpoint(args.ckpt, {"ppd": ppd, "acc": acc},
+                    {"arch": cfg.name, "m": M, "tau": float(tau)})
+    print(f"saved trained prompt tokens -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

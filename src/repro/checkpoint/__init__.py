@@ -1,0 +1,1 @@
+from .io import load_checkpoint, save_checkpoint

@@ -1,0 +1,71 @@
+"""Checkpointing without orbax: pytree -> .npz + a json manifest.
+
+Handles nested dicts/lists/tuples/NamedTuples of jnp/np arrays and python
+scalars.  Restores onto host then lets the caller device_put/shard.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="", out=None):
+    out = out if out is not None else {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten(tree[k], f"{prefix}/{k}", out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}/[{i}]", out)
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _structure(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _structure(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        return {"__kind__": "namedtuple", "cls": type(tree).__name__,
+                "items": {k: _structure(v)
+                          for k, v in tree._asdict().items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": "list" if isinstance(tree, list) else "tuple",
+                "items": [_structure(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def save_checkpoint(path: str, tree, metadata: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{k: v for k, v in flat.items()})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"structure": _structure(tree),
+                   "metadata": metadata or {}}, f)
+
+
+def _rebuild(struct, flat, prefix=""):
+    kind = struct["__kind__"]
+    if kind == "dict" or kind == "namedtuple":
+        d = {k: _rebuild(v, flat, f"{prefix}/{k}")
+             for k, v in struct["items"].items()}
+        return d
+    if kind in ("list", "tuple"):
+        seq = [_rebuild(v, flat, f"{prefix}/[{i}]")
+               for i, v in enumerate(struct["items"])]
+        return seq if kind == "list" else tuple(seq)
+    return flat[prefix]
+
+
+def load_checkpoint(path: str):
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _rebuild(manifest["structure"], flat)
+    return tree, manifest["metadata"]

@@ -1,0 +1,31 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+Every assigned architecture has a module exporting ``CONFIG`` (the exact
+published shape) and ``SMOKE`` (a reduced same-family variant: <=2 layers,
+d_model<=512, <=4 experts) for CPU tests.
+"""
+from importlib import import_module
+
+_MODULES = {
+    "gemma3-1b": "gemma3_1b",
+    "gemma3-4b": "gemma3_4b",
+    "minicpm3-4b": "minicpm3_4b",
+    "musicgen-medium": "musicgen_medium",
+    "pixtral-12b": "pixtral_12b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "granite-3-2b": "granite_3_2b",
+    "vicuna-7b-proxy": "vicuna_7b_proxy",
+}
+
+ARCH_NAMES = tuple(n for n in _MODULES if n != "vicuna-7b-proxy")
+
+
+def get_config(name):
+    return import_module(f"repro.configs.{_MODULES[name]}").CONFIG
+
+
+def get_smoke_config(name):
+    return import_module(f"repro.configs.{_MODULES[name]}").SMOKE

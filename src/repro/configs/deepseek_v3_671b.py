@@ -1,0 +1,32 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437].
+
+61L d_model=7168, MLA (kv_lora 512, q_lora 1536, nope 128, rope 64, v 128),
+MoE: 1 shared + 256 routed top-8 (sigmoid router, aux-loss-free bias,
+routed scale 2.5), d_ff_expert=2048, first 3 layers dense (d_ff 18432),
+vocab=129280, MTP depth 1.
+"""
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", arch_type="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, head_dim=192,
+    d_ff=18_432, vocab_size=129_280,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                  qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048, n_shared=1,
+                  router="sigmoid", routed_scale=2.5, router_bias=True),
+    first_dense_layers=3, mtp_depth=1,
+    tie_embeddings=False,
+    rope_theta=10_000.0, max_seq_len=131_072,
+    source="arXiv:2412.19437",
+)
+
+SMOKE = CONFIG.replace(
+    name="deepseek-v3-smoke", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, head_dim=48, d_ff=256, vocab_size=512,
+    mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32, qk_nope_dim=32,
+                  qk_rope_dim=16, v_head_dim=32),
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64, n_shared=1,
+                  router="sigmoid", routed_scale=2.5, router_bias=True),
+    first_dense_layers=1, mtp_depth=1, max_seq_len=512,
+)

@@ -1,0 +1,20 @@
+"""Demo-scale config for CPU examples/benchmarks.
+
+The paper's Limitations (§D) note prompt tokens need depth + embedding
+width to work (Vicuna-68M with 2 layers fails).  This 8L/d448 model is the
+smallest shape where PPD's acceptance gains are clearly visible on the
+synthetic pipeline while still training on CPU in minutes.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="ppd-demo-10m", arch_type="dense",
+    n_layers=6, d_model=320, n_heads=8, n_kv_heads=8, head_dim=40,
+    d_ff=768, vocab_size=512,
+    tie_embeddings=True,
+    rope_theta=10_000.0, max_seq_len=2048,
+    source="demo (vicuna-family shape, reduced)",
+)
+
+SMOKE = CONFIG.replace(name="ppd-demo-smoke", n_layers=2, d_model=128,
+                       n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256)

@@ -1,0 +1,24 @@
+"""Gemma-3 1B [hf:google/gemma-3-1b-pt].
+
+26L d_model=1152 4H (GQA kv=1) head_dim=256 d_ff=6912 vocab=262144,
+5:1 local(window 512):global attention, 32k ctx (128k family), local rope
+theta 10k / global 1M, qk-norm, sandwich norms, tied + scaled embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b", arch_type="dense",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1, head_dim=256,
+    d_ff=6912, vocab_size=262_144,
+    act="gelu", qk_norm=True, scale_embeddings=True, use_post_norms=True,
+    tie_embeddings=True,
+    window=512, sliding_ratio=5,
+    rope_theta=1_000_000.0, rope_local_theta=10_000.0,
+    max_seq_len=131_072,
+    source="hf:google/gemma-3-1b-pt",
+)
+
+SMOKE = CONFIG.replace(
+    name="gemma3-1b-smoke", n_layers=2, d_model=128, n_heads=4, n_kv_heads=1,
+    head_dim=32, d_ff=256, vocab_size=512, window=32, max_seq_len=512,
+)

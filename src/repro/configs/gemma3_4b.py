@@ -1,0 +1,23 @@
+"""Gemma-3 4B [hf:google/gemma-3-1b-pt family].
+
+34L d_model=2560 8H (GQA kv=4) head_dim=256 d_ff=10240 vocab=262144,
+5:1 local(window 1024):global, 128k ctx.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b", arch_type="dense",
+    n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=10_240, vocab_size=262_144,
+    act="gelu", qk_norm=True, scale_embeddings=True, use_post_norms=True,
+    tie_embeddings=True,
+    window=1024, sliding_ratio=5,
+    rope_theta=1_000_000.0, rope_local_theta=10_000.0,
+    max_seq_len=131_072,
+    source="hf:google/gemma-3-1b-pt",
+)
+
+SMOKE = CONFIG.replace(
+    name="gemma3-4b-smoke", n_layers=2, d_model=128, n_heads=8, n_kv_heads=4,
+    head_dim=16, d_ff=256, vocab_size=512, window=32, max_seq_len=512,
+)

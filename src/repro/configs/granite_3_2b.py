@@ -1,0 +1,19 @@
+"""Granite-3.0 2B [hf:ibm-granite/granite-3.0-2b-base].
+
+40L d_model=2048 32H (GQA kv=8) head_dim=64 d_ff=8192 vocab=49155.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b", arch_type="dense",
+    n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8, head_dim=64,
+    d_ff=8192, vocab_size=49_155,
+    tie_embeddings=True,
+    rope_theta=10_000.0, max_seq_len=131_072,
+    source="hf:ibm-granite/granite-3.0-2b-base",
+)
+
+SMOKE = CONFIG.replace(
+    name="granite-3-2b-smoke", n_layers=2, d_model=128, n_heads=8,
+    n_kv_heads=2, head_dim=16, d_ff=256, vocab_size=512, max_seq_len=512,
+)

@@ -1,0 +1,23 @@
+"""Mamba2-2.7B [arXiv:2405.21060] — SSD (state-space duality), attn-free.
+
+64L d_model=2560, d_state=128, expand=2 (d_inner 5120, 80 heads x 64),
+vocab=50280.
+"""
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", arch_type="ssm",
+    n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=50_280,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                  chunk=128),
+    tie_embeddings=True, max_seq_len=1_048_576,
+    source="arXiv:2405.21060",
+)
+
+SMOKE = CONFIG.replace(
+    name="mamba2-2.7b-smoke", n_layers=2, d_model=128, vocab_size=512,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=32, n_groups=1,
+                  chunk=16),
+    max_seq_len=512,
+)

@@ -1,0 +1,24 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B].
+
+62L d_model=2560 40H (MLA: q_lora 768, kv_lora 256, nope 64, rope 32,
+v 64) d_ff=6400 vocab=73448.
+"""
+from repro.models.config import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b", arch_type="dense",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40, head_dim=96,
+    d_ff=6400, vocab_size=73_448,
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64,
+                  qk_rope_dim=32, v_head_dim=64),
+    scale_embeddings=True, tie_embeddings=True,
+    rope_theta=10_000.0, max_seq_len=32_768,
+    source="hf:openbmb/MiniCPM3-4B",
+)
+
+SMOKE = CONFIG.replace(
+    name="minicpm3-4b-smoke", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, head_dim=48, d_ff=256, vocab_size=512, max_seq_len=512,
+    mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32, qk_nope_dim=32,
+                  qk_rope_dim=16, v_head_dim=32),
+)

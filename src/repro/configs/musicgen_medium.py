@@ -1,0 +1,23 @@
+"""MusicGen-medium decoder backbone [arXiv:2306.05284].
+
+48L d_model=1536 24H d_ff=6144, decoder-only over EnCodec tokens
+(4 codebooks x vocab 2048, delay pattern).  The EnCodec conv codec and the
+T5 text-conditioner are stubs (``frontend.py``); conditioning arrives as a
+prefix of precomputed embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", arch_type="audio", modality="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab_size=2048, n_codebooks=4,
+    tie_embeddings=False, act="gelu",
+    rope_theta=10_000.0, max_seq_len=32_768,
+    source="arXiv:2306.05284",
+)
+
+SMOKE = CONFIG.replace(
+    name="musicgen-medium-smoke", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, head_dim=32, d_ff=256, vocab_size=128, n_codebooks=4,
+    max_seq_len=512,
+)

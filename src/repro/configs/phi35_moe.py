@@ -1,0 +1,25 @@
+"""Phi-3.5-MoE 42B (6.6B active) [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L d_model=4096 32H (GQA kv=8) head_dim=128, MoE 16 experts top-2,
+d_ff_expert=6400, vocab=32064.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", arch_type="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=6400, vocab_size=32_064,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=6400,
+                  router="softmax", aux_loss_coef=0.01),
+    tie_embeddings=False,
+    rope_theta=10_000.0, max_seq_len=131_072,
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)
+
+SMOKE = CONFIG.replace(
+    name="phi3.5-moe-smoke", n_layers=2, d_model=128, n_heads=8,
+    n_kv_heads=2, head_dim=16, d_ff=256, vocab_size=512,
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64, router="softmax",
+                  aux_loss_coef=0.01),
+    max_seq_len=512,
+)

@@ -1,0 +1,22 @@
+"""Pixtral-12B decoder backbone [hf:mistralai/Pixtral-12B-2409].
+
+40L d_model=5120 32H (GQA kv=8) head_dim=128 d_ff=14336 vocab=131072.
+The Pixtral-ViT vision tower + projector is a stub; patch embeddings come
+in as a precomputed prefix.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", arch_type="vlm", modality="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14_336, vocab_size=131_072, n_patches=1024,
+    tie_embeddings=False,
+    rope_theta=1_000_000_000.0, max_seq_len=131_072,
+    source="hf:mistralai/Pixtral-12B-2409",
+)
+
+SMOKE = CONFIG.replace(
+    name="pixtral-12b-smoke", n_layers=2, d_model=128, n_heads=8,
+    n_kv_heads=2, head_dim=16, d_ff=256, vocab_size=512, n_patches=16,
+    max_seq_len=512,
+)

@@ -1,0 +1,25 @@
+"""RecurrentGemma-9B [arXiv:2402.19427] — RG-LRU + local attention (2:1).
+
+38L d_model=4096 16H (GQA kv=1) head_dim=256 d_ff=12288 vocab=256000,
+lru_width=4096, block pattern (rglru, rglru, local-attn window 2048).
+"""
+from repro.models.config import ATTN, RGLRU, ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", arch_type="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+    d_ff=12_288, vocab_size=256_000,
+    rglru=RGLRUConfig(lru_width=4096, conv_width=4,
+                      block_pattern=(RGLRU, RGLRU, ATTN), window=2048),
+    act="gelu", scale_embeddings=True, tie_embeddings=True,
+    rope_theta=10_000.0, max_seq_len=1_048_576,
+    source="arXiv:2402.19427",
+)
+
+SMOKE = CONFIG.replace(
+    name="recurrentgemma-9b-smoke", n_layers=3, d_model=128, n_heads=4,
+    n_kv_heads=1, head_dim=32, d_ff=256, vocab_size=512,
+    rglru=RGLRUConfig(lru_width=128, conv_width=4,
+                      block_pattern=(RGLRU, RGLRU, ATTN), window=32),
+    max_seq_len=512,
+)

@@ -1,0 +1,20 @@
+"""Vicuna-7B-shaped config [hf:lmsys/vicuna-7b-v1.3] — the paper's own model.
+
+Llama-1 7B shape: 32L d_model=4096 32H (MHA) d_ff=11008 vocab=32000.
+Used by the paper-reproduction benchmarks (Table 1 / Figs 4-8).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="vicuna-7b-proxy", arch_type="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11_008, vocab_size=32_000,
+    tie_embeddings=False,
+    rope_theta=10_000.0, max_seq_len=4096,
+    source="hf:lmsys/vicuna-7b-v1.3",
+)
+
+SMOKE = CONFIG.replace(
+    name="vicuna-7b-smoke", n_layers=2, d_model=256, n_heads=4,
+    n_kv_heads=4, head_dim=64, d_ff=512, vocab_size=512, max_seq_len=512,
+)

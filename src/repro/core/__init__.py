@@ -1,0 +1,11 @@
+"""PPD core: the paper's contribution (prompt tokens, dynamic sparse tree,
+tree/chain guess-and-verify decoding)."""
+from .decode import (PPDState, device_buffers, init_ppd_state, is_chain_arch,
+                     ppd_decode_step, vanilla_decode_step)
+from .dynamic_tree import (PAPER_ACC, amortized_tokens, best_split,
+                           build_dynamic_tree, f_tree, marginals,
+                           transition_matrix)
+from .prompt_tokens import init_prompt_params, prompt_param_count
+from .tree import (TreeSpec, build_buffers, default_chain_spec,
+                   mk_default_tree, stack_states)
+from .verify import verify_greedy, verify_typical

@@ -1,0 +1,362 @@
+"""PPD decode steps: guess (tree forward) -> verify -> commit.
+
+Two modes share verification and buffers:
+
+* ``tree`` (attention archs): one stage forward with the tree attention
+  mask; accepted K/V are scattered into the cache afterwards (no second
+  forward).
+* ``chain`` (SSM / RG-LRU archs): buffers are linear chains; a stage
+  forward produces logits without touching recurrent state, and a second
+  dt-masked *commit* forward advances conv/SSM/LRU states by exactly the
+  accepted prefix.
+
+Per-row dynamic-tree states: the stacked tree buffers are indexed with the
+per-sequence state k, so different batch rows decode with different tree
+shapes in the same step — no recompilation (TPU adaptation of the paper's
+"dynamic at every decoding step").
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import forward
+from repro.models import attention as attn_mod
+from repro.models.config import (ATTN, MLA, RGLRU, SSM, ModelConfig,
+                                 layer_specs, scan_plan)
+
+from .prompt_tokens import assemble_tree_embeds
+from .tree import CAND, PAD, PROMPT, ROOT, TreeSpec, stack_states
+from .verify import Verdict, verify_greedy, verify_typical
+
+
+class PPDState(NamedTuple):
+    """Decode-loop carry.  The guess distributions are stored TOP-K
+    COMPRESSED (vals/idx) rather than as [B,m,V] logits: candidate
+    selection only ever reads the top ``kmax`` entries, and carrying the
+    full-vocab tensor between steps forces a per-step all-gather of a
+    model-axis-sharded [B,m,V] array (0.4 GB for gemma3's 262k vocab at
+    batch 128).  Compression keeps the unembed output sharded; the state
+    is ~V/kmax smaller (TPU adaptation — see EXPERIMENTS.md §Perf)."""
+    cache: dict
+    root_token: jnp.ndarray     # [B] (audio [B,K]) next token to process
+    guess_vals: jnp.ndarray     # [B, m, kmax] f32 top-k guess scores
+    guess_idx: jnp.ndarray      # [B, m, kmax] i32 (audio [B,m,kmax,K])
+    tree_state: jnp.ndarray     # [B] dynamic-tree state (0..m)
+
+
+def is_chain_arch(cfg: ModelConfig) -> bool:
+    return cfg.ssm is not None or cfg.rglru is not None
+
+
+def device_buffers(states, m: int, n_ept: int = 1):
+    """Host TreeSpecs -> stacked jnp buffers (state axis first)."""
+    stacked = stack_states(states, m)
+    out = {k: jnp.asarray(v) for k, v in stacked.items() if k != "n_real"}
+    out["_kmax"] = int(stacked["cand_choice"].max()) + 1   # static metadata
+    return out
+
+
+def _row_bufs(bufs, k):
+    """Index the stacked buffers with per-row state k [B]."""
+    return {name: a[k] for name, a in bufs.items()
+            if not name.startswith("_")}
+
+
+def select_candidate_tokens(bufs, guess_idx, root_token):
+    """Fill the [B,N] token buffer: root + candidates from the compressed
+    top-k guesses.
+
+    guess_idx: [B, m, kmax] token ids ranked by guess score (audio:
+    [B, m, kmax, K] — codebook 0 varies over k, 1.. are the argmax).
+    """
+    audio = guess_idx.ndim == 4
+    dist = jnp.maximum(bufs["cand_dist"] - 1, 0)                 # [B,N]
+    if audio:
+        K = guess_idx.shape[-1]
+        tok = jnp.take_along_axis(
+            jnp.take_along_axis(
+                guess_idx, dist[..., None, None].repeat(
+                    guess_idx.shape[2], 2).repeat(K, 3), axis=1),
+            bufs["cand_choice"][..., None, None].repeat(K, 3),
+            axis=2)[:, :, 0]                                     # [B,N,K]
+        tokens = jnp.where((bufs["node_type"] == CAND)[..., None], tok,
+                           root_token[:, None, :])
+    else:
+        tok = jnp.take_along_axis(
+            jnp.take_along_axis(guess_idx, dist[..., None], axis=1),
+            bufs["cand_choice"][..., None], axis=2)[..., 0]      # [B,N]
+        tokens = jnp.where(bufs["node_type"] == CAND, tok,
+                           root_token[:, None])
+    return tokens
+
+
+# Sharding hint for grouped_topk: (mesh, batch_axis, vocab_axis) the
+# launcher sets for sharded serving (None = single-host: plain grouping).
+_TOPK_SHARDING = None
+
+
+def set_topk_sharding(mesh, batch_axis=None, vocab_axis="model"):
+    """Route grouped_topk through a shard_map whose inner top-k runs
+    PER-SHARD of the vocab axis (GSPMD all-gathers sort operands — a
+    384 MiB/step collective for gemma3's [128,3,262k] guesses — so the
+    partitioning must be explicit).  ``set_topk_sharding(None)`` clears."""
+    global _TOPK_SHARDING
+    _TOPK_SHARDING = None if mesh is None else (mesh, batch_axis,
+                                                vocab_axis)
+
+
+def grouped_topk(x, k: int, groups: int = 16):
+    """Exact top-k via a two-stage group reduction.
+
+    Stage 1 takes top-k within each of ``groups`` contiguous vocab chunks
+    (shard-local under the launcher's shard_map routing); stage 2 takes
+    top-k of the ``groups*k`` survivors.  Exact: every global top-k
+    element is a top-k element of its group."""
+    *lead, V = x.shape
+    if _TOPK_SHARDING is not None:
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        mesh, baxis, vaxis = _TOPK_SHARDING
+        nshards = mesh.shape[vaxis]
+        bsize = (np.prod([mesh.shape[a] for a in baxis])
+                 if isinstance(baxis, tuple) else mesh.shape[baxis])
+        if V % nshards == 0 and x.shape[0] % bsize == 0 \
+                and V // nshards >= k:
+            in_spec = P(baxis, *([None] * (len(lead) - 1)), vaxis)
+            out_spec = P(baxis, *([None] * (len(lead) - 1)), vaxis, None)
+
+            def local_topk(xs):                  # xs: [*, V/nshards]
+                v, i = jax.lax.top_k(xs, k)
+                shard = jax.lax.axis_index(vaxis)
+                i = i + shard * (V // nshards)
+                return v[..., None, :], i[..., None, :]   # [*, 1, k]
+
+            v1, i1 = shard_map(local_topk, mesh=mesh, in_specs=in_spec,
+                               out_specs=(out_spec, out_spec))(x)
+            v1 = v1.reshape(*lead, nshards * k)  # small: gathers k/shard
+            i1 = i1.reshape(*lead, nshards * k)
+            v2, sel = jax.lax.top_k(v1, k)
+            return v2, jnp.take_along_axis(i1, sel, axis=-1)
+    if V % groups or V < 4 * groups * k:
+        return jax.lax.top_k(x, k)
+    xg = x.reshape(*lead, groups, V // groups)
+    v1, i1 = jax.lax.top_k(xg, k)                        # [*, G, k] local
+    i1 = i1 + (jnp.arange(groups) * (V // groups)).reshape(
+        (1,) * len(lead) + (groups, 1))
+    v1 = v1.reshape(*lead, groups * k)
+    i1 = i1.reshape(*lead, groups * k)
+    v2, sel = jax.lax.top_k(v1, k)                       # [*, k]
+    return v2, jnp.take_along_axis(i1, sel, axis=-1)
+
+
+def gather_guess_topk(bufs, logits, v_star, m: int, n_ept: int = 1,
+                      kmax: int = 10):
+    """Next step's guesses = TOP-K of the logits at v*'s prompt chain
+    (EPT members averaged first, paper §3.2).  Returns (vals, idx).
+
+    Taking top-k here (before the step output) keeps the vocab axis of the
+    unembed sharded — the full [B,m,V] array never crosses the step
+    boundary."""
+    B, N = logits.shape[:2]
+    chain = jnp.take_along_axis(
+        bufs["chain_nodes"], v_star[:, None, None].repeat(
+            bufs["chain_nodes"].shape[-1], 2), axis=1)[:, 0]     # [B,m*e]
+    # Row selection as a one-hot CONTRACTION over the (tiny) node axis:
+    # a take_along_axis gather with a [B,m*e,V]-sized index array defeats
+    # GSPMD's partitioner (it all-gathers the vocab-sharded logits); the
+    # einsum contracts over N and leaves V untouched/sharded.  Invalid
+    # chain slots (-1) get an all-zero one-hot row -> zero guesses.
+    sel = jax.nn.one_hot(chain, N, dtype=logits.dtype)           # [B,me,N]
+    if logits.ndim == 4:                                         # audio
+        g = jnp.einsum("bcn,bnkv->bckv", sel, logits)
+    else:
+        g = jnp.einsum("bcn,bnv->bcv", sel, logits)
+    e = max(n_ept, 1)
+    # chain_nodes layout is EPT-major (tree.py: for e { for dist }), so
+    # [m*e] unpacks as (e, m) before averaging the ensemble members.
+    g = g.reshape((B, e, m) + g.shape[2:]).mean(axis=1)          # [B,m(,K),V]
+    if g.ndim == 4:                                              # audio
+        vals, idx0 = grouped_topk(g[:, :, 0], kmax)              # cb0
+        rest = jnp.argmax(g[:, :, 1:], axis=-1)                  # [B,m,K-1]
+        rest = jnp.broadcast_to(rest[:, :, None, :],
+                                idx0.shape + (rest.shape[-1],))
+        idx = jnp.concatenate([idx0[..., None], rest], axis=-1)  # [B,m,k,K]
+        return vals.astype(jnp.float32), idx
+    vals, idx = grouped_topk(g, kmax)
+    return vals.astype(jnp.float32), idx
+
+
+def _scatter_one(spec, centry, staged, positions, accept_mask):
+    if spec.mixer == ATTN:
+        return attn_mod.scatter_kv(centry, *staged, positions, accept_mask)
+    if spec.mixer == MLA:
+        return attn_mod.scatter_mla(centry, *staged, positions, accept_mask)
+    return centry
+
+
+# Optional sharded-commit routing (set by the launcher): GSPMD cannot
+# prove that the cache scatter's iota batch indices are shard-local, so
+# it all-gathers the staged K/V over the batch axis (12 x 21.5 MiB/step
+# for gemma3-1b @32k).  shard_map makes the batch locality explicit.
+_COMMIT_MESH = None
+
+
+def set_commit_sharding(mesh, axis=None):
+    global _COMMIT_MESH
+    _COMMIT_MESH = None if mesh is None else (mesh, axis)
+
+
+def _batch_leaf_spec(ax, B):
+    from jax.sharding import PartitionSpec as P
+
+    def spec(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) and shape[0] == B:
+            return P(ax, *([None] * (len(shape) - 1)))
+        if len(shape) > 1 and shape[1] == B:        # scan-stacked [rep,B,..]
+            return P(None, ax, *([None] * (len(shape) - 2)))
+        return P()
+    return spec
+
+
+def sharded_commit(cfg, cache, staged_list, positions, accept_mask,
+                   n_committed):
+    """commit_staged under shard_map over the batch axis (launcher use)."""
+    if _COMMIT_MESH is None:
+        return commit_staged(cfg, cache, staged_list, positions,
+                             accept_mask, n_committed)
+    from jax.experimental.shard_map import shard_map
+    mesh, ax = _COMMIT_MESH
+    B = positions.shape[0]
+    spec = _batch_leaf_spec(ax, B)
+    args = (cache, staged_list, positions, accept_mask, n_committed)
+    in_specs = jax.tree.map(spec, args)
+    out_specs = jax.tree.map(spec, cache)
+
+    def local(cache, staged_list, positions, accept_mask, n_committed):
+        return commit_staged(cfg, cache, staged_list, positions,
+                             accept_mask, n_committed)
+
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs)(*args)
+
+
+def commit_staged(cfg: ModelConfig, cache, staged_list, positions,
+                  accept_mask, n_committed):
+    """Scatter accepted tree K/V into the cache (attention archs)."""
+    specs = layer_specs(cfg)
+    length = cache["length"] + n_committed
+    if cfg.scan_layers:
+        o, per, n_rep = scan_plan(cfg)
+        out = {"length": length}
+        out["prefix"] = [
+            _scatter_one(specs[i], c, s, positions, accept_mask)
+            for i, (c, s) in enumerate(zip(cache["prefix"],
+                                           staged_list["prefix"]))]
+        scan_new = []
+        for j in range(per):
+            spec = specs[o + j]
+            fn = jax.vmap(lambda c, s: _scatter_one(spec, c, s, positions,
+                                                    accept_mask))
+            scan_new.append(fn(cache["scan"][j], staged_list["scan"][j]))
+        out["scan"] = tuple(scan_new)
+        out["tail"] = [
+            _scatter_one(specs[o + per * n_rep + k], c, s, positions,
+                         accept_mask)
+            for k, (c, s) in enumerate(zip(cache["tail"],
+                                           staged_list["tail"]))]
+        return out
+    new_layers = [
+        _scatter_one(spec, centry, staged, positions, accept_mask)
+        for spec, centry, staged in zip(specs, cache["layers"], staged_list)]
+    return {"layers": new_layers, "length": length}
+
+
+def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
+                    *, m: int, n_ept: int = 1, temperature: float = 0.0,
+                    key=None, moe_exact: bool = True):
+    """One guess-and-verify step.  Returns (new_state, step_info)."""
+    rb = _row_bufs(bufs, state.tree_state)
+    tokens = select_candidate_tokens(rb, state.guess_idx, state.root_token)
+    embeds = assemble_tree_embeds(params, ppd_params, cfg, rb, tokens)
+    B, N = tokens.shape[:2]
+    L = state.cache["length"]                                    # [B]
+    positions = L[:, None] + rb["depth"]
+
+    chain = is_chain_arch(cfg)
+    logits, _, staged, _ = forward(
+        params, cfg, positions=positions, embeds=embeds, cache=state.cache,
+        extra_mask=rb["mask"], stage_only=True, moe_exact=moe_exact)
+
+    if temperature > 0.0:
+        verdict = verify_typical(rb, logits, tokens, key, temperature)
+    else:
+        verdict = verify_greedy(rb, logits, tokens)
+
+    n_committed = verdict.n_acc + 1                              # + root
+    if chain:
+        # dt-masked re-scan commits recurrent state + masked K/V scatter
+        _, cache, _, _ = forward(
+            params, cfg, positions=positions, embeds=embeds,
+            cache=state.cache, extra_mask=rb["mask"],
+            commit_mask=verdict.accept_mask, moe_exact=moe_exact)
+    else:
+        cache = sharded_commit(cfg, state.cache, staged, positions,
+                               verdict.accept_mask, n_committed)
+
+    gvals, gidx = gather_guess_topk(rb, logits, verdict.v_star, m, n_ept,
+                                    kmax=bufs.get("_kmax", 10))
+    new_state = PPDState(cache=cache, root_token=verdict.bonus,
+                         guess_vals=gvals, guess_idx=gidx,
+                         tree_state=verdict.next_state)
+    # accepted output tokens this step: path candidates then bonus
+    path = jnp.take_along_axis(
+        rb["path_nodes"], verdict.v_star[:, None, None].repeat(
+            rb["path_nodes"].shape[-1], 2), axis=1)[:, 0]        # [B,D]
+    if tokens.ndim == 3:
+        ptok = jnp.take_along_axis(
+            tokens, jnp.maximum(path, 0)[..., None].repeat(
+                tokens.shape[-1], -1), axis=1)
+        ptok = jnp.where((path >= 0)[..., None], ptok, -1)
+    else:
+        ptok = jnp.where(path >= 0,
+                         jnp.take_along_axis(tokens, jnp.maximum(path, 0),
+                                             axis=1), -1)
+    info = dict(accepted_path_tokens=ptok, n_accepted=n_committed,
+                verdict=verdict, logits=logits)
+    return new_state, info
+
+
+def vanilla_decode_step(params, cfg: ModelConfig, cache, token, *,
+                        temperature: float = 0.0, key=None,
+                        moe_exact: bool = True):
+    """Plain autoregressive baseline step (1 token)."""
+    B = cache["length"].shape[0]
+    tok = token[:, None] if token.ndim == 1 else token[:, None, :]
+    pos = cache["length"][:, None]
+    logits, cache, _, _ = forward(params, cfg, tok, positions=pos,
+                                  cache=cache, moe_exact=moe_exact)
+    lg = logits[:, 0]
+    if temperature > 0.0:
+        nxt = jax.random.categorical(key, lg / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(lg, axis=-1)
+    return cache, nxt, lg
+
+
+def init_ppd_state(cfg: ModelConfig, cache, first_token, m: int,
+                   n_ept: int = 1, kmax: int = 10):
+    """State after prefill: no guesses yet -> tree state 0."""
+    B = cache["length"].shape[0]
+    vals = jnp.zeros((B, m, kmax), jnp.float32)
+    if cfg.modality == "audio":
+        idx = jnp.zeros((B, m, kmax, cfg.n_codebooks), jnp.int32)
+    else:
+        idx = jnp.zeros((B, m, kmax), jnp.int32)
+    return PPDState(cache=cache, root_token=first_token, guess_vals=vals,
+                    guess_idx=idx, tree_state=jnp.zeros((B,), jnp.int32))

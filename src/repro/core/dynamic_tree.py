@@ -1,0 +1,275 @@
+"""Dynamic sparse-tree construction (paper §4, Props 4.1-4.4).
+
+Inputs are validation-set statistics:
+
+* ``acc[d][j]``  — accumulative (top-(j+1)) accuracy of the guess
+  distribution at token distance ``d+1`` (paper Fig. 6).  The marginal
+  probability that choice ``c`` at distance ``d`` is the ground truth is
+  ``q[d][c] = acc[d][c] - acc[d][c-1]``.
+
+Pipeline (paper §4.2):
+ 1. *Optimal candidate trees* per depth ``k``: greedy frontier expansion
+    maximizing f(T_k) = sum_v prod_{i in Path(v)} q_i  (Prop 4.1 — the
+    Medusa/Sequoia algorithm: adding the node with the largest path
+    product is optimal for a fixed node budget).
+ 2. *Append prompt tokens*: every candidate (and the root) gets the maximal
+    chain of ``m`` prompt tokens.
+ 3. *Greedy prompt-token removal* minimizing
+    dF = p(v) * (f(T_i) - f(T_{i-1}))  (Prop 4.3) until only ``n_p``
+    prompt tokens remain.
+
+State machine: the accepted node's chain length is next step's state;
+p(s_i|s_k) follows from the per-node acceptance probabilities (Prop 4.2),
+the steady state from power iteration, and the amortized tokens/step
+R(T) = sum_i p(s_i) f(T_i)  (Prop 4.4).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .tree import Choice, TreeSpec
+
+# Default calibration: accumulative accuracy acc[d][j] for distances 1..3,
+# top-1..top-10 (shape [m, 10]).  Numbers follow the paper's Vicuna-7B
+# Alpaca measurements (Fig. 6 / Tab. 2); ``calibrate()`` replaces them with
+# measured values for the actual model.
+PAPER_ACC = np.array([
+    [0.485, 0.62, 0.68, 0.72, 0.75, 0.76, 0.77, 0.775, 0.78, 0.785],
+    [0.26, 0.37, 0.43, 0.47, 0.50, 0.52, 0.54, 0.55, 0.56, 0.57],
+    [0.15, 0.23, 0.28, 0.32, 0.35, 0.37, 0.39, 0.40, 0.41, 0.42],
+])
+
+
+def marginals(acc: np.ndarray) -> np.ndarray:
+    """acc[d][j] cumulative -> q[d][c] marginal probability per choice."""
+    q = np.diff(np.concatenate([np.zeros((acc.shape[0], 1)), acc], axis=1),
+                axis=1)
+    return np.maximum(q, 1e-9)
+
+
+# ------------------------------------------------------- Prop 4.1: f(T)
+def path_prob(c: Choice, q: np.ndarray) -> float:
+    p = 1.0
+    for d, ch in enumerate(c):
+        if ch >= q.shape[1]:
+            return 0.0
+        p *= q[d, ch]
+    return p
+
+
+def f_tree(cands: Sequence[Choice], q: np.ndarray) -> float:
+    """Expected accepted candidates per step (Prop 4.1)."""
+    return sum(path_prob(c, q) for c in cands)
+
+
+# ------------------------------------- step 1: optimal candidate trees
+def optimal_candidate_tree(n_c: int, max_depth: int, q: np.ndarray
+                           ) -> List[Choice]:
+    """Greedy frontier expansion: n_c best-path-product nodes, depth-capped."""
+    if n_c <= 0 or max_depth <= 0:
+        return []
+    heap: List[Tuple[float, Choice]] = []
+    heapq.heappush(heap, (-q[0, 0], (0,)))
+    chosen: List[Choice] = []
+    seen = {(0,)}
+    while heap and len(chosen) < n_c:
+        negp, c = heapq.heappop(heap)
+        chosen.append(c)
+        d = len(c)
+        # siblings (next choice at same depth)
+        sib = c[:-1] + (c[-1] + 1,)
+        if sib[-1] < q.shape[1] and sib not in seen:
+            heapq.heappush(heap, (-path_prob(sib, q), sib))
+            seen.add(sib)
+        # first child
+        if d < max_depth:
+            ch = c + (0,)
+            if ch not in seen:
+                heapq.heappush(heap, (-path_prob(ch, q), ch))
+                seen.add(ch)
+    return sorted(chosen, key=lambda c: (len(c), c))
+
+
+# ------------------------------------- acceptance / transition model
+def node_accept_probs(cands: Sequence[Choice], q: np.ndarray
+                      ) -> Dict[Choice, float]:
+    """P(v is the LAST accepted node): path accepted, no child accepted."""
+    out = {}
+    nodes = [()] + list(cands)
+    cset = set(cands)
+    for v in nodes:
+        pv = path_prob(v, q) if v else 1.0
+        d = len(v)
+        # prob that one of v's children continues the accepted path
+        child_q = sum(q[d, c[-1]] for c in cset
+                      if len(c) == d + 1 and c[:-1] == v) if d < q.shape[0] \
+            else 0.0
+        out[v] = pv * (1.0 - min(child_q, 1.0))
+    return out
+
+
+# ------------------------------------- steps 2-3: prompt token removal
+def build_dynamic_tree(n_c: int, n_p: int, m: int, acc: np.ndarray
+                       ) -> List[TreeSpec]:
+    """Construct states T_0..T_m with ``n_c`` candidates (state m) and at
+    most ``n_p`` prompt tokens per state."""
+    q = marginals(acc)
+    m = min(m, acc.shape[0])
+
+    # step 1: candidate trees per state (state k: depth <= k)
+    cand_trees = {k: optimal_candidate_tree(n_c, k, q) for k in range(m + 1)}
+    f_vals = {k: f_tree(cand_trees[k], q) for k in range(m + 1)}
+
+    states: List[TreeSpec] = []
+    for k in range(m + 1):
+        cands = cand_trees[k]
+        # step 2: maximal chains everywhere
+        chains: Dict[Choice, int] = {(): m}
+        chains.update({c: m for c in cands})
+        total = sum(chains.values())
+        # step 3: greedy removal by dF = p(v) (f(T_i) - f(T_{i-1})) (Prop 4.3)
+        pacc = node_accept_probs(cands, q)
+        while total > n_p:
+            best, best_df = None, None
+            for v, clen in chains.items():
+                if clen <= (1 if v == () else 0):
+                    continue            # root always keeps >=1 (liveness)
+                df = pacc[v] * (f_vals[clen] - f_vals[clen - 1])
+                if best_df is None or df < best_df:
+                    best, best_df = v, df
+            if best is None:
+                break
+            chains[best] -= 1
+            total -= 1
+        chains = {v: c for v, c in chains.items() if c > 0}
+        states.append(TreeSpec(candidates=cands, prompt_chains=chains))
+    return states
+
+
+# ------------------------------------- Props 4.2/4.4: amortized tokens
+def transition_matrix(states: List[TreeSpec], acc: np.ndarray) -> np.ndarray:
+    """p(s_j | s_k) from the per-node last-accept probabilities."""
+    q = marginals(acc)
+    m = len(states) - 1
+    P = np.zeros((m + 1, m + 1))
+    for k, st in enumerate(states):
+        pacc = node_accept_probs(st.candidates, q)
+        for v, pv in pacc.items():
+            j = st.prompt_chains.get(v, 0)
+            P[k, j] += pv
+        P[k] /= max(P[k].sum(), 1e-12)
+    return P
+
+
+def amortized_tokens(states: List[TreeSpec], acc: np.ndarray
+                     ) -> Tuple[float, np.ndarray]:
+    """R(T) (Prop 4.4) and the steady-state distribution."""
+    q = marginals(acc)
+    P = transition_matrix(states, acc)
+    pi = np.ones(len(states)) / len(states)
+    for _ in range(500):
+        pi = pi @ P
+        pi /= pi.sum()
+    # tokens per step in state k = accepted candidates + 1 bonus token
+    toks = np.array([f_tree(st.candidates, q) + 1.0 for st in states])
+    return float((pi * toks).sum()), pi
+
+
+def expected_two_step(states: List[TreeSpec], k: int, acc: np.ndarray
+                      ) -> float:
+    """F(T_k) of Prop 4.2 (current + expected next step)."""
+    q = marginals(acc)
+    P = transition_matrix(states, acc)
+    f = np.array([f_tree(st.candidates, q) for st in states])
+    return float(f[k] + (P[k] * f).sum())
+
+
+# ------------------------------------- baselines for the Fig-8 ablation
+def build_static_tree(n_total: int, m: int, acc: np.ndarray
+                      ) -> List[TreeSpec]:
+    """Static baseline (paper Fig. 8a): every candidate keeps the maximal
+    m-chain; candidate count set by the node budget.  The same tree is used
+    for every state (no dynamic adaptation)."""
+    q = marginals(acc)
+    m = min(m, acc.shape[0])
+    n_c = max((n_total - m) // (1 + m), 1)
+    cands = optimal_candidate_tree(n_c, m, q)
+    states = []
+    for k in range(m + 1):
+        # state k only has guesses for distances <= k
+        ck = [c for c in cands if len(c) <= k]
+        chains = {(): m}
+        chains.update({c: m for c in ck})
+        states.append(TreeSpec(candidates=ck, prompt_chains=chains))
+    return states
+
+
+def build_random_tree(n_total: int, m: int, seed: int = 0
+                      ) -> List[TreeSpec]:
+    """Random baseline: random candidate topology + random chain lengths
+    under the same node budget."""
+    rng = np.random.default_rng(seed)
+    m = max(m, 1)
+    max_width = 10                          # top-k calibration width
+    states = []
+    for k in range(m + 1):
+        depth_cap = k                       # state k has k guess distances
+        cands: List[Choice] = []
+        frontier = [()]
+        # random candidate topology, depth-capped at the state's guesses
+        n_c = int(rng.integers(1, max(n_total - m, 2)))
+        while len(cands) < n_c and frontier and depth_cap:
+            parent = frontier[rng.integers(len(frontier))]
+            if len(parent) >= depth_cap:
+                frontier.remove(parent)
+                continue
+            width = sum(1 for c in cands
+                        if len(c) == len(parent) + 1 and c[:-1] == parent)
+            if width >= max_width:
+                frontier.remove(parent)
+                continue
+            child = parent + (width,)
+            cands.append(child)
+            frontier.append(child)
+        chains = {(): m}
+        for c in cands:
+            chains[c] = int(rng.integers(0, m + 1))
+        # enforce the EXACT node budget: 1 + |cands| + sum(chains) <= n_total
+        total = 1 + len(cands) + sum(chains.values())
+        keys = [c for c in chains if c != ()]
+        while total > n_total:
+            if keys:
+                c = keys[int(rng.integers(len(keys)))]
+                if chains[c] > 0:
+                    chains[c] -= 1
+                    total -= 1
+                else:
+                    keys.remove(c)
+            elif len(cands) > 1:
+                drop = cands.pop()          # leaves drop last (valid prefix)
+                chains.pop(drop, None)
+                total -= 1
+            else:
+                break
+        chains = {v: c for v, c in chains.items() if c > 0}
+        states.append(TreeSpec(candidates=cands, prompt_chains=chains))
+    return states
+
+
+# ------------------------------------- outer search: best (n_c, n_p) split
+def best_split(n_total: int, m: int, acc: np.ndarray
+               ) -> Tuple[List[TreeSpec], Tuple[int, int], float]:
+    """Search all n_c + n_p = n_total splits for max R(T) (§4 hardware-aware
+    construction, step 1: the hardware-independent part)."""
+    best = None
+    for n_c in range(1, n_total):
+        n_p = n_total - n_c
+        states = build_dynamic_tree(n_c, n_p, m, acc)
+        r, _ = amortized_tokens(states, acc)
+        if best is None or r > best[2]:
+            best = (states, (n_c, n_p), r)
+    return best

@@ -1,0 +1,49 @@
+"""Prompt-token embeddings — the paper's only trainable parameters.
+
+``m`` prompt tokens x ``n_ept`` ensemble members, each a d_model embedding
+(0.0002% of a 7B model).  Initialized from existing text-token embeddings
+(paper §5 Training).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import embed_tokens
+from repro.models.config import ModelConfig
+
+from .tree import CAND, PAD, PROMPT, ROOT
+
+
+def init_prompt_params(cfg: ModelConfig, key, m: int = 3, n_ept: int = 1,
+                       base_embed=None, dtype=jnp.float32):
+    """Returns {"prompt_embed": [m, n_ept, d]}."""
+    if base_embed is not None:
+        tbl = base_embed if base_embed.ndim == 2 else base_embed[0]
+        ids = jax.random.randint(key, (m, n_ept), 0, tbl.shape[0])
+        emb = tbl[ids].astype(dtype)
+    else:
+        emb = (jax.random.normal(key, (m, n_ept, cfg.d_model)) * 0.02
+               ).astype(dtype)
+    return {"prompt_embed": emb}
+
+
+def prompt_param_count(cfg: ModelConfig, m: int = 3, n_ept: int = 1) -> int:
+    return m * n_ept * cfg.d_model
+
+
+def assemble_tree_embeds(params, ppd_params, cfg: ModelConfig, bufs,
+                         tokens):
+    """Build the input embeddings for one PPD decode step.
+
+    bufs: per-row tree buffers (leading dim B); tokens: [B,N] (audio:
+    [B,N,K]) with root/candidate ids filled in.  PROMPT nodes read the
+    trained embedding table instead.
+    """
+    tok_emb = embed_tokens(params, cfg, tokens)             # [B,N,d]
+    pe = ppd_params["prompt_embed"].astype(tok_emb.dtype)   # [m,e,d]
+    if cfg.scale_embeddings:
+        pe = pe * jnp.asarray(cfg.d_model ** 0.5, tok_emb.dtype)
+    prompt_emb = pe[bufs["prompt_idx"], bufs["ept_idx"]]    # [B,N,d]
+    is_prompt = (bufs["node_type"] == PROMPT)[..., None]
+    return jnp.where(is_prompt, prompt_emb, tok_emb)

@@ -1,0 +1,210 @@
+"""Sparse-tree topology and the static device buffers PPD decodes with.
+
+A *candidate tree* is a set of choice tuples (Medusa convention): node
+``(c1,...,cd)`` is the candidate at depth ``d`` obtained by taking the
+``ci``-th most likely guess at distance ``i`` along this path.  Each node
+(including the root, the empty tuple) may carry a *prompt chain* of
+0..m trained prompt tokens — if that node ends up being the last accepted
+token, its chain's logits become next step's guess distributions
+(dynamic-tree state = chain length).
+
+TPU adaptation: the GPU reference rebuilds mask/buffers per step with
+dynamic shapes.  Here every dynamic-tree state is compiled into one padded
+``TreeBuffers`` of identical static shape; the per-step "dynamic" choice is
+a data-dependent index into the stacked buffers (no recompilation,
+no host round trip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+Choice = Tuple[int, ...]
+
+ROOT, CAND, PROMPT, PAD = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class TreeSpec:
+    """Host-side description of one dynamic-tree state."""
+    candidates: List[Choice]                 # sorted, parents precede children
+    prompt_chains: Dict[Choice, int]         # node (incl. ()) -> chain length
+    n_ept: int = 1
+
+    @property
+    def n_nodes(self) -> int:
+        return (1 + len(self.candidates)
+                + sum(self.prompt_chains.values()) * self.n_ept)
+
+    def max_depth(self) -> int:
+        return max([len(c) for c in self.candidates], default=0)
+
+
+@dataclasses.dataclass
+class TreeBuffers:
+    """Device-ready numpy buffers (stack over states -> jnp arrays)."""
+    node_type: np.ndarray        # [N] int32: ROOT/CAND/PROMPT/PAD
+    parent: np.ndarray           # [N] int32 (-1 for root)
+    depth: np.ndarray            # [N] int32 position offset from root
+    mask: np.ndarray             # [N,N] bool ancestor(+self) visibility
+    cand_dist: np.ndarray        # [N] int32: candidate guess distance (1-based)
+    cand_choice: np.ndarray      # [N] int32: candidate top-k choice
+    prompt_idx: np.ndarray       # [N] int32: prompt-embedding index (0-based)
+    ept_idx: np.ndarray          # [N] int32: EPT group member index
+    chain_nodes: np.ndarray      # [N, m*n_ept] int32 chain node ids (-1 pad)
+    chain_len: np.ndarray        # [N] int32 prompt-chain length (in distances)
+    path_nodes: np.ndarray       # [N, max_depth+1] int32 root..node (-1 pad)
+    n_real: int                  # real (non-pad) node count
+
+
+def build_buffers(spec: TreeSpec, n_pad: int, m_max: int) -> TreeBuffers:
+    """Lay out ``spec`` into flat buffers padded to ``n_pad`` nodes."""
+    cands = sorted(spec.candidates, key=lambda c: (len(c), c))
+    for c in cands:
+        if len(c) > 1:
+            assert c[:-1] in cands, f"orphan candidate {c}"
+
+    nodes: List[dict] = [dict(kind=ROOT, choice=(), depth=0, parent=-1)]
+    index: Dict[Choice, int] = {(): 0}
+    for c in cands:
+        nodes.append(dict(kind=CAND, choice=c, depth=len(c),
+                          parent=index[c[:-1]], dist=len(c),
+                          topk=c[-1]))
+        index[c] = len(nodes) - 1
+
+    # prompt chains: for each EPT group an independent chain
+    chain_map: Dict[int, List[int]] = {}
+    for choice, clen in sorted(spec.prompt_chains.items(),
+                               key=lambda kv: (len(kv[0]), kv[0])):
+        base = index[choice]
+        chain_map[base] = []
+        for e in range(spec.n_ept):
+            prev = base
+            for j in range(clen):
+                nodes.append(dict(kind=PROMPT, depth=nodes[base]["depth"] + j + 1,
+                                  parent=prev, pidx=j, ept=e))
+                nid = len(nodes) - 1
+                chain_map[base].append(nid)
+                prev = nid
+
+    n = len(nodes)
+    assert n <= n_pad, (n, n_pad)
+    N = n_pad
+
+    node_type = np.full(N, PAD, np.int32)
+    parent = np.full(N, -1, np.int32)
+    depth = np.zeros(N, np.int32)
+    cand_dist = np.zeros(N, np.int32)
+    cand_choice = np.zeros(N, np.int32)
+    prompt_idx = np.zeros(N, np.int32)
+    ept_idx = np.zeros(N, np.int32)
+    for i, nd in enumerate(nodes):
+        node_type[i] = nd["kind"]
+        parent[i] = nd["parent"]
+        depth[i] = nd["depth"]
+        if nd["kind"] == CAND:
+            cand_dist[i] = nd["dist"]
+            cand_choice[i] = nd["topk"]
+        if nd["kind"] == PROMPT:
+            prompt_idx[i] = nd["pidx"]
+            ept_idx[i] = nd["ept"]
+
+    # ancestor masks. EPT ensemble masking: a PROMPT node in EPT group e sees
+    # only prompt ancestors of the same group (plus all non-prompt ancestors).
+    mask = np.zeros((N, N), bool)
+    for i, nd in enumerate(nodes):
+        j = i
+        while j != -1:
+            visible = True
+            if (nodes[j]["kind"] == PROMPT and nd["kind"] == PROMPT
+                    and nodes[j]["ept"] != nd["ept"]):
+                visible = False
+            if visible:
+                mask[i, j] = True
+            j = parent[j]
+
+    max_depth = max([nd["depth"] for nd in nodes
+                     if nd["kind"] in (ROOT, CAND)], default=0)
+    path_nodes = np.full((N, max_depth + 1), -1, np.int32)
+    for i in range(n):
+        chain = []
+        j = i
+        while j != -1:
+            if nodes[j]["kind"] in (ROOT, CAND):
+                chain.append(j)
+            j = parent[j]
+        for d, nid in enumerate(reversed(chain)):
+            path_nodes[i, d] = nid
+
+    chain_nodes = np.full((N, m_max * spec.n_ept), -1, np.int32)
+    chain_len = np.zeros(N, np.int32)
+    for base, nids in chain_map.items():
+        chain_nodes[base, :len(nids)] = nids
+        chain_len[base] = len(nids) // spec.n_ept
+
+    return TreeBuffers(node_type=node_type, parent=parent, depth=depth,
+                       mask=mask, cand_dist=cand_dist,
+                       cand_choice=cand_choice, prompt_idx=prompt_idx,
+                       ept_idx=ept_idx, chain_nodes=chain_nodes,
+                       chain_len=chain_len, path_nodes=path_nodes, n_real=n)
+
+
+def stack_states(specs: Sequence[TreeSpec], m_max: int):
+    """Pad all dynamic-tree states to one shape and stack (state axis 0)."""
+    n_pad = max(s.n_nodes for s in specs)
+    depth_pad = max(s.max_depth() for s in specs)
+    bufs = [build_buffers(s, n_pad, m_max) for s in specs]
+    out = {}
+    for f in dataclasses.fields(TreeBuffers):
+        if f.name == "n_real":
+            out[f.name] = np.array([b.n_real for b in bufs], np.int32)
+        elif f.name == "path_nodes":
+            mats = []
+            for b in bufs:
+                pn = b.path_nodes
+                if pn.shape[1] < depth_pad + 1:
+                    pn = np.pad(pn, ((0, 0), (0, depth_pad + 1 - pn.shape[1])),
+                                constant_values=-1)
+                mats.append(pn)
+            out[f.name] = np.stack(mats)
+        else:
+            out[f.name] = np.stack([getattr(b, f.name) for b in bufs])
+    return out
+
+
+# ---------------------------------------------------------------- defaults
+def default_chain_spec(k_cands: int, m_prompts: int, n_ept: int = 1) -> TreeSpec:
+    """Linear chain tree for recurrent (SSM / RG-LRU) chain-mode PPD:
+    root -> k top-1 candidates -> prompt chain on the deepest node."""
+    cands = [tuple([0] * d) for d in range(1, k_cands + 1)]
+    chains = {tuple([0] * k_cands): m_prompts}
+    return TreeSpec(candidates=cands, prompt_chains=chains, n_ept=n_ept)
+
+
+def mk_default_tree(m: int = 3, topk: Tuple[int, ...] = (4, 2, 2),
+                    n_ept: int = 1) -> List[TreeSpec]:
+    """A reasonable hand-built dynamic tree family (states 0..m) used before
+    calibration; state k has candidate depth k."""
+    states = []
+    for k in range(m + 1):
+        cands: List[Choice] = []
+        for d in range(1, k + 1):
+            width = topk[d - 1] if d - 1 < len(topk) else 1
+            if d == 1:
+                cands += [(i,) for i in range(width)]
+            else:
+                # extend only the greedy spine plus first alternatives
+                prev = [c for c in cands if len(c) == d - 1]
+                for c in prev:
+                    w = width if c == tuple([0] * (d - 1)) else 1
+                    cands += [c + (i,) for i in range(w)]
+        chains = {(): m}
+        for c in cands:
+            # deeper nodes on the greedy spine keep longer chains
+            on_spine = all(x == 0 for x in c)
+            chains[c] = m if on_spine else max(1, m - len(c))
+        states.append(TreeSpec(candidates=cands, prompt_chains=chains,
+                               n_ept=n_ept))
+    return states

@@ -1,0 +1,132 @@
+"""Candidate verification: exact matching (greedy) and typical acceptance.
+
+All functions are batched and fully vectorized: acceptance propagates down
+the tree with D parent-gather iterations (D = static max depth), no host
+round trips.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .tree import CAND, PAD, PROMPT, ROOT
+
+
+class Verdict(NamedTuple):
+    v_star: jnp.ndarray        # [B] last accepted node id
+    n_acc: jnp.ndarray         # [B] accepted candidates (path len - root)
+    accept_mask: jnp.ndarray   # [B,N] nodes on the accepted path (incl root)
+    bonus: jnp.ndarray         # [B] (audio: [B,K]) the +1 token from v*
+    next_state: jnp.ndarray    # [B] next dynamic-tree state (chain length)
+
+
+def _gather_parent(x, parent):
+    """x: [B,N]; parent: [B,N] (-1 for root) -> x at parent (root -> self)."""
+    p = jnp.maximum(parent, 0)
+    return jnp.take_along_axis(x, p, axis=1)
+
+
+def _propagate(match, bufs):
+    """accepted[i] = match[i] & accepted[parent[i]] (root = True)."""
+    is_root = bufs["node_type"] == ROOT
+    acc = is_root | match
+    D = bufs["path_nodes"].shape[-1]
+    for _ in range(D - 1):
+        acc = (is_root | match) & _gather_parent(acc, bufs["parent"])
+    return acc & (bufs["node_type"] != PAD)
+
+
+def _pick_deepest(acc, bufs):
+    """Deepest accepted node; node order ties break toward lower choice."""
+    score = jnp.where(acc & ((bufs["node_type"] == CAND)
+                             | (bufs["node_type"] == ROOT)),
+                      bufs["depth"] + 1, 0)
+    v_star = jnp.argmax(score, axis=1)                    # first max = best
+    n_acc = jnp.take_along_axis(bufs["depth"], v_star[:, None], 1)[:, 0]
+    return v_star, n_acc
+
+
+def _path_mask(v_star, bufs):
+    B, N = bufs["depth"].shape
+    path = jnp.take_along_axis(
+        bufs["path_nodes"], v_star[:, None, None].repeat(
+            bufs["path_nodes"].shape[-1], axis=2), axis=1)[:, 0]  # [B,D]
+    tgt = jnp.where(path >= 0, path, N)
+    mask = jnp.zeros((B, N + 1), bool).at[
+        jnp.arange(B)[:, None], tgt].set(True, mode="drop")
+    return mask[:, :N]
+
+
+def _argmax_token(logits):
+    # audio logits: [B,N,K,V] -> per-codebook argmax [B,N,K]
+    return jnp.argmax(logits, axis=-1)
+
+
+def _tokens_match(tokens, parent_pred):
+    m = tokens == parent_pred
+    if m.ndim == 3:                                       # audio codebooks
+        m = m.all(axis=-1)
+    return m
+
+
+def verify_greedy(bufs, logits, tokens) -> Verdict:
+    """Exact-match verification (temperature 0): output == vanilla LLM."""
+    pred = _argmax_token(logits)                          # [B,N(,K)]
+    parent_pred = (jnp.take_along_axis(
+        pred, jnp.maximum(bufs["parent"], 0)[..., None], axis=1)[..., 0]
+        if pred.ndim == 3 else _gather_parent(pred, bufs["parent"]))
+    if pred.ndim == 3:                                    # audio: gather K
+        p = jnp.maximum(bufs["parent"], 0)
+        parent_pred = jnp.take_along_axis(
+            pred, p[:, :, None].repeat(pred.shape[-1], -1), axis=1)
+    match = _tokens_match(tokens, parent_pred) & (bufs["node_type"] == CAND)
+    acc = _propagate(match, bufs)
+    v_star, n_acc = _pick_deepest(acc, bufs)
+    accept_mask = _path_mask(v_star, bufs)
+    if pred.ndim == 3:
+        bonus = jnp.take_along_axis(
+            pred, v_star[:, None, None].repeat(pred.shape[-1], -1),
+            axis=1)[:, 0]
+    else:
+        bonus = jnp.take_along_axis(pred, v_star[:, None], 1)[:, 0]
+    next_state = jnp.take_along_axis(bufs["chain_len"], v_star[:, None],
+                                     1)[:, 0]
+    return Verdict(v_star, n_acc, accept_mask, bonus, next_state)
+
+
+def verify_typical(bufs, logits, tokens, key, temperature=0.7,
+                   epsilon=0.3, delta=0.09) -> Verdict:
+    """Typical acceptance (Medusa §3.2): accept candidate x if
+    p_parent(x) > min(epsilon, delta * exp(-H(p_parent))); the greedy
+    argmax is always accepted.  Bonus token is sampled at temperature."""
+    if logits.ndim == 4:
+        # audio: fall back to greedy per-codebook verification
+        return verify_greedy(bufs, logits, tokens)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32) / temperature, -1)
+    probs = jnp.exp(lp)
+    ent = -(probs * lp).sum(-1)                           # [B,N]
+    thresh = jnp.minimum(epsilon, delta * jnp.exp(-ent))  # [B,N]
+    p_tok_parent = jnp.take_along_axis(
+        _gather_parent_3d(probs, bufs["parent"]), tokens[..., None],
+        axis=-1)[..., 0]
+    parent_thresh = _gather_parent(thresh, bufs["parent"])
+    greedy_pred = _gather_parent(jnp.argmax(logits, -1), bufs["parent"])
+    match = ((p_tok_parent > parent_thresh) | (tokens == greedy_pred)) \
+        & (bufs["node_type"] == CAND)
+    acc = _propagate(match, bufs)
+    v_star, n_acc = _pick_deepest(acc, bufs)
+    accept_mask = _path_mask(v_star, bufs)
+    lg_star = jnp.take_along_axis(
+        logits, v_star[:, None, None].repeat(logits.shape[-1], -1),
+        axis=1)[:, 0]
+    bonus = jax.random.categorical(key, lg_star / temperature, axis=-1)
+    next_state = jnp.take_along_axis(bufs["chain_len"], v_star[:, None],
+                                     1)[:, 0]
+    return Verdict(v_star, n_acc, accept_mask, bonus, next_state)
+
+
+def _gather_parent_3d(x, parent):
+    p = jnp.maximum(parent, 0)
+    return jnp.take_along_axis(x, p[..., None], axis=1)

@@ -1,0 +1,78 @@
+"""Synthetic data pipeline.
+
+Offline environment: no ShareGPT download.  We generate a deterministic
+"templated dialogue" language whose strong local structure (phrases,
+punctuation runs, arithmetic-style spans) gives prompt tokens real
+long-range signal — the same role ShareGPT plays in the paper.  The
+pipeline provides packed train batches and a held-out validation split
+(used for tree calibration, mirroring the paper's Alpaca usage).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Order-2 Markov template language over a given vocab."""
+    vocab_size: int
+    n_phrases: int = 64
+    phrase_len: int = 8
+    phrase_p: float = 0.7
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v = self.vocab_size
+        # deterministic phrases (common expressions the paper alludes to)
+        self.phrases = rng.integers(0, v, size=(self.n_phrases,
+                                                self.phrase_len))
+        # sparse bigram continuation table: each token has few successors
+        self.bigram = rng.integers(0, v, size=(v, 4))
+        self.bigram_p = rng.dirichlet([0.5] * 4, size=v)
+
+    def sample(self, rng, length):
+        out = []
+        while len(out) < length:
+            if rng.random() < self.phrase_p:        # emit a whole phrase
+                out.extend(self.phrases[rng.integers(self.n_phrases)])
+            else:                                    # bigram random walk
+                t = out[-1] if out else int(rng.integers(self.vocab_size))
+                for _ in range(rng.integers(2, 8)):
+                    t = int(rng.choice(self.bigram[t], p=self.bigram_p[t]))
+                    out.append(t)
+        return np.asarray(out[:length], np.int32)
+
+
+class DataPipeline:
+    def __init__(self, vocab_size, seq_len, batch_size, seed=0,
+                 n_codebooks=0):
+        self.lm = SyntheticLM(vocab_size)
+        self.seq_len, self.batch_size = seq_len, batch_size
+        self.vocab_size = vocab_size
+        self.n_codebooks = n_codebooks
+        self._seed = seed
+
+    def batches(self, n_batches, split="train"):
+        base = self._seed + (1_000_000 if split == "val" else 0)
+        for i in range(n_batches):
+            rng = np.random.default_rng(base + i)
+            rows = [self.lm.sample(rng, self.seq_len)
+                    for _ in range(self.batch_size)]
+            b = np.stack(rows)
+            if self.n_codebooks:
+                # audio: derive per-codebook streams from the base stream
+                b = np.stack([(b * (k + 1) + k) % self.vocab_size
+                              for k in range(self.n_codebooks)], axis=-1)
+            yield b
+
+    def val_prompts(self, n, prompt_len, seed=7):
+        rng = np.random.default_rng(self._seed + 2_000_000 + seed)
+        rows = [self.lm.sample(rng, prompt_len) for _ in range(n)]
+        b = np.stack(rows)
+        if self.n_codebooks:
+            b = np.stack([(b * (k + 1) + k) % self.vocab_size
+                          for k in range(self.n_codebooks)], axis=-1)
+        return b

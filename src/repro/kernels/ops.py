@@ -1,0 +1,27 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``tree_decode_attention`` dispatches to the Pallas kernel (interpret mode
+on CPU — the TPU path just flips ``interpret=False``) and exposes the same
+contract as the pure-jnp reference, which remains the correctness oracle.
+"""
+from __future__ import annotations
+
+import jax
+
+from .ref import tree_attention_ref
+from .tree_attention import tree_attention
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def tree_decode_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree,
+                          q_pos, tree_mask, *, window: int = 0,
+                          blk_s: int = 256, use_kernel: bool = True,
+                          interpret: bool | None = None):
+    if not use_kernel:
+        return tree_attention_ref(q, k_cache, v_cache, kv_pos, k_tree,
+                                  v_tree, q_pos, tree_mask, window=window)
+    interp = (not _ON_TPU) if interpret is None else interpret
+    return tree_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree,
+                          q_pos, tree_mask, window=window, blk_s=blk_s,
+                          interpret=interp)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the tree-decode attention kernel.
+
+Semantics: T tree tokens attend to (a) a ring KV cache of capacity S whose
+slot validity/order is carried by per-slot positions, and (b) each other
+through an explicit [T,T] tree (ancestor) mask.  Sliding-window layers
+clamp cache visibility to ``q_pos - window < kv_pos <= q_pos``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tree_attention_ref(q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos,
+                       tree_mask, *, window: int = 0, scale=None):
+    """q: [B,T,H,D]; k/v_cache: [B,S,Hkv,D(v)]; kv_pos: [B,S] (-1 invalid);
+    k/v_tree: [B,T,Hkv,D(v)]; q_pos: [B,T]; tree_mask: [B,T,T] bool.
+    Returns [B,T,H,Dv]."""
+    B, T, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    qf = q.reshape(B, T, Hkv, G, D).astype(jnp.float32)
+    kc = k_cache.astype(jnp.float32)
+    kt = k_tree.astype(jnp.float32)
+
+    sc = jnp.einsum("bthgd,bshd->bhgts", qf, kc) * scale     # [B,Hkv,G,T,S]
+    st = jnp.einsum("bthgd,bshd->bhgts", qf, kt) * scale     # [B,Hkv,G,T,T]
+
+    mc = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mc &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    sc = jnp.where(mc[:, None, None], sc, NEG_INF)
+    st = jnp.where(tree_mask[:, None, None], st, NEG_INF)
+
+    s_all = jnp.concatenate([sc, st], axis=-1)
+    p = jax.nn.softmax(s_all, axis=-1)
+    v_all = jnp.concatenate([v_cache, v_tree], axis=1).astype(jnp.float32)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v_all)
+    return out.reshape(B, T, H, Dv).astype(q.dtype)

@@ -1,0 +1,138 @@
+"""Pallas TPU flash tree-decode attention.
+
+The PPD hot spot: every decode step runs T tree tokens (root + candidates +
+prompt tokens, T ~ 16-128) against a long KV cache plus the tiny [T,T] tree
+mask.  The GPU reference materializes an [T, S+T] mask inside HF attention;
+on TPU we stream the cache HBM->VMEM in ``BLK_S``-sized blocks with an
+online-softmax accumulator held in VMEM scratch, and fold the tree tail in
+as the final grid step — no [T,S] mask or cache concatenation is ever
+materialized.
+
+Layout decisions (v5e):
+* grid = (B, Hkv, NS+1); the S axis iterates innermost so the scratch
+  accumulator carries across cache blocks of one (batch, kv-head).
+* q is pre-reshaped to [B, T, Hkv, G, D] so one grid step loads the whole
+  GQA group of the kv head: the scores matmul is [T*G, D] x [D, BLK_S],
+  MXU-aligned when T*G and BLK_S are multiples of 128 and D in {64,128,256}.
+* K/V blocks are [BLK_S, D] slices — contiguous HBM reads; sliding-window
+  layers structurally skip blocks whose positions fall outside the window
+  (pl.when on block-level position bounds), so a 512-token window over a
+  524k cache reads 1-2 blocks instead of 1024.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, tmask_ref, q_ref, k_ref, v_ref, kt_ref,
+            vt_ref, o_ref, acc_ref, m_ref, l_ref, *, ns, blk_s, window,
+            scale):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)          # [T, G, D]
+    T, G, D = q.shape
+    qpos = qpos_ref[0]                              # [T]
+
+    def online_update(scores, v):
+        # scores: [T, G, S']; v: [S', Dv]
+        m_prev = m_ref[...]                         # [T, G]
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[..., None])      # [T, G, S']
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                        + jax.lax.dot_general(
+                            p, v.astype(jnp.float32),
+                            (((2,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    # ---- cache blocks ----
+    @pl.when(s < ns)
+    def _cache_block():
+        k = k_ref[0, :, 0].astype(jnp.float32)      # [BLK_S, D]
+        kpos = kpos_ref[0]                          # [BLK_S]
+        scores = jax.lax.dot_general(
+            q.reshape(T * G, D), k, (((1,), (1,)), ((), ()))
+        ).reshape(T, G, blk_s) * scale
+        mask = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+        if window:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+        online_update(scores, v_ref[0, :, 0])
+
+    # ---- tree tail + output ----
+    @pl.when(s == ns)
+    def _tree_block():
+        kt = kt_ref[0, :, 0].astype(jnp.float32)    # [T, D]
+        scores = jax.lax.dot_general(
+            q.reshape(T * G, D), kt, (((1,), (1,)), ((), ()))
+        ).reshape(T, G, T) * scale
+        tmask = tmask_ref[0]                        # [T, T]
+        scores = jnp.where(tmask[:, None, :], scores, NEG_INF)
+        online_update(scores, vt_ref[0, :, 0])
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[...] = out[None, :, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "blk_s", "interpret"))
+def tree_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos,
+                   tree_mask, *, window: int = 0, blk_s: int = 256,
+                   interpret: bool = True):
+    """Shapes as in :func:`repro.kernels.ref.tree_attention_ref`."""
+    B, T, H, D = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = H // Hkv
+    scale = D ** -0.5
+    blk_s = min(blk_s, S)
+    assert S % blk_s == 0, (S, blk_s)
+    ns = S // blk_s
+
+    q5 = q.reshape(B, T, Hkv, G, D)
+    grid = (B, Hkv, ns + 1)
+
+    kernel = functools.partial(_kernel, ns=ns, blk_s=blk_s, window=window,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T), lambda b, h, s: (b, 0)),                 # qpos
+            pl.BlockSpec((1, blk_s),
+                         lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1))),
+            pl.BlockSpec((1, T, T), lambda b, h, s: (b, 0, 0)),           # tmask
+            pl.BlockSpec((1, T, 1, G, D), lambda b, h, s: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, blk_s, 1, D),
+                         lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
+                                                  h, 0)),
+            pl.BlockSpec((1, blk_s, 1, Dv),
+                         lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
+                                                  h, 0)),
+            pl.BlockSpec((1, T, 1, D), lambda b, h, s: (b, 0, h, 0)),     # ktree
+            pl.BlockSpec((1, T, 1, Dv), lambda b, h, s: (b, 0, h, 0)),    # vtree
+        ],
+        out_specs=pl.BlockSpec((1, T, 1, G, Dv),
+                               lambda b, h, s: (b, 0, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, Hkv, G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((T, G, Dv), jnp.float32),
+            pltpu.VMEM((T, G), jnp.float32),
+            pltpu.VMEM((T, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, tree_mask, q5, k_cache, v_cache, k_tree, v_tree)
+    return out.reshape(B, T, H, Dv)

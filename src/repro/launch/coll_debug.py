@@ -1,0 +1,63 @@
+"""Diagnostic: per-op collective breakdown of one dry-run combo.
+
+  python -m repro.launch.coll_debug --arch gemma3-1b --shape decode_32k
+
+Prints the N largest collective ops in the compiled SPMD module with
+their shapes — the profile used by the §Perf decode iterations.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse   # noqa: E402
+import re         # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.launch.dryrun import build_step, input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+from repro.launch.roofline import _shape_bytes           # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--dp", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    cfg, sargs, shardings = input_specs(args.arch, args.shape, mesh,
+                                        fsdp=args.fsdp, dp=args.dp)
+    step = build_step(cfg, args.shape)
+    from repro.core import decode as decode_mod
+    if "decode" in args.shape or "500k" in args.shape:
+        decode_mod.set_topk_sharding(mesh, "data", "model")
+    with mesh:
+        compiled = jax.jit(step, in_shardings=shardings).lower(
+            *sargs).compile()
+    decode_mod.set_topk_sharding(None)
+    txt = compiled.as_text()
+    ops = []
+    pat = re.compile(
+        r"%?([\w.\-]+)\s*=\s*(\([^)]*\)|[^=(]+?)\s*"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start)?\(")
+    for line in txt.splitlines():
+        m = pat.match(line.strip())
+        if not m:
+            continue
+        name, shape_str, kind = m.group(1), m.group(2), m.group(3)
+        ops.append((_shape_bytes(shape_str), kind, shape_str.strip(),
+                    name))
+    ops.sort(reverse=True)
+    total = sum(o[0] for o in ops)
+    print(f"{len(ops)} collective ops, {total / 2**20:.1f} MiB total "
+          "(per device)")
+    for b, kind, shape, name in ops[:args.top]:
+        print(f"  {b / 2**20:9.2f} MiB  {kind:18s} {shape[:90]}  ({name})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,335 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination with ShapeDtypeStruct inputs (no allocation), print
+memory/cost analysis, and dump roofline terms to json.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+# The placeholder-device flag MUST precede every other import (jax locks the
+# device count on first init).
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_NAMES, get_config                 # noqa: E402
+from repro.core import (default_chain_spec, device_buffers,      # noqa: E402
+                        is_chain_arch, mk_default_tree, init_prompt_params,
+                        ppd_decode_step, PPDState)
+from repro.models import forward, init_cache, init_params        # noqa: E402
+from repro.models.config import active_param_count, param_count  # noqa: E402
+from repro.training.optim import adamw_init                      # noqa: E402
+from repro.training.train_loop import make_ppd_train_step        # noqa: E402
+from repro.launch.mesh import batch_axes, make_production_mesh   # noqa: E402
+from repro.launch.roofline import analyze, model_flops           # noqa: E402
+from repro.launch.sharding import (replicated, shard_batch,      # noqa: E402
+                                   shard_cache, shard_params)
+
+DTYPE = jnp.bfloat16
+M_PROMPT = 3
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+# long_500k runs only for sub-quadratic / windowed archs (see DESIGN.md
+# §Arch-applicability); pure full-attention stacks are skipped.
+LONG_OK = {"gemma3-1b", "gemma3-4b", "mamba2-2.7b", "recurrentgemma-9b"}
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+def _tokens_spec(cfg, batch, seq):
+    if cfg.modality == "audio":
+        return jax.ShapeDtypeStruct((batch, seq, cfg.n_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(arch: str, shape_name: str, mesh, fsdp: bool = False,
+                dp: bool = False, scan: bool = True):
+    """ShapeDtypeStruct stand-ins + shardings for one (arch, shape).
+
+    ``dp``: pure data parallelism — parameters replicated, the batch
+    sharded over EVERY mesh axis (incl. "model").  The right scheme when
+    the model fits one chip's HBM: no per-layer tensor-parallel
+    all-reduces at all (see EXPERIMENTS.md §Perf).
+    ``scan=False``: eager (unrolled) layers — larger HLO, but GSPMD then
+    shards each layer's weights independently instead of treating the
+    stacked scan xs as one tensor (§Perf pair 2)."""
+    cfg = get_config(arch).replace(scan_layers=scan)
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    baxes = batch_axes(mesh) + (("model",) if dp else ())
+
+    params = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), DTYPE))
+    params_sh = (replicated(params, mesh) if dp
+                 else shard_params(params, mesh, baxes, fsdp=fsdp))
+    ppd = jax.eval_shape(
+        lambda: init_prompt_params(cfg, jax.random.PRNGKey(1), m=M_PROMPT,
+                                   dtype=DTYPE))
+    ppd_sh = replicated(ppd, mesh)
+
+    if sh["kind"] == "train":
+        # seq-1024 rows packed to the global batch: the paper trains with
+        # ctx 1024; we keep the assigned (256 x 4096) global shape.
+        toks = _tokens_spec(cfg, B, S)
+        opt = jax.eval_shape(lambda: adamw_init(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), ppd)))
+        key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+        args = (params, ppd, opt, toks, key)
+        shardings = (params_sh, ppd_sh, replicated(opt, mesh),
+                     shard_batch(toks, mesh, baxes), replicated(key, mesh))
+        return cfg, args, shardings
+
+    if sh["kind"] == "prefill":
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, S, DTYPE))
+        cache_sh = shard_cache(cache, mesh, baxes)
+        if cfg.modality == "vlm":
+            toks = _tokens_spec(cfg, B, S - cfg.n_patches)
+            pre = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), DTYPE)
+            args = (params, toks, pre, cache)
+            shardings = (params_sh, shard_batch(toks, mesh, baxes),
+                         shard_batch(pre, mesh, baxes), cache_sh)
+        else:
+            toks = _tokens_spec(cfg, B, S)
+            args = (params, toks, cache)
+            shardings = (params_sh, shard_batch(toks, mesh, baxes), cache_sh)
+        return cfg, args, shardings
+
+    # decode: PPD serve step with cache of length seq
+    KMAX = 10
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S, DTYPE))
+    cache_sh = shard_cache(cache, mesh, baxes)
+    gvals = jax.ShapeDtypeStruct((B, M_PROMPT, KMAX), jnp.float32)
+    if cfg.modality == "audio":
+        root = jax.ShapeDtypeStruct((B, cfg.n_codebooks), jnp.int32)
+        gidx = jax.ShapeDtypeStruct((B, M_PROMPT, KMAX, cfg.n_codebooks),
+                                    jnp.int32)
+    else:
+        root = jax.ShapeDtypeStruct((B,), jnp.int32)
+        gidx = jax.ShapeDtypeStruct((B, M_PROMPT, KMAX), jnp.int32)
+    tstate = jax.ShapeDtypeStruct((B,), jnp.int32)
+    state = PPDState(cache=cache, root_token=root, guess_vals=gvals,
+                     guess_idx=gidx, tree_state=tstate)
+    state_sh = PPDState(cache=cache_sh,
+                        root_token=shard_batch(root, mesh, baxes),
+                        guess_vals=shard_batch(gvals, mesh, baxes),
+                        guess_idx=shard_batch(gidx, mesh, baxes),
+                        tree_state=shard_batch(tstate, mesh, baxes))
+    args = (params, ppd, state)
+    shardings = (params_sh, ppd_sh, state_sh)
+    return cfg, args, shardings
+
+
+def build_step(cfg, shape_name, gather_rows=True):
+    kind = SHAPES[shape_name]["kind"]
+    if kind == "train":
+        inner = make_ppd_train_step(cfg, m=M_PROMPT, moe_exact=False,
+                                    q_chunk=512, remat=True,
+                                    gather_rows=gather_rows)
+
+        def train_step(params, ppd, opt, tokens, key):
+            return inner(params, ppd, opt, tokens, key)
+        return train_step
+
+    if kind == "prefill":
+        if cfg.modality == "vlm":
+            def prefill_vlm(params, tokens, prefix, cache):
+                logits, cache, _, _ = forward(params, cfg, tokens,
+                                              prefix_embeds=prefix,
+                                              cache=cache, q_chunk=512)
+                return logits[:, -1], cache
+            return prefill_vlm
+
+        def prefill(params, tokens, cache):
+            logits, cache, _, _ = forward(params, cfg, tokens, cache=cache,
+                                          q_chunk=512)
+            return logits[:, -1], cache
+        return prefill
+
+    # decode
+    if is_chain_arch(cfg):
+        states = [default_chain_spec(max(k, 1), M_PROMPT)
+                  for k in range(M_PROMPT + 1)]
+        states[0] = default_chain_spec(1, M_PROMPT)
+    else:
+        states = mk_default_tree(M_PROMPT)
+    bufs = device_buffers(states, M_PROMPT)
+
+    def serve_step(params, ppd, state):
+        new_state, info = ppd_decode_step(params, ppd, cfg, bufs, state,
+                                          m=M_PROMPT, moe_exact=False)
+        return new_state, info["n_accepted"]
+    return serve_step
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            verbose: bool = True, mesh=None, gather_rows: bool = True,
+            fsdp: bool = False, dp: bool = False, scan: bool = True):
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    cfg, args, shardings = input_specs(arch, shape_name, mesh, fsdp=fsdp,
+                                       dp=dp, scan=scan)
+    step = build_step(cfg, shape_name, gather_rows=gather_rows)
+
+    from repro.core import decode as decode_mod
+    from repro.models import moe as moe_mod
+    if fsdp and cfg.moe is not None:
+        # expert-parallel token routing: dispatch buffers sharded like the
+        # expert weights (E over data x model)
+        moe_mod.set_expert_sharding(tuple(batch_axes(mesh)) + ("model",))
+    if SHAPES[shape_name]["kind"] == "decode" and not dp:
+        # keep the guess top-k's inner sort shard-local, and decode
+        # attention batch-local (§Perf pair 3)
+        from repro.models import layers as layers_mod
+        ba = batch_axes(mesh)                  # ("data",) or ("pod","data")
+        bspec = ba if len(ba) > 1 else ba[0]
+        decode_mod.set_topk_sharding(mesh, bspec, "model")
+        decode_mod.set_commit_sharding(mesh, bspec)
+        layers_mod.set_attention_sharding(bspec)
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = jax.jit(step, in_shardings=shardings).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+    finally:
+        from repro.models import layers as layers_mod
+        moe_mod.set_expert_sharding(None)
+        decode_mod.set_topk_sharding(None)
+        decode_mod.set_commit_sharding(None)
+        layers_mod.set_attention_sharding(None)
+    t_total = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    roof = analyze(compiled, chips)
+    sh = SHAPES[shape_name]
+    # training: fwd+bwd = 6·N per token; inference: fwd only = 2·N.
+    if sh["kind"] == "train":
+        toks, flops_per_param = sh["batch"] * sh["seq"], 6.0
+    elif sh["kind"] == "prefill":
+        toks, flops_per_param = sh["batch"] * sh["seq"], 2.0
+    else:
+        toks, flops_per_param = sh["batch"] * int(bufs_size(cfg)), 2.0
+    mf = model_flops(active_param_count(cfg), toks, flops_per_param)
+
+    mesh_tag = "x".join(str(s) for s in mesh.devices.shape)
+    variant = []
+    if fsdp:
+        variant.append("fsdp")
+    if dp:
+        variant.append("dp")
+    if not scan:
+        variant.append("noscan")
+    if not gather_rows and SHAPES[shape_name]["kind"] == "train":
+        variant.append("naive")
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": "+".join(variant),
+        "mesh": mesh_tag, "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_total, 1),
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_heap_size_in_bytes", None)
+              or getattr(mem, "serialized_size_in_bytes", None),
+        },
+        "roofline": roof.as_dict(),
+        "model_flops": mf,
+        "model_flops_ratio": mf / max(roof.flops * chips, 1.0),
+        "params_total": param_count(cfg),
+        "params_active": active_param_count(cfg),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+              f"compile {rec['compile_s']}s  "
+              f"Tc={roof.t_compute:.2e}s Tm={roof.t_memory:.2e}s "
+              f"Tcoll={roof.t_collective:.2e}s  dom={roof.dominant}  "
+              f"useful={rec['model_flops_ratio']:.2f}")
+        print("  memory_analysis:", rec["bytes_per_device"])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        vtag = ("_" + rec["variant"]) if rec["variant"] else ""
+        tag = f"{arch}_{shape_name}_{rec['mesh']}{vtag}".replace("/", "-")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def bufs_size(cfg):
+    if is_chain_arch(cfg):
+        return 1 + M_PROMPT + M_PROMPT
+    states = mk_default_tree(M_PROMPT)
+    return max(s.n_nodes for s in states)
+
+
+def combos(multi_pod: bool):
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                continue
+            yield arch, shape, multi_pod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip combos whose result json already exists")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="2D fully-sharded parameters (data x model)")
+    ap.add_argument("--dp", action="store_true",
+                    help="pure data parallelism (params replicated, batch "
+                         "over all axes) — for models that fit one chip")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="eager (unrolled) layers instead of lax.scan")
+    ap.add_argument("--naive-distill", action="store_true",
+                    help="paper-naive full-logits KD (baseline variant)")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    todo = (list(combos(args.multi_pod)) if args.all
+            else [(args.arch, args.shape, args.multi_pod)])
+    failures = []
+    for arch, shape, mp in todo:
+        tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+        if args.resume and os.path.exists(
+                os.path.join(args.out, tag + ".json")):
+            print(f"[skip existing] {tag}")
+            continue
+        try:
+            run_one(arch, shape, mp, args.out, fsdp=args.fsdp, dp=args.dp,
+                    scan=not args.no_scan,
+                    gather_rows=not args.naive_distill)
+        except Exception as e:   # noqa: BLE001
+            failures.append((arch, shape, mp, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+compute   = HLO_FLOPs / (chips * peak_FLOPs)
+memory    = HLO_bytes / (chips * HBM_bw)
+collective= collective_bytes / (chips * link_bw)
+
+``cost_analysis`` provides flops/bytes; collective bytes are parsed from
+the HLO text (sum of result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+# TPU v5e per-chip constants
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind over the HLO module text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=(]+?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", ls)
+        if not m:
+            continue
+        shape_str, kind, start = m.group(1), m.group(2), m.group(3)
+        if "-done" in ls.split("(")[0]:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        out["count"] += 1
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    chips: int
+
+    @property
+    def t_compute(self):
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self):
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self):
+        # collective bytes in the SPMD module are already per-device
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    total_coll = sum(v for k, v in coll.items() if k != "count")
+    return Roofline(flops=flops, bytes_accessed=byts, coll_bytes=total_coll,
+                    chips=chips)
+
+
+def model_flops(n_params_active: int, tokens: int,
+                flops_per_param: float = 6.0) -> float:
+    """MODEL_FLOPS = 6 * N * D (training) / 2 * N * D (inference fwd)."""
+    return flops_per_param * n_params_active * tokens

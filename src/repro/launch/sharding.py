@@ -1,0 +1,176 @@
+"""Parameter / activation partition rules.
+
+Name-based rules with divisibility fallback: a dimension is sharded on
+``model`` only when it divides evenly; otherwise that dim is replicated.
+This keeps every assigned architecture lowering on the same mesh (e.g.
+granite's vocab 49155 or gemma3-1b's 4 query heads cannot shard on 16-way
+model parallelism — the rule degrades to replication for exactly those
+tensors instead of failing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _div(n, mesh, axis="model"):
+    return n % mesh.shape[axis] == 0
+
+
+def _spec(mesh, *axes):
+    return NamedSharding(mesh, P(*axes))
+
+
+def param_sharding_rules(mesh, batch_axes=("data",), fsdp=False):
+    """Returns fn(path_str, shape) -> NamedSharding.
+
+    ``fsdp``: additionally shard the non-model dimension of each weight
+    over the data(+pod) axes (2D / fully-sharded parameters).  Required
+    for models whose replicated-over-data weights exceed HBM (deepseek-v3
+    on 256 chips); XLA inserts the per-layer all-gathers.
+    """
+    M = "model"
+    fs = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+
+    def _fsdp_prod():
+        p = 1
+        for a in batch_axes:
+            p *= mesh.shape[a]
+        return p
+
+    def rule(path: str, shape):
+        # stacked scan params carry a leading layer axis -> shift all rules
+        off = 1 if "/layers_scan/" in path else 0
+
+        def m_if(dim_idx, expert_dim=None):
+            axes = [None] * len(shape)
+            if (fsdp and expert_dim is not None
+                    and shape[expert_dim + off]
+                    % (_fsdp_prod() * mesh.shape[M]) == 0):
+                # expert parallelism over the FULL mesh: E = data x model
+                # (deepseek: 256 experts over 256 chips -> weights are
+                # never gathered; tokens all-to-all to their experts).
+                axes[expert_dim + off] = tuple(batch_axes) + (M,)
+                return _spec(mesh, *axes)
+            if _div(shape[dim_idx + off], mesh):
+                axes[dim_idx + off] = M
+            if fsdp:
+                # shard the largest remaining dim over data(+pod)
+                cand = [i for i in range(off, len(shape))
+                        if axes[i] is None]
+                cand.sort(key=lambda i: -shape[i])
+                for i in cand:
+                    if shape[i] % _fsdp_prod() == 0:
+                        axes[i] = fs
+                        break
+            return _spec(mesh, *axes)
+
+        name = path.split("/")[-1]
+        if name in ("embed",):
+            return m_if(0 if len(shape) == 2 else 1)      # [V,d] / [K,V,d]
+        if name in ("lm_head",):
+            return m_if(1)                                 # [d,V]
+        if name in ("codebook_heads",):
+            return m_if(2)                                 # [K,d,V]
+        if name in ("wq", "wk", "wv", "w_uq", "w_ukv", "w_gate", "w_up",
+                    "w_x", "w_y", "in_proj"):
+            if len(shape) == 3:                            # MoE experts [E,d,f]
+                return m_if(0, expert_dim=0)
+            return m_if(1)
+        if name in ("wo", "w_down", "out_proj", "w_out"):
+            if len(shape) == 3:
+                return m_if(0, expert_dim=0)
+            return m_if(0)
+        if name in ("conv_w",) and len(shape) == 2:
+            return m_if(0)
+        if name in ("gate_a_w", "gate_x_w"):
+            return m_if(0)                                 # [nb, bs, bs]
+        if name in ("proj",):                              # mtp [2d,d]
+            return m_if(1)
+        return _spec(mesh)                                 # replicate
+
+    return rule
+
+
+def shard_params(tree, mesh, batch_axes=("data",), fsdp=False):
+    """ShapeDtypeStruct/array pytree -> matching NamedSharding pytree."""
+    rule = param_sharding_rules(mesh, batch_axes, fsdp=fsdp)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, f"{path}/[{i}]") for i, v in enumerate(node)]
+            return type(node)(t) if not hasattr(node, "_fields") \
+                else type(node)(*t)
+        return rule(path, node.shape)
+
+    return walk(tree, "")
+
+
+def _batch_spec(mesh, batch_axes, batch_size):
+    """Batch-dim axes, degrading to replication when B doesn't divide
+    (e.g. long_500k's global batch of 1)."""
+    prod = 1
+    for a in batch_axes:
+        prod *= mesh.shape[a]
+    if batch_size % prod == 0:
+        return tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+    return None
+
+
+def shard_cache(tree, mesh, batch_axes=("data",)):
+    """KV-cache pytree: batch dim on data(+pod); kv-heads on model when they
+    divide; recurrent state heads on model when they divide."""
+    M = "model"
+
+    def leaf(path, shape):
+        name = path.split("/")[-1]
+        off = 1 if "/scan/" in path else 0     # stacked layer axis
+        axes = [None] * len(shape)
+        axes[off] = _batch_spec(mesh, batch_axes, shape[off])
+        nd = len(shape) - off
+        if name in ("k", "v") and nd == 4 and _div(shape[2 + off], mesh):
+            axes[2 + off] = M                              # [B,C,Hkv,D]
+        if name == "state" and nd == 4 and _div(shape[1 + off], mesh):
+            axes[1 + off] = M                              # [B,nh,hd,N]
+        if name == "conv_in" and nd == 3 and _div(shape[2 + off], mesh):
+            axes[2 + off] = M                              # [B,w-1,conv_dim]
+        if name == "h" and nd == 2 and _div(shape[1 + off], mesh):
+            axes[1 + off] = M                              # [B,lru_width]
+        return _spec(mesh, *axes)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, f"{path}/[{i}]") for i, v in enumerate(node)]
+            return type(node)(t)
+        off = 1 if "/scan/" in path else 0
+        if len(node.shape) - off <= 0:
+            return _spec(mesh)
+        if len(node.shape) - off == 1:                     # length [B]
+            axes = [None] * off + [_batch_spec(mesh, batch_axes,
+                                               node.shape[off])]
+            return _spec(mesh, *axes)
+        return leaf(path, node.shape)
+
+    return walk(tree, "")
+
+
+def shard_batch(tree, mesh, batch_axes=("data",)):
+    """Token/activation batches: dim0 on data(+pod), rest replicated.
+    Batches smaller than the data axis (long_500k B=1) replicate."""
+
+    def leaf(x):
+        if getattr(x, "ndim", 0) == 0:
+            return _spec(mesh)
+        return _spec(mesh, _batch_spec(mesh, batch_axes, x.shape[0]),
+                     *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(leaf, tree)
+
+
+def replicated(tree, mesh):
+    return jax.tree.map(lambda x: _spec(mesh), tree)

@@ -1,0 +1,255 @@
+"""Attention mixers: GQA (full / sliding-window) and MLA (DeepSeek/MiniCPM3).
+
+Both expose the same call contract used by :mod:`repro.models.model`:
+
+    out, cache_entry = apply(params, cfg, spec, x, positions, cache_entry,
+                             extra_mask=..., q_chunk=...)
+
+``cache_entry`` is a per-layer dict pytree; new K/V are *staged* into it at
+``positions % C`` immediately (prefill) or returned for deferred commit
+(tree decode — see ``stage_only``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig, LayerSpec, SLIDING
+from .layers import apply_rope, rms_norm, dense_init, chunked_attend
+
+
+# ------------------------------------------------------------------ GQA
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * Dh, dtype),
+        "wk": dense_init(ks[1], d, Hkv * Dh, dtype),
+        "wv": dense_init(ks[2], d, Hkv * Dh, dtype),
+        "wo": dense_init(ks[3], H * Dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), dtype)
+        p["k_norm"] = jnp.ones((Dh,), dtype)
+    return p
+
+
+def make_attn_cache(cfg: ModelConfig, spec: LayerSpec, batch, capacity,
+                    dtype=jnp.float32):
+    if spec.span == SLIDING:
+        capacity = min(capacity, spec.window)
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, Hkv, Dh), dtype),
+        "v": jnp.zeros((batch, capacity, Hkv, Dh), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def _theta(cfg: ModelConfig, spec: LayerSpec) -> float:
+    if spec.span == SLIDING and cfg.rope_local_theta is not None:
+        return cfg.rope_local_theta
+    return cfg.rope_theta
+
+
+def _project_qkv(p, cfg, spec, x, positions):
+    B, T, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, H, Dh)
+    k = (x @ p["wk"]).reshape(B, T, Hkv, Dh)
+    v = (x @ p["wv"]).reshape(B, T, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    th = _theta(cfg, spec)
+    q = apply_rope(q, positions, th)
+    k = apply_rope(k, positions, th)
+    return q, k, v
+
+
+def scatter_kv(cache, k_new, v_new, positions, accept_mask=None):
+    """Write staged K/V into the ring cache at ``positions % C``.
+
+    ``accept_mask`` ([B,T] bool) drops rejected tree tokens (OOB-slot trick).
+    """
+    C = cache["k"].shape[1]
+    slots = positions % C
+    if accept_mask is not None:
+        slots = jnp.where(accept_mask, slots, C)      # C is out of range -> drop
+        positions = jnp.where(accept_mask, positions, -1)
+    bidx = jnp.arange(k_new.shape[0])[:, None]
+    out = dict(cache)
+    out["k"] = cache["k"].at[bidx, slots].set(k_new, mode="drop")
+    out["v"] = cache["v"].at[bidx, slots].set(v_new, mode="drop")
+    out["pos"] = cache["pos"].at[bidx, slots].max(positions, mode="drop")
+    # max keeps the newer (larger) position on ring wrap *and* ignores -1s.
+    return out
+
+
+def attn_apply(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
+               cache=None, *, extra_mask=None, q_chunk=0, stage_only=False):
+    """x: [B,T,d]; positions: [B,T].
+
+    Without a cache: self-attention over the T tokens (training / scratch
+    prefill).  With a cache: attend over cache ∪ current tokens; if
+    ``stage_only`` the K/V are NOT written (tree decode — commit happens
+    after verification via :func:`scatter_kv`), otherwise they are written
+    in place (prefill).
+    """
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, spec, x, positions)
+    window = spec.window if spec.span == SLIDING else 0
+    staged = (k, v)
+
+    if cache is None:
+        kv_pos, kv_valid = positions, jnp.ones((B, T), bool)
+        k_all, v_all = k, v
+        self_mask = extra_mask
+    else:
+        if not stage_only:
+            cache = scatter_kv(cache, k, v, positions)
+        cpos = cache["pos"]
+        c_valid = cpos >= 0
+        if stage_only:
+            k_all = jnp.concatenate([cache["k"], k], axis=1)
+            v_all = jnp.concatenate([cache["v"], v], axis=1)
+            kv_pos = jnp.concatenate([cpos, positions], axis=1)
+            kv_valid = jnp.concatenate([c_valid, jnp.ones((B, T), bool)], 1)
+            if extra_mask is not None:
+                # extra_mask is [T,T] (tree) -> expand over the cache part.
+                em = extra_mask if extra_mask.ndim == 3 else extra_mask[None]
+                em = jnp.broadcast_to(em, (B, T, T))
+                cache_vis = jnp.ones((B, T, cpos.shape[1]), bool)
+                extra_mask = jnp.concatenate([cache_vis, em], axis=2)
+        else:
+            k_all, v_all = cache["k"], cache["v"]
+            kv_pos, kv_valid = cache["pos"], c_valid
+        self_mask = extra_mask
+
+    out = chunked_attend(q, k_all, v_all, q_positions=positions,
+                         kv_positions=kv_pos, kv_valid=kv_valid,
+                         window=window, extra_mask=self_mask,
+                         scale=cfg.head_dim ** -0.5,
+                         softcap=cfg.logit_softcap, q_chunk=q_chunk)
+    out = out.reshape(B, T, cfg.n_heads * cfg.head_dim) @ params["wo"]
+    return out, cache, staged
+
+
+# ------------------------------------------------------------------ MLA
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": dense_init(ks[1], m.q_lora_rank,
+                           H * (m.qk_nope_dim + m.qk_rope_dim), dtype),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_ukv": dense_init(ks[3], m.kv_lora_rank,
+                            H * (m.qk_nope_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d, dtype),
+    }
+
+
+def make_mla_cache(cfg: ModelConfig, batch, capacity, dtype=jnp.float32):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, capacity, m.qk_rope_dim), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def scatter_mla(cache, ckv, krope, positions, accept_mask=None):
+    C = cache["ckv"].shape[1]
+    slots = positions % C
+    if accept_mask is not None:
+        slots = jnp.where(accept_mask, slots, C)
+        positions = jnp.where(accept_mask, positions, -1)
+    bidx = jnp.arange(ckv.shape[0])[:, None]
+    out = dict(cache)
+    out["ckv"] = cache["ckv"].at[bidx, slots].set(ckv, mode="drop")
+    out["krope"] = cache["krope"].at[bidx, slots].set(krope, mode="drop")
+    out["pos"] = cache["pos"].at[bidx, slots].max(positions, mode="drop")
+    return out
+
+
+def _mla_qkv(params, cfg, x, positions):
+    m, H = cfg.mla, cfg.n_heads
+    B, T, _ = x.shape
+    cq = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.rms_eps)
+    q = (cq @ params["w_uq"]).reshape(B, T, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    dkv = x @ params["w_dkv"]
+    ckv = rms_norm(dkv[..., :m.kv_lora_rank], params["kv_norm"], cfg.rms_eps)
+    krope = apply_rope(dkv[..., m.kv_lora_rank:], positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, krope
+
+
+def _mla_attend(params, cfg, q_nope, q_rope, ckv, krope, q_positions,
+                kv_pos, kv_valid, extra_mask, q_chunk):
+    """Attention given latent K/V streams. Two math-equivalent paths."""
+    m, H = cfg.mla, cfg.n_heads
+    B, T = q_nope.shape[:2]
+    S = ckv.shape[1]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    w_ukv = params["w_ukv"].reshape(m.kv_lora_rank, H,
+                                    m.qk_nope_dim + m.v_head_dim)
+    if cfg.mla.absorb:
+        # Fold W_UK into q; attend in latent space (MQA with D=rank+rope).
+        w_uk = w_ukv[..., :m.qk_nope_dim]                     # [R,H,Dn]
+        q_lat = jnp.einsum("bthd,rhd->bthr", q_nope, w_uk)
+        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)     # [B,T,H,R+Dr]
+        k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]
+        v_lat = ckv[:, :, None, :]
+        o_lat = chunked_attend(q_cat, k_cat, v_lat, q_positions=q_positions,
+                               kv_positions=kv_pos, kv_valid=kv_valid,
+                               extra_mask=extra_mask, scale=scale,
+                               q_chunk=q_chunk)               # [B,T,H,R]
+        w_uv = w_ukv[..., m.qk_nope_dim:]                     # [R,H,Dv]
+        out = jnp.einsum("bthr,rhd->bthd", o_lat, w_uv)
+    else:
+        # Naive: decompress latents to per-head K/V (paper-faithful port).
+        kv = jnp.einsum("bsr,rhd->bshd", ckv, w_ukv)
+        k_nope, v = kv[..., :m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      (B, S, H, m.qk_rope_dim))], axis=-1)
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attend(q_cat, k, v, q_positions=q_positions,
+                             kv_positions=kv_pos, kv_valid=kv_valid,
+                             extra_mask=extra_mask, scale=scale,
+                             q_chunk=q_chunk)
+    return out.reshape(B, T, H * m.v_head_dim) @ params["wo"]
+
+
+def mla_apply(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
+              cache=None, *, extra_mask=None, q_chunk=0, stage_only=False):
+    B, T, _ = x.shape
+    q_nope, q_rope, ckv, krope = _mla_qkv(params, cfg, x, positions)
+    staged = (ckv, krope)
+    if cache is None:
+        kv_pos, kv_valid = positions, jnp.ones((B, T), bool)
+        ckv_all, krope_all = ckv, krope
+    else:
+        if not stage_only:
+            cache = scatter_mla(cache, ckv, krope, positions)
+            ckv_all, krope_all = cache["ckv"], cache["krope"]
+            kv_pos, kv_valid = cache["pos"], cache["pos"] >= 0
+        else:
+            ckv_all = jnp.concatenate([cache["ckv"], ckv], axis=1)
+            krope_all = jnp.concatenate([cache["krope"], krope], axis=1)
+            kv_pos = jnp.concatenate([cache["pos"], positions], axis=1)
+            kv_valid = jnp.concatenate(
+                [cache["pos"] >= 0, jnp.ones((B, T), bool)], axis=1)
+            if extra_mask is not None:
+                em = extra_mask if extra_mask.ndim == 3 else extra_mask[None]
+                em = jnp.broadcast_to(em, (B, T, T))
+                cache_vis = jnp.ones((B, T, cache["pos"].shape[1]), bool)
+                extra_mask = jnp.concatenate([cache_vis, em], axis=2)
+    out = _mla_attend(params, cfg, q_nope, q_rope, ckv_all, krope_all,
+                      positions, kv_pos, kv_valid, extra_mask, q_chunk)
+    return out, cache, staged

@@ -1,0 +1,243 @@
+"""Model configuration system.
+
+Every architecture in the assigned pool is expressed as a single frozen
+``ModelConfig`` (hashable, so it can ride through ``jax.jit`` as a static
+argument).  Per-layer behaviour (attention kind, MoE vs dense FFN, SSM /
+RG-LRU mixers) is derived once by :func:`layer_specs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+# Mixer kinds
+ATTN = "attn"          # standard (GQA) attention, optionally sliding-window
+MLA = "mla"            # multi-head latent attention (DeepSeek / MiniCPM3)
+SSM = "ssm"            # Mamba-2 SSD mixer
+RGLRU = "rglru"        # RecurrentGemma RG-LRU recurrent block
+
+# Attention span kinds
+FULL = "full"
+SLIDING = "sliding"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0                  # shared (always-on) experts
+    router: str = "softmax"            # "softmax" | "sigmoid" (DeepSeek-V3)
+    routed_scale: float = 1.0          # DeepSeek routed_scaling_factor
+    router_bias: bool = False          # aux-loss-free balancing bias (DSv3)
+    aux_loss_coef: float = 0.0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+    absorb: bool = False               # absorbed (latent-space) decode attention
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 64                    # SSD block-decomposition chunk length
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int
+    conv_width: int = 4
+    # pattern of temporal mixers, tiled over the depth
+    block_pattern: Tuple[str, ...] = (RGLRU, RGLRU, ATTN)
+    window: int = 2048
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                     # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    act: str = "silu"                  # silu | gelu
+    rms_eps: float = 1e-6
+    rope_theta: float = 10_000.0
+    rope_local_theta: Optional[float] = None   # gemma3 uses a different theta locally
+    qk_norm: bool = False              # gemma3-style per-head RMS q/k norm
+    scale_embeddings: bool = False     # gemma-style sqrt(d) embedding scale
+    use_post_norms: bool = False       # gemma3 sandwich norms
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0
+    max_seq_len: int = 131_072
+
+    # sliding-window pattern: `sliding_ratio` local layers per 1 global layer.
+    window: Optional[int] = None
+    sliding_ratio: int = 0             # 0 => all layers FULL
+
+    moe: Optional[MoEConfig] = None
+    first_dense_layers: int = 0        # DeepSeek-V3: first k layers use dense FFN
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+
+    mtp_depth: int = 0                 # DeepSeek-V3 multi-token-prediction heads
+
+    # modality ("text" | "audio" | "vlm"); frontends are stubs per assignment.
+    modality: str = "text"
+    n_codebooks: int = 1               # audio: EnCodec codebooks
+    n_patches: int = 256               # vlm: patch-embedding prefix length
+
+    # lax.scan over layer groups (stacked params): compile-time/HLO-size
+    # optimization for the full-size configs; CPU tests use the eager path.
+    scan_layers: bool = False
+
+    # citation for the config source
+    source: str = ""
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                         # ATTN | MLA | SSM | RGLRU
+    span: str = FULL                   # FULL | SLIDING (attention mixers only)
+    window: int = 0
+    is_moe: bool = False
+
+
+def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
+    """Derive the per-layer plan from the config."""
+    specs = []
+    for i in range(cfg.n_layers):
+        if cfg.ssm is not None:
+            specs.append(LayerSpec(mixer=SSM))
+            continue
+        if cfg.rglru is not None:
+            kind = cfg.rglru.block_pattern[i % len(cfg.rglru.block_pattern)]
+            if kind == RGLRU:
+                specs.append(LayerSpec(mixer=RGLRU))
+            else:
+                specs.append(LayerSpec(mixer=ATTN, span=SLIDING,
+                                       window=cfg.rglru.window))
+            continue
+        mixer = MLA if cfg.mla is not None else ATTN
+        span, window = FULL, 0
+        if cfg.sliding_ratio and cfg.window:
+            # pattern: `ratio` sliding layers, then 1 full layer (gemma3).
+            if (i + 1) % (cfg.sliding_ratio + 1) != 0:
+                span, window = SLIDING, cfg.window
+        is_moe = cfg.moe is not None and i >= cfg.first_dense_layers
+        specs.append(LayerSpec(mixer=mixer, span=span, window=window,
+                               is_moe=is_moe))
+    return tuple(specs)
+
+
+def scan_plan(cfg: ModelConfig):
+    """Find the layer-stacking plan for the lax.scan path.
+
+    Returns (offset o, period p, n_rep): layers [0,o) run eagerly (prefix),
+    layers [o, o + p*n_rep) run as a scan over n_rep repetitions of a
+    p-layer block, and the remaining tail runs eagerly.  Handles gemma3's
+    5:1 sliding:global pattern (p=6), recurrentgemma's (R,R,A) (p=3) and
+    deepseek's 3 dense prefix (o=3, p=1).  (0, 0, 0) = all eager.
+    """
+    specs = layer_specs(cfg)
+    L = len(specs)
+    best = None
+    for p in range(1, min(8, L) + 1):
+        i = L - p - 1
+        while i >= 0 and specs[i] == specs[i + p]:
+            i -= 1
+        o = i + 1
+        n_rep = (L - o) // p
+        if n_rep < 2:
+            continue
+        tail = (L - o) - n_rep * p
+        blocks = o + p + tail
+        if best is None or blocks < best[0]:
+            best = (blocks, o, p, n_rep)
+    if best is None:
+        return (0, 0, 0)
+    return best[1:]
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (used by the fig-7 memory benchmark)."""
+    d = cfg.d_model
+    n = 0
+    n += cfg.vocab_size * d                      # embedding
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_size * d
+    if cfg.modality == "audio":
+        n += (cfg.n_codebooks - 1) * cfg.vocab_size * d   # per-codebook tables
+        n += (cfg.n_codebooks - 1) * cfg.vocab_size * d   # per-codebook heads
+    for spec in layer_specs(cfg):
+        n += 2 * d                               # pre norms (mixer + ffn)
+        if spec.mixer == ATTN:
+            n += d * cfg.n_heads * cfg.head_dim          # wq
+            n += 2 * d * cfg.n_kv_heads * cfg.head_dim   # wk, wv
+            n += cfg.n_heads * cfg.head_dim * d          # wo
+        elif spec.mixer == MLA:
+            m = cfg.mla
+            n += d * m.q_lora_rank + m.q_lora_rank       # q down + norm
+            n += m.q_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+            n += d * (m.kv_lora_rank + m.qk_rope_dim) + m.kv_lora_rank
+            n += m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+            n += cfg.n_heads * m.v_head_dim * d
+        elif spec.mixer == SSM:
+            s = cfg.ssm
+            d_in = s.expand * d
+            conv_dim = d_in + 2 * s.n_groups * s.d_state
+            nh = d_in // s.head_dim
+            n += d * (2 * d_in + 2 * s.n_groups * s.d_state + nh)  # in_proj
+            n += conv_dim * s.d_conv + conv_dim                    # conv
+            n += 3 * nh                                            # A, D, dt_bias
+            n += d_in                                              # gated norm
+            n += d_in * d                                          # out_proj
+        elif spec.mixer == RGLRU:
+            w = cfg.rglru.lru_width
+            n += 2 * d * w + w * cfg.rglru.conv_width + w          # in/conv
+            n += 2 * w + 2 * w * w // 1                            # gates (diag blocks approx)
+            n += w * d                                             # out
+        if spec.mixer in (SSM,):
+            continue                                  # mamba block has no FFN
+        if spec.is_moe:
+            e = cfg.moe
+            n += d * e.n_experts                                   # router
+            n += e.n_experts * 3 * d * e.d_ff_expert               # experts
+            n += e.n_shared * 3 * d * e.d_ff_expert                # shared
+        else:
+            n += 3 * d * cfg.d_ff                                  # gated mlp
+    n += d                                           # final norm
+    return n
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE: shared + top-k experts only)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    e = cfg.moe
+    dense_equiv = cfg.replace(moe=dataclasses.replace(
+        e, n_experts=e.top_k, n_shared=e.n_shared))
+    return param_count(dense_equiv)

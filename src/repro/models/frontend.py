@@ -1,0 +1,33 @@
+"""Modality frontend *stubs* (assignment carve-out).
+
+The audio (EnCodec conv codec) and vision (Pixtral ViT) encoders are NOT
+implemented — ``input_specs()`` in the launcher provides precomputed frame /
+patch embeddings of the right shape, and these helpers generate matching
+random stand-ins for tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def vlm_patch_embeds(cfg: ModelConfig, key, batch, n_patches=None,
+                     dtype=jnp.float32):
+    """Stand-in for Pixtral-ViT + projector output: [B, P, d_model]."""
+    n = n_patches or cfg.n_patches
+    return jax.random.normal(key, (batch, n, cfg.d_model), dtype) * 0.02
+
+
+def audio_frame_tokens(cfg: ModelConfig, key, batch, n_frames,
+                       dtype=jnp.int32):
+    """Stand-in for EnCodec tokenization: [B, T, K] codebook ids."""
+    return jax.random.randint(key, (batch, n_frames, cfg.n_codebooks), 0,
+                              cfg.vocab_size, dtype)
+
+
+def conditioning_prefix(cfg: ModelConfig, key, batch, n_cond=16,
+                        dtype=jnp.float32):
+    """MusicGen text-conditioning prefix embeddings (stub): [B, n, d]."""
+    return jax.random.normal(key, (batch, n_cond, cfg.d_model), dtype) * 0.02

@@ -1,0 +1,170 @@
+"""Basic neural-net layers shared across architectures (pure-functional JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# Optional decode-attention sharding pin (set by the launcher): a
+# PartitionSpec-axes tuple for [B, S, H, D] attention operands.  GSPMD
+# otherwise re-tiles the KV cache over the idle model axis and pays
+# per-layer K/V all-gathers (21.5 MiB x 2 x n_layers for gemma3-1b @32k)
+# — cheaper to keep batch-sharded decode attention device-local.
+_ATTN_BATCH_AXIS = None
+
+
+def set_attention_sharding(batch_axis):
+    global _ATTN_BATCH_AXIS
+    _ATTN_BATCH_AXIS = batch_axis
+
+
+def _pin_batch_local(*arrays):
+    if _ATTN_BATCH_AXIS is None:
+        return arrays
+    from jax.sharding import PartitionSpec as P
+    out = []
+    for a in arrays:
+        spec = P(_ATTN_BATCH_AXIS, *([None] * (a.ndim - 1)))
+        out.append(jax.lax.with_sharding_constraint(a, spec))
+    return out
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x, weight, eps=1e-6, plus_one=False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:                           # gemma-style (1 + w) scaling
+        w = 1.0 + w
+    return (x * w).astype(dt)
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta=10_000.0):
+    """x: [..., T, H, D] (or [..., T, D]); positions broadcastable to [..., T]."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [D/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv        # [..., T, D/2]
+    # broadcast over a possible head axis
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x, act="silu"):
+    g = x @ params["w_gate"]
+    u = x @ params["w_up"]
+    if act == "gelu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        g = jax.nn.silu(g)
+    return (g * u) @ params["w_down"]
+
+
+# ---------------------------------------------------------------- attention core
+def masked_attend(q, k, v, mask, scale, softcap=0.0):
+    """q: [B,Tq,H,D]  k/v: [B,Tk,Hkv,D]  mask: [B,Tq,Tk] bool (True=visible).
+
+    GQA: H must be a multiple of Hkv.  Returns [B,Tq,H,D].
+    """
+    B, Tq, H, D = q.shape
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    g = H // Hkv
+    qg = q.reshape(B, Tq, Hkv, g, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # guard fully-masked rows (padding queries)
+    any_visible = jnp.any(mask, axis=-1)[:, None, None, :, None]
+    probs = jnp.where(any_visible, probs, 0.0)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Tq, Hkv * g, Dv).astype(q.dtype)
+
+
+def build_mask(q_positions, kv_positions, kv_valid, window=0, extra_mask=None):
+    """Causal(+window) visibility mask.
+
+    q_positions: [B,Tq] int; kv_positions: [B,Tk] int; kv_valid: [B,Tk] bool.
+    extra_mask: optional [B,Tq,Tk] (or [Tq,Tk]) bool, ANDed in (tree / EPT masks).
+    """
+    causal = kv_positions[:, None, :] <= q_positions[:, :, None]
+    m = causal & kv_valid[:, None, :]
+    if window:
+        m &= kv_positions[:, None, :] > (q_positions[:, :, None] - window)
+    if extra_mask is not None:
+        if extra_mask.ndim == 2:
+            extra_mask = extra_mask[None]
+        m &= extra_mask
+    return m
+
+
+def chunked_attend(q, k, v, *, q_positions, kv_positions, kv_valid,
+                   window=0, extra_mask=None, scale=None, softcap=0.0,
+                   q_chunk=0):
+    """Query-chunked attention: bounds the [Tq,Tk] score working set.
+
+    With ``q_chunk == 0`` (or Tq <= q_chunk) falls back to a single block.
+    """
+    B, Tq, H, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    if not q_chunk or Tq <= q_chunk:
+        q, k, v = _pin_batch_local(q, k, v)
+        mask = build_mask(q_positions, kv_positions, kv_valid, window,
+                          extra_mask)
+        out = masked_attend(q, k, v, mask, scale, softcap)
+        return _pin_batch_local(out)[0]
+
+    n, rem = divmod(Tq, q_chunk)
+
+    def block(s, width):
+        qc = jax.lax.dynamic_slice_in_dim(q, s, width, axis=1)
+        pc = jax.lax.dynamic_slice_in_dim(q_positions, s, width, axis=1)
+        em = None
+        if extra_mask is not None:
+            em3 = extra_mask if extra_mask.ndim == 3 else extra_mask[None]
+            em = jnp.broadcast_to(em3, (B,) + em3.shape[1:])
+            em = jax.lax.dynamic_slice_in_dim(em, s, width, axis=1)
+        mask = build_mask(pc, kv_positions, kv_valid, window, em)
+        return masked_attend(qc, k, v, mask, scale, softcap)
+
+    outs = jax.lax.map(lambda i: block(i * q_chunk, q_chunk), jnp.arange(n))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n * q_chunk, H, v.shape[-1])
+    if rem:                               # trailing partial chunk (e.g. the
+        tail = block(n * q_chunk, rem)    # prompt-token rows in distillation)
+        out = jnp.concatenate([out, tail], axis=1)
+    return out

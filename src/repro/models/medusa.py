@@ -1,0 +1,111 @@
+"""Medusa decoding-head baseline [Cai et al., 2024] — the paper's main
+comparison point (Table 1, Figs 4/6/7).
+
+Each head k is a residual SiLU block + its own LM head operating on the
+final hidden state, predicting the token at distance k+1.  Decoding reuses
+the same tree machinery as PPD; the only differences are (a) guesses come
+from the heads at the accepted node instead of prompt-token logits, and
+(b) the tree carries no prompt nodes (state is always m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import TreeSpec
+from repro.core.verify import verify_greedy
+from repro.core.decode import (PPDState, _row_bufs, commit_staged,
+                               select_candidate_tokens)
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_medusa(cfg: ModelConfig, key, m: int = 3, dtype=jnp.float32):
+    ks = jax.random.split(key, 2 * m)
+    d, v = cfg.d_model, cfg.vocab_size
+    return {
+        "w1": jnp.stack([dense_init(ks[2 * i], d, d, dtype, scale=1e-3)
+                         for i in range(m)]),
+        "lm": jnp.stack([dense_init(ks[2 * i + 1], d, v, dtype)
+                         for i in range(m)]),
+    }
+
+
+def medusa_param_count(cfg: ModelConfig, m: int = 3) -> int:
+    return m * (cfg.d_model ** 2 + cfg.d_model * cfg.vocab_size)
+
+
+def medusa_heads(heads, hidden):
+    """hidden: [B,...,d] -> logits [B, m, ..., V]."""
+    h = jnp.einsum("...d,mde->m...e", hidden, heads["w1"])
+    h = jax.nn.silu(h) + hidden[None]
+    return jnp.moveaxis(jnp.einsum("m...d,mdv->m...v", h, heads["lm"]), 0, 1)
+
+
+def medusa_states(m: int, topk=(4, 2, 2)) -> list:
+    """Medusa's tree family: no prompt nodes, fixed state (stacked once)."""
+    from repro.core.tree import mk_default_tree
+    sts = mk_default_tree(m, topk)
+    return [TreeSpec(candidates=s.candidates, prompt_chains={})
+            for s in sts]
+
+
+def medusa_decode_step(params, heads, cfg: ModelConfig, bufs, state: PPDState,
+                       *, m: int, moe_exact: bool = True):
+    """Tree decode with head-generated guesses (always full-depth state)."""
+    full_state = jnp.full_like(state.tree_state,
+                               bufs["node_type"].shape[0] - 1)
+    rb = _row_bufs(bufs, full_state)
+    tokens = select_candidate_tokens(rb, state.guess_idx, state.root_token)
+    emb = params["embed"]
+    tbl = emb if emb.ndim == 2 else emb[0]
+    embeds = tbl[tokens]
+    if cfg.scale_embeddings:
+        embeds = embeds * jnp.asarray(cfg.d_model ** 0.5, embeds.dtype)
+    L = state.cache["length"]
+    positions = L[:, None] + rb["depth"]
+    logits, _, staged, _, hidden = forward(
+        params, cfg, positions=positions, embeds=embeds, cache=state.cache,
+        extra_mask=rb["mask"], stage_only=True, moe_exact=moe_exact,
+        return_hidden=True)
+    verdict = verify_greedy(rb, logits, tokens)
+    n_committed = verdict.n_acc + 1
+    cache = commit_staged(cfg, state.cache, staged, positions,
+                          verdict.accept_mask, n_committed)
+    h_star = jnp.take_along_axis(
+        hidden, verdict.v_star[:, None, None].repeat(hidden.shape[-1], -1),
+        axis=1)[:, 0]
+    guess = medusa_heads(heads, h_star)                  # [B,m,V]
+    gvals, gidx = jax.lax.top_k(guess, bufs.get("_kmax", 10))
+    new_state = PPDState(cache=cache, root_token=verdict.bonus,
+                         guess_vals=gvals.astype(jnp.float32),
+                         guess_idx=gidx, tree_state=state.tree_state)
+    path = jnp.take_along_axis(
+        rb["path_nodes"], verdict.v_star[:, None, None].repeat(
+            rb["path_nodes"].shape[-1], 2), axis=1)[:, 0]
+    ptok = jnp.where(path >= 0,
+                     jnp.take_along_axis(tokens, jnp.maximum(path, 0), 1), -1)
+    return new_state, dict(accepted_path_tokens=ptok,
+                           n_accepted=n_committed, verdict=verdict)
+
+
+def medusa_distill_loss(params, heads, cfg: ModelConfig, tokens, *, m=3,
+                        alpha=0.8, moe_exact=True):
+    """Train heads against the frozen model's own logits (Medusa-1 style):
+    head k at position p matches the teacher distribution at p+k."""
+    logits, _, _, _, hidden = forward(params, cfg, tokens,
+                                      moe_exact=moe_exact,
+                                      return_hidden=True)
+    teacher = jax.lax.stop_gradient(logits)
+    S = tokens.shape[1]
+    hl = medusa_heads(heads, hidden)                     # [B,m,S,V]? no:
+    # hidden [B,S,d] -> hl [B,m,S,V]
+    losses = []
+    for k in range(1, m + 1):
+        student = jax.nn.log_softmax(
+            hl[:, k - 1, :S - k - 1].astype(jnp.float32), -1)
+        tgt = jax.nn.softmax(teacher[:, k:S - 1].astype(jnp.float32), -1)
+        kl = -(tgt * student).sum(-1) + (tgt * jnp.log(tgt + 1e-9)).sum(-1)
+        losses.append((alpha ** (k - 1)) * kl.mean())
+    return sum(losses) / m

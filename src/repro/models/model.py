@@ -1,0 +1,318 @@
+"""Unified decoder model covering every assigned architecture.
+
+All functions are pure; ``cfg`` is a hashable frozen dataclass meant to be
+closed over / passed statically to ``jax.jit``.
+
+Three passes share one implementation:
+
+* ``forward(...)``                      — training / teacher logits (no cache)
+* ``forward(..., cache=..)``            — prefill: K/V written, states committed
+* ``forward(..., cache=.., stage_only=True)``  — PPD guess pass: tree/chain
+  tokens read the cache but nothing is committed; staged K/V are returned.
+* ``forward(..., cache=.., commit_mask=..)``   — PPD commit pass for
+  recurrent mixers (dt-masked re-scan) + masked K/V scatter for attention.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .config import (ATTN, MLA, RGLRU, SSM, LayerSpec, ModelConfig,
+                     layer_specs, scan_plan)
+from .layers import embed_init, init_mlp, mlp, rms_norm
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ------------------------------------------------------------------ params
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.use_post_norms:
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ln2_post"] = jnp.zeros((cfg.d_model,), dtype)
+    if spec.mixer == ATTN:
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+    elif spec.mixer == MLA:
+        p["attn"] = attn_mod.init_mla(ks[0], cfg, dtype)
+    elif spec.mixer == SSM:
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg, dtype)
+    elif spec.mixer == RGLRU:
+        p["rglru"] = rglru_mod.init_rglru(ks[0], cfg, dtype)
+    if spec.mixer != SSM:                      # mamba blocks have no FFN
+        if spec.is_moe:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    specs = layer_specs(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = [init_layer(keys[i], cfg, specs[i], dtype)
+              for i in range(cfg.n_layers)]
+    p = {"final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.scan_layers:
+        o, per, n_rep = scan_plan(cfg)
+        p["layers_prefix"] = layers[:o]
+        p["layers_scan"] = tuple(
+            _stack_trees([layers[o + r * per + j] for r in range(n_rep)])
+            for j in range(per))
+        p["layers_tail"] = layers[o + per * n_rep:]
+    else:
+        p["layers"] = layers
+    if cfg.modality == "audio":
+        p["embed"] = jnp.stack([
+            embed_init(k, cfg.vocab_size, cfg.d_model, dtype)
+            for k in jax.random.split(keys[-1], cfg.n_codebooks)])
+        p["codebook_heads"] = jnp.stack([
+            embed_init(k, cfg.vocab_size, cfg.d_model, dtype).T
+            for k in jax.random.split(keys[-2], cfg.n_codebooks)])
+    else:
+        p["embed"] = embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = embed_init(keys[-2], cfg.vocab_size,
+                                      cfg.d_model, dtype).T
+    if cfg.mtp_depth:
+        k1, k2 = jax.random.split(keys[-3])
+        p["mtp"] = {
+            "norm_h": jnp.zeros((cfg.d_model,), dtype),
+            "norm_e": jnp.zeros((cfg.d_model,), dtype),
+            "proj": embed_init(k1, 2 * cfg.d_model, cfg.d_model, dtype),
+            "layer": init_layer(k2, cfg, specs[-1], dtype),
+        }
+    return p
+
+
+# ------------------------------------------------------------------ embed / unembed
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    if cfg.modality == "audio":
+        # tokens: [B,T,K]; params["embed"]: [K,V,d] -> sum over codebooks
+        x = sum(params["embed"][k][tokens[..., k]]
+                for k in range(cfg.n_codebooks))
+    else:
+        x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, h):
+    if cfg.modality == "audio":
+        return jnp.einsum("btd,kdv->btkv", h, params["codebook_heads"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head
+
+
+# ------------------------------------------------------------------ caches
+def init_cache(cfg: ModelConfig, batch, capacity, dtype=jnp.float32):
+    layers = []
+    for spec in layer_specs(cfg):
+        if spec.mixer == ATTN:
+            layers.append(attn_mod.make_attn_cache(cfg, spec, batch,
+                                                   capacity, dtype))
+        elif spec.mixer == MLA:
+            layers.append(attn_mod.make_mla_cache(cfg, batch, capacity,
+                                                  dtype))
+        elif spec.mixer == SSM:
+            layers.append(ssm_mod.make_ssm_cache(cfg, batch, dtype))
+        elif spec.mixer == RGLRU:
+            layers.append(rglru_mod.make_rglru_cache(cfg, batch, dtype))
+    if cfg.scan_layers:
+        o, per, n_rep = scan_plan(cfg)
+        return {"prefix": layers[:o],
+                "scan": tuple(
+                    _stack_trees([layers[o + r * per + j]
+                                  for r in range(n_rep)])
+                    for j in range(per)),
+                "tail": layers[o + per * n_rep:],
+                "length": jnp.zeros((batch,), jnp.int32)}
+    return {"layers": layers, "length": jnp.zeros((batch,), jnp.int32)}
+
+
+# ------------------------------------------------------------------ blocks
+def _apply_layer(lp, cfg, spec, x, positions, cache_entry, *, extra_mask,
+                 q_chunk, stage_only, commit_mask, moe_exact=False):
+    staged = None
+    h = rms_norm(x, lp["ln1"], cfg.rms_eps, plus_one=True)
+    if spec.mixer in (ATTN, MLA):
+        fn = attn_mod.attn_apply if spec.mixer == ATTN else attn_mod.mla_apply
+        if commit_mask is not None and cache_entry is not None:
+            # commit pass: recompute projections, masked scatter
+            out, _, staged = fn(lp["attn"], cfg, spec, h, positions,
+                                cache_entry, extra_mask=extra_mask,
+                                q_chunk=q_chunk, stage_only=True)
+            scat = (attn_mod.scatter_kv if spec.mixer == ATTN
+                    else attn_mod.scatter_mla)
+            cache_entry = scat(cache_entry, *staged, positions, commit_mask)
+        else:
+            out, cache_entry, staged = fn(lp["attn"], cfg, spec, h, positions,
+                                          cache_entry, extra_mask=extra_mask,
+                                          q_chunk=q_chunk,
+                                          stage_only=stage_only)
+    elif spec.mixer == SSM:
+        out, cache_entry = ssm_mod.ssm_apply(
+            lp["ssm"], cfg, h, cache_entry, dt_mask=commit_mask,
+            update_cache=(cache_entry is not None) and not stage_only)
+    elif spec.mixer == RGLRU:
+        out, cache_entry = rglru_mod.rglru_apply(
+            lp["rglru"], cfg, h, cache_entry, dt_mask=commit_mask,
+            update_cache=(cache_entry is not None) and not stage_only)
+    if cfg.use_post_norms:
+        out = rms_norm(out, lp["ln1_post"], cfg.rms_eps, plus_one=True)
+    x = x + out
+
+    aux = 0.0
+    if spec.mixer != SSM:
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps, plus_one=True)
+        if spec.is_moe:
+            out, aux = moe_mod.moe_apply(lp["moe"], cfg, h, exact=moe_exact)
+        else:
+            out = mlp(lp["mlp"], h, cfg.act)
+        if cfg.use_post_norms:
+            out = rms_norm(out, lp["ln2_post"], cfg.rms_eps, plus_one=True)
+        x = x + out
+    return x, cache_entry, staged, aux
+
+
+def forward(params, cfg: ModelConfig, tokens=None, positions=None, *,
+            embeds=None, prefix_embeds=None, cache=None, extra_mask=None,
+            q_chunk: int = 0, stage_only: bool = False,
+            commit_mask=None, return_hidden: bool = False,
+            remat: bool = False, moe_exact: bool = False,
+            skip_unembed: bool = False):
+    """Returns (logits, new_cache, staged_list, aux_loss).
+
+    tokens: [B,T] int (audio: [B,T,K]); embeds: [B,T,d] (alternative input);
+    prefix_embeds: [B,P,d] prepended (VLM patch prefix); positions [B,T_total].
+    """
+    if embeds is None:
+        x = embed_tokens(params, cfg, tokens)
+    else:
+        x = embeds
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                     (B, T))
+
+    specs = layer_specs(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def layer_fn(lp, spec, x, centry):
+        return _apply_layer(lp, cfg, spec, x, positions, centry,
+                            extra_mask=extra_mask, q_chunk=q_chunk,
+                            stage_only=stage_only, commit_mask=commit_mask,
+                            moe_exact=moe_exact)
+
+    if cfg.scan_layers:
+        o, per, n_rep = scan_plan(cfg)
+        new_cache_struct = {"prefix": [], "scan": None, "tail": []}
+        staged_struct = {"prefix": [], "scan": None, "tail": []}
+        aux_total = aux0
+
+        def eager(part, idx_range, x):
+            nonlocal aux_total
+            for slot, i in enumerate(idx_range):
+                centry = cache[part][slot] if cache is not None else None
+                x, centry, staged, aux = layer_fn(params[f"layers_{part}"][slot],
+                                                  specs[i], x, centry)
+                new_cache_struct[part].append(centry)
+                staged_struct[part].append(staged)
+                aux_total = aux_total + aux
+            return x
+
+        x = eager("prefix", range(o), x)
+
+        block_specs = tuple(specs[o + j] for j in range(per))
+
+        def body(carry, xs):
+            xb, aux = carry
+            p_slices, c_slices = xs
+            new_c, new_s = [], []
+            for j in range(per):
+                xb, ce, st, a = layer_fn(p_slices[j], block_specs[j], xb,
+                                         c_slices[j])
+                new_c.append(ce)
+                new_s.append(st)
+                aux = aux + a
+            return (xb, aux), (tuple(new_c), tuple(new_s))
+
+        if per:
+            body_fn = jax.checkpoint(body) if remat else body
+            c_scan = (cache["scan"] if cache is not None
+                      else tuple(None for _ in range(per)))
+            (x, aux_total), (nc, ns) = jax.lax.scan(
+                body_fn, (x, aux_total), (params["layers_scan"], c_scan))
+            new_cache_struct["scan"] = nc
+            staged_struct["scan"] = ns
+
+        x = eager("tail", range(o + per * n_rep, cfg.n_layers), x)
+        staged_list = staged_struct
+    else:
+        staged_list, new_layers = [], []
+        aux_total = aux0
+        for i, spec in enumerate(specs):
+            centry = cache["layers"][i] if cache is not None else None
+            fn = (jax.checkpoint(layer_fn, static_argnums=(1,))
+                  if remat else layer_fn)
+            x, centry, staged, aux = fn(params["layers"][i], spec, x, centry)
+            new_layers.append(centry)
+            staged_list.append(staged)
+            aux_total = aux_total + aux
+
+    hidden_pre_final = x
+    if skip_unembed:
+        # caller gathers the rows it needs, then applies final_norm +
+        # unembed itself (avoids materializing [B,T,V] logits — the
+        # dominant memory term for large-vocab training shapes).
+        logits = None
+    else:
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps, plus_one=True)
+        logits = unembed(params, cfg, x)
+
+    new_cache = None
+    if cache is not None:
+        length = cache["length"]
+        if not stage_only:
+            if commit_mask is not None:
+                length = length + commit_mask.astype(jnp.int32).sum(axis=1)
+            else:
+                length = length + T
+        if cfg.scan_layers:
+            new_cache = dict(new_cache_struct, length=length)
+        else:
+            new_cache = {"layers": new_layers, "length": length}
+    if return_hidden:
+        return logits, new_cache, staged_list, aux_total, hidden_pre_final
+    return logits, new_cache, staged_list, aux_total
+
+
+def mtp_logits(params, cfg: ModelConfig, hidden, tokens_next, positions):
+    """DeepSeek-V3 multi-token-prediction head (depth 1).
+
+    hidden: [B,T,d] pre-final-norm states; tokens_next: [B,T] (inputs shifted
+    by one).  Returns logits predicting t+2.
+    """
+    mp = params["mtp"]
+    h = rms_norm(hidden, mp["norm_h"], cfg.rms_eps, plus_one=True)
+    e = embed_tokens(params, cfg, tokens_next)
+    e = rms_norm(e, mp["norm_e"], cfg.rms_eps, plus_one=True)
+    x = jnp.concatenate([h, e], axis=-1) @ mp["proj"]
+    spec = layer_specs(cfg)[-1]
+    x, _, _, _ = _apply_layer(mp["layer"], cfg, spec, x, positions, None,
+                              extra_mask=None, q_chunk=0, stage_only=False,
+                              commit_mask=None)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps, plus_one=True)
+    return unembed(params, cfg, x)

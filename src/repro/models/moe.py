@@ -1,0 +1,161 @@
+"""Mixture-of-Experts FFN with capacity-based sparse dispatch.
+
+Supports Phi-3.5-MoE-style (softmax top-k) and DeepSeek-V3-style routing
+(sigmoid scores, aux-loss-free bias, shared experts, routed scaling).
+
+Dispatch is GShard/MaxText-style: tokens are ranked per expert via a cumsum
+over the routing one-hot, scattered into an ``[E, capacity, d]`` buffer
+(static shapes -> pjit/TPU friendly; the expert axis shards on ``model``),
+run through the expert FFNs as one batched einsum, and combined back with
+the routing weights.  Overflowing tokens are dropped from that expert
+(classic capacity-factor semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+# Expert-parallel routing (set by the launcher for --fsdp runs): a
+# PartitionSpec leading axis for the [E, capacity, d] dispatch buffers.
+# With the constraint in place GSPMD routes TOKENS to expert-owning
+# devices (all-to-all) instead of all-gathering expert weights.
+EXPERT_AXES = None
+
+
+def set_expert_sharding(axes):
+    """axes: tuple of mesh axis names the expert dim is sharded over,
+    or None to disable (default)."""
+    global EXPERT_AXES
+    EXPERT_AXES = axes
+
+
+def _constrain_experts(x):
+    if EXPERT_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(EXPERT_AXES), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    e, d = cfg.moe, cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e.n_experts, jnp.float32),
+        "w_gate": dense_init(ks[1], d, e.d_ff_expert, dtype,
+                             scale=d ** -0.5)[None].repeat(e.n_experts, 0),
+        "w_up": dense_init(ks[2], d, e.d_ff_expert, dtype,
+                           scale=d ** -0.5)[None].repeat(e.n_experts, 0),
+        "w_down": dense_init(ks[3], e.d_ff_expert, d, dtype,
+                             scale=e.d_ff_expert ** -0.5)[None].repeat(
+                                 e.n_experts, 0),
+    }
+    # de-correlate experts
+    for name in ("w_gate", "w_up", "w_down"):
+        noise = jax.random.normal(ks[4], p[name].shape) * 0.01
+        p[name] = (p[name] + noise.astype(dtype)).astype(dtype)
+    if e.router_bias:
+        p["router_bias"] = jnp.zeros((e.n_experts,), jnp.float32)
+    if e.n_shared:
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, d, e.n_shared * e.d_ff_expert, dtype),
+            "w_up": dense_init(k2, d, e.n_shared * e.d_ff_expert, dtype),
+            "w_down": dense_init(k3, e.n_shared * e.d_ff_expert, d, dtype),
+        }
+    return p
+
+
+def route(params, cfg: ModelConfig, x):
+    """x: [N, d] -> (weights [N, k], expert_idx [N, k], aux)"""
+    e = cfg.moe
+    logits = x.astype(jnp.float32) @ params["router"]
+    if e.router == "sigmoid":                     # DeepSeek-V3
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params.get("router_bias", 0.0)
+        _, idx = jax.lax.top_k(sel, e.top_k)
+        w = jnp.take_along_axis(scores, idx, axis=-1)
+        w = w / (w.sum(-1, keepdims=True) + 1e-20) * e.routed_scale
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, e.top_k)
+        w = w / (w.sum(-1, keepdims=True) + 1e-20)
+    # load-balance aux loss (Switch-style), returned for the training loop
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(0)
+    ce = jnp.zeros((e.n_experts,)).at[idx.reshape(-1)].add(1.0)
+    ce = ce / (idx.size + 1e-9)
+    aux = e.n_experts * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _expert_ffn(params, xb, act):
+    """xb: [E, C, d] -> [E, C, d] through per-expert gated MLPs."""
+    g = jnp.einsum("ecd,edf->ecf", xb, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xb, params["w_up"])
+    g = jax.nn.gelu(g, approximate=True) if act == "gelu" else jax.nn.silu(g)
+    return jnp.einsum("ecf,efd->ecd", g * u, params["w_down"])
+
+
+def moe_apply(params, cfg: ModelConfig, x, capacity_factor=1.25,
+              exact=False):
+    """x: [B, T, d] -> [B, T, d], aux_loss (scalar).
+
+    ``exact=True`` computes every expert densely and combines — no capacity
+    drops (batch-size independent; used for decode steps and CPU tests).
+    ``exact=False`` is the scalable scatter/gather dispatch used under pjit.
+    """
+    e = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    xf = x.reshape(N, d)
+    w, idx, aux = route(params, cfg, xf)                  # [N,k]
+
+    if exact:
+        h_all = _expert_ffn(params, jnp.broadcast_to(xf, (e.n_experts, N, d)),
+                            cfg.act)                      # [E,N,d]
+        comb = jnp.zeros((N, e.n_experts), x.dtype)
+        comb = comb.at[jnp.arange(N)[:, None], idx].add(w.astype(x.dtype))
+        out = jnp.einsum("ne,end->nd", comb, h_all)
+        if e.n_shared:
+            s = params["shared"]
+            g = xf @ s["w_gate"]
+            g = (jax.nn.gelu(g, approximate=True) if cfg.act == "gelu"
+                 else jax.nn.silu(g))
+            out = out + (g * (xf @ s["w_up"])) @ s["w_down"]
+        return out.reshape(B, T, d), aux
+
+    E, K = e.n_experts, e.top_k
+    cap = max(int(N * K / E * capacity_factor), K)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # [N,K,E]
+    flat = onehot.reshape(N * K, E)
+    rank = jnp.cumsum(flat, axis=0) - flat                # position within expert
+    rank = (rank * flat).sum(-1).reshape(N, K)            # [N,K]
+    keep = rank < cap
+
+    # scatter tokens into [E, cap, d]
+    slot_e = idx.reshape(-1)                              # [N*K]
+    slot_c = jnp.where(keep, rank, cap).reshape(-1)       # cap == OOB -> drop
+    tok = jnp.repeat(jnp.arange(N), K)
+    buf = jnp.zeros((E, cap, d), x.dtype).at[slot_e, slot_c].set(
+        xf[tok], mode="drop")
+    buf = _constrain_experts(buf)
+    out_buf = _constrain_experts(_expert_ffn(params, buf, cfg.act))
+
+    # combine: gather each (token, k) result and weight it
+    gathered = out_buf.at[slot_e, jnp.minimum(slot_c, cap - 1)].get(
+        mode="fill", fill_value=0)                        # [N*K, d]
+    gathered = jnp.where(keep.reshape(-1, 1), gathered, 0)
+    out = (gathered.reshape(N, K, d) *
+           w.astype(x.dtype).reshape(N, K, 1)).sum(axis=1)
+
+    if e.n_shared:
+        s = params["shared"]
+        g = xf @ s["w_gate"]
+        g = (jax.nn.gelu(g, approximate=True) if cfg.act == "gelu"
+             else jax.nn.silu(g))
+        out = out + (g * (xf @ s["w_up"])) @ s["w_down"]
+    return out.reshape(B, T, d), aux

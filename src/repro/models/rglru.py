@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+a_t = exp(-c * softplus(Lambda) * sigma(W_a u_t)),  i_t = sigma(W_x u_t)
+
+Prefill uses an associative scan (the recurrence is linear); decode/chain
+processes T tokens the same way from a cached initial state.  A commit
+mask turns rejected chain tokens into identities (a=1, input=0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+_C = 8.0
+_NB = 16          # block-diagonal gate blocks (Griffin's BlockDiagonalLinear)
+
+
+def _block_diag_init(key, w, dtype):
+    bs = w // _NB
+    return (jax.random.normal(key, (_NB, bs, bs)) * bs ** -0.5).astype(dtype)
+
+
+def _block_diag(x, wgt, b):
+    B, S, w = x.shape
+    xb = x.reshape(B, S, _NB, w // _NB)
+    y = jnp.einsum("bsni,nij->bsnj", xb, wgt).reshape(B, S, w)
+    return y + b
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32):
+    r = cfg.rglru
+    w, d = r.lru_width, cfg.d_model
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[6], (w,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))   # softplus^-1
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype),
+        "w_y": dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (w, r.conv_width)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a_w": _block_diag_init(ks[3], w, dtype),
+        "gate_a_b": jnp.zeros((w,), dtype),
+        "gate_x_w": _block_diag_init(ks[4], w, dtype),
+        "gate_x_b": jnp.zeros((w,), dtype),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def make_rglru_cache(cfg: ModelConfig, batch, dtype=jnp.float32):
+    r = cfg.rglru
+    return {
+        "conv_in": jnp.zeros((batch, r.conv_width - 1, r.lru_width), dtype),
+        "h": jnp.zeros((batch, r.lru_width), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b, conv_in):
+    width = w.shape[1]
+    xp = jnp.concatenate([conv_in.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(width))
+    return out + b
+
+
+def rglru_apply(params, cfg: ModelConfig, x, cache=None, *, dt_mask=None,
+                update_cache=True):
+    """x: [B,S,d] -> (y [B,S,d], new_cache)."""
+    r = cfg.rglru
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(x @ params["w_y"], approximate=True)
+
+    u = x @ params["w_x"]
+    conv_in = (cache["conv_in"] if cache is not None
+               else jnp.zeros((B, r.conv_width - 1, r.lru_width), x.dtype))
+    u = _causal_conv(u, params["conv_w"], params["conv_b"], conv_in)
+
+    rt = jax.nn.sigmoid(_block_diag(u, params["gate_a_w"],
+                                    params["gate_a_b"]).astype(jnp.float32))
+    it = jax.nn.sigmoid(_block_diag(u, params["gate_x_w"],
+                                    params["gate_x_b"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * rt     # [B,S,w]
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) \
+        * it * u.astype(jnp.float32)
+
+    if dt_mask is not None:
+        m = dt_mask.astype(jnp.float32)[..., None]
+        a = a * m + (1.0 - m)            # masked -> a=1
+        gated_in = gated_in * m          # masked -> no input
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((B, r.lru_width), jnp.float32))
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b)
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, gated_in), axis=1)
+    h = aa * h0[:, None, :] + bb                             # [B,S,w]
+    final_h = h[:, -1, :]
+
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+
+    new_cache = cache
+    if update_cache:
+        if dt_mask is not None:
+            n_acc = dt_mask.astype(jnp.int32).sum(axis=1)
+            hist_u = jnp.concatenate(
+                [conv_in.astype(x.dtype), x @ params["w_x"]], axis=1)
+
+            def take(hst, n):
+                return jax.lax.dynamic_slice_in_dim(hst, n, r.conv_width - 1, 0)
+            conv_new = jax.vmap(take)(hist_u, n_acc)
+        else:
+            hist_u = jnp.concatenate(
+                [conv_in.astype(x.dtype), x @ params["w_x"]], axis=1)
+            conv_new = hist_u[:, -(r.conv_width - 1):]
+        new_cache = {"conv_in": conv_new, "h": final_h}
+    return y, new_cache

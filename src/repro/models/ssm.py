@@ -1,0 +1,196 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Prefill/train uses the chunked block decomposition (quadratic within a
+chunk, linear across chunks); decode processes a short chain of tokens as
+one chunk with an initial state.  A ``dt_mask`` turns tokens into state
+identities (dt=0 -> decay 1, input 0), which implements chain-mode PPD
+commit (rejected candidates leave the state untouched).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nh, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              2 * d_in + 2 * s.n_groups * s.d_state + nh,
+                              dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, s.d_conv)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, cfg.d_model, dtype),
+    }
+
+
+def make_ssm_cache(cfg: ModelConfig, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in, nh, conv_dim = _dims(cfg)
+    return {
+        # raw pre-conv inputs of the last (d_conv-1) committed tokens
+        "conv_in": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b, conv_in):
+    """x: [B,S,C]; depthwise causal conv of width w.shape[1].
+
+    ``conv_in`` ([B, width-1, C]) supplies the left context (zeros at the
+    stream start).
+    """
+    width = w.shape[1]
+    xp = jnp.concatenate([conv_in.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(width))
+    return out + b
+
+
+def _segsum(dA):
+    """dA: [..., L] -> [..., L, L] lower-tri matrix of segment sums."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :] + dA[..., None, :] * 0.0
+    # seg[i,j] = sum_{t=j+1..i} dA_t  = cs[i] - cs[j]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_scan(xh, dt, A, Bm, Cm, chunk, initial_state=None):
+    """Chunked SSD.
+
+    xh: [b,S,h,p]  dt: [b,S,h] (post-softplus)  A: [h] (negative)
+    Bm/Cm: [b,S,g,n]; heads are grouped g -> h = g*hpg.
+    Returns y [b,S,h,p] (excluding the D skip) and final state [b,h,p,n].
+    """
+    b, S, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hpg = h // g
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc, L = Sp // chunk, chunk
+
+    f32 = jnp.float32
+    xw = (xh.astype(f32) * dt.astype(f32)[..., None]).reshape(
+        b, nc, L, g, hpg, p)
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, L, g, hpg)
+    Bc = Bm.astype(f32).reshape(b, nc, L, g, n)
+    Cc = Cm.astype(f32).reshape(b, nc, L, g, n)
+
+    cs = jnp.cumsum(dA, axis=2)                              # [b,nc,L,g,h]
+    seg = cs[:, :, :, None] - cs[:, :, None, :]              # [b,nc,L,L,g,h]
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None, None]
+    # mask BEFORE the exp: masked entries are positive segment sums that can
+    # overflow exp() to inf, poisoning the backward pass with 0*inf NaNs.
+    Lmat = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+
+    # within-chunk (quadratic) term
+    GBC = jnp.einsum("bclgn,bcsgn->bclsg", Cc, Bc)           # [b,nc,L,L,g]
+    Y_diag = jnp.einsum("bclsg,bclsgh,bcsghp->bclghp",
+                        GBC, Lmat, xw)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(cs[:, :, -1:, :, :] - cs)         # [b,nc,L,g,h]
+    states = jnp.einsum("bcsgn,bcsgh,bcsghp->bcghpn",
+                        Bc, decay_to_end, xw)                # [b,nc,g,h,p,n]
+
+    chunk_decay = jnp.exp(cs[:, :, -1, :, :])                # [b,nc,g,h]
+    if initial_state is None:
+        init = jnp.zeros((b, g, hpg, p, n), f32)
+    else:
+        init = initial_state.astype(f32).reshape(b, g, hpg, p, n)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                    # emit state at chunk start
+
+    final, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # [b,nc,g,h,p,n]
+
+    # cross-chunk term
+    Y_off = jnp.einsum("bclgn,bcghpn,bclgh->bclghp",
+                       Cc, prev_states, jnp.exp(cs))
+    y = (Y_diag + Y_off).reshape(b, Sp, h, p)[:, :S]
+    return y, final.reshape(b, h, p, n)
+
+
+def ssm_apply(params, cfg: ModelConfig, x, cache=None, *, dt_mask=None,
+              update_cache=True):
+    """x: [B,S,d] -> (y [B,S,d], new_cache).
+
+    ``dt_mask`` ([B,S] in {0,1}) zeroes the state/output contribution of
+    masked tokens (PPD chain commit).  ``update_cache=False`` leaves the
+    cache untouched (stage pass).
+    """
+    s = cfg.ssm
+    d_in, nh, conv_dim = _dims(cfg)
+    B, S, _ = x.shape
+
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt_raw = zxbcdt[..., -nh:]
+
+    conv_in = (cache["conv_in"] if cache is not None
+               else jnp.zeros((B, s.d_conv - 1, conv_dim), x.dtype))
+    xBC_conv = jax.nn.silu(_causal_conv(xBC, params["conv_w"],
+                                        params["conv_b"], conv_in))
+    xh = xBC_conv[..., :d_in].reshape(B, S, nh, s.head_dim)
+    Bm = xBC_conv[..., d_in:d_in + s.n_groups * s.d_state].reshape(
+        B, S, s.n_groups, s.d_state)
+    Cm = xBC_conv[..., d_in + s.n_groups * s.d_state:].reshape(
+        B, S, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    if dt_mask is not None:
+        dt = dt * dt_mask.astype(jnp.float32)[..., None]
+
+    A = -jnp.exp(params["A_log"])
+    init = cache["state"] if cache is not None else None
+    y, final_state = ssd_scan(xh, dt, A, Bm, Cm, s.chunk, init)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    out = y @ params["out_proj"]
+
+    new_cache = cache
+    if update_cache:
+        # conv context = last (d_conv-1) committed raw inputs
+        if dt_mask is not None:
+            n_acc = dt_mask.astype(jnp.int32).sum(axis=1)    # [B]
+            hist = jnp.concatenate([conv_in.astype(x.dtype), xBC], axis=1)
+
+            def take(h, n):
+                return jax.lax.dynamic_slice_in_dim(h, n, s.d_conv - 1, 0)
+            conv_new = jax.vmap(take)(hist, n_acc)
+        else:
+            hist = jnp.concatenate([conv_in.astype(x.dtype), xBC], axis=1)
+            conv_new = hist[:, -(s.d_conv - 1):]
+        new_cache = {"conv_in": conv_new, "state": final_state}
+    return out, new_cache

@@ -1,0 +1,1 @@
+from .engine import MedusaEngine, PPDEngine, Request, Result, VanillaEngine

@@ -1,0 +1,229 @@
+"""Batched serving engine.
+
+Static-shape serving: requests are packed into a fixed batch; prefill runs
+once (left-padded to a common length), then PPD guess-and-verify steps run
+until every row has produced ``max_new_tokens`` (finished rows keep
+decoding into a scratch region and are masked out of the results —
+standard static-batch TPU serving).
+
+Engines:
+* ``PPDEngine``      — the paper's system (tree or chain mode by arch).
+* ``VanillaEngine``  — autoregressive baseline.
+* ``MedusaEngine``   — decoding-head baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
+                        is_chain_arch, mk_default_tree, ppd_decode_step,
+                        vanilla_decode_step)
+from repro.models import forward, init_cache
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # [P] (audio: [P,K])
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray
+    steps: int                    # model forward passes consumed
+    wall_s: float
+
+
+def _pack(requests: List[Request], cfg: ModelConfig):
+    """Right-align prompts into one [B,P] batch (audio [B,P,K])."""
+    P = max(len(r.prompt) for r in requests)
+    rows, starts = [], []
+    for r in requests:
+        pad = P - len(r.prompt)
+        row = np.pad(np.asarray(r.prompt), ((pad, 0),) +
+                     ((0, 0),) * (np.asarray(r.prompt).ndim - 1))
+        rows.append(row)
+        starts.append(pad)
+    return jnp.asarray(np.stack(rows)), np.asarray(starts), P
+
+
+class _EngineBase:
+    def __init__(self, params, cfg: ModelConfig, capacity: int = 1024,
+                 batch_size: int = 4):
+        self.params, self.cfg = params, cfg
+        self.capacity, self.batch_size = capacity, batch_size
+        self.queue: List[Request] = []
+
+    def add_request(self, req: Request):
+        self.queue.append(req)
+
+    def run(self) -> List[Result]:
+        out = []
+        while self.queue:
+            batch = self.queue[:self.batch_size]
+            self.queue = self.queue[self.batch_size:]
+            while len(batch) < self.batch_size:     # pad with a dummy copy
+                batch.append(dataclasses.replace(batch[-1], uid=-1))
+            out.extend(r for r in self._run_batch(batch) if r.uid >= 0)
+        return out
+
+
+class PPDEngine(_EngineBase):
+    def __init__(self, params, ppd_params, cfg, *, m=3, n_ept=1,
+                 tree_states=None, capacity=1024, batch_size=4,
+                 temperature=0.0):
+        super().__init__(params, cfg, capacity, batch_size)
+        self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
+        self.temperature = temperature
+        if tree_states is None:
+            tree_states = ([default_chain_spec(max(k, 1), m)
+                            for k in range(m + 1)] if is_chain_arch(cfg)
+                           else mk_default_tree(m))
+        self.bufs = device_buffers(tree_states, m, n_ept)
+        self._step = jax.jit(self._step_impl)
+
+    def _step_impl(self, st, key):
+        return ppd_decode_step(self.params, self.ppd, self.cfg, self.bufs,
+                               st, m=self.m, n_ept=self.n_ept,
+                               temperature=self.temperature, key=key)
+
+    def _run_batch(self, batch: List[Request]) -> List[Result]:
+        cfg = self.cfg
+        tokens, starts, P = _pack(batch, cfg)
+        B = len(batch)
+        t0 = time.time()
+        cache = init_cache(cfg, B, self.capacity)
+        logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
+                                      moe_exact=True)
+        first = jnp.argmax(logits[:, -1], axis=-1)
+        st = init_ppd_state(cfg, cache, first, self.m, self.n_ept,
+                            kmax=self.bufs.get("_kmax", 10))
+        done = np.zeros(B, bool)
+        produced = [[] for _ in range(B)]
+        steps = 0
+        key = jax.random.PRNGKey(0)
+        for b in range(B):
+            produced[b].append(np.asarray(first[b]))
+        max_new = max(r.max_new_tokens for r in batch)
+        while not done.all():
+            key, sub = jax.random.split(key)
+            st, info = self._step(st, sub)
+            steps += 1
+            ptok = np.asarray(info["accepted_path_tokens"])
+            bonus = np.asarray(st.root_token)
+            for b in range(B):
+                if done[b]:
+                    continue
+                for t in ptok[b][1:]:                  # skip root (=prev bonus)
+                    if (np.all(t >= 0) and
+                            len(produced[b]) < batch[b].max_new_tokens):
+                        produced[b].append(t)
+                if len(produced[b]) < batch[b].max_new_tokens:
+                    produced[b].append(bonus[b])
+                done[b] = len(produced[b]) >= batch[b].max_new_tokens
+            if steps > max_new + 8:
+                break
+        wall = time.time() - t0
+        return [Result(uid=r.uid,
+                       tokens=np.stack(produced[b])[:r.max_new_tokens],
+                       steps=steps, wall_s=wall)
+                for b, r in enumerate(batch)]
+
+
+class VanillaEngine(_EngineBase):
+    def __init__(self, params, cfg, capacity=1024, batch_size=4,
+                 temperature=0.0):
+        super().__init__(params, cfg, capacity, batch_size)
+        self.temperature = temperature
+        self._step = jax.jit(lambda cache, tok, key: vanilla_decode_step(
+            params, cfg, cache, tok, temperature=temperature, key=key))
+
+    def _run_batch(self, batch: List[Request]) -> List[Result]:
+        cfg = self.cfg
+        tokens, starts, P = _pack(batch, cfg)
+        B = len(batch)
+        t0 = time.time()
+        cache = init_cache(cfg, B, self.capacity)
+        logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
+                                      moe_exact=True)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+        produced = [[np.asarray(nxt[b])] for b in range(B)]
+        steps = 0
+        key = jax.random.PRNGKey(0)
+        max_new = max(r.max_new_tokens for r in batch)
+        for _ in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            cache, nxt, _ = self._step(cache, nxt, sub)
+            steps += 1
+            for b in range(B):
+                if len(produced[b]) < batch[b].max_new_tokens:
+                    produced[b].append(np.asarray(nxt[b]))
+        wall = time.time() - t0
+        return [Result(uid=r.uid,
+                       tokens=np.stack(produced[b])[:r.max_new_tokens],
+                       steps=steps, wall_s=wall)
+                for b, r in enumerate(batch)]
+
+
+class MedusaEngine(_EngineBase):
+    def __init__(self, params, heads, cfg, *, m=3, capacity=1024,
+                 batch_size=4):
+        super().__init__(params, cfg, capacity, batch_size)
+        from repro.models.medusa import medusa_states, medusa_decode_step
+        self.heads, self.m = heads, m
+        self.bufs = device_buffers(medusa_states(m), m)
+        self._fn = medusa_decode_step
+        self._step = jax.jit(lambda st: self._fn(
+            self.params, self.heads, self.cfg, self.bufs, st, m=self.m))
+
+    def _run_batch(self, batch: List[Request]) -> List[Result]:
+        from repro.models.medusa import medusa_heads
+        cfg = self.cfg
+        tokens, starts, P = _pack(batch, cfg)
+        B = len(batch)
+        t0 = time.time()
+        cache = init_cache(cfg, B, self.capacity)
+        logits, cache, _, _, hidden = forward(self.params, cfg, tokens,
+                                              cache=cache, moe_exact=True,
+                                              return_hidden=True)
+        first = jnp.argmax(logits[:, -1], axis=-1)
+        st = init_ppd_state(cfg, cache, first, self.m,
+                            kmax=self.bufs.get("_kmax", 10))
+        g0 = medusa_heads(self.heads, hidden[:, -1])
+        gv, gi = jax.lax.top_k(g0, self.bufs.get("_kmax", 10))
+        st = st._replace(guess_vals=gv.astype(jnp.float32), guess_idx=gi)
+        produced = [[np.asarray(first[b])] for b in range(B)]
+        done = np.zeros(B, bool)
+        steps = 0
+        max_new = max(r.max_new_tokens for r in batch)
+        while not done.all():
+            st, info = self._step(st)
+            steps += 1
+            ptok = np.asarray(info["accepted_path_tokens"])
+            bonus = np.asarray(st.root_token)
+            for b in range(B):
+                if done[b]:
+                    continue
+                for t in ptok[b][1:]:
+                    if t >= 0 and len(produced[b]) < batch[b].max_new_tokens:
+                        produced[b].append(t)
+                if len(produced[b]) < batch[b].max_new_tokens:
+                    produced[b].append(bonus[b])
+                done[b] = len(produced[b]) >= batch[b].max_new_tokens
+            if steps > max_new + 8:
+                break
+        wall = time.time() - t0
+        return [Result(uid=r.uid,
+                       tokens=np.stack(produced[b])[:r.max_new_tokens],
+                       steps=steps, wall_s=wall)
+                for b, r in enumerate(batch)]

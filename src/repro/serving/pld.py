@@ -1,0 +1,76 @@
+"""Prompt-lookup decoding baseline [Saxena 2023] (paper Fig. 4 comparison).
+
+Retrieval-based guessing: find the most recent earlier occurrence of the
+last ``ngram`` generated tokens in the context and propose the ``gamma``
+tokens that followed it.  Verification reuses the exact-match stage/commit
+machinery (one target forward per step, like PPD/Medusa/spec-decode).
+No trainable parameters at all — but acceptance collapses whenever the
+continuation is genuinely novel (the paper's motivation for *trained*
+prompt tokens).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decode import commit_staged
+from repro.models import forward, init_cache
+from repro.models.config import ModelConfig
+
+
+class PromptLookupDecoder:
+    def __init__(self, params, cfg: ModelConfig, *, gamma: int = 4,
+                 ngram: int = 2, capacity: int = 512):
+        self.params, self.cfg = params, cfg
+        self.gamma, self.ngram, self.capacity = gamma, ngram, capacity
+        self._verify = jax.jit(self._verify_impl)
+
+    def _verify_impl(self, cache, root, chain):
+        B, g = chain.shape
+        toks = jnp.concatenate([root[:, None], chain], axis=1)
+        pos = cache["length"][:, None] + jnp.arange(g + 1)
+        mask = jnp.tril(jnp.ones((g + 1, g + 1), bool))
+        logits, _, staged, _ = forward(self.params, self.cfg, toks,
+                                       positions=pos, cache=cache,
+                                       extra_mask=mask, stage_only=True,
+                                       moe_exact=True)
+        pred = jnp.argmax(logits, axis=-1)
+        match = (chain == pred[:, :-1]).astype(jnp.int32)
+        n_acc = jnp.minimum(jnp.cumprod(match, axis=1).sum(axis=1), g)
+        accept = jnp.arange(g + 1)[None] <= n_acc[:, None]
+        cache = commit_staged(self.cfg, cache, staged, pos, accept,
+                              n_acc + 1)
+        bonus = jnp.take_along_axis(pred, n_acc[:, None], 1)[:, 0]
+        return cache, n_acc, bonus
+
+    def _lookup(self, ctx):
+        """ctx: python list of ids.  Returns gamma proposals."""
+        n, g = self.ngram, self.gamma
+        if len(ctx) > n:
+            key = ctx[-n:]
+            for s in range(len(ctx) - n - 1, -1, -1):
+                if ctx[s:s + n] == key and s + n < len(ctx):
+                    prop = ctx[s + n:s + n + g]
+                    return prop + ctx[-1:] * (g - len(prop))
+        return ctx[-1:] * g                     # no match: repeat last token
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 64):
+        prompt_l = [int(t) for t in prompt]
+        pj = jnp.asarray(prompt)[None]
+        cache = init_cache(self.cfg, 1, self.capacity)
+        logits, cache, _, _ = forward(self.params, self.cfg, pj,
+                                      cache=cache, moe_exact=True)
+        root = jnp.argmax(logits[:, -1], -1)
+        produced = [int(root[0])]
+        steps = 1
+        while len(produced) < max_new_tokens:
+            chain = jnp.asarray(self._lookup(prompt_l + produced),
+                                jnp.int32)[None]
+            cache, n_acc, bonus = self._verify(cache, root, chain)
+            steps += 1
+            n = int(n_acc[0])
+            produced.extend(int(x) for x in np.asarray(chain[0])[:n])
+            produced.append(int(bonus[0]))
+            root = bonus
+        return np.asarray(produced[:max_new_tokens]), steps

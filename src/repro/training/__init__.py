@@ -1,0 +1,4 @@
+from .distill import distill_loss, plan_insertions
+from .optim import AdamWState, adamw_init, adamw_update, cosine_schedule
+from .train_loop import (lm_loss, make_ppd_train_step, pretrain_base,
+                         train_prompt_tokens)

@@ -1,0 +1,154 @@
+"""Prompt-token distillation training (paper §3.3).
+
+One forward pass serves both roles: prompt tokens are *appended* to the
+token buffer but attention-masked so real tokens never see them — the real
+rows therefore produce exactly the frozen teacher's logits, and the prompt
+rows produce the student guesses.  KD loss (Eq. 1):
+
+    L = (1/N) sum_i  KL(teacher_{p+i} || student_i) * alpha^(i-1)
+
+with random insertion points p per sequence (R groups per sample) and the
+EPT ensemble attention mask (group j sees only group j).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+
+
+class InsertPlan(NamedTuple):
+    positions: jnp.ndarray    # [B, T_ext] model positions
+    extra_mask: jnp.ndarray   # [B, T_ext, T_ext]
+    target_idx: jnp.ndarray   # [B, R, m] teacher row for each (r, distance)
+    slot_idx: jnp.ndarray     # [R, e, m] student row (buffer index)
+
+
+def plan_insertions(key, B, S, R, m, n_ept, points=None):
+    """Random insertion points + masks.  Prompt block layout (appended after
+    the S real rows): r-major, then EPT member, then chain index.
+    ``points`` ([B,R] int) overrides the random roots (evaluation use)."""
+    Q = R * n_ept * m
+    if points is not None:
+        p = jnp.asarray(points, jnp.int32)
+    else:
+        p = jax.random.randint(key, (B, R), 1, S - m - 1)    # root index p
+    r_id = jnp.repeat(jnp.arange(R), n_ept * m)              # [Q]
+    e_id = jnp.tile(jnp.repeat(jnp.arange(n_ept), m), R)
+    c_id = jnp.tile(jnp.arange(1, m + 1), R * n_ept)
+
+    pos_prompt = p[:, r_id] + c_id[None, :]                  # [B,Q]
+    positions = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(S), (B, S)), pos_prompt], axis=1)
+
+    # visibility
+    real_real = jnp.ones((S, S), bool)
+    real_pr = jnp.zeros((S, Q), bool)
+    pr_real = jnp.arange(S)[None, None, :] <= p[:, r_id][:, :, None]
+    pr_pr = ((r_id[:, None] == r_id[None, :])
+             & (e_id[:, None] == e_id[None, :])
+             & (c_id[None, :] <= c_id[:, None]))    # <= : self-visibility,
+    # matching the decode-time tree mask (ancestors INCLUDING self)
+    top = jnp.broadcast_to(
+        jnp.concatenate([real_real, real_pr], axis=1), (B, S, S + Q))
+    bot = jnp.concatenate([pr_real, jnp.broadcast_to(pr_pr, (B, Q, Q))],
+                          axis=2)
+    extra_mask = jnp.concatenate([top, bot], axis=1)         # [B,T,T]
+
+    target_idx = p[:, :, None] + jnp.arange(1, m + 1)[None, None, :]
+    slot_idx = S + (jnp.arange(R)[:, None, None] * n_ept * m
+                    + jnp.arange(n_ept)[None, :, None] * m
+                    + jnp.arange(m)[None, None, :])
+    return InsertPlan(positions, extra_mask, target_idx, slot_idx)
+
+
+def distill_loss(params, ppd_params, cfg: ModelConfig, tokens, key, *,
+                 m=3, n_ept=1, R=4, alpha=0.8, moe_exact=True,
+                 hard_labels=False, q_chunk=0, remat=False,
+                 gather_rows=True):
+    """Returns (loss, metrics).  Gradients flow only into ppd_params.
+
+    ``gather_rows`` (perf): only the R*m teacher rows and R*n_ept*m student
+    rows are unembedded — the [B,T,V] logits tensor (the dominant memory
+    term for 50k-260k vocabularies at seq 4k) is never materialized.
+    Numerically identical to the naive path (see tests)."""
+    B, S = tokens.shape[:2]
+    plan = plan_insertions(key, B, S, R, m, n_ept)
+    emb = params["embed"]
+    tbl = emb if emb.ndim == 2 else emb[0]
+    tok_emb = (sum(params["embed"][k][tokens[..., k]]
+                   for k in range(cfg.n_codebooks))
+               if cfg.modality == "audio" else tbl[tokens])
+    if cfg.scale_embeddings:
+        tok_emb = tok_emb * jnp.asarray(cfg.d_model ** 0.5, tok_emb.dtype)
+    pe = ppd_params["prompt_embed"].astype(tok_emb.dtype)    # [m,e,d]
+    if cfg.scale_embeddings:
+        pe = pe * jnp.asarray(cfg.d_model ** 0.5, tok_emb.dtype)
+    # prompt block embeddings in slot order (r-major, e, c)
+    block = jnp.tile(pe.transpose(1, 0, 2).reshape(1, n_ept * m, -1),
+                     (B, R, 1))                              # [B,Q,d]
+    embeds = jnp.concatenate([tok_emb, block], axis=1)
+
+    # audio logits are [B,T,K,V]: the KD loss applies per codebook and
+    # averages over K (one prompt token guesses all K codebook streams).
+    audio = cfg.modality == "audio"
+    if gather_rows:
+        from repro.models import unembed
+        from repro.models.layers import rms_norm
+        _, _, _, _, hidden = forward(
+            params, cfg, positions=plan.positions, embeds=embeds,
+            extra_mask=plan.extra_mask, moe_exact=moe_exact,
+            q_chunk=q_chunk, remat=remat, skip_unembed=True,
+            return_hidden=True)
+        Q = R * n_ept * m
+        # rows we need: teacher targets [B,R*m] + all student rows [Q]
+        t_rows = plan.target_idx.reshape(B, R * m)
+        s_rows = jnp.broadcast_to(jnp.arange(S, S + Q), (B, Q))
+        rows = jnp.concatenate([t_rows, s_rows], axis=1)     # [B,R*m+Q]
+        h_sel = jnp.take_along_axis(
+            hidden, rows[..., None].astype(jnp.int32), axis=1)
+        h_sel = rms_norm(h_sel, params["final_norm"], cfg.rms_eps,
+                         plus_one=True)
+        sel_logits = unembed(params, cfg, h_sel)             # [B,rows(,K),V]
+        tgt = jax.lax.stop_gradient(sel_logits[:, :R * m])
+        tgt = tgt.reshape((B, R, m) + sel_logits.shape[2:])
+        student = sel_logits[:, R * m:]
+        student = student.reshape((B, R, n_ept, m) + student.shape[2:]
+                                  ).mean(axis=2)
+    else:
+        logits, _, _, _ = forward(params, cfg, positions=plan.positions,
+                                  embeds=embeds,
+                                  extra_mask=plan.extra_mask,
+                                  moe_exact=moe_exact, q_chunk=q_chunk,
+                                  remat=remat)
+        teacher = jax.lax.stop_gradient(logits[:, :S])       # [B,S(,K),V]
+        student = logits[:, S:]                              # [B,Q(,K),V]
+        # average EPT members: [B,R,e,m(,K),V] -> [B,R,m(,K),V]
+        student = student.reshape((B, R, n_ept, m) + student.shape[2:]
+                                  ).mean(axis=2)
+        tidx = plan.target_idx.reshape(B, R * m)
+        tidx = tidx.reshape((B, R * m) + (1,) * (teacher.ndim - 2))
+        tgt = jnp.take_along_axis(teacher, tidx, axis=1
+                                  ).reshape((B, R, m) + teacher.shape[2:])
+    decay = alpha ** jnp.arange(m, dtype=jnp.float32)        # [m]
+    slp = jax.nn.log_softmax(student.astype(jnp.float32), -1)
+    if hard_labels:
+        lbl = jnp.argmax(tgt, axis=-1)
+        ce = -jnp.take_along_axis(slp, lbl[..., None], -1)[..., 0]
+        kl = ce
+    else:
+        tp = jax.nn.softmax(tgt.astype(jnp.float32), -1)
+        # KD: cross-entropy with teacher soft labels (= KL(T||S) + const)
+        kl = -(tp * slp).sum(-1) - (-(tp * jnp.log(tp + 1e-9)).sum(-1))
+    dshape = (1, 1, m) + (1,) * (kl.ndim - 3)
+    loss = (kl * decay.reshape(dshape)).mean()
+    # per-distance top-1 agreement with the teacher (monitoring)
+    agree = (jnp.argmax(student, -1) == jnp.argmax(tgt, -1))
+    agree = agree.reshape(B, R, m, -1).mean(axis=(0, 1, 3))
+    return loss, {"kl_per_dist": kl.reshape(B, R, m, -1).mean(axis=(0, 1, 3)),
+                  "agree": agree}

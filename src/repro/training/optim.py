@@ -1,0 +1,49 @@
+"""In-repo optimizer (no optax in this environment): AdamW + schedules."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=z,
+                      v=jax.tree.map(jnp.copy, z))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.999,
+                 eps=1e-8, weight_decay=0.0):
+    step = state.step + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.where(warmup > 0, jnp.minimum(step / max(warmup, 1), 1.0),
+                         1.0)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return lr

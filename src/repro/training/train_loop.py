@@ -1,0 +1,113 @@
+"""Training loops.
+
+* ``pretrain_base``      — small-scale base-LM pretraining on the synthetic
+  pipeline (gives the frozen teacher its structure; stands in for the
+  published checkpoints we cannot download).
+* ``train_prompt_tokens`` — the paper's training: ONLY the prompt-token
+  embeddings receive gradients; base params are frozen.
+* ``ppd_train_step``      — the pjit-able distributed step used by the
+  launcher / dry-run (prompt-embedding AdamW state only).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataPipeline
+from repro.models import forward
+from repro.models.config import ModelConfig
+
+from .distill import distill_loss
+from .optim import adamw_init, adamw_update, cosine_schedule
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, moe_exact=True):
+    logits, _, _, aux = forward(params, cfg, tokens, moe_exact=moe_exact)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    if cfg.modality == "audio":
+        nll = -jnp.take_along_axis(lp[:, :-1], tokens[:, 1:, :, None],
+                                   -1).mean()
+    else:
+        nll = -jnp.take_along_axis(lp[:, :-1], tokens[:, 1:, None],
+                                   -1).mean()
+    coef = cfg.moe.aux_loss_coef if cfg.moe else 0.0
+    return nll + coef * aux
+
+
+def pretrain_base(params, cfg: ModelConfig, pipe: DataPipeline, steps,
+                  lr=3e-3, log_every=50, verbose=True):
+    sched = cosine_schedule(lr, steps, warmup=min(20, steps // 10))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, stepno):
+        loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens)
+        params, opt = adamw_update(grads, opt, params, lr=sched(stepno),
+                                   weight_decay=0.01)
+        return params, opt, loss
+
+    it = pipe.batches(steps)
+    for i, batch in enumerate(it):
+        params, opt, loss = step_fn(params, opt, jnp.asarray(batch), i)
+        if verbose and (i % log_every == 0 or i == steps - 1):
+            print(f"  base step {i:4d} loss {float(loss):.4f}")
+    return params
+
+
+def train_prompt_tokens(params, ppd_params, cfg: ModelConfig,
+                        pipe: DataPipeline, steps, *, m=3, n_ept=1, R=4,
+                        alpha=0.8, lr=1e-2, log_every=50, verbose=True,
+                        hard_labels=False):
+    """The paper's 16-GPU-hour training, scaled to the synthetic setup."""
+    sched = cosine_schedule(lr, steps, warmup=0)       # paper: cosine, no warmup
+    opt = adamw_init(ppd_params)
+
+    @jax.jit
+    def step_fn(ppd_params, opt, tokens, key, stepno):
+        def loss_fn(pp):
+            return distill_loss(params, pp, cfg, tokens, key, m=m,
+                                n_ept=n_ept, R=R, alpha=alpha,
+                                hard_labels=hard_labels)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn,
+                                                    has_aux=True)(ppd_params)
+        ppd_params, opt = adamw_update(grads, opt, ppd_params,
+                                       lr=sched(stepno))
+        return ppd_params, opt, loss, metrics
+
+    key = jax.random.PRNGKey(1234)
+    hist = []
+    for i, batch in enumerate(pipe.batches(steps)):
+        key, sub = jax.random.split(key)
+        ppd_params, opt, loss, metrics = step_fn(ppd_params, opt,
+                                                 jnp.asarray(batch), sub, i)
+        hist.append(float(loss))
+        if verbose and (i % log_every == 0 or i == steps - 1):
+            ag = " ".join(f"{float(a):.2f}" for a in metrics["agree"])
+            print(f"  ppd step {i:4d} kd-loss {float(loss):.4f} "
+                  f"teacher-agree@dist [{ag}]")
+    return ppd_params, hist
+
+
+def make_ppd_train_step(cfg: ModelConfig, *, m=3, n_ept=1, R=4, alpha=0.8,
+                        lr=1e-2, moe_exact=False, q_chunk=0, remat=False,
+                        gather_rows=True):
+    """Returns the pure train_step(params, ppd, opt, tokens, key) used by
+    the distributed launcher & multi-pod dry-run (prompt-only training —
+    base params are frozen inputs, no base optimizer state exists)."""
+
+    def train_step(params, ppd_params, opt_state, tokens, key):
+        def loss_fn(pp):
+            return distill_loss(params, pp, cfg, tokens, key, m=m,
+                                n_ept=n_ept, R=R, alpha=alpha,
+                                moe_exact=moe_exact, q_chunk=q_chunk,
+                                remat=remat, gather_rows=gather_rows)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn,
+                                                    has_aux=True)(ppd_params)
+        ppd_params, opt_state = adamw_update(grads, opt_state, ppd_params,
+                                             lr=lr)
+        return ppd_params, opt_state, loss, metrics["agree"]
+
+    return train_step

@@ -1,0 +1,107 @@
+"""Decode-step unit tests: grouped top-k, candidate selection, guess
+gathering — the pieces behind the §Perf top-k-compressed state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decode import (gather_guess_topk, grouped_topk,
+                               select_candidate_tokens)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 12),
+       st.sampled_from([256, 1024, 4096]), st.integers(2, 32))
+def test_grouped_topk_exact(b, k, v, groups):
+    # distinct values -> unique top-k set (index order may tie-break
+    # differently, so compare VALUE sets and value order)
+    x = jnp.asarray(np.random.default_rng(b * v + k).permutation(
+        v * b).reshape(b, v).astype(np.float32))
+    v_ref, i_ref = jax.lax.top_k(x, k)
+    v_got, i_got = grouped_topk(x, k, groups=groups)
+    np.testing.assert_allclose(np.asarray(v_ref), np.asarray(v_got))
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_got))
+
+
+def test_grouped_topk_fallback_small_v():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 64))
+    v1, i1 = grouped_topk(x, 10, groups=16)   # 64 < 4*16*10 -> fallback
+    v2, i2 = jax.lax.top_k(x, 10)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+
+
+def _bufs_chain(B, m=3, N=8):
+    """Tiny hand-built buffer dict for a root + chain of candidates."""
+    node_type = np.full(N, 3, np.int32)          # PAD
+    node_type[0] = 0                             # ROOT
+    node_type[1:m + 1] = 1                       # CAND chain
+    cand_dist = np.zeros(N, np.int32)
+    cand_choice = np.zeros(N, np.int32)
+    for d in range(m):
+        cand_dist[1 + d] = d + 1
+        cand_choice[1 + d] = d % 2               # alternate top-1/top-2
+    return {
+        "node_type": jnp.asarray(np.tile(node_type, (B, 1))),
+        "cand_dist": jnp.asarray(np.tile(cand_dist, (B, 1))),
+        "cand_choice": jnp.asarray(np.tile(cand_choice, (B, 1))),
+    }
+
+
+def test_select_candidate_tokens_text():
+    B, m, k = 2, 3, 4
+    bufs = _bufs_chain(B, m)
+    idx = jnp.asarray(np.arange(B * m * k).reshape(B, m, k), jnp.int32)
+    root = jnp.asarray([100, 200], jnp.int32)
+    toks = np.asarray(select_candidate_tokens(bufs, idx, root))
+    for b in range(B):
+        assert toks[b, 0] == root[b]
+        for d in range(m):
+            choice = d % 2
+            assert toks[b, 1 + d] == idx[b, d, choice]
+        # pads fall back to root token
+        assert (toks[b, m + 1:] == root[b]).all()
+
+
+def test_select_candidate_tokens_audio():
+    B, m, k, K = 1, 2, 3, 4
+    bufs = _bufs_chain(B, m, N=4)
+    idx = jnp.asarray(np.arange(B * m * k * K).reshape(B, m, k, K),
+                      jnp.int32)
+    root = jnp.asarray([[7, 8, 9, 10]], jnp.int32)
+    toks = np.asarray(select_candidate_tokens(bufs, idx, root))
+    assert toks.shape == (B, 4, K)
+    np.testing.assert_array_equal(toks[0, 0], root[0])
+    np.testing.assert_array_equal(toks[0, 1], idx[0, 0, 0])   # d=1 choice 0
+    np.testing.assert_array_equal(toks[0, 2], idx[0, 1, 1])   # d=2 choice 1
+
+
+def test_gather_guess_topk_reads_vstar_chain():
+    """Guesses come from v*'s prompt chain rows, EPT members averaged."""
+    B, N, V, m, e, k = 2, 6, 64, 2, 2, 5
+    chain_nodes = np.full((B, N, m * e), -1, np.int32)
+    # node 1 carries chain [2,3,4,5] (e-major: e0:[2,3], e1:[4,5])
+    chain_nodes[:, 1] = [2, 3, 4, 5]
+    bufs = {"chain_nodes": jnp.asarray(chain_nodes)}
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, N, V))
+    v_star = jnp.asarray([1, 1])
+    vals, idx = gather_guess_topk(bufs, logits, v_star, m, n_ept=e,
+                                  kmax=k)
+    # reference: EPT-major layout -> distance d averages nodes (2+d, 4+d)
+    ref = np.stack([(np.asarray(logits[b, [2, 3]])
+                     + np.asarray(logits[b, [4, 5]])) / 2
+                    for b in range(B)])
+    rv, ri = jax.lax.top_k(jnp.asarray(ref), k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv),
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+
+
+def test_gather_guess_topk_invalid_chain_zeroed():
+    """v* without a chain (chain_nodes == -1) produces zero guesses."""
+    B, N, V, m = 1, 4, 32, 2
+    bufs = {"chain_nodes": jnp.full((B, N, m), -1, jnp.int32)}
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, N, V))
+    vals, idx = gather_guess_topk(bufs, logits, jnp.asarray([0]), m,
+                                  kmax=4)
+    np.testing.assert_allclose(np.asarray(vals), 0.0)

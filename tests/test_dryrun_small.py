@@ -1,0 +1,37 @@
+"""Dry-run integration test on a small placeholder mesh (subprocess, so
+the XLA_FLAGS device-count override never leaks into this process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.launch.dryrun import run_one
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+recs = []
+for arch, shape in [("granite-3-2b", "decode_32k"),
+                    ("mamba2-2.7b", "decode_32k"),
+                    ("gemma3-1b", "train_4k")]:
+    rec = run_one(arch, shape, False, out_dir="", verbose=False, mesh=mesh)
+    assert rec["roofline"]["flops"] > 0, (arch, shape)
+    assert rec["roofline"]["t_memory_s"] > 0
+    recs.append((arch, shape, rec["roofline"]["dominant"]))
+print("DRYRUN_OK", recs)
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DRYRUN_OK" in out.stdout

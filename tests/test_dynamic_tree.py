@@ -1,0 +1,104 @@
+"""Dynamic sparse-tree construction (paper §4) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dynamic_tree import (PAPER_ACC, amortized_tokens, best_split,
+                                     build_dynamic_tree, build_random_tree,
+                                     build_static_tree, f_tree, marginals,
+                                     node_accept_probs,
+                                     optimal_candidate_tree,
+                                     transition_matrix)
+
+
+def test_marginals_sum_and_positivity():
+    q = marginals(PAPER_ACC)
+    assert (q > 0).all()
+    np.testing.assert_allclose(q.sum(axis=1), PAPER_ACC[:, -1], atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 3))
+def test_optimal_tree_valid_and_greedy_optimal(n_c, depth):
+    q = marginals(PAPER_ACC)
+    cands = optimal_candidate_tree(n_c, depth, q)
+    assert len(cands) <= n_c
+    assert all(len(c) <= depth for c in cands)
+    # prefix-closed
+    cs = set(cands)
+    for c in cands:
+        if len(c) > 1:
+            assert c[:-1] in cs
+    # the greedy frontier tree must beat 20 random prefix-closed trees of
+    # the same size (the exchange-argument optimality, spot-checked)
+    f_star = f_tree(cands, q)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        rand = set()
+        frontier = [()]
+        while len(rand) < len(cands):
+            p = frontier[rng.integers(len(frontier))]
+            if len(p) >= depth:
+                frontier.remove(p)
+                if not frontier:
+                    break
+                continue
+            c = p + (int(rng.integers(q.shape[1])),)
+            if c not in rand:
+                rand.add(c)
+                frontier.append(c)
+        if len(rand) == len(cands):
+            assert f_star >= f_tree(sorted(rand), q) - 1e-9
+
+
+def test_monotone_in_depth():
+    q = marginals(PAPER_ACC)
+    fs = [f_tree(optimal_candidate_tree(10, d, q), q) for d in (1, 2, 3)]
+    assert fs[0] <= fs[1] <= fs[2]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 12))
+def test_build_dynamic_tree_budgets(n_c, n_p):
+    states = build_dynamic_tree(n_c, n_p, 3, PAPER_ACC)
+    assert len(states) == 4
+    for k, s in enumerate(states):
+        assert len(s.candidates) <= n_c
+        assert s.max_depth() <= k or not s.candidates
+        assert sum(s.prompt_chains.values()) <= max(n_p, 1)
+        # liveness: the root keeps at least one prompt token
+        assert s.prompt_chains.get((), 0) >= 1
+
+
+def test_transition_matrix_stochastic():
+    states = build_dynamic_tree(6, 8, 3, PAPER_ACC)
+    P = transition_matrix(states, PAPER_ACC)
+    np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-9)
+    assert (P >= 0).all()
+
+
+def test_amortized_tokens_reasonable():
+    states = build_dynamic_tree(6, 8, 3, PAPER_ACC)
+    r, pi = amortized_tokens(states, PAPER_ACC)
+    assert 1.0 <= r <= 4.0            # 1 bonus + <= m accepted
+    np.testing.assert_allclose(pi.sum(), 1.0, atol=1e-6)
+
+
+def test_dynamic_beats_static_and_random():
+    """Paper Fig. 8a: dynamic > static/random amortized acceptance under
+    the same node budget (analytic check on the paper's calibration)."""
+    for n in (10, 16, 24):
+        dyn, (n_c, n_p), r_dyn = best_split(n, 3, PAPER_ACC)
+        r_static, _ = amortized_tokens(build_static_tree(n, 3, PAPER_ACC),
+                                       PAPER_ACC)
+        r_rand, _ = amortized_tokens(build_random_tree(n, 3), PAPER_ACC)
+        assert r_dyn >= r_static - 1e-9, (n, r_dyn, r_static)
+        assert r_dyn >= r_rand - 1e-9, (n, r_dyn, r_rand)
+
+
+def test_node_accept_probs_are_probabilities():
+    q = marginals(PAPER_ACC)
+    cands = optimal_candidate_tree(8, 3, q)
+    p = node_accept_probs(cands, q)
+    total = sum(p.values())
+    assert 0.99 <= total <= 1.01      # last-accept events partition

@@ -1,0 +1,176 @@
+"""Model-substrate correctness: MoE dispatch, SSD scan, RG-LRU scan,
+RoPE/mask properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.models.config import SSMConfig
+from repro.models.layers import apply_rope, build_mask
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import rglru as rglru_mod
+
+
+# ------------------------------------------------------------------ MoE
+def test_moe_dispatch_matches_exact_at_high_capacity():
+    """With capacity_factor high enough to avoid drops, the scatter
+    dispatch must equal the dense 'exact' path."""
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model))
+    y_exact, aux1 = moe_mod.moe_apply(params, cfg, x, exact=True)
+    y_disp, aux2 = moe_mod.moe_apply(params, cfg, x,
+                                     capacity_factor=float(
+                                         cfg.moe.n_experts))
+    np.testing.assert_allclose(np.asarray(y_exact), np.asarray(y_disp),
+                               atol=1e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)
+
+
+def test_moe_capacity_drops_degrade_gracefully():
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y, _ = moe_mod.moe_apply(params, cfg, x, capacity_factor=0.5)
+    assert not jnp.isnan(y).any()
+
+
+def test_deepseek_sigmoid_router_shared_expert():
+    cfg = get_smoke_config("deepseek-v3-671b")
+    assert cfg.moe.router == "sigmoid" and cfg.moe.n_shared >= 1
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    y, aux = moe_mod.moe_apply(params, cfg, x, exact=True)
+    assert y.shape == x.shape and not jnp.isnan(y).any()
+    w, idx, _ = moe_mod.route(params, cfg, x.reshape(-1, cfg.d_model))
+    assert (w >= 0).all()
+    np.testing.assert_allclose(np.asarray(w.sum(-1)),
+                               cfg.moe.routed_scale, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ SSD
+def _ssd_sequential(xh, dt, A, Bm, Cm, init=None):
+    """O(S) step-by-step reference for the chunked SSD scan."""
+    b, S, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hpg = h // g
+    state = (np.zeros((b, g, hpg, p, n)) if init is None
+             else np.asarray(init, np.float64).reshape(b, g, hpg, p, n))
+    ys = []
+    xg = np.asarray(xh, np.float64).reshape(b, S, g, hpg, p)
+    dtg = np.asarray(dt, np.float64).reshape(b, S, g, hpg)
+    Ag = np.asarray(A, np.float64).reshape(g, hpg)
+    for t in range(S):
+        a = np.exp(dtg[:, t] * Ag)                       # [b,g,hpg]
+        inp = np.einsum("bgn,bgh,bghp->bghpn", np.asarray(Bm)[:, t],
+                        dtg[:, t], xg[:, t])
+        state = state * a[..., None, None] + inp
+        y = np.einsum("bgn,bghpn->bghp", np.asarray(Cm)[:, t], state)
+        ys.append(y.reshape(b, h, p))
+    return np.stack(ys, 1), state.reshape(b, h, p, n)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_sequential(chunk):
+    rng = np.random.default_rng(0)
+    b, S, h, p, g, n = 2, 19, 4, 8, 2, 5
+    xh = jnp.asarray(rng.normal(size=(b, S, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 1.0, size=(b, S, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, S, g, n)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, S, g, n)), jnp.float32)
+    init = jnp.asarray(rng.normal(size=(b, h, p, n)) * 0.3, jnp.float32)
+    y, fin = ssm_mod.ssd_scan(xh, dt, A, Bm, Cm, chunk, init)
+    y_ref, fin_ref = _ssd_sequential(xh, dt, A, Bm, Cm, init)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fin), fin_ref, atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_ssd_dt_mask_is_identity_for_masked_tokens():
+    """dt=0 tokens must not change the state and contribute ~0 output
+    (the chain-mode PPD commit mechanism)."""
+    rng = np.random.default_rng(1)
+    b, S, h, p, g, n = 1, 8, 2, 4, 1, 3
+    xh = jnp.asarray(rng.normal(size=(b, S, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.2, 1.0, size=(b, S, h)), jnp.float32)
+    A = jnp.asarray([-1.0, -0.5], jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, S, g, n)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, S, g, n)), jnp.float32)
+    keep = jnp.asarray([[1, 1, 0, 1, 0, 0, 1, 1]], jnp.float32)
+    y, fin = ssm_mod.ssd_scan(xh, dt * keep[..., None], A, Bm, Cm, 4)
+    # reference: run only the kept tokens
+    kept = [t for t in range(S) if keep[0, t]]
+    y2, fin2 = ssm_mod.ssd_scan(xh[:, kept], dt[:, kept], A, Bm[:, kept],
+                                Cm[:, kept], 4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin2),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y[:, kept]), np.asarray(y2),
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------------ RG-LRU
+def test_rglru_scan_matches_loop():
+    cfg = get_smoke_config("recurrentgemma-9b")
+    params = rglru_mod.init_rglru(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, cfg.d_model)) * 0.3
+    cache = rglru_mod.make_rglru_cache(cfg, 2)
+    y_all, c_all = rglru_mod.rglru_apply(params, cfg, x, cache)
+    # token-by-token
+    cache2 = rglru_mod.make_rglru_cache(cfg, 2)
+    ys = []
+    for t in range(10):
+        y, cache2 = rglru_mod.rglru_apply(params, cfg, x[:, t:t + 1],
+                                          cache2)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_all),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c_all["h"]),
+                               np.asarray(cache2["h"]), atol=1e-4)
+
+
+# ------------------------------------------------------------------ rope/mask
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 4))
+def test_rope_preserves_norm(d_half, heads):
+    d = 2 * d_half
+    x = jnp.ones((1, 3, heads, d))
+    pos = jnp.asarray([[0, 5, 1000]])
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+
+    def score(i, j):
+        qi = apply_rope(q, jnp.asarray([[i]]))
+        kj = apply_rope(k, jnp.asarray([[j]]))
+        return float((qi * kj).sum())
+
+    np.testing.assert_allclose(score(3, 1), score(10, 8), rtol=1e-4)
+    np.testing.assert_allclose(score(100, 60), score(50, 10), rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 30), st.integers(0, 40), st.integers(1, 64))
+def test_build_mask_window_property(tq, shift, window):
+    qp = jnp.arange(shift, shift + tq)[None]
+    kvp = jnp.arange(shift + tq)[None]
+    valid = jnp.ones_like(kvp, bool)
+    m = np.asarray(build_mask(qp, kvp, valid, window=window))[0]
+    for i in range(tq):
+        vis = np.where(m[i])[0]
+        assert (vis <= shift + i).all()
+        assert (vis > shift + i - window).all()
+        assert m[i, shift + i]            # self always visible

@@ -1,0 +1,102 @@
+"""Serving-layer tests: engines, spec-decode, PLD baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import init_prompt_params
+from repro.models import init_params
+from repro.serving.engine import PPDEngine, Request, VanillaEngine
+from repro.serving.pld import PromptLookupDecoder
+from repro.serving.spec_decode import SpeculativeDecoder
+
+CFG = get_smoke_config("granite-3-2b")
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    return params, ppd
+
+
+def _prompts(n, plen=10):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, CFG.vocab_size, size=plen + i % 3)
+            for i in range(n)]
+
+
+def test_engine_matches_vanilla_engine(model):
+    params, ppd = model
+    prompts = _prompts(5)
+    ppd_eng = PPDEngine(params, ppd, CFG, m=3, batch_size=2, capacity=128)
+    van_eng = VanillaEngine(params, CFG, batch_size=2, capacity=128)
+    for i, p in enumerate(prompts):
+        ppd_eng.add_request(Request(uid=i, prompt=p, max_new_tokens=12))
+        van_eng.add_request(Request(uid=i, prompt=p, max_new_tokens=12))
+    rp = {r.uid: r for r in ppd_eng.run()}
+    rv = {r.uid: r for r in van_eng.run()}
+    assert set(rp) == set(rv) == set(range(5))
+    for uid in rp:
+        np.testing.assert_array_equal(rp[uid].tokens, rv[uid].tokens,
+                                      f"request {uid}")
+
+
+def test_engine_ragged_lengths(model):
+    """Rows with different max_new_tokens finish independently."""
+    params, ppd = model
+    eng = PPDEngine(params, ppd, CFG, m=3, batch_size=3, capacity=128)
+    lens = [4, 9, 17]
+    for i, L in enumerate(lens):
+        eng.add_request(Request(uid=i, prompt=_prompts(1)[0],
+                                max_new_tokens=L))
+    res = {r.uid: r for r in eng.run()}
+    for i, L in enumerate(lens):
+        assert len(res[i].tokens) == L
+
+
+def test_spec_decode_matches_target_greedy(model):
+    params, _ = model
+    dcfg = CFG.replace(name="draft", n_layers=1, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128)
+    dparams = init_params(dcfg, jax.random.PRNGKey(5))
+    sd = SpeculativeDecoder(params, CFG, dparams, dcfg, gamma=3,
+                            capacity=128)
+    prompt = _prompts(1)[0]
+    out, stats = sd.generate(prompt, max_new_tokens=16)
+
+    van = VanillaEngine(params, CFG, batch_size=1, capacity=128)
+    van.add_request(Request(uid=0, prompt=prompt, max_new_tokens=16))
+    ref = van.run()[0].tokens
+    np.testing.assert_array_equal(out, ref)
+    assert stats.accept_len >= 1.0
+
+
+def test_spec_decode_with_ppd_draft_matches(model):
+    params, _ = model
+    dcfg = CFG.replace(name="draft", n_layers=2, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128)
+    dparams = init_params(dcfg, jax.random.PRNGKey(5))
+    dppd = init_prompt_params(dcfg, jax.random.PRNGKey(6), m=3,
+                              base_embed=dparams["embed"])
+    sd = SpeculativeDecoder(params, CFG, dparams, dcfg, gamma=3,
+                            ppd_params=dppd, m=3, capacity=128)
+    prompt = _prompts(1)[0]
+    out, stats = sd.generate(prompt, max_new_tokens=16)
+    van = VanillaEngine(params, CFG, batch_size=1, capacity=128)
+    van.add_request(Request(uid=0, prompt=prompt, max_new_tokens=16))
+    ref = van.run()[0].tokens
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_pld_matches_greedy(model):
+    params, _ = model
+    dec = PromptLookupDecoder(params, CFG, gamma=3, capacity=128)
+    prompt = _prompts(1)[0]
+    out, steps = dec.generate(prompt, max_new_tokens=16)
+    van = VanillaEngine(params, CFG, batch_size=1, capacity=128)
+    van.add_request(Request(uid=0, prompt=prompt, max_new_tokens=16))
+    ref = van.run()[0].tokens
+    np.testing.assert_array_equal(out, ref)

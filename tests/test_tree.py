@@ -1,0 +1,114 @@
+"""Tree-topology invariants: hand-built cases + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import (CAND, PAD, PROMPT, ROOT, TreeSpec,
+                             build_buffers, default_chain_spec,
+                             mk_default_tree, stack_states)
+
+
+def random_spec(draw_cands, chain_lens, n_ept=1):
+    cands = sorted(set(draw_cands), key=lambda c: (len(c), c))
+    # close under prefixes (orphans are invalid by contract)
+    closed = set()
+    for c in cands:
+        for i in range(1, len(c) + 1):
+            closed.add(c[:i])
+    cands = sorted(closed, key=lambda c: (len(c), c))
+    chains = {(): max(chain_lens) if chain_lens else 1}
+    for i, c in enumerate(cands):
+        if chain_lens:
+            chains[c] = chain_lens[i % len(chain_lens)]
+    chains = {k: v for k, v in chains.items() if v > 0}
+    return TreeSpec(candidates=cands, prompt_chains=chains, n_ept=n_ept)
+
+
+choice_st = st.lists(st.integers(0, 3), min_size=1, max_size=3).map(tuple)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(choice_st, min_size=1, max_size=8),
+       st.lists(st.integers(0, 3), min_size=1, max_size=4),
+       st.integers(1, 3))
+def test_buffer_invariants(cands, chain_lens, n_ept):
+    spec = random_spec(cands, chain_lens, n_ept)
+    m_max = 3
+    if any(v > m_max for v in spec.prompt_chains.values()):
+        spec.prompt_chains = {k: min(v, m_max)
+                              for k, v in spec.prompt_chains.items()}
+    buf = build_buffers(spec, spec.n_nodes + 2, m_max)
+    n = buf.n_real
+    N = buf.node_type.shape[0]
+    # (1) root first, parents precede children
+    assert buf.node_type[0] == ROOT
+    for i in range(1, n):
+        assert buf.parent[i] < i
+    # (2) depth = parent depth + 1
+    for i in range(1, n):
+        assert buf.depth[i] == buf.depth[buf.parent[i]] + 1
+    # (3) mask is ancestor closure, diag true for real nodes
+    for i in range(n):
+        assert buf.mask[i, i]
+        j = buf.parent[i]
+        ancestors = set()
+        while j != -1:
+            ancestors.add(j)
+            j = buf.parent[j]
+        visible = set(np.where(buf.mask[i])[0]) - {i}
+        # visible must be a subset of ancestors (EPT masking may hide some)
+        assert visible <= ancestors
+        # all CAND/ROOT ancestors are always visible
+        for a in ancestors:
+            if buf.node_type[a] in (ROOT, CAND):
+                assert buf.mask[i, a]
+    # (4) EPT ensemble masking: prompt sees only same-group prompts
+    for i in range(n):
+        if buf.node_type[i] != PROMPT:
+            continue
+        for j in np.where(buf.mask[i])[0]:
+            if buf.node_type[j] == PROMPT and j != i:
+                assert buf.ept_idx[j] == buf.ept_idx[i]
+    # (5) pads are invisible and see nothing real is not required, but
+    # node_type beyond n_real is PAD
+    assert (buf.node_type[n:] == PAD).all()
+    # (6) chain bookkeeping: chain nodes exist, are PROMPT, ordered by depth
+    for i in range(n):
+        cl = buf.chain_len[i]
+        nodes = buf.chain_nodes[i][buf.chain_nodes[i] >= 0]
+        assert len(nodes) == cl * spec.n_ept
+        for v in nodes:
+            assert buf.node_type[v] == PROMPT
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3))
+def test_stack_states_uniform_shapes(m, n_ept):
+    states = mk_default_tree(m, n_ept=n_ept)
+    stacked = stack_states(states, m)
+    N = stacked["node_type"].shape[1]
+    for k, v in stacked.items():
+        if k == "n_real":
+            assert v.shape == (m + 1,)
+        else:
+            assert v.shape[0] == m + 1
+            assert v.shape[1] == N or k == "path_nodes"
+    assert (stacked["n_real"] <= N).all()
+
+
+def test_chain_spec_is_a_path():
+    spec = default_chain_spec(3, 2)
+    buf = build_buffers(spec, spec.n_nodes, 2)
+    # every candidate has exactly one child among candidates
+    kinds = buf.node_type[:buf.n_real]
+    cand_ids = np.where(kinds == CAND)[0]
+    assert len(cand_ids) == 3
+    for i in cand_ids:
+        assert (buf.depth[: buf.n_real][kinds == CAND] ==
+                np.arange(1, 4)).all()
+
+
+def test_orphan_candidate_rejected():
+    spec = TreeSpec(candidates=[(0, 0)], prompt_chains={})
+    with pytest.raises(AssertionError):
+        build_buffers(spec, 8, 3)
