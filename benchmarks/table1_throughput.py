@@ -1,6 +1,10 @@
 """Table 1: throughput T, accept length tau, forward-pass latency L_fp,
 trainable-parameter %, tree size and input length — vanilla vs Medusa vs
-PPD on the shared trained demo model (greedy; PPD output == vanilla)."""
+PPD on the shared trained demo model (greedy; PPD output == vanilla).
+
+Also emits ``table1_serving``: static vs continuous-batching scheduling
+under a Poisson arrival trace with mixed request lengths — forward passes
+consumed, goodput, and mean TTFT/TPOT (see docs/serving.md)."""
 from __future__ import annotations
 
 import json
@@ -72,11 +76,70 @@ def run(fast: bool = False):
                  same)
         out[name] = {k: v for k, v in r.items() if k != "outputs"}
         out[name]["same_output"] = bool(same)
+    assert same_ppd, "PPD greedy output must equal vanilla (paper: 'Same')"
+    out["serving"] = run_serving(fast)
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "table1.json"), "w") as f:
         json.dump(out, f, indent=1)
-    assert same_ppd, "PPD greedy output must equal vanilla (paper: 'Same')"
     return out
+
+
+def run_serving(fast: bool = False):
+    """Static vs continuous-batching PPD serving on a Poisson trace."""
+    from repro.serving import (ContinuousPPDEngine, PPDEngine, Request,
+                               aggregate_metrics, poisson_trace)
+
+    params, ppd, _, cfg = get_trained(fast)
+    pipe = pipeline()
+    slots = 4
+    lens = ([8, 24, 48] if fast else [16, 64, 256]) * 4   # 12 requests
+    prompt_len = 32
+    prompts = pipe.val_prompts(len(lens), prompt_len)
+    capacity = prompt_len + max(lens) + 16
+    reqs = poisson_trace(
+        [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
+         for i in range(len(lens))], rate_per_s=8.0, seed=0)
+
+    rows = {}
+    for mode in ("static", "continuous"):
+        if mode == "static":
+            eng = PPDEngine(params, ppd, cfg, m=M, batch_size=slots,
+                            capacity=capacity)
+        else:
+            eng = ContinuousPPDEngine(params, ppd, cfg, m=M,
+                                      batch_size=slots, capacity=capacity)
+        for r in reqs:
+            eng.add_request(r)
+        t0 = time.time()
+        res = eng.run()
+        makespan = time.time() - t0
+        agg = (eng.metrics(res) if mode == "continuous"
+               else aggregate_metrics(res, makespan))
+        rows[mode] = dict(
+            forward_passes=eng.total_forward_passes,
+            goodput_tok_s=agg["goodput_tok_s"],
+            mean_ttft_s=agg["mean_ttft_s"],
+            mean_tpot_s=agg["mean_tpot_s"],
+            total_tokens=agg["total_tokens"],
+            outputs={r.uid: r.tokens.tolist() for r in res})
+
+    same = rows["static"]["outputs"] == rows["continuous"]["outputs"]
+    csv_line("table1_serving", "scheduler", "fwd_passes", "goodput_tok_s",
+             "mean_ttft_s", "mean_tpot_s", "output_same_as_static")
+    for mode, r in rows.items():
+        csv_line("table1_serving", mode, r["forward_passes"],
+                 f"{r['goodput_tok_s']:.2f}", f"{r['mean_ttft_s']:.3f}",
+                 f"{r['mean_tpot_s']:.4f}", same)
+        r.pop("outputs")
+        r["same_output"] = bool(same)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "table1_serving.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    assert same, "continuous scheduling must not change outputs (greedy)"
+    assert (rows["continuous"]["forward_passes"]
+            < rows["static"]["forward_passes"]), \
+        "continuous batching must save forward passes on mixed lengths"
+    return rows
 
 
 if __name__ == "__main__":

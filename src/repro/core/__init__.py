@@ -8,4 +8,4 @@ from .dynamic_tree import (PAPER_ACC, amortized_tokens, best_split,
 from .prompt_tokens import init_prompt_params, prompt_param_count
 from .tree import (TreeSpec, build_buffers, default_chain_spec,
                    mk_default_tree, stack_states)
-from .verify import verify_greedy, verify_typical
+from .verify import sample_token, verify_greedy, verify_typical

@@ -31,7 +31,7 @@ from repro.models.config import (ATTN, MLA, RGLRU, SSM, ModelConfig,
 
 from .prompt_tokens import assemble_tree_embeds
 from .tree import CAND, PAD, PROMPT, ROOT, TreeSpec, stack_states
-from .verify import Verdict, verify_greedy, verify_typical
+from .verify import Verdict, sample_token, verify_greedy, verify_typical
 
 
 class PPDState(NamedTuple):
@@ -279,8 +279,15 @@ def commit_staged(cfg: ModelConfig, cache, staged_list, positions,
 
 def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
                     *, m: int, n_ept: int = 1, temperature: float = 0.0,
-                    key=None, moe_exact: bool = True):
-    """One guess-and-verify step.  Returns (new_state, step_info)."""
+                    key=None, moe_exact: bool = True, active=None):
+    """One guess-and-verify step.  Returns (new_state, step_info).
+
+    ``active`` ([B] bool, optional) marks live decode slots (continuous
+    batching): retired slots commit nothing — their accept mask is zeroed
+    so no K/V is scattered and no recurrent state advances, their cache
+    length is frozen, and their carried state (root token, guesses, tree
+    state) passes through unchanged.  Their ``accepted_path_tokens`` rows
+    come back as -1 so schedulers can harvest without masking again."""
     rb = _row_bufs(bufs, state.tree_state)
     tokens = select_candidate_tokens(rb, state.guess_idx, state.root_token)
     embeds = assemble_tree_embeds(params, ppd_params, cfg, rb, tokens)
@@ -298,22 +305,35 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
     else:
         verdict = verify_greedy(rb, logits, tokens)
 
+    accept_mask = verdict.accept_mask
     n_committed = verdict.n_acc + 1                              # + root
+    if active is not None:
+        accept_mask = accept_mask & active[:, None]
+        n_committed = jnp.where(active, n_committed, 0)
     if chain:
         # dt-masked re-scan commits recurrent state + masked K/V scatter
+        # (an all-zero row mask is a state identity: dt=0, no conv shift)
         _, cache, _, _ = forward(
             params, cfg, positions=positions, embeds=embeds,
             cache=state.cache, extra_mask=rb["mask"],
-            commit_mask=verdict.accept_mask, moe_exact=moe_exact)
+            commit_mask=accept_mask, moe_exact=moe_exact)
     else:
         cache = sharded_commit(cfg, state.cache, staged, positions,
-                               verdict.accept_mask, n_committed)
+                               accept_mask, n_committed)
 
     gvals, gidx = gather_guess_topk(rb, logits, verdict.v_star, m, n_ept,
                                     kmax=bufs.get("_kmax", 10))
-    new_state = PPDState(cache=cache, root_token=verdict.bonus,
+    root, tstate = verdict.bonus, verdict.next_state
+    if active is not None:
+        root = jnp.where(active[:, None] if root.ndim == 2 else active,
+                         root, state.root_token)
+        tstate = jnp.where(active, tstate, state.tree_state)
+        gvals = jnp.where(active[:, None, None], gvals, state.guess_vals)
+        gidx = jnp.where(active.reshape((-1,) + (1,) * (gidx.ndim - 1)),
+                         gidx, state.guess_idx)
+    new_state = PPDState(cache=cache, root_token=root,
                          guess_vals=gvals, guess_idx=gidx,
-                         tree_state=verdict.next_state)
+                         tree_state=tstate)
     # accepted output tokens this step: path candidates then bonus
     path = jnp.take_along_axis(
         rb["path_nodes"], verdict.v_star[:, None, None].repeat(
@@ -327,6 +347,9 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
         ptok = jnp.where(path >= 0,
                          jnp.take_along_axis(tokens, jnp.maximum(path, 0),
                                              axis=1), -1)
+    if active is not None:
+        ptok = jnp.where(active.reshape((-1,) + (1,) * (ptok.ndim - 1)),
+                         ptok, -1)
     info = dict(accepted_path_tokens=ptok, n_accepted=n_committed,
                 verdict=verdict, logits=logits)
     return new_state, info
@@ -334,18 +357,34 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
 
 def vanilla_decode_step(params, cfg: ModelConfig, cache, token, *,
                         temperature: float = 0.0, key=None,
-                        moe_exact: bool = True):
-    """Plain autoregressive baseline step (1 token)."""
+                        moe_exact: bool = True, active=None):
+    """Plain autoregressive baseline step (1 token).
+
+    ``active`` ([B] bool, optional): retired slots keep their cache length
+    frozen and echo their input token back (continuous batching).  Chain
+    architectures additionally freeze the recurrent state via a dt mask."""
     B = cache["length"].shape[0]
     tok = token[:, None] if token.ndim == 1 else token[:, None, :]
-    pos = cache["length"][:, None]
+    old_len = cache["length"]
+    pos = old_len[:, None]
+    commit_mask = None
+    if active is not None and is_chain_arch(cfg):
+        commit_mask = active[:, None]
     logits, cache, _, _ = forward(params, cfg, tok, positions=pos,
-                                  cache=cache, moe_exact=moe_exact)
+                                  cache=cache, moe_exact=moe_exact,
+                                  commit_mask=commit_mask)
+    if active is not None and commit_mask is None:
+        # attention archs: the masked-row K/V write lands in a dead ring
+        # slot (length frozen -> overwritten on the next admission).
+        cache = dict(cache, length=jnp.where(active, old_len + 1, old_len))
     lg = logits[:, 0]
     if temperature > 0.0:
-        nxt = jax.random.categorical(key, lg / temperature, axis=-1)
+        nxt = sample_token(key, lg / temperature)
     else:
         nxt = jnp.argmax(lg, axis=-1)
+    if active is not None:
+        nxt = jnp.where(active.reshape((-1,) + (1,) * (nxt.ndim - 1)),
+                        nxt, token)
     return cache, nxt, lg
 
 

@@ -22,6 +22,23 @@ class Verdict(NamedTuple):
     next_state: jnp.ndarray    # [B] next dynamic-tree state (chain length)
 
 
+def sample_token(key, logits):
+    """Categorical sample over ``logits`` [B,V] with either one key for the
+    whole batch or a per-row batch of keys ([B] typed / [B,2] raw).
+
+    Per-row keys give every continuous-batching slot its own RNG stream:
+    a request's samples do not depend on which other requests share the
+    batch, or on how many retired slots sit beside it."""
+    per_row = (getattr(key, "ndim", 0) >= 1
+               and key.shape[0] == logits.shape[0]
+               and (key.ndim == 2
+                    or jax.dtypes.issubdtype(key.dtype,
+                                             jax.dtypes.prng_key)))
+    if per_row:
+        return jax.vmap(jax.random.categorical)(key, logits)
+    return jax.random.categorical(key, logits, axis=-1)
+
+
 def _gather_parent(x, parent):
     """x: [B,N]; parent: [B,N] (-1 for root) -> x at parent (root -> self)."""
     p = jnp.maximum(parent, 0)
@@ -121,7 +138,7 @@ def verify_typical(bufs, logits, tokens, key, temperature=0.7,
     lg_star = jnp.take_along_axis(
         logits, v_star[:, None, None].repeat(logits.shape[-1], -1),
         axis=1)[:, 0]
-    bonus = jax.random.categorical(key, lg_star / temperature, axis=-1)
+    bonus = sample_token(key, lg_star / temperature)
     next_state = jnp.take_along_axis(bufs["chain_len"], v_star[:, None],
                                      1)[:, 0]
     return Verdict(v_star, n_acc, accept_mask, bonus, next_state)

@@ -6,13 +6,23 @@ acceptance statistics.  With ``--production`` it instead lowers + compiles
 the sharded serve step on the 16x16 (or 2x16x16) placeholder mesh — the
 same path the multi-pod dry-run exercises.
 
+With ``--continuous`` the slot-based continuous-batching scheduler
+replaces static batching: finished rows retire immediately, queued
+requests are admitted into freed slots via per-slot prefill, and
+per-request TTFT / TPOT / goodput are reported.  ``--arrival-rate``
+replays a Poisson arrival trace; ``--admission sjf`` switches the
+admission policy to shortest-job-first.
+
 Usage:
   python -m repro.launch.serve --arch granite-3-2b --smoke --requests 8
+  python -m repro.launch.serve --arch granite-3-2b --smoke --continuous \
+      --arrival-rate 4 --baseline vanilla
   python -m repro.launch.serve --arch deepseek-v3-671b --production
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 
@@ -30,6 +40,18 @@ def main():
     ap.add_argument("--ckpt", default="", help="trained prompt-token ckpt")
     ap.add_argument("--baseline", choices=["vanilla", "medusa", ""],
                     default="", help="also run a baseline engine")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching scheduler")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson request arrivals per second (0 = all "
+                         "queued at t0); continuous mode only")
+    ap.add_argument("--admission", choices=["fcfs", "sjf"], default="fcfs")
+    ap.add_argument("--prefill-bucket", type=int, default=0,
+                    help="round per-slot prefills up to a multiple of "
+                         "this to bound recompiles (0 = exact length)")
+    ap.add_argument("--mixed-lens", action="store_true",
+                    help="cycle max_new_tokens through {1,2,4}x --max-new "
+                         "to show the continuous-batching win")
     ap.add_argument("--production", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--shape", default="decode_32k",
@@ -52,7 +74,9 @@ def main():
     from repro.core import init_prompt_params
     from repro.data.pipeline import DataPipeline
     from repro.models import init_params
-    from repro.serving.engine import PPDEngine, Request, VanillaEngine
+    from repro.serving import (ContinuousPPDEngine, ContinuousVanillaEngine,
+                               PPDEngine, Request, VanillaEngine,
+                               poisson_trace)
 
     if args.arch == "ppd-demo":
         from repro.configs.demo import CONFIG as cfg, SMOKE
@@ -75,28 +99,54 @@ def main():
                         n_codebooks=(cfg.n_codebooks
                                      if cfg.modality == "audio" else 0))
     prompts = pipe.val_prompts(args.requests, args.prompt_len)
+    lens = [args.max_new * ([1, 2, 4][i % 3] if args.mixed_lens else 1)
+            for i in range(args.requests)]
+    capacity = max(256, args.prompt_len + max(lens) + 64)
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
+            for i in range(args.requests)]
+    if args.continuous and args.arrival_rate > 0:
+        reqs = poisson_trace(reqs, args.arrival_rate)
 
-    eng = PPDEngine(params, ppd, cfg, m=args.m, batch_size=args.batch,
-                    capacity=max(256, args.prompt_len + args.max_new + 64),
-                    temperature=args.temperature)
-    for i in range(args.requests):
-        eng.add_request(Request(uid=i, prompt=prompts[i],
-                                max_new_tokens=args.max_new))
+    if args.continuous:
+        eng = ContinuousPPDEngine(params, ppd, cfg, m=args.m,
+                                  batch_size=args.batch, capacity=capacity,
+                                  temperature=args.temperature,
+                                  admission=args.admission,
+                                  prefill_bucket=args.prefill_bucket)
+    else:
+        eng = PPDEngine(params, ppd, cfg, m=args.m, batch_size=args.batch,
+                        capacity=capacity, temperature=args.temperature)
+    for r in reqs:
+        eng.add_request(r)
     t0 = time.time()
     results = eng.run()
     dt = time.time() - t0
     total = sum(len(r.tokens) for r in results)
     steps = sum(r.steps for r in results)
     print(f"PPD: {len(results)} requests, {total} tokens in {dt:.1f}s "
-          f"({total / dt:.1f} tok/s), accept-len {total / max(steps,1):.2f}")
+          f"({total / dt:.1f} tok/s), accept-len {total / max(steps,1):.2f}, "
+          f"{eng.total_forward_passes} forward passes")
+    if args.continuous:
+        m = eng.metrics(results)
+        print(f"     goodput {m['goodput_tok_s']:.1f} tok/s  "
+              f"mean TTFT {m['mean_ttft_s'] * 1e3:.0f} ms  "
+              f"mean TPOT {m['mean_tpot_s'] * 1e3:.1f} ms  "
+              f"max concurrency {m['max_concurrency']}  "
+              f"idle slot-steps {m['idle_slot_steps']}")
 
     if args.baseline == "vanilla":
-        van = VanillaEngine(params, cfg, batch_size=args.batch,
-                            capacity=max(256,
-                                         args.prompt_len + args.max_new + 64))
-        for i in range(args.requests):
-            van.add_request(Request(uid=i, prompt=prompts[i],
-                                    max_new_tokens=args.max_new))
+        if args.continuous:
+            van = ContinuousVanillaEngine(params, cfg,
+                                          batch_size=args.batch,
+                                          capacity=capacity,
+                                          temperature=args.temperature,
+                                          admission=args.admission,
+                                          prefill_bucket=args.prefill_bucket)
+        else:
+            van = VanillaEngine(params, cfg, batch_size=args.batch,
+                                capacity=capacity)
+        for r in reqs:
+            van.add_request(dataclasses.replace(r))
         t0 = time.time()
         vres = van.run()
         vdt = time.time() - t0

@@ -2,4 +2,4 @@ from .config import (ATTN, FULL, MLA, RGLRU, SLIDING, SSM, LayerSpec,
                      MLAConfig, ModelConfig, MoEConfig, RGLRUConfig,
                      SSMConfig, layer_specs, param_count)
 from .model import (embed_tokens, forward, init_cache, init_params,
-                    mtp_logits, unembed)
+                    mtp_logits, trim_cache, unembed, write_cache_rows)

@@ -140,6 +140,63 @@ def init_cache(cfg: ModelConfig, batch, capacity, dtype=jnp.float32):
     return {"layers": layers, "length": jnp.zeros((batch,), jnp.int32)}
 
 
+def _map_cache(cfg: ModelConfig, fn, *caches):
+    """Map ``fn(batch_axis, *leaves)`` over one or more decode caches of the
+    same structure.  Scan-stacked leaves carry a leading repeat axis, so
+    their batch axis is 1; everything else is batch-first."""
+    if cfg.scan_layers:
+        return {
+            "prefix": jax.tree.map(lambda *ls: fn(0, *ls),
+                                   *[c["prefix"] for c in caches]),
+            "scan": jax.tree.map(lambda *ls: fn(1, *ls),
+                                 *[c["scan"] for c in caches]),
+            "tail": jax.tree.map(lambda *ls: fn(0, *ls),
+                                 *[c["tail"] for c in caches]),
+            "length": fn(0, *[c["length"] for c in caches]),
+        }
+    return {"layers": jax.tree.map(lambda *ls: fn(0, *ls),
+                                   *[c["layers"] for c in caches]),
+            "length": fn(0, *[c["length"] for c in caches])}
+
+
+def write_cache_rows(cfg: ModelConfig, cache, rows, index):
+    """Copy all batch rows of ``rows`` (a small batch-R cache, e.g. a
+    freshly prefilled R=1 row) into ``cache`` starting at batch ``index``.
+
+    This is the per-slot admission primitive of the continuous-batching
+    scheduler: one request's prefilled K/V (or recurrent state) replaces a
+    retired slot's row without reinitialising the whole pool cache."""
+    def put(ax, dst, src):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), index, axis=ax)
+    return _map_cache(cfg, put, cache, rows)
+
+
+def trim_cache(cfg: ModelConfig, cache, lengths):
+    """Invalidate cached tokens at positions >= ``lengths`` (per row) and
+    set per-row ``length``.
+
+    Ring entries die via ``pos = -1``; the stale K/V bytes stay but are
+    never attended.  Recurrent-state (SSM / RG-LRU) caches hold no
+    positions and cannot be trimmed — chain architectures must prefill at
+    exact prompt length instead of a padded bucket."""
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    body = {k: v for k, v in cache.items() if k != "length"}
+
+    def f(path, leaf):
+        last = path[-1]
+        if isinstance(last, DictKey) and last.key == "pos":
+            ax = 1 if leaf.ndim == 3 else 0        # scan-stacked [rep,B,C]
+            L = lengths.reshape((1,) * ax + (-1, 1))
+            return jnp.where(leaf < L, leaf, -1)
+        return leaf
+
+    out = tree_map_with_path(f, body)
+    out["length"] = jnp.asarray(lengths, jnp.int32)
+    return out
+
+
 # ------------------------------------------------------------------ blocks
 def _apply_layer(lp, cfg, spec, x, positions, cache_entry, *, extra_mask,
                  q_chunk, stage_only, commit_mask, moe_exact=False):

@@ -1,1 +1,4 @@
-from .engine import MedusaEngine, PPDEngine, Request, Result, VanillaEngine
+from .engine import (MedusaEngine, PPDEngine, Request, Result,
+                     VanillaEngine, aggregate_metrics)
+from .scheduler import (ContinuousPPDEngine, ContinuousVanillaEngine,
+                        poisson_trace)

@@ -34,6 +34,7 @@ class Request:
     prompt: np.ndarray            # [P] (audio: [P,K])
     max_new_tokens: int = 64
     temperature: float = 0.0
+    arrival_s: float = 0.0        # arrival time relative to engine start
 
 
 @dataclasses.dataclass
@@ -41,7 +42,28 @@ class Result:
     uid: int
     tokens: np.ndarray
     steps: int                    # model forward passes consumed
-    wall_s: float
+    wall_s: float                 # arrival -> completion latency
+    # Serving metrics (see docs/serving.md), all measured on the engine
+    # clock from each request's arrival_s — static rows share their
+    # batch's timeline (incl. queue wait for later batches), the
+    # continuous scheduler reports exact per-request values.
+    ttft_s: float = 0.0           # arrival -> first output token
+    tpot_s: float = 0.0           # mean inter-token latency after the first
+    goodput_tok_s: float = 0.0    # tokens / (finish - arrival)
+
+
+def aggregate_metrics(results: List["Result"], makespan_s: float) -> dict:
+    """Fleet-level serving metrics over a finished request set."""
+    total = sum(len(r.tokens) for r in results)
+    n = max(len(results), 1)
+    return {
+        "requests": len(results),
+        "total_tokens": total,
+        "makespan_s": makespan_s,
+        "goodput_tok_s": total / makespan_s if makespan_s > 0 else 0.0,
+        "mean_ttft_s": sum(r.ttft_s for r in results) / n,
+        "mean_tpot_s": sum(r.tpot_s for r in results) / n,
+    }
 
 
 def _pack(requests: List[Request], cfg: ModelConfig):
@@ -63,11 +85,13 @@ class _EngineBase:
         self.params, self.cfg = params, cfg
         self.capacity, self.batch_size = capacity, batch_size
         self.queue: List[Request] = []
+        self.total_forward_passes = 0   # prefill + decode, all batches
 
     def add_request(self, req: Request):
         self.queue.append(req)
 
     def run(self) -> List[Result]:
+        self._clock0 = time.time()
         out = []
         while self.queue:
             batch = self.queue[:self.batch_size]
@@ -102,10 +126,12 @@ class PPDEngine(_EngineBase):
         tokens, starts, P = _pack(batch, cfg)
         B = len(batch)
         t0 = time.time()
+        offset = t0 - getattr(self, "_clock0", t0)
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
                                       moe_exact=True)
         first = jnp.argmax(logits[:, -1], axis=-1)
+        t_prefill = time.time() - t0
         st = init_ppd_state(cfg, cache, first, self.m, self.n_ept,
                             kmax=self.bufs.get("_kmax", 10))
         done = np.zeros(B, bool)
@@ -134,10 +160,29 @@ class PPDEngine(_EngineBase):
             if steps > max_new + 8:
                 break
         wall = time.time() - t0
-        return [Result(uid=r.uid,
-                       tokens=np.stack(produced[b])[:r.max_new_tokens],
-                       steps=steps, wall_s=wall)
+        # chain archs run a second (commit) forward per PPD step
+        per_step = 2 if is_chain_arch(cfg) else 1
+        self.total_forward_passes += steps * per_step + 1
+        return [_batch_result(r, produced[b], steps, wall, t_prefill,
+                              offset)
                 for b, r in enumerate(batch)]
+
+
+def _batch_result(req: Request, produced, steps, wall, t_prefill,
+                  offset=0.0) -> Result:
+    """Static-batch Result on the shared engine clock.  Rows of one batch
+    share the batch timeline (``offset`` = batch start − engine run
+    start), so TTFT includes the queue wait of later batches and the
+    numbers are directly comparable with the continuous scheduler's exact
+    per-request metrics."""
+    toks = np.stack(produced)[:req.max_new_tokens]
+    n = len(toks)
+    ttft = max(offset + t_prefill - req.arrival_s, 0.0)
+    latency = max(offset + wall - req.arrival_s, 1e-9)
+    return Result(uid=req.uid, tokens=toks, steps=steps, wall_s=latency,
+                  ttft_s=ttft,
+                  tpot_s=(wall - t_prefill) / max(n - 1, 1),
+                  goodput_tok_s=n / latency)
 
 
 class VanillaEngine(_EngineBase):
@@ -153,10 +198,12 @@ class VanillaEngine(_EngineBase):
         tokens, starts, P = _pack(batch, cfg)
         B = len(batch)
         t0 = time.time()
+        offset = t0 - getattr(self, "_clock0", t0)
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
                                       moe_exact=True)
         nxt = jnp.argmax(logits[:, -1], axis=-1)
+        t_prefill = time.time() - t0
         produced = [[np.asarray(nxt[b])] for b in range(B)]
         steps = 0
         key = jax.random.PRNGKey(0)
@@ -169,9 +216,9 @@ class VanillaEngine(_EngineBase):
                 if len(produced[b]) < batch[b].max_new_tokens:
                     produced[b].append(np.asarray(nxt[b]))
         wall = time.time() - t0
-        return [Result(uid=r.uid,
-                       tokens=np.stack(produced[b])[:r.max_new_tokens],
-                       steps=steps, wall_s=wall)
+        self.total_forward_passes += steps + 1
+        return [_batch_result(r, produced[b], steps, wall, t_prefill,
+                              offset)
                 for b, r in enumerate(batch)]
 
 
@@ -192,6 +239,7 @@ class MedusaEngine(_EngineBase):
         tokens, starts, P = _pack(batch, cfg)
         B = len(batch)
         t0 = time.time()
+        offset = t0 - getattr(self, "_clock0", t0)
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _, hidden = forward(self.params, cfg, tokens,
                                               cache=cache, moe_exact=True,
@@ -202,6 +250,7 @@ class MedusaEngine(_EngineBase):
         g0 = medusa_heads(self.heads, hidden[:, -1])
         gv, gi = jax.lax.top_k(g0, self.bufs.get("_kmax", 10))
         st = st._replace(guess_vals=gv.astype(jnp.float32), guess_idx=gi)
+        t_prefill = time.time() - t0
         produced = [[np.asarray(first[b])] for b in range(B)]
         done = np.zeros(B, bool)
         steps = 0
@@ -223,7 +272,7 @@ class MedusaEngine(_EngineBase):
             if steps > max_new + 8:
                 break
         wall = time.time() - t0
-        return [Result(uid=r.uid,
-                       tokens=np.stack(produced[b])[:r.max_new_tokens],
-                       steps=steps, wall_s=wall)
+        self.total_forward_passes += steps + 1
+        return [_batch_result(r, produced[b], steps, wall, t_prefill,
+                              offset)
                 for b, r in enumerate(batch)]

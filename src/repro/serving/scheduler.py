@@ -1,0 +1,367 @@
+"""Slot-based continuous-batching scheduler.
+
+The static engines in :mod:`repro.serving.engine` pad every batch to the
+slowest request's ``max_new_tokens``: with mixed-length workloads most of
+each forward pass is spent decoding rows that already finished — exactly
+the bandwidth-bound waste PPD exists to remove.  The continuous engines
+here keep a fixed pool of ``batch_size`` decode *slots* backed by one
+persistent KV cache:
+
+* a finished row is retired the moment it hits its token budget — its
+  result is emitted immediately and its slot is freed;
+* a queued request is admitted into a freed slot via an *incremental
+  per-slot prefill*: a batch-1 forward fills a scratch row cache, which
+  then replaces the slot's row (``write_cache_rows``) — the other slots
+  never stop decoding and the pool cache is never reinitialised;
+* each slot carries its own PPD tree state, step budget, and RNG key, so
+  a request's output is independent of which other requests share the
+  batch (per-row keys route through :func:`repro.core.sample_token`);
+* retired slots are masked out of every decode step (``active=...`` in
+  ``ppd_decode_step`` / ``vanilla_decode_step``): they commit no K/V, no
+  recurrent state, and no cache-length advance.
+
+At temperature 0 the output of every request is token-for-token identical
+to the static engines (and hence to vanilla decoding) — the scheduler
+changes *which* rows share a forward pass, never the math of a row.
+
+Admission policies: ``"fcfs"`` (default) and ``"sjf"`` (shortest job
+first by ``max_new_tokens``).  Requests may carry ``arrival_s`` (seconds
+relative to ``run()`` start) to replay an arrival trace, e.g. a Poisson
+trace from :func:`poisson_trace`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
+                        is_chain_arch, mk_default_tree, ppd_decode_step,
+                        vanilla_decode_step)
+from repro.models import (forward, init_cache, trim_cache,
+                          write_cache_rows)
+from repro.models.config import ModelConfig
+
+from .engine import Request, Result, aggregate_metrics
+
+
+def poisson_trace(requests: List[Request], rate_per_s: float,
+                  seed: int = 0) -> List[Request]:
+    """Stamp ``arrival_s`` with a Poisson arrival process (rate = req/s).
+
+    ``rate_per_s <= 0`` leaves all arrivals at t=0 (offline batch)."""
+    if rate_per_s <= 0:
+        return requests
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for r in requests:
+        t += float(rng.exponential(1.0 / rate_per_s))
+        out.append(dataclasses.replace(r, arrival_s=t))
+    return out
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side bookkeeping for one decode slot."""
+    req: Optional[Request] = None
+    produced: list = dataclasses.field(default_factory=list)
+    decode_steps: int = 0
+    budget: int = 0               # decode-step budget (PPD fallback guard)
+    arrival_t: float = 0.0        # absolute times (engine clock)
+    first_tok_t: float = 0.0
+    key: Optional[jnp.ndarray] = None
+
+    @property
+    def busy(self) -> bool:
+        return self.req is not None
+
+
+class _ContinuousBase:
+    """Shared slot pool, admission, and run loop.
+
+    Subclasses implement ``_prefill_row`` (batch-1 prefill returning a row
+    cache + first token), ``_admit_device`` (splice the row into the pool
+    device state), and ``_decode_active`` (one masked decode step
+    returning per-slot freshly produced tokens)."""
+
+    def __init__(self, params, cfg: ModelConfig, capacity: int = 1024,
+                 batch_size: int = 4, temperature: float = 0.0,
+                 admission: str = "fcfs", prefill_bucket: int = 0,
+                 seed: int = 0):
+        assert admission in ("fcfs", "sjf"), admission
+        self.params, self.cfg = params, cfg
+        self.capacity, self.batch_size = capacity, batch_size
+        self.temperature = temperature
+        self.admission = admission
+        # Round prompt prefills up to a multiple of ``prefill_bucket`` to
+        # bound recompilation across prompt lengths (0 = exact length).
+        # Padded tail entries are killed with trim_cache; chain archs hold
+        # untrimmable recurrent state and always prefill exactly.
+        self.prefill_bucket = 0 if is_chain_arch(cfg) else prefill_bucket
+        self.queue: List[Request] = []
+        self.slots = [_Slot() for _ in range(batch_size)]
+        self.total_forward_passes = 0   # prefills + decode steps
+        self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
+                      "retired": 0, "max_concurrency": 0,
+                      "active_slot_steps": 0, "idle_slot_steps": 0}
+        self.makespan_s = 0.0
+        self._base_key = jax.random.PRNGKey(seed)
+
+    # ------------------------------------------------------------ queue
+    def add_request(self, req: Request):
+        self.queue.append(req)
+
+    def _active_mask(self) -> np.ndarray:
+        return np.asarray([s.busy for s in self.slots], bool)
+
+    def _pick_next(self, now: float) -> Optional[int]:
+        """Index into self.queue of the next admissible request."""
+        ready = [i for i, r in enumerate(self.queue) if r.arrival_s <= now]
+        if not ready:
+            return None
+        if self.admission == "sjf":
+            return min(ready, key=lambda i: self.queue[i].max_new_tokens)
+        return ready[0]                 # fcfs: queue order = arrival order
+
+    # ------------------------------------------------------------ admit
+    def _padded_prompt(self, prompt: np.ndarray):
+        """Right-pad to the prefill bucket; returns (tokens [1,P'], plen)."""
+        prompt = np.asarray(prompt)
+        plen = len(prompt)
+        pad = 0
+        if self.prefill_bucket:
+            pad = (-plen) % self.prefill_bucket
+        if pad:
+            prompt = np.pad(prompt, ((0, pad),) +
+                            ((0, 0),) * (prompt.ndim - 1))
+        return jnp.asarray(prompt)[None], plen
+
+    def _admit(self, slot_idx: int, req: Request):
+        row_cache, first = self._prefill_row(req)
+        self.total_forward_passes += 1
+        self.stats["prefills"] += 1
+        self.stats["admitted"] += 1
+        self._admit_device(slot_idx, row_cache, first)
+        slot = self.slots[slot_idx]
+        slot.req = req
+        slot.produced = [np.asarray(first)]      # forces prefill to finish
+        slot.decode_steps = 0
+        slot.budget = req.max_new_tokens + 8
+        slot.arrival_t = req.arrival_s
+        slot.first_tok_t = time.time() - self._t0   # TTFT includes prefill
+        slot.key = jax.random.fold_in(self._base_key, req.uid)
+
+    def _retire(self, slot_idx: int, now: float) -> Result:
+        slot = self.slots[slot_idx]
+        req = slot.req
+        toks = np.stack(slot.produced)[:req.max_new_tokens]
+        n = len(toks)
+        latency = max(now - slot.arrival_t, 1e-9)
+        res = Result(
+            uid=req.uid, tokens=toks, steps=slot.decode_steps + 1,
+            wall_s=latency,
+            ttft_s=slot.first_tok_t - slot.arrival_t,
+            tpot_s=(now - slot.first_tok_t) / max(n - 1, 1),
+            goodput_tok_s=n / latency)
+        slot.req = None
+        slot.produced = []
+        self.stats["retired"] += 1
+        # No device-side reset needed: the retired row is masked out of
+        # every commit (active=False), and admission overwrites the whole
+        # row via write_cache_rows before it is ever read again.
+        return res
+
+    # ------------------------------------------------------------ run
+    def run(self) -> List[Result]:
+        t0 = self._t0 = time.time()
+        results: List[Result] = []
+        while self.queue or any(s.busy for s in self.slots):
+            now = time.time() - t0
+            # fill free slots with every admissible request
+            for i, s in enumerate(self.slots):
+                if s.busy:
+                    continue
+                pick = self._pick_next(now)
+                if pick is None:
+                    break
+                self._admit(i, self.queue.pop(pick))
+                now = time.time() - t0
+            active = self._active_mask()
+            conc = int(active.sum())
+            self.stats["max_concurrency"] = max(
+                self.stats["max_concurrency"], conc)
+            if conc == 0:
+                # idle: wait for the next arrival
+                nxt = min(r.arrival_s for r in self.queue)
+                time.sleep(min(max(nxt - now, 0.0), 0.05))
+                continue
+            new_tokens = self._decode_active(active)
+            self.total_forward_passes += self._step_cost()
+            self.stats["decode_steps"] += 1
+            self.stats["active_slot_steps"] += conc
+            self.stats["idle_slot_steps"] += self.batch_size - conc
+            now = time.time() - t0
+            for i, s in enumerate(self.slots):
+                if not s.busy:
+                    continue
+                s.decode_steps += 1
+                limit = s.req.max_new_tokens
+                for t in new_tokens[i]:
+                    if len(s.produced) < limit:
+                        s.produced.append(t)
+                if len(s.produced) >= limit or s.decode_steps > s.budget:
+                    results.append(self._retire(i, now))
+        self.makespan_s = time.time() - t0
+        return results
+
+    def metrics(self, results: List[Result]) -> dict:
+        out = aggregate_metrics(results, self.makespan_s)
+        out.update(self.stats)
+        out["total_forward_passes"] = self.total_forward_passes
+        return out
+
+    def _step_cost(self) -> int:
+        """Forward passes consumed by one decode step."""
+        return 1
+
+    def _prefill_row(self, req: Request):
+        """Batch-1 prefill into a scratch row cache -> (row_cache, first).
+
+        With a prefill bucket the prompt is right-padded; the padded tail
+        is causally invisible during the forward (positions > prompt) and
+        its cache entries are killed with trim_cache afterwards, so the
+        row is bit-identical to an exact-length prefill."""
+        tokens, plen = self._padded_prompt(req.prompt)
+        row_cache = init_cache(self.cfg, 1, self.capacity)
+        logits, row_cache, _, _ = forward(self.params, self.cfg, tokens,
+                                          cache=row_cache, moe_exact=True)
+        first = jnp.argmax(logits[0, plen - 1], axis=-1)
+        if tokens.shape[1] != plen:
+            row_cache = trim_cache(self.cfg, row_cache,
+                                   jnp.full((1,), plen, jnp.int32))
+        return row_cache, first
+
+    def _slot_keys(self):
+        """[B,2] raw per-slot sampling keys (each slot folds its own key
+        with its own step count — see repro.core.sample_token)."""
+        if self.temperature <= 0.0:
+            return jnp.zeros((self.batch_size, 2), jnp.uint32)
+        keys = []
+        for s in self.slots:
+            if not s.busy:
+                keys.append(jnp.zeros((2,), jnp.uint32))
+                continue
+            k = jax.random.fold_in(s.key, s.decode_steps)
+            if jnp.issubdtype(k.dtype, jax.dtypes.prng_key):
+                k = jax.random.key_data(k)
+            keys.append(k)
+        return jnp.stack(keys)
+
+    # hooks ------------------------------------------------------------
+    def _admit_device(self, slot_idx, row_cache, first):
+        raise NotImplementedError
+
+    def _decode_active(self, active: np.ndarray):
+        raise NotImplementedError
+
+
+class ContinuousPPDEngine(_ContinuousBase):
+    """PPD guess-and-verify decoding over a continuous slot pool."""
+
+    def __init__(self, params, ppd_params, cfg: ModelConfig, *, m=3,
+                 n_ept=1, tree_states=None, capacity=1024, batch_size=4,
+                 temperature=0.0, admission="fcfs", prefill_bucket=0,
+                 seed=0):
+        super().__init__(params, cfg, capacity, batch_size, temperature,
+                         admission, prefill_bucket, seed)
+        self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
+        if tree_states is None:
+            tree_states = ([default_chain_spec(max(k, 1), m)
+                            for k in range(m + 1)] if is_chain_arch(cfg)
+                           else mk_default_tree(m))
+        self.bufs = device_buffers(tree_states, m, n_ept)
+        cache = init_cache(cfg, batch_size, capacity)
+        if cfg.modality == "audio":
+            first = jnp.zeros((batch_size, cfg.n_codebooks), jnp.int32)
+        else:
+            first = jnp.zeros((batch_size,), jnp.int32)
+        self.state = init_ppd_state(cfg, cache, first, m, n_ept,
+                                    kmax=self.bufs.get("_kmax", 10))
+        self._step = jax.jit(self._step_impl)
+
+    def _step_impl(self, st, keys, active):
+        return ppd_decode_step(self.params, self.ppd, self.cfg, self.bufs,
+                               st, m=self.m, n_ept=self.n_ept,
+                               temperature=self.temperature, key=keys,
+                               active=active)
+
+    def _admit_device(self, slot_idx, row_cache, first):
+        st = self.state
+        cache = write_cache_rows(self.cfg, st.cache, row_cache, slot_idx)
+        # fresh root token, zero guesses, dynamic-tree state 0 — the
+        # single-row equivalent of init_ppd_state after prefill
+        self.state = st._replace(
+            cache=cache,
+            root_token=st.root_token.at[slot_idx].set(first),
+            guess_vals=st.guess_vals.at[slot_idx].set(0.0),
+            guess_idx=st.guess_idx.at[slot_idx].set(0),
+            tree_state=st.tree_state.at[slot_idx].set(0))
+
+    def _decode_active(self, active: np.ndarray):
+        keys = self._slot_keys()
+        self.state, info = self._step(self.state, keys,
+                                      jnp.asarray(active))
+        ptok = np.asarray(info["accepted_path_tokens"])
+        bonus = np.asarray(self.state.root_token)
+        out = []
+        for i, s in enumerate(self.slots):
+            if not s.busy:
+                out.append([])
+                continue
+            toks = [t for t in ptok[i][1:] if np.all(t >= 0)]  # skip root
+            toks.append(bonus[i])
+            out.append(toks)
+        return out
+
+    def _step_cost(self) -> int:
+        # chain archs run a second (commit) forward per step
+        return 2 if is_chain_arch(self.cfg) else 1
+
+
+class ContinuousVanillaEngine(_ContinuousBase):
+    """Autoregressive baseline over the same continuous slot pool —
+    isolates the scheduling win from the PPD win."""
+
+    def __init__(self, params, cfg: ModelConfig, capacity=1024,
+                 batch_size=4, temperature=0.0, admission="fcfs",
+                 prefill_bucket=0, seed=0):
+        super().__init__(params, cfg, capacity, batch_size, temperature,
+                         admission, prefill_bucket, seed)
+        self.cache = init_cache(cfg, batch_size, capacity)
+        if cfg.modality == "audio":
+            self.tokens = jnp.zeros((batch_size, cfg.n_codebooks),
+                                    jnp.int32)
+        else:
+            self.tokens = jnp.zeros((batch_size,), jnp.int32)
+        self._step = jax.jit(
+            lambda cache, tok, keys, active: vanilla_decode_step(
+                self.params, self.cfg, cache, tok,
+                temperature=self.temperature, key=keys, active=active))
+
+    def _admit_device(self, slot_idx, row_cache, first):
+        self.cache = write_cache_rows(self.cfg, self.cache, row_cache,
+                                      slot_idx)
+        self.tokens = self.tokens.at[slot_idx].set(first)
+
+    def _decode_active(self, active: np.ndarray):
+        keys = self._slot_keys()
+        self.cache, self.tokens, _ = self._step(self.cache, self.tokens,
+                                                keys, jnp.asarray(active))
+        nxt = np.asarray(self.tokens)
+        return [[nxt[i]] if s.busy else [] for i, s in
+                enumerate(self.slots)]

@@ -1,7 +1,8 @@
 """Checkpoint + data-pipeline tests (incl. hypothesis roundtrips)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

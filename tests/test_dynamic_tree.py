@@ -1,7 +1,7 @@
 """Dynamic sparse-tree construction (paper §4) unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.dynamic_tree import (PAPER_ACC, amortized_tokens, best_split,
                                      build_dynamic_tree, build_random_tree,

@@ -1,7 +1,7 @@
 """Tree-topology invariants: hand-built cases + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.tree import (CAND, PAD, PROMPT, ROOT, TreeSpec,
                              build_buffers, default_chain_spec,

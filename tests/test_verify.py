@@ -2,7 +2,7 @@
 brute-force python oracle, on random trees and random predictions."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
