@@ -1,0 +1,135 @@
+"""Microbenchmark: ref vs pallas decode-step attention.
+
+Times one per-layer tree-decode attention call (the PPD hot spot: T tree
+tokens against an S-slot ring cache) for both backends across cache sizes,
+and records the memory the compiled step materializes —
+``memory_analysis().temp_size_in_bytes`` is where the ref backend's
+[B,T,S+T] mask and cache∪tree concat live, and the number the pallas
+kernel exists to remove.  (Post-hoc ``jax.live_arrays`` snapshots cannot
+observe those transient buffers — they are freed before the step returns
+— so the compiled analysis is the honest memory column; where the
+platform exposes an allocator high-water mark we additionally record its
+per-measurement *delta*, which is 0 when an earlier, larger phase already
+set the process peak.)
+
+Off-TPU the kernel runs in interpret mode, so *wall time* there measures
+the interpreter, not the kernel (the JSON carries an ``interpret`` flag);
+the memory columns are platform-independent.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_attention.py          # 1k/8k/32k
+  PYTHONPATH=src python benchmarks/bench_attention.py --fast   # 1k only
+
+Writes ``benchmarks/results/bench_attention.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.backend import get_backend
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# gemma3-1b-ish decode shape: GQA 4:1, one batch row per measurement
+B, T, H, HKV, D = 1, 16, 4, 1, 256
+
+
+def make_inputs(S, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k_cache = jax.random.normal(ks[1], (B, S, HKV, D))
+    v_cache = jax.random.normal(ks[2], (B, S, HKV, D))
+    k_tree = jax.random.normal(ks[3], (B, T, HKV, D))
+    v_tree = jax.random.normal(ks[4], (B, T, HKV, D))
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    q_pos = S + jnp.broadcast_to(jnp.arange(T), (B, T)).astype(jnp.int32)
+    tree_mask = jnp.broadcast_to(jnp.tril(jnp.ones((T, T), bool)),
+                                 (B, T, T))
+    return (q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos, tree_mask)
+
+
+def device_peak_bytes():
+    """Allocator high-water mark, where the platform tracks one (TPU/GPU;
+    None on CPU).  Monotone over the process lifetime — callers must
+    difference two readings."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        return int(stats.get("peak_bytes_in_use", 0)) or None
+    except Exception:
+        return None
+
+
+def bench_backend(name, S, iters):
+    be = get_backend(name)
+    args = make_inputs(S)
+
+    def step(*a):
+        return be.tree_decode(*a)
+
+    fn = jax.jit(step)
+    compiled = fn.lower(*args).compile()
+    mem = compiled.memory_analysis()
+    peak0 = device_peak_bytes()
+    fn(*args).block_until_ready()                     # warmup
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    wall_ms = (time.perf_counter() - t0) / iters * 1e3
+    peak1 = device_peak_bytes()
+    rec = {
+        "backend": name,
+        "S": S,
+        "wall_ms": wall_ms,
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        # 0 = an earlier, larger phase already holds the process peak
+        "device_peak_delta_bytes": (peak1 - peak0
+                                    if peak0 is not None else None),
+    }
+    del out, args
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="1024,8192,32768",
+                    help="comma-separated cache sizes S")
+    ap.add_argument("--fast", action="store_true", help="S=1024 only")
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args()
+    sizes = [1024] if args.fast else [int(s) for s in
+                                      args.sizes.split(",")]
+
+    platform = jax.devices()[0].platform
+    out = {
+        "shape": {"B": B, "T": T, "H": H, "Hkv": HKV, "D": D},
+        "platform": platform,
+        "interpret": platform != "tpu",     # kernel wall time is the
+        "records": [],                      # interpreter off-TPU
+    }
+    for S in sizes:
+        recs = [bench_backend(n, S, args.iters) for n in ("ref", "pallas")]
+        ref, pal = recs
+        print(f"S={S:6d}  ref {ref['wall_ms']:8.2f} ms "
+              f"temp {ref['temp_bytes'] / 2**20:7.1f} MiB | "
+              f"pallas {pal['wall_ms']:8.2f} ms "
+              f"temp {pal['temp_bytes'] / 2**20:7.1f} MiB")
+        out["records"].extend(recs)
+
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "bench_attention.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -279,7 +279,8 @@ def commit_staged(cfg: ModelConfig, cache, staged_list, positions,
 
 def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
                     *, m: int, n_ept: int = 1, temperature: float = 0.0,
-                    key=None, moe_exact: bool = True, active=None):
+                    key=None, moe_exact: bool = True, active=None,
+                    attn_backend=None):
     """One guess-and-verify step.  Returns (new_state, step_info).
 
     ``active`` ([B] bool, optional) marks live decode slots (continuous
@@ -287,7 +288,10 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
     so no K/V is scattered and no recurrent state advances, their cache
     length is frozen, and their carried state (root token, guesses, tree
     state) passes through unchanged.  Their ``accepted_path_tokens`` rows
-    come back as -1 so schedulers can harvest without masking again."""
+    come back as -1 so schedulers can harvest without masking again.
+
+    ``attn_backend`` selects the decode attention backend ("ref" or
+    "pallas"); greedy outputs are backend-independent."""
     rb = _row_bufs(bufs, state.tree_state)
     tokens = select_candidate_tokens(rb, state.guess_idx, state.root_token)
     embeds = assemble_tree_embeds(params, ppd_params, cfg, rb, tokens)
@@ -298,7 +302,8 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
     chain = is_chain_arch(cfg)
     logits, _, staged, _ = forward(
         params, cfg, positions=positions, embeds=embeds, cache=state.cache,
-        extra_mask=rb["mask"], stage_only=True, moe_exact=moe_exact)
+        extra_mask=rb["mask"], stage_only=True, moe_exact=moe_exact,
+        attn_backend=attn_backend)
 
     if temperature > 0.0:
         verdict = verify_typical(rb, logits, tokens, key, temperature)
@@ -316,7 +321,8 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
         _, cache, _, _ = forward(
             params, cfg, positions=positions, embeds=embeds,
             cache=state.cache, extra_mask=rb["mask"],
-            commit_mask=accept_mask, moe_exact=moe_exact)
+            commit_mask=accept_mask, moe_exact=moe_exact,
+            attn_backend=attn_backend)
     else:
         cache = sharded_commit(cfg, state.cache, staged, positions,
                                accept_mask, n_committed)
@@ -357,12 +363,14 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
 
 def vanilla_decode_step(params, cfg: ModelConfig, cache, token, *,
                         temperature: float = 0.0, key=None,
-                        moe_exact: bool = True, active=None):
+                        moe_exact: bool = True, active=None,
+                        attn_backend=None):
     """Plain autoregressive baseline step (1 token).
 
     ``active`` ([B] bool, optional): retired slots keep their cache length
     frozen and echo their input token back (continuous batching).  Chain
-    architectures additionally freeze the recurrent state via a dt mask."""
+    architectures additionally freeze the recurrent state via a dt mask.
+    ``attn_backend`` selects the decode attention backend."""
     B = cache["length"].shape[0]
     tok = token[:, None] if token.ndim == 1 else token[:, None, :]
     old_len = cache["length"]
@@ -372,7 +380,8 @@ def vanilla_decode_step(params, cfg: ModelConfig, cache, token, *,
         commit_mask = active[:, None]
     logits, cache, _, _ = forward(params, cfg, tok, positions=pos,
                                   cache=cache, moe_exact=moe_exact,
-                                  commit_mask=commit_mask)
+                                  commit_mask=commit_mask,
+                                  attn_backend=attn_backend)
     if active is not None and commit_mask is None:
         # attention archs: the masked-row K/V write lands in a dead ring
         # slot (length frozen -> overwritten on the next admission).

@@ -3,25 +3,65 @@
 ``tree_decode_attention`` dispatches to the Pallas kernel (interpret mode
 on CPU — the TPU path just flips ``interpret=False``) and exposes the same
 contract as the pure-jnp reference, which remains the correctness oracle.
+
+Cache capacities that are not a multiple of the block size are padded here
+(K/V with zeros, positions with -1) before entering the kernel: padded
+slots are invalid, so every weight they could contribute underflows to an
+exact 0.0 and the output is bit-identical to the unpadded math.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from .ref import tree_attention_ref
 from .tree_attention import tree_attention
 
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+# Lazy: probing devices at import time would initialize the JAX backend
+# before callers can set platform/mesh config (repro.models imports this
+# module transitively).
+_ON_TPU = None
+
+
+def _on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+    return _ON_TPU
+
+
+def _pad_cache(arrs, kv_pos, pad):
+    """Zero-pad cache-shaped [B,S,...] arrays along S; positions pad to -1."""
+    out = []
+    for a in arrs:
+        if a is None:
+            out.append(None)
+            continue
+        widths = ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)
+        out.append(jnp.pad(a, widths))
+    kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    return out, kv_pos
 
 
 def tree_decode_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree,
                           q_pos, tree_mask, *, window: int = 0,
                           blk_s: int = 256, use_kernel: bool = True,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None, scale=None,
+                          softcap: float = 0.0, q2=None, k2_cache=None,
+                          k2_tree=None):
     if not use_kernel:
         return tree_attention_ref(q, k_cache, v_cache, kv_pos, k_tree,
-                                  v_tree, q_pos, tree_mask, window=window)
-    interp = (not _ON_TPU) if interpret is None else interpret
+                                  v_tree, q_pos, tree_mask, window=window,
+                                  scale=scale, softcap=softcap, q2=q2,
+                                  k2_cache=k2_cache, k2_tree=k2_tree)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    S = k_cache.shape[1]
+    blk = min(blk_s, S)
+    pad = (-S) % blk
+    if pad:
+        (k_cache, v_cache, k2_cache), kv_pos = _pad_cache(
+            (k_cache, v_cache, k2_cache), kv_pos, pad)
     return tree_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree,
-                          q_pos, tree_mask, window=window, blk_s=blk_s,
-                          interpret=interp)
+                          q_pos, tree_mask, window=window, blk_s=blk,
+                          interpret=interp, scale=scale, softcap=softcap,
+                          q2=q2, k2_cache=k2_cache, k2_tree=k2_tree)

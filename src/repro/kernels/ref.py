@@ -4,6 +4,12 @@ Semantics: T tree tokens attend to (a) a ring KV cache of capacity S whose
 slot validity/order is carried by per-slot positions, and (b) each other
 through an explicit [T,T] tree (ancestor) mask.  Sliding-window layers
 clamp cache visibility to ``q_pos - window < kv_pos <= q_pos``.
+
+Optional extensions mirrored from the Pallas kernel:
+* ``softcap`` — gemma-style tanh logit capping (scale -> cap -> mask);
+* ``q2``/``k2_cache``/``k2_tree`` — a second score stream summed into the
+  logits (MLA-absorb MQA over latents); the oracle realizes it as a
+  feature concatenation, which is mathematically the same dot product.
 """
 from __future__ import annotations
 
@@ -14,10 +20,16 @@ NEG_INF = -1e30
 
 
 def tree_attention_ref(q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos,
-                       tree_mask, *, window: int = 0, scale=None):
+                       tree_mask, *, window: int = 0, scale=None,
+                       softcap: float = 0.0, q2=None, k2_cache=None,
+                       k2_tree=None):
     """q: [B,T,H,D]; k/v_cache: [B,S,Hkv,D(v)]; kv_pos: [B,S] (-1 invalid);
     k/v_tree: [B,T,Hkv,D(v)]; q_pos: [B,T]; tree_mask: [B,T,T] bool.
-    Returns [B,T,H,Dv]."""
+    Returns [B,T,H,Dv].  With ``q2`` streams, pass ``scale`` explicitly."""
+    if q2 is not None:
+        q = jnp.concatenate([q, q2], axis=-1)
+        k_cache = jnp.concatenate([k_cache, k2_cache], axis=-1)
+        k_tree = jnp.concatenate([k_tree, k2_tree], axis=-1)
     B, T, H, D = q.shape
     Hkv = k_cache.shape[2]
     Dv = v_cache.shape[-1]
@@ -30,6 +42,9 @@ def tree_attention_ref(q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos,
 
     sc = jnp.einsum("bthgd,bshd->bhgts", qf, kc) * scale     # [B,Hkv,G,T,S]
     st = jnp.einsum("bthgd,bshd->bhgts", qf, kt) * scale     # [B,Hkv,G,T,T]
+    if softcap:
+        sc = jnp.tanh(sc / softcap) * softcap
+        st = jnp.tanh(st / softcap) * softcap
 
     mc = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
     if window:

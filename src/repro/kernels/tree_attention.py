@@ -15,9 +15,18 @@ Layout decisions (v5e):
   GQA group of the kv head: the scores matmul is [T*G, D] x [D, BLK_S],
   MXU-aligned when T*G and BLK_S are multiples of 128 and D in {64,128,256}.
 * K/V blocks are [BLK_S, D] slices — contiguous HBM reads; sliding-window
-  layers structurally skip blocks whose positions fall outside the window
-  (pl.when on block-level position bounds), so a 512-token window over a
-  524k cache reads 1-2 blocks instead of 1024.
+  layers skip the score matmul of blocks whose (ring-wrapped, possibly
+  unsorted) positions all fall outside the window — the per-block position
+  bound check costs one VPU reduction, so a 512-token window over a long
+  ring cache computes 1-2 blocks' scores instead of all of them.
+* an optional second score stream (``q2``/``k2``) accumulates
+  ``q2 @ k2`` into the same logits before scale/softcap/mask — this is the
+  MLA-absorb decode path (MQA over latents: ``q_lat·ckv + q_rope·krope``)
+  without ever materializing a feature-concatenated copy of the latent
+  cache.
+* ``softcap`` applies gemma-style tanh logit capping inside the block,
+  matching :func:`repro.models.layers.chunked_attend` ordering
+  (scale -> softcap -> mask).
 """
 from __future__ import annotations
 
@@ -32,8 +41,11 @@ NEG_INF = -1e30
 
 
 def _kernel(qpos_ref, kpos_ref, tmask_ref, q_ref, k_ref, v_ref, kt_ref,
-            vt_ref, o_ref, acc_ref, m_ref, l_ref, *, ns, blk_s, window,
-            scale):
+            vt_ref, *rest, ns, blk_s, window, scale, softcap, two_stream):
+    if two_stream:
+        q2_ref, k2_ref, k2t_ref = rest[:3]
+        rest = rest[3:]
+    o_ref, acc_ref, m_ref, l_ref = rest
     s = pl.program_id(2)
 
     @pl.when(s == 0)
@@ -45,6 +57,21 @@ def _kernel(qpos_ref, kpos_ref, tmask_ref, q_ref, k_ref, v_ref, kt_ref,
     q = q_ref[0, :, 0].astype(jnp.float32)          # [T, G, D]
     T, G, D = q.shape
     qpos = qpos_ref[0]                              # [T]
+    kpos = kpos_ref[0]                              # [BLK_S]
+
+    def scores_of(k, k2):
+        # k: [S', D] (already f32); returns [T, G, S'] scaled+capped scores
+        sc = jax.lax.dot_general(q.reshape(T * G, D), k,
+                                 (((1,), (1,)), ((), ())))
+        if two_stream:
+            q2 = q2_ref[0, :, 0].astype(jnp.float32)          # [T, G, D2]
+            D2 = q2.shape[-1]
+            sc = sc + jax.lax.dot_general(q2.reshape(T * G, D2), k2,
+                                          (((1,), (1,)), ((), ())))
+        sc = sc.reshape(T, G, k.shape[0]) * scale
+        if softcap:
+            sc = jnp.tanh(sc / softcap) * softcap
+        return sc
 
     def online_update(scores, v):
         # scores: [T, G, S']; v: [S', Dv]
@@ -60,13 +87,22 @@ def _kernel(qpos_ref, kpos_ref, tmask_ref, q_ref, k_ref, v_ref, kt_ref,
         m_ref[...] = m_new
 
     # ---- cache blocks ----
-    @pl.when(s < ns)
+    # Block-level skip: a fully-masked block is a bit-exact no-op of the
+    # online update (every weight underflows to 0.0), so blocks whose
+    # positions are all invalid — or, for sliding-window layers, all at or
+    # below min(q_pos) - window — contribute nothing and skip the matmuls.
+    # Ring wrap leaves positions unsorted within a block; the max-reduction
+    # bound is order-independent.
+    bmax = jnp.max(kpos)
+    relevant = bmax >= 0
+    if window:
+        relevant &= bmax > (jnp.min(qpos) - window)
+
+    @pl.when((s < ns) & relevant)
     def _cache_block():
         k = k_ref[0, :, 0].astype(jnp.float32)      # [BLK_S, D]
-        kpos = kpos_ref[0]                          # [BLK_S]
-        scores = jax.lax.dot_general(
-            q.reshape(T * G, D), k, (((1,), (1,)), ((), ()))
-        ).reshape(T, G, blk_s) * scale
+        k2 = k2_ref[0, :, 0].astype(jnp.float32) if two_stream else None
+        scores = scores_of(k, k2)
         mask = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
         if window:
             mask &= kpos[None, :] > (qpos[:, None] - window)
@@ -77,9 +113,8 @@ def _kernel(qpos_ref, kpos_ref, tmask_ref, q_ref, k_ref, v_ref, kt_ref,
     @pl.when(s == ns)
     def _tree_block():
         kt = kt_ref[0, :, 0].astype(jnp.float32)    # [T, D]
-        scores = jax.lax.dot_general(
-            q.reshape(T * G, D), kt, (((1,), (1,)), ((), ()))
-        ).reshape(T, G, T) * scale
+        k2t = k2t_ref[0, :, 0].astype(jnp.float32) if two_stream else None
+        scores = scores_of(kt, k2t)
         tmask = tmask_ref[0]                        # [T, T]
         scores = jnp.where(tmask[:, None, :], scores, NEG_INF)
         online_update(scores, vt_ref[0, :, 0])
@@ -87,44 +122,69 @@ def _kernel(qpos_ref, kpos_ref, tmask_ref, q_ref, k_ref, v_ref, kt_ref,
         o_ref[...] = out[None, :, None].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "blk_s", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "blk_s", "interpret",
+                                             "scale", "softcap"))
 def tree_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos,
                    tree_mask, *, window: int = 0, blk_s: int = 256,
-                   interpret: bool = True):
-    """Shapes as in :func:`repro.kernels.ref.tree_attention_ref`."""
+                   interpret: bool = True, scale: float | None = None,
+                   softcap: float = 0.0, q2=None, k2_cache=None,
+                   k2_tree=None):
+    """Shapes as in :func:`repro.kernels.ref.tree_attention_ref`.
+
+    ``q2``/``k2_cache``/``k2_tree`` (all-or-none) add a second score stream
+    ``q2 @ k2`` to the logits (MLA-absorb decode); ``scale`` overrides the
+    default ``D ** -0.5`` (required when the score is a two-stream sum).
+    """
     B, T, H, D = q.shape
     S = k_cache.shape[1]
     Hkv = k_cache.shape[2]
     Dv = v_cache.shape[-1]
     G = H // Hkv
-    scale = D ** -0.5
+    scale = D ** -0.5 if scale is None else scale
     blk_s = min(blk_s, S)
     assert S % blk_s == 0, (S, blk_s)
     ns = S // blk_s
+    two_stream = q2 is not None
+    assert two_stream == (k2_cache is not None) == (k2_tree is not None)
 
     q5 = q.reshape(B, T, Hkv, G, D)
     grid = (B, Hkv, ns + 1)
 
+    in_specs = [
+        pl.BlockSpec((1, T), lambda b, h, s: (b, 0)),                 # qpos
+        pl.BlockSpec((1, blk_s),
+                     lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1))),
+        pl.BlockSpec((1, T, T), lambda b, h, s: (b, 0, 0)),           # tmask
+        pl.BlockSpec((1, T, 1, G, D), lambda b, h, s: (b, 0, h, 0, 0)),
+        pl.BlockSpec((1, blk_s, 1, D),
+                     lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
+                                              h, 0)),
+        pl.BlockSpec((1, blk_s, 1, Dv),
+                     lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
+                                              h, 0)),
+        pl.BlockSpec((1, T, 1, D), lambda b, h, s: (b, 0, h, 0)),     # ktree
+        pl.BlockSpec((1, T, 1, Dv), lambda b, h, s: (b, 0, h, 0)),    # vtree
+    ]
+    inputs = [q_pos, kv_pos, tree_mask, q5, k_cache, v_cache, k_tree,
+              v_tree]
+    if two_stream:
+        D2 = q2.shape[-1]
+        in_specs += [
+            pl.BlockSpec((1, T, 1, G, D2), lambda b, h, s: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, blk_s, 1, D2),
+                         lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
+                                                  h, 0)),
+            pl.BlockSpec((1, T, 1, D2), lambda b, h, s: (b, 0, h, 0)),
+        ]
+        inputs += [q2.reshape(B, T, Hkv, G, D2), k2_cache, k2_tree]
+
     kernel = functools.partial(_kernel, ns=ns, blk_s=blk_s, window=window,
-                               scale=scale)
+                               scale=scale, softcap=softcap,
+                               two_stream=two_stream)
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, T), lambda b, h, s: (b, 0)),                 # qpos
-            pl.BlockSpec((1, blk_s),
-                         lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1))),
-            pl.BlockSpec((1, T, T), lambda b, h, s: (b, 0, 0)),           # tmask
-            pl.BlockSpec((1, T, 1, G, D), lambda b, h, s: (b, 0, h, 0, 0)),
-            pl.BlockSpec((1, blk_s, 1, D),
-                         lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
-                                                  h, 0)),
-            pl.BlockSpec((1, blk_s, 1, Dv),
-                         lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
-                                                  h, 0)),
-            pl.BlockSpec((1, T, 1, D), lambda b, h, s: (b, 0, h, 0)),     # ktree
-            pl.BlockSpec((1, T, 1, Dv), lambda b, h, s: (b, 0, h, 0)),    # vtree
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, T, 1, G, Dv),
                                lambda b, h, s: (b, 0, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, T, Hkv, G, Dv), q.dtype),
@@ -134,5 +194,5 @@ def tree_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos,
             pltpu.VMEM((T, G), jnp.float32),
         ],
         interpret=interpret,
-    )(q_pos, kv_pos, tree_mask, q5, k_cache, v_cache, k_tree, v_tree)
+    )(*inputs)
     return out.reshape(B, T, H, Dv)

@@ -37,6 +37,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--m", type=int, default=3)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--attn-backend", choices=["ref", "pallas"],
+                    default="ref",
+                    help="decode attention backend: 'ref' (concat+mask "
+                         "oracle) or 'pallas' (flash tree-decode kernel, "
+                         "interpret mode off-TPU); greedy outputs are "
+                         "identical")
     ap.add_argument("--ckpt", default="", help="trained prompt-token ckpt")
     ap.add_argument("--baseline", choices=["vanilla", "medusa", ""],
                     default="", help="also run a baseline engine")
@@ -112,10 +118,12 @@ def main():
                                   batch_size=args.batch, capacity=capacity,
                                   temperature=args.temperature,
                                   admission=args.admission,
-                                  prefill_bucket=args.prefill_bucket)
+                                  prefill_bucket=args.prefill_bucket,
+                                  attn_backend=args.attn_backend)
     else:
         eng = PPDEngine(params, ppd, cfg, m=args.m, batch_size=args.batch,
-                        capacity=capacity, temperature=args.temperature)
+                        capacity=capacity, temperature=args.temperature,
+                        attn_backend=args.attn_backend)
     for r in reqs:
         eng.add_request(r)
     t0 = time.time()
@@ -141,10 +149,12 @@ def main():
                                           capacity=capacity,
                                           temperature=args.temperature,
                                           admission=args.admission,
-                                          prefill_bucket=args.prefill_bucket)
+                                          prefill_bucket=args.prefill_bucket,
+                                          attn_backend=args.attn_backend)
         else:
             van = VanillaEngine(params, cfg, batch_size=args.batch,
-                                capacity=capacity)
+                                capacity=capacity,
+                                attn_backend=args.attn_backend)
         for r in reqs:
             van.add_request(dataclasses.replace(r))
         t0 = time.time()

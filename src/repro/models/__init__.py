@@ -1,3 +1,4 @@
+from .backend import available_backends, capture_calls, get_backend
 from .config import (ATTN, FULL, MLA, RGLRU, SLIDING, SSM, LayerSpec,
                      MLAConfig, ModelConfig, MoEConfig, RGLRUConfig,
                      SSMConfig, layer_specs, param_count)

@@ -3,11 +3,16 @@
 Both expose the same call contract used by :mod:`repro.models.model`:
 
     out, cache_entry = apply(params, cfg, spec, x, positions, cache_entry,
-                             extra_mask=..., q_chunk=...)
+                             extra_mask=..., q_chunk=..., backend=...)
 
 ``cache_entry`` is a per-layer dict pytree; new K/V are *staged* into it at
 ``positions % C`` immediately (prefill) or returned for deferred commit
 (tree decode — see ``stage_only``).
+
+Decode paths (a live cache) build (q, cache view, new K/V, masks) once and
+dispatch to the selected attention backend (:mod:`repro.models.backend`):
+``"ref"`` runs the concat-and-mask oracle, ``"pallas"`` streams the ring
+cache through the flash tree-decode kernel.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from . import layers
+from .backend import get_backend
 from .config import ModelConfig, LayerSpec, SLIDING
 from .layers import apply_rope, rms_norm, dense_init, chunked_attend
 
@@ -88,50 +94,41 @@ def scatter_kv(cache, k_new, v_new, positions, accept_mask=None):
 
 
 def attn_apply(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
-               cache=None, *, extra_mask=None, q_chunk=0, stage_only=False):
+               cache=None, *, extra_mask=None, q_chunk=0, stage_only=False,
+               backend=None):
     """x: [B,T,d]; positions: [B,T].
 
     Without a cache: self-attention over the T tokens (training / scratch
     prefill).  With a cache: attend over cache ∪ current tokens; if
     ``stage_only`` the K/V are NOT written (tree decode — commit happens
     after verification via :func:`scatter_kv`), otherwise they are written
-    in place (prefill).
+    in place (prefill).  ``backend`` selects the decode attention backend
+    (None -> "ref"); it only affects cached paths.
     """
     B, T, _ = x.shape
     q, k, v = _project_qkv(params, cfg, spec, x, positions)
     window = spec.window if spec.span == SLIDING else 0
     staged = (k, v)
+    scale = cfg.head_dim ** -0.5
 
     if cache is None:
-        kv_pos, kv_valid = positions, jnp.ones((B, T), bool)
-        k_all, v_all = k, v
-        self_mask = extra_mask
+        out = chunked_attend(q, k, v, q_positions=positions,
+                             kv_positions=positions,
+                             kv_valid=jnp.ones((B, T), bool),
+                             window=window, extra_mask=extra_mask,
+                             scale=scale, softcap=cfg.logit_softcap,
+                             q_chunk=q_chunk)
+    elif stage_only:
+        out = get_backend(backend).tree_decode(
+            q, cache["k"], cache["v"], cache["pos"], k, v, positions,
+            extra_mask, window=window, scale=scale,
+            softcap=cfg.logit_softcap, q_chunk=q_chunk)
     else:
-        if not stage_only:
-            cache = scatter_kv(cache, k, v, positions)
-        cpos = cache["pos"]
-        c_valid = cpos >= 0
-        if stage_only:
-            k_all = jnp.concatenate([cache["k"], k], axis=1)
-            v_all = jnp.concatenate([cache["v"], v], axis=1)
-            kv_pos = jnp.concatenate([cpos, positions], axis=1)
-            kv_valid = jnp.concatenate([c_valid, jnp.ones((B, T), bool)], 1)
-            if extra_mask is not None:
-                # extra_mask is [T,T] (tree) -> expand over the cache part.
-                em = extra_mask if extra_mask.ndim == 3 else extra_mask[None]
-                em = jnp.broadcast_to(em, (B, T, T))
-                cache_vis = jnp.ones((B, T, cpos.shape[1]), bool)
-                extra_mask = jnp.concatenate([cache_vis, em], axis=2)
-        else:
-            k_all, v_all = cache["k"], cache["v"]
-            kv_pos, kv_valid = cache["pos"], c_valid
-        self_mask = extra_mask
-
-    out = chunked_attend(q, k_all, v_all, q_positions=positions,
-                         kv_positions=kv_pos, kv_valid=kv_valid,
-                         window=window, extra_mask=self_mask,
-                         scale=cfg.head_dim ** -0.5,
-                         softcap=cfg.logit_softcap, q_chunk=q_chunk)
+        cache = scatter_kv(cache, k, v, positions)
+        out = get_backend(backend).cache_decode(
+            q, cache["k"], cache["v"], cache["pos"], positions, k, v,
+            window=window, scale=scale, softcap=cfg.logit_softcap,
+            q_chunk=q_chunk, extra_mask=extra_mask)
     out = out.reshape(B, T, cfg.n_heads * cfg.head_dim) @ params["wo"]
     return out, cache, staged
 
@@ -189,12 +186,24 @@ def _mla_qkv(params, cfg, x, positions):
     return q_nope, q_rope, ckv, krope
 
 
+def _mla_decompress(cfg, w_ukv, ckv, krope):
+    """Latent streams [B,S,R]/[B,S,Dr] -> per-head K/V [B,S,H,D(v)]
+    (the naive, paper-faithful MLA path)."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S = ckv.shape[:2]
+    kv = jnp.einsum("bsr,rhd->bshd", ckv, w_ukv)
+    k_nope, v = kv[..., :m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_dim))], axis=-1)
+    return k, v
+
+
 def _mla_attend(params, cfg, q_nope, q_rope, ckv, krope, q_positions,
                 kv_pos, kv_valid, extra_mask, q_chunk):
     """Attention given latent K/V streams. Two math-equivalent paths."""
     m, H = cfg.mla, cfg.n_heads
     B, T = q_nope.shape[:2]
-    S = ckv.shape[1]
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
     w_ukv = params["w_ukv"].reshape(m.kv_lora_rank, H,
                                     m.qk_nope_dim + m.v_head_dim)
@@ -213,11 +222,7 @@ def _mla_attend(params, cfg, q_nope, q_rope, ckv, krope, q_positions,
         out = jnp.einsum("bthr,rhd->bthd", o_lat, w_uv)
     else:
         # Naive: decompress latents to per-head K/V (paper-faithful port).
-        kv = jnp.einsum("bsr,rhd->bshd", ckv, w_ukv)
-        k_nope, v = kv[..., :m.qk_nope_dim], kv[..., m.qk_nope_dim:]
-        k = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
-                                      (B, S, H, m.qk_rope_dim))], axis=-1)
+        k, v = _mla_decompress(cfg, w_ukv, ckv, krope)
         q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
         out = chunked_attend(q_cat, k, v, q_positions=q_positions,
                              kv_positions=kv_pos, kv_valid=kv_valid,
@@ -227,29 +232,59 @@ def _mla_attend(params, cfg, q_nope, q_rope, ckv, krope, q_positions,
 
 
 def mla_apply(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
-              cache=None, *, extra_mask=None, q_chunk=0, stage_only=False):
+              cache=None, *, extra_mask=None, q_chunk=0, stage_only=False,
+              backend=None):
     B, T, _ = x.shape
+    m, H = cfg.mla, cfg.n_heads
     q_nope, q_rope, ckv, krope = _mla_qkv(params, cfg, x, positions)
     staged = (ckv, krope)
     if cache is None:
-        kv_pos, kv_valid = positions, jnp.ones((B, T), bool)
-        ckv_all, krope_all = ckv, krope
-    else:
-        if not stage_only:
-            cache = scatter_mla(cache, ckv, krope, positions)
-            ckv_all, krope_all = cache["ckv"], cache["krope"]
-            kv_pos, kv_valid = cache["pos"], cache["pos"] >= 0
+        out = _mla_attend(params, cfg, q_nope, q_rope, ckv, krope,
+                          positions, positions, jnp.ones((B, T), bool),
+                          extra_mask, q_chunk)
+        return out, cache, staged
+
+    if not stage_only:
+        cache = scatter_mla(cache, ckv, krope, positions)
+    be = get_backend(backend)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    w_ukv = params["w_ukv"].reshape(m.kv_lora_rank, H,
+                                    m.qk_nope_dim + m.v_head_dim)
+    lat = lambda a: a[:, :, None, :]     # latent stream -> MQA head axis
+    if m.absorb:
+        # Fold W_UK into q; attend in latent space as MQA with the cache's
+        # ckv / krope streams read in place (two score streams — no
+        # feature-concatenated cache copy on the kernel path).
+        w_uk = w_ukv[..., :m.qk_nope_dim]                     # [R,H,Dn]
+        q_lat = jnp.einsum("bthd,rhd->bthr", q_nope, w_uk)
+        if stage_only:
+            o_lat = be.tree_decode(
+                q_lat, lat(cache["ckv"]), lat(cache["ckv"]), cache["pos"],
+                lat(ckv), lat(ckv), positions, extra_mask, scale=scale,
+                q_chunk=q_chunk, q2=q_rope, k2_cache=lat(cache["krope"]),
+                k2_tree=lat(krope))
         else:
-            ckv_all = jnp.concatenate([cache["ckv"], ckv], axis=1)
-            krope_all = jnp.concatenate([cache["krope"], krope], axis=1)
-            kv_pos = jnp.concatenate([cache["pos"], positions], axis=1)
-            kv_valid = jnp.concatenate(
-                [cache["pos"] >= 0, jnp.ones((B, T), bool)], axis=1)
-            if extra_mask is not None:
-                em = extra_mask if extra_mask.ndim == 3 else extra_mask[None]
-                em = jnp.broadcast_to(em, (B, T, T))
-                cache_vis = jnp.ones((B, T, cache["pos"].shape[1]), bool)
-                extra_mask = jnp.concatenate([cache_vis, em], axis=2)
-    out = _mla_attend(params, cfg, q_nope, q_rope, ckv_all, krope_all,
-                      positions, kv_pos, kv_valid, extra_mask, q_chunk)
+            o_lat = be.cache_decode(
+                q_lat, lat(cache["ckv"]), lat(cache["ckv"]), cache["pos"],
+                positions, lat(ckv), lat(ckv), scale=scale,
+                q_chunk=q_chunk, extra_mask=extra_mask, q2=q_rope,
+                k2_cache=lat(cache["krope"]), k2_self=lat(krope))
+        out = jnp.einsum("bthr,rhd->bthd", o_lat,
+                         w_ukv[..., m.qk_nope_dim:])          # [B,T,H,Dv]
+    else:
+        # Naive: decompress latents to per-head K/V — cache and new tokens
+        # separately, so the kernel path never concatenates them.
+        k_c, v_c = _mla_decompress(cfg, w_ukv, cache["ckv"],
+                                   cache["krope"])
+        k_t, v_t = _mla_decompress(cfg, w_ukv, ckv, krope)
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if stage_only:
+            out = be.tree_decode(q_cat, k_c, v_c, cache["pos"], k_t, v_t,
+                                 positions, extra_mask, scale=scale,
+                                 q_chunk=q_chunk)
+        else:
+            out = be.cache_decode(q_cat, k_c, v_c, cache["pos"], positions,
+                                  k_t, v_t, scale=scale, q_chunk=q_chunk,
+                                  extra_mask=extra_mask)
+    out = out.reshape(B, T, H * m.v_head_dim) @ params["wo"]
     return out, cache, staged

@@ -1,0 +1,224 @@
+"""Pluggable attention backends for the decode hot path.
+
+Every cached attention in the model funnels through one of two per-layer
+decode calls, built once by :mod:`repro.models.attention` and dispatched
+here:
+
+* ``tree_decode``  — stage-only PPD guess pass: T tree tokens attend to
+  the ring cache plus each other through the [T,T] tree mask;
+* ``cache_decode`` — committed decode (vanilla single-token step) and
+  prefill: tokens already scattered into the cache attend over it.
+
+Backends:
+
+* ``"ref"``    — the pure-jnp oracle path (`layers.chunked_attend`): it
+  concatenates cache and tree K/V along the sequence axis and builds the
+  full [B,T,S+T] visibility mask.  Correct everywhere (training, prefill,
+  sharded serving) and the equivalence baseline for everything else.
+* ``"pallas"`` — routes the decode hot path through
+  :func:`repro.kernels.ops.tree_decode_attention`: the flash tree kernel
+  streams the ring cache HBM->VMEM in blocks with an online-softmax
+  accumulator, folding the tree tail in as the final grid step.  No cache
+  concat, no [B,T,S+T] mask, no staged copy of the cache — the per-step
+  HBM traffic is the cache read itself, which is the bandwidth floor.
+  Non-hot-path shapes (prefill, extra-masked commits) fall back to the
+  ref math unchanged.
+
+Selection is per-call — a string (or backend instance) threaded from the
+engine / CLI through ``forward`` — never an import-time global, so one
+process can run and compare both backends (the tests sweep them).
+
+``capture_calls`` is a test hook recording, per dispatched call, which
+backend ran and the shapes it materialized; the acceptance tests use it to
+prove the pallas path never builds a concatenated [S+T] K/V or mask.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax.numpy as jnp
+
+from repro.kernels.ops import tree_decode_attention
+
+from .layers import chunked_attend
+
+_REGISTRY: dict = {}
+_TRACE = None
+
+
+def register_backend(name):
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def available_backends():
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(backend=None) -> "AttentionBackend":
+    """Resolve a backend name (None -> "ref") or pass an instance through."""
+    if backend is None:
+        backend = "ref"
+    if isinstance(backend, AttentionBackend):
+        return backend
+    try:
+        return _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(f"unknown attention backend {backend!r}; "
+                         f"available: {available_backends()}") from None
+
+
+@contextlib.contextmanager
+def capture_calls():
+    """Record one event dict per dispatched backend call (at trace time).
+
+    Events carry ``backend``, ``op``, and the shapes the call materialized
+    (``kv_len`` / ``mask`` for ref's concatenated buffers, the raw cache
+    length for pallas).  Use a freshly-jitted step inside the context —
+    already-compiled functions skip tracing and record nothing.
+    """
+    global _TRACE
+    prev, _TRACE = _TRACE, []
+    try:
+        yield _TRACE
+    finally:
+        _TRACE = prev
+
+
+def _record(**event):
+    if _TRACE is not None:
+        _TRACE.append(event)
+
+
+def _norm_tree_mask(tree_mask, q_pos, window):
+    """Normalize the tree mask to [B,T,T] bool, folding in the causal
+    (+window) constraint among the T new tokens — the kernel applies ONLY
+    this mask to the tree tail, whereas the ref path's ``build_mask`` also
+    position-checks it, so the positional constraints must live in the
+    mask for the backends to agree (a window smaller than the tree's
+    positional span is the case that bites).  ``tree_mask=None`` means
+    plain causal self attention (vanilla step)."""
+    tm = q_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        tm &= q_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if tree_mask is not None:
+        if tree_mask.ndim == 2:
+            tree_mask = tree_mask[None]
+        tm = tm & tree_mask
+    return tm
+
+
+class AttentionBackend:
+    """Decode-attention strategy.  All tensors arrive pre-projected:
+    q [B,T,H,D]; cache K/V [B,S,Hkv,D(v)] with per-slot positions
+    kv_pos [B,S] (-1 invalid); tree/self K/V [B,T,Hkv,D(v)]; q_pos [B,T].
+    The optional ``q2``/``k2_*`` pair is a second score stream summed into
+    the logits (MLA-absorb latents); ``scale`` is then mandatory."""
+
+    name = "?"
+
+    def tree_decode(self, q, k_cache, v_cache, kv_pos, k_tree, v_tree,
+                    q_pos, tree_mask, *, window=0, scale=None, softcap=0.0,
+                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None):
+        raise NotImplementedError
+
+    def cache_decode(self, q, k_cache, v_cache, kv_pos, q_pos, k_self,
+                     v_self, *, window=0, scale=None, softcap=0.0,
+                     q_chunk=0, extra_mask=None, q2=None, k2_cache=None,
+                     k2_self=None):
+        raise NotImplementedError
+
+
+@register_backend("ref")
+class RefBackend(AttentionBackend):
+    """Oracle path: sequence-concat cache+tree K/V, full visibility mask,
+    :func:`repro.models.layers.chunked_attend`.  Bit-identical to the
+    pre-backend model code."""
+
+    def tree_decode(self, q, k_cache, v_cache, kv_pos, k_tree, v_tree,
+                    q_pos, tree_mask, *, window=0, scale=None, softcap=0.0,
+                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None):
+        if q2 is not None:
+            q = jnp.concatenate([q, q2], axis=-1)
+            k_cache = jnp.concatenate([k_cache, k2_cache], axis=-1)
+            k_tree = jnp.concatenate([k_tree, k2_tree], axis=-1)
+        B, T = q.shape[:2]
+        S = k_cache.shape[1]
+        k_all = jnp.concatenate([k_cache, k_tree], axis=1)
+        v_all = jnp.concatenate([v_cache, v_tree], axis=1)
+        kv_pos_all = jnp.concatenate([kv_pos, q_pos], axis=1)
+        kv_valid = jnp.concatenate([kv_pos >= 0, jnp.ones((B, T), bool)], 1)
+        tm = _norm_tree_mask(tree_mask, q_pos, window)
+        em = jnp.concatenate([jnp.ones((B, T, S), bool), tm], axis=2)
+        _record(backend=self.name, op="tree_decode",
+                kv_len=k_all.shape[1], mask=tuple(em.shape))
+        return chunked_attend(q, k_all, v_all, q_positions=q_pos,
+                              kv_positions=kv_pos_all, kv_valid=kv_valid,
+                              window=window, extra_mask=em, scale=scale,
+                              softcap=softcap, q_chunk=q_chunk)
+
+    def cache_decode(self, q, k_cache, v_cache, kv_pos, q_pos, k_self,
+                     v_self, *, window=0, scale=None, softcap=0.0,
+                     q_chunk=0, extra_mask=None, q2=None, k2_cache=None,
+                     k2_self=None):
+        if q2 is not None:
+            q = jnp.concatenate([q, q2], axis=-1)
+            k_cache = jnp.concatenate([k_cache, k2_cache], axis=-1)
+        _record(backend=self.name, op="cache_decode",
+                kv_len=k_cache.shape[1],
+                mask=(q.shape[0], q.shape[1], k_cache.shape[1]))
+        return chunked_attend(q, k_cache, v_cache, q_positions=q_pos,
+                              kv_positions=kv_pos, kv_valid=kv_pos >= 0,
+                              window=window, extra_mask=extra_mask,
+                              scale=scale, softcap=softcap, q_chunk=q_chunk)
+
+
+@register_backend("pallas")
+class PallasBackend(AttentionBackend):
+    """Flash tree-decode kernel path (interpret mode off-TPU).
+
+    ``tree_decode`` maps 1:1 onto the kernel.  ``cache_decode`` covers the
+    vanilla single-token step: K/V are already committed to the ring, so
+    the step's own K/V ride along as a fully-masked tree tail (a bit-exact
+    no-op of the online softmax) and the kernel reads the cache in place.
+    Shapes outside the decode hot path (T > 1 commits = prefill, or
+    extra-masked commits) defer to the ref math.
+    """
+
+    def tree_decode(self, q, k_cache, v_cache, kv_pos, k_tree, v_tree,
+                    q_pos, tree_mask, *, window=0, scale=None, softcap=0.0,
+                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None):
+        del q_chunk                      # the kernel streams over S instead
+        tm = _norm_tree_mask(tree_mask, q_pos, window)
+        _record(backend=self.name, op="tree_decode",
+                cache_len=k_cache.shape[1], tree_len=k_tree.shape[1],
+                mask=tuple(tm.shape))
+        return tree_decode_attention(q, k_cache, v_cache, kv_pos, k_tree,
+                                     v_tree, q_pos, tm, window=window,
+                                     scale=scale, softcap=softcap, q2=q2,
+                                     k2_cache=k2_cache, k2_tree=k2_tree)
+
+    def cache_decode(self, q, k_cache, v_cache, kv_pos, q_pos, k_self,
+                     v_self, *, window=0, scale=None, softcap=0.0,
+                     q_chunk=0, extra_mask=None, q2=None, k2_cache=None,
+                     k2_self=None):
+        B, T = q.shape[:2]
+        if T != 1 or extra_mask is not None:
+            # prefill / masked commit: not the decode hot path
+            return get_backend("ref").cache_decode(
+                q, k_cache, v_cache, kv_pos, q_pos, k_self, v_self,
+                window=window, scale=scale, softcap=softcap,
+                q_chunk=q_chunk, extra_mask=extra_mask, q2=q2,
+                k2_cache=k2_cache, k2_self=k2_self)
+        # single-token decode: the token is already in the ring (committed
+        # before this call), so mask the tail off entirely.
+        tm = jnp.zeros((B, 1, 1), bool)
+        _record(backend=self.name, op="cache_decode",
+                cache_len=k_cache.shape[1], mask=tuple(tm.shape))
+        return tree_decode_attention(q, k_cache, v_cache, kv_pos, k_self,
+                                     v_self, q_pos, tm, window=window,
+                                     scale=scale, softcap=softcap, q2=q2,
+                                     k2_cache=k2_cache, k2_tree=k2_self)

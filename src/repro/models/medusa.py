@@ -52,7 +52,8 @@ def medusa_states(m: int, topk=(4, 2, 2)) -> list:
 
 
 def medusa_decode_step(params, heads, cfg: ModelConfig, bufs, state: PPDState,
-                       *, m: int, moe_exact: bool = True):
+                       *, m: int, moe_exact: bool = True,
+                       attn_backend=None):
     """Tree decode with head-generated guesses (always full-depth state)."""
     full_state = jnp.full_like(state.tree_state,
                                bufs["node_type"].shape[0] - 1)
@@ -68,7 +69,7 @@ def medusa_decode_step(params, heads, cfg: ModelConfig, bufs, state: PPDState,
     logits, _, staged, _, hidden = forward(
         params, cfg, positions=positions, embeds=embeds, cache=state.cache,
         extra_mask=rb["mask"], stage_only=True, moe_exact=moe_exact,
-        return_hidden=True)
+        return_hidden=True, attn_backend=attn_backend)
     verdict = verify_greedy(rb, logits, tokens)
     n_committed = verdict.n_acc + 1
     cache = commit_staged(cfg, state.cache, staged, positions,

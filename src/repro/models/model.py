@@ -199,7 +199,8 @@ def trim_cache(cfg: ModelConfig, cache, lengths):
 
 # ------------------------------------------------------------------ blocks
 def _apply_layer(lp, cfg, spec, x, positions, cache_entry, *, extra_mask,
-                 q_chunk, stage_only, commit_mask, moe_exact=False):
+                 q_chunk, stage_only, commit_mask, moe_exact=False,
+                 attn_backend=None):
     staged = None
     h = rms_norm(x, lp["ln1"], cfg.rms_eps, plus_one=True)
     if spec.mixer in (ATTN, MLA):
@@ -208,7 +209,8 @@ def _apply_layer(lp, cfg, spec, x, positions, cache_entry, *, extra_mask,
             # commit pass: recompute projections, masked scatter
             out, _, staged = fn(lp["attn"], cfg, spec, h, positions,
                                 cache_entry, extra_mask=extra_mask,
-                                q_chunk=q_chunk, stage_only=True)
+                                q_chunk=q_chunk, stage_only=True,
+                                backend=attn_backend)
             scat = (attn_mod.scatter_kv if spec.mixer == ATTN
                     else attn_mod.scatter_mla)
             cache_entry = scat(cache_entry, *staged, positions, commit_mask)
@@ -216,7 +218,8 @@ def _apply_layer(lp, cfg, spec, x, positions, cache_entry, *, extra_mask,
             out, cache_entry, staged = fn(lp["attn"], cfg, spec, h, positions,
                                           cache_entry, extra_mask=extra_mask,
                                           q_chunk=q_chunk,
-                                          stage_only=stage_only)
+                                          stage_only=stage_only,
+                                          backend=attn_backend)
     elif spec.mixer == SSM:
         out, cache_entry = ssm_mod.ssm_apply(
             lp["ssm"], cfg, h, cache_entry, dt_mask=commit_mask,
@@ -247,11 +250,13 @@ def forward(params, cfg: ModelConfig, tokens=None, positions=None, *,
             q_chunk: int = 0, stage_only: bool = False,
             commit_mask=None, return_hidden: bool = False,
             remat: bool = False, moe_exact: bool = False,
-            skip_unembed: bool = False):
+            skip_unembed: bool = False, attn_backend=None):
     """Returns (logits, new_cache, staged_list, aux_loss).
 
     tokens: [B,T] int (audio: [B,T,K]); embeds: [B,T,d] (alternative input);
     prefix_embeds: [B,P,d] prepended (VLM patch prefix); positions [B,T_total].
+    attn_backend selects the decode attention backend ("ref" / "pallas",
+    see :mod:`repro.models.backend`); cached attention layers only.
     """
     if embeds is None:
         x = embed_tokens(params, cfg, tokens)
@@ -271,7 +276,7 @@ def forward(params, cfg: ModelConfig, tokens=None, positions=None, *,
         return _apply_layer(lp, cfg, spec, x, positions, centry,
                             extra_mask=extra_mask, q_chunk=q_chunk,
                             stage_only=stage_only, commit_mask=commit_mask,
-                            moe_exact=moe_exact)
+                            moe_exact=moe_exact, attn_backend=attn_backend)
 
     if cfg.scan_layers:
         o, per, n_rep = scan_plan(cfg)

@@ -81,9 +81,10 @@ def _pack(requests: List[Request], cfg: ModelConfig):
 
 class _EngineBase:
     def __init__(self, params, cfg: ModelConfig, capacity: int = 1024,
-                 batch_size: int = 4):
+                 batch_size: int = 4, attn_backend=None):
         self.params, self.cfg = params, cfg
         self.capacity, self.batch_size = capacity, batch_size
+        self.attn_backend = attn_backend    # "ref" / "pallas" (None = ref)
         self.queue: List[Request] = []
         self.total_forward_passes = 0   # prefill + decode, all batches
 
@@ -105,8 +106,8 @@ class _EngineBase:
 class PPDEngine(_EngineBase):
     def __init__(self, params, ppd_params, cfg, *, m=3, n_ept=1,
                  tree_states=None, capacity=1024, batch_size=4,
-                 temperature=0.0):
-        super().__init__(params, cfg, capacity, batch_size)
+                 temperature=0.0, attn_backend=None):
+        super().__init__(params, cfg, capacity, batch_size, attn_backend)
         self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
         self.temperature = temperature
         if tree_states is None:
@@ -119,7 +120,8 @@ class PPDEngine(_EngineBase):
     def _step_impl(self, st, key):
         return ppd_decode_step(self.params, self.ppd, self.cfg, self.bufs,
                                st, m=self.m, n_ept=self.n_ept,
-                               temperature=self.temperature, key=key)
+                               temperature=self.temperature, key=key,
+                               attn_backend=self.attn_backend)
 
     def _run_batch(self, batch: List[Request]) -> List[Result]:
         cfg = self.cfg
@@ -129,7 +131,8 @@ class PPDEngine(_EngineBase):
         offset = t0 - getattr(self, "_clock0", t0)
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
-                                      moe_exact=True)
+                                      moe_exact=True,
+                                      attn_backend=self.attn_backend)
         first = jnp.argmax(logits[:, -1], axis=-1)
         t_prefill = time.time() - t0
         st = init_ppd_state(cfg, cache, first, self.m, self.n_ept,
@@ -187,11 +190,12 @@ def _batch_result(req: Request, produced, steps, wall, t_prefill,
 
 class VanillaEngine(_EngineBase):
     def __init__(self, params, cfg, capacity=1024, batch_size=4,
-                 temperature=0.0):
-        super().__init__(params, cfg, capacity, batch_size)
+                 temperature=0.0, attn_backend=None):
+        super().__init__(params, cfg, capacity, batch_size, attn_backend)
         self.temperature = temperature
         self._step = jax.jit(lambda cache, tok, key: vanilla_decode_step(
-            params, cfg, cache, tok, temperature=temperature, key=key))
+            params, cfg, cache, tok, temperature=temperature, key=key,
+            attn_backend=attn_backend))
 
     def _run_batch(self, batch: List[Request]) -> List[Result]:
         cfg = self.cfg
@@ -201,7 +205,8 @@ class VanillaEngine(_EngineBase):
         offset = t0 - getattr(self, "_clock0", t0)
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
-                                      moe_exact=True)
+                                      moe_exact=True,
+                                      attn_backend=self.attn_backend)
         nxt = jnp.argmax(logits[:, -1], axis=-1)
         t_prefill = time.time() - t0
         produced = [[np.asarray(nxt[b])] for b in range(B)]
@@ -224,14 +229,15 @@ class VanillaEngine(_EngineBase):
 
 class MedusaEngine(_EngineBase):
     def __init__(self, params, heads, cfg, *, m=3, capacity=1024,
-                 batch_size=4):
-        super().__init__(params, cfg, capacity, batch_size)
+                 batch_size=4, attn_backend=None):
+        super().__init__(params, cfg, capacity, batch_size, attn_backend)
         from repro.models.medusa import medusa_states, medusa_decode_step
         self.heads, self.m = heads, m
         self.bufs = device_buffers(medusa_states(m), m)
         self._fn = medusa_decode_step
         self._step = jax.jit(lambda st: self._fn(
-            self.params, self.heads, self.cfg, self.bufs, st, m=self.m))
+            self.params, self.heads, self.cfg, self.bufs, st, m=self.m,
+            attn_backend=self.attn_backend))
 
     def _run_batch(self, batch: List[Request]) -> List[Result]:
         from repro.models.medusa import medusa_heads
@@ -243,7 +249,8 @@ class MedusaEngine(_EngineBase):
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _, hidden = forward(self.params, cfg, tokens,
                                               cache=cache, moe_exact=True,
-                                              return_hidden=True)
+                                              return_hidden=True,
+                                              attn_backend=self.attn_backend)
         first = jnp.argmax(logits[:, -1], axis=-1)
         st = init_ppd_state(cfg, cache, first, self.m,
                             kmax=self.bufs.get("_kmax", 10))

@@ -92,12 +92,13 @@ class _ContinuousBase:
     def __init__(self, params, cfg: ModelConfig, capacity: int = 1024,
                  batch_size: int = 4, temperature: float = 0.0,
                  admission: str = "fcfs", prefill_bucket: int = 0,
-                 seed: int = 0):
+                 seed: int = 0, attn_backend=None):
         assert admission in ("fcfs", "sjf"), admission
         self.params, self.cfg = params, cfg
         self.capacity, self.batch_size = capacity, batch_size
         self.temperature = temperature
         self.admission = admission
+        self.attn_backend = attn_backend    # "ref" / "pallas" (None = ref)
         # Round prompt prefills up to a multiple of ``prefill_bucket`` to
         # bound recompilation across prompt lengths (0 = exact length).
         # Padded tail entries are killed with trim_cache; chain archs hold
@@ -239,7 +240,8 @@ class _ContinuousBase:
         tokens, plen = self._padded_prompt(req.prompt)
         row_cache = init_cache(self.cfg, 1, self.capacity)
         logits, row_cache, _, _ = forward(self.params, self.cfg, tokens,
-                                          cache=row_cache, moe_exact=True)
+                                          cache=row_cache, moe_exact=True,
+                                          attn_backend=self.attn_backend)
         first = jnp.argmax(logits[0, plen - 1], axis=-1)
         if tokens.shape[1] != plen:
             row_cache = trim_cache(self.cfg, row_cache,
@@ -276,9 +278,9 @@ class ContinuousPPDEngine(_ContinuousBase):
     def __init__(self, params, ppd_params, cfg: ModelConfig, *, m=3,
                  n_ept=1, tree_states=None, capacity=1024, batch_size=4,
                  temperature=0.0, admission="fcfs", prefill_bucket=0,
-                 seed=0):
+                 seed=0, attn_backend=None):
         super().__init__(params, cfg, capacity, batch_size, temperature,
-                         admission, prefill_bucket, seed)
+                         admission, prefill_bucket, seed, attn_backend)
         self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
         if tree_states is None:
             tree_states = ([default_chain_spec(max(k, 1), m)
@@ -298,7 +300,8 @@ class ContinuousPPDEngine(_ContinuousBase):
         return ppd_decode_step(self.params, self.ppd, self.cfg, self.bufs,
                                st, m=self.m, n_ept=self.n_ept,
                                temperature=self.temperature, key=keys,
-                               active=active)
+                               active=active,
+                               attn_backend=self.attn_backend)
 
     def _admit_device(self, slot_idx, row_cache, first):
         st = self.state
@@ -339,9 +342,9 @@ class ContinuousVanillaEngine(_ContinuousBase):
 
     def __init__(self, params, cfg: ModelConfig, capacity=1024,
                  batch_size=4, temperature=0.0, admission="fcfs",
-                 prefill_bucket=0, seed=0):
+                 prefill_bucket=0, seed=0, attn_backend=None):
         super().__init__(params, cfg, capacity, batch_size, temperature,
-                         admission, prefill_bucket, seed)
+                         admission, prefill_bucket, seed, attn_backend)
         self.cache = init_cache(cfg, batch_size, capacity)
         if cfg.modality == "audio":
             self.tokens = jnp.zeros((batch_size, cfg.n_codebooks),
@@ -351,7 +354,8 @@ class ContinuousVanillaEngine(_ContinuousBase):
         self._step = jax.jit(
             lambda cache, tok, keys, active: vanilla_decode_step(
                 self.params, self.cfg, cache, tok,
-                temperature=self.temperature, key=keys, active=active))
+                temperature=self.temperature, key=keys, active=active,
+                attn_backend=self.attn_backend))
 
     def _admit_device(self, slot_idx, row_cache, first):
         self.cache = write_cache_rows(self.cfg, self.cache, row_cache,

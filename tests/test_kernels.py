@@ -89,6 +89,98 @@ def test_ring_buffer_positions():
                                atol=1e-5, rtol=1e-5)
 
 
+def test_non_multiple_block_size_padded():
+    """S=200 with blk_s=64: ops pads the cache view to the block size and
+    stays bit-equivalent to the unpadded oracle (invalid padded slots
+    contribute an exact 0)."""
+    case = (2, 8, 4, 2, 32, 32, 200, 170, jnp.float32)
+    args = make_case(jax.random.PRNGKey(4), *case, tree="forest")
+    out_k = tree_decode_attention(*args, blk_s=64, interpret=True)
+    out_r = tree_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("softcap", [5.0, 30.0])
+def test_softcap(softcap):
+    """gemma-style tanh logit capping, ordering scale -> cap -> mask."""
+    case = (2, 8, 4, 2, 32, 32, 128, 100, jnp.float32)
+    args = make_case(jax.random.PRNGKey(5), *case, tree="forest")
+    out_k = tree_decode_attention(*args, softcap=softcap, blk_s=64,
+                                  interpret=True)
+    out_r = tree_attention_ref(*args, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mla_absorb_two_stream():
+    """MLA-absorb decode shape: MQA over latents (Hkv=1, Dv=R != D) with a
+    second q2@k2 (rope) score stream — matches the oracle's
+    feature-concatenated math."""
+    B, T, H, R, Dr, S = 2, 8, 4, 48, 16, 160
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    q = jax.random.normal(ks[0], (B, T, H, R))
+    q2 = jax.random.normal(ks[1], (B, T, H, Dr))
+    ckv = jax.random.normal(ks[2], (B, S, 1, R))
+    krope = jax.random.normal(ks[3], (B, S, 1, Dr))
+    ckv_t = jax.random.normal(ks[4], (B, T, 1, R))
+    krope_t = jax.random.normal(ks[5], (B, T, 1, Dr))
+    kv_pos = jnp.broadcast_to(jnp.where(jnp.arange(S) < 150,
+                                        jnp.arange(S), -1),
+                              (B, S)).astype(jnp.int32)
+    q_pos = 150 + jnp.broadcast_to(jnp.arange(T), (B, T)).astype(jnp.int32)
+    tm = jnp.broadcast_to(jnp.tril(jnp.ones((T, T), bool)), (B, T, T))
+    scale = (R + Dr) ** -0.5
+    out_k = tree_decode_attention(q, ckv, ckv, kv_pos, ckv_t, ckv_t, q_pos,
+                                  tm, blk_s=64, interpret=True, scale=scale,
+                                  q2=q2, k2_cache=krope, k2_tree=krope_t)
+    out_r = tree_attention_ref(q, ckv, ckv, kv_pos, ckv_t, ckv_t, q_pos,
+                               tm, scale=scale, q2=q2, k2_cache=krope,
+                               k2_tree=krope_t)
+    assert out_k.shape == (B, T, H, R)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24, 48])
+def test_ring_wrapped_sliding_window(window):
+    """Ring-wrapped UNSORTED positions + sliding window: exercises the
+    block-skip bound (max-of-block positions) on blocks that mix in- and
+    out-of-window entries after wrap."""
+    B, T, H, Hkv, D, Dv, S = 2, 4, 4, 2, 32, 32, 64
+    args = list(make_case(jax.random.PRNGKey(7), B, T, H, Hkv, D, Dv, S, S,
+                          jnp.float32, tree="forest"))
+    pos = jnp.arange(S) + 500
+    args[3] = jnp.stack([jnp.roll(pos, 17), jnp.roll(pos, 41)]).astype(
+        jnp.int32)
+    args[6] = (500 + S + jnp.broadcast_to(jnp.arange(T), (B, T))).astype(
+        jnp.int32)
+    out_k = tree_decode_attention(*args, window=window, blk_s=16,
+                                  interpret=True)
+    out_r = tree_attention_ref(*args, window=window)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("window", [3, 5])
+def test_backends_agree_window_smaller_than_tree_span(window):
+    """Sliding window shorter than the tree's positional span: the window
+    must clip the TREE TAIL identically in both backends (regression — the
+    kernel applies only the normalized tree mask to the tail, so the
+    backend layer folds the positional constraints into it)."""
+    from repro.models.backend import get_backend
+    B, T, H, Hkv, D, Dv, S = 2, 6, 4, 2, 32, 32, 64
+    args = make_case(jax.random.PRNGKey(8), B, T, H, Hkv, D, Dv, S, 50,
+                     jnp.float32, tree="chain")
+    q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos, tree_mask = args
+    outs = [get_backend(n).tree_decode(q, k_cache, v_cache, kv_pos,
+                                       k_tree, v_tree, q_pos, tree_mask,
+                                       window=window)
+            for n in ("ref", "pallas")]
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_matches_model_attention_path():
     """Kernel agrees with the model's stage-pass attention math."""
     from repro.models.layers import chunked_attend
