@@ -1,0 +1,153 @@
+"""Measured tokens/s of the default vs hardware-auto-tuned tree family.
+
+Runs the same request set through ``PPDEngine`` twice — once with the
+hand-built ``mk_default_tree`` family, once with the family picked by
+``core.tree_tuner`` (wall-clock calibration on this host, cached under
+``benchmarks/results/``) — and records measured tokens/second for both.
+Each engine gets a warmup run first so compilation never lands in the
+timed window, and greedy outputs are asserted identical across the two
+families (tree shape changes speed, never tokens).
+
+On a host whose latency curve rises with tree size (every CPU, and any
+batch size past the TPU's idle compute margin) the tuner trades
+acceptance for step latency and the auto tree's tokens/s should be >=
+the default tree's — that inequality is recorded in the output JSON as
+``auto_ge_default``.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_tree_tuner.py          # full
+  PYTHONPATH=src python benchmarks/bench_tree_tuner.py --fast   # CI size
+
+Writes ``benchmarks/results/bench_tree_tuner.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run_engine(params, ppd, cfg, tree_states, reqs, *, m, batch, capacity):
+    from repro.serving import PPDEngine, Request
+
+    eng = PPDEngine(params, ppd, cfg, m=m, tree_states=tree_states,
+                    batch_size=batch, capacity=capacity)
+    # warmup: compile prefill + decode step outside the timed window
+    # (uid -2 rows are processed but dropped from results)
+    for r in reqs[:batch]:
+        eng.add_request(Request(uid=-2, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens))
+    eng.run()
+    eng.total_forward_passes = 0
+    for r in reqs:
+        eng.add_request(r)
+    t0 = time.perf_counter()
+    results = eng.run()
+    wall = time.perf_counter() - t0
+    total = sum(len(r.tokens) for r in results)
+    steps = sum(r.steps for r in results)
+    return {
+        "tokens": total,
+        "wall_s": wall,
+        "tok_s": total / wall,
+        "accept_len": total / max(steps, 1),
+        "forward_passes": eng.total_forward_passes,
+    }, {r.uid: r.tokens for r in results}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--m", type=int, default=3)
+    ap.add_argument("--fast", action="store_true",
+                    help="4 requests x 24 tokens (CI size)")
+    args = ap.parse_args()
+    if args.fast:
+        args.requests, args.max_new = 4, 24
+
+    from repro.configs import get_smoke_config
+    from repro.core import init_prompt_params, tuned_tree_states
+    from repro.models import init_params
+    from repro.serving import Request
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=args.m,
+                             base_embed=params["embed"])
+
+    os.makedirs(RESULTS, exist_ok=True)
+    cache_path = os.path.join(RESULTS, "tree_tuner_calibration.json")
+    capacity = max(128, args.prompt_len + args.max_new + 64)
+    auto_states, rep = tuned_tree_states(
+        params, ppd, cfg, m=args.m, batch_size=args.batch,
+        cache_path=cache_path, capacity=capacity, ctx=args.prompt_len,
+        # each calibration point compiles its own decode program, so the
+        # fast path thins the grid as well as the reps
+        calib_sizes=(2, 12, 24, 44) if args.fast else None,
+        reps=3 if args.fast else 5)
+    print(f"tuner [{rep.get('latency_source', '-')}]: "
+          f"split {rep.get('split')} n_total {rep.get('n_total')} "
+          f"(padded {rep.get('n_padded')}), "
+          f"R {rep.get('r_tokens_per_step', 0):.2f} tok/step")
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=args.prompt_len),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+
+    rec_default, out_default = run_engine(
+        params, ppd, cfg, None, reqs, m=args.m, batch=args.batch,
+        capacity=capacity)
+    rec_auto, out_auto = run_engine(
+        params, ppd, cfg, auto_states, reqs, m=args.m, batch=args.batch,
+        capacity=capacity)
+
+    identical = all(np.array_equal(out_default[u], out_auto[u])
+                    for u in out_default)
+    assert identical, "tree families must not change greedy output"
+
+    speedup = rec_auto["tok_s"] / rec_default["tok_s"]
+    print(f"default tree: {rec_default['tok_s']:7.1f} tok/s  "
+          f"accept-len {rec_default['accept_len']:.2f}  "
+          f"{rec_default['forward_passes']} fwd")
+    print(f"auto tree:    {rec_auto['tok_s']:7.1f} tok/s  "
+          f"accept-len {rec_auto['accept_len']:.2f}  "
+          f"{rec_auto['forward_passes']} fwd")
+    print(f"auto / default speedup: {speedup:.2f}x  "
+          f"outputs identical: {identical}")
+
+    out = {
+        "config": cfg.name,
+        "platform": jax.devices()[0].platform,
+        "device": jax.devices()[0].device_kind,
+        "requests": args.requests,
+        "batch": args.batch,
+        "max_new": args.max_new,
+        "tuner": {k: v for k, v in rep.items() if k != "curve"},
+        "calibration_curve": rep.get("curve"),
+        "default": rec_default,
+        "auto": rec_auto,
+        "speedup": speedup,
+        "outputs_identical": identical,
+        "auto_ge_default": rec_auto["tok_s"] >= rec_default["tok_s"],
+    }
+    path = os.path.join(RESULTS, "bench_tree_tuner.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,10 @@ from .dynamic_tree import (PAPER_ACC, amortized_tokens, best_split,
                            build_dynamic_tree, f_tree, marginals,
                            transition_matrix)
 from .prompt_tokens import init_prompt_params, prompt_param_count
+from .tree_tuner import (LatencyCurve, TunedTree, analytic_latency_curve,
+                         calibrate_latency_curve, get_latency_curve,
+                         hardware_best_split, load_tree_states,
+                         save_tree_states, tuned_tree_states)
 from .tree import (TreeSpec, build_buffers, default_chain_spec,
                    mk_default_tree, stack_states)
 from .verify import sample_token, verify_greedy, verify_typical

@@ -1,0 +1,498 @@
+"""Hardware-aware sparse-tree auto-tuning (paper §4.2, the hardware half).
+
+:func:`repro.core.dynamic_tree.best_split` maximizes the analytic
+amortized acceptance R(T) — expected tokens per *step*.  The paper's
+actual objective is tokens per *wall-second* on the device at hand:
+a bigger tree always accepts more tokens per step, but each step also
+costs more, and past the device's idle compute margin the extra nodes
+are pure latency.  This module closes that loop:
+
+* :func:`calibrate_latency_curve` — times the jitted
+  :func:`repro.core.decode.ppd_decode_step` over a grid of padded tree
+  node counts ``N`` on the current device and batch size.  Chain
+  architectures (SSM / RG-LRU) run their dt-masked commit forward
+  *inside* the step, so the measurement covers it automatically.
+* :func:`analytic_latency_curve` — a :mod:`repro.launch.roofline`-based
+  fallback (``max(compute, weight+KV reads)`` per forward) for hosts
+  where wall-clock timing is unavailable or unwanted (CI, dry runs).
+* a JSON cache of calibration curves keyed by
+  ``device kind | config name | batch size | m | attention backend`` so
+  serving restarts skip recalibration (:func:`get_latency_curve`).
+* :func:`hardware_best_split` — searches ``n_total × (n_c, n_p)`` for
+  the split maximizing ``R(T) / C(N)`` (expected tokens per second),
+  where ``N`` is the padded node count the stacked device buffers —
+  and therefore every compiled decode step — actually pay for.
+* :func:`tuned_tree_states` — the engine-facing entry point: returns a
+  ready ``tree_states`` list plus a report dict.  Chain architectures
+  get the default chain family back untuned (their "tree" is a linear
+  chain whose size is fixed by ``m``).
+* :func:`save_tree_states` / :func:`load_tree_states` — file round-trip
+  for ``launch/serve.py --tree file:<path>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .dynamic_tree import (PAPER_ACC, amortized_tokens, build_dynamic_tree,
+                           marginals, optimal_candidate_tree)
+from .tree import Choice, TreeSpec, default_chain_spec
+
+# Padded node counts the calibration harness measures.  The search grid
+# below stays inside [min, max] so the curve interpolates, never
+# extrapolates far.
+DEFAULT_CALIB_SIZES: Tuple[int, ...] = (2, 6, 12, 20, 28, 36, 44)
+# Total node budgets the split search sweeps (paper Fig. 8 range).
+DEFAULT_SEARCH_SIZES: Tuple[int, ...] = (4, 8, 12, 16, 20, 24, 28, 32)
+
+_DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache", "ppd",
+                              "tree_tuner.json")
+
+
+def default_cache_path() -> str:
+    return os.environ.get("PPD_TUNER_CACHE", _DEFAULT_CACHE)
+
+
+# ------------------------------------------------------------ latency curve
+@dataclasses.dataclass
+class LatencyCurve:
+    """Per-step latency as a function of padded tree node count ``N``.
+
+    Piecewise-linear between measured points; linear extrapolation from
+    the edge segments outside the measured range (a flat clamp would
+    make oversized trees look free)."""
+    sizes: List[int]             # sorted padded node counts
+    latency_s: List[float]       # per-step seconds at those sizes
+    source: str                  # "measured" | "analytic"
+    device: str                  # jax device kind ("cpu", "TPU v5e", ...)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __call__(self, n: float) -> float:
+        xs, ys = self.sizes, self.latency_s
+        if len(xs) == 1:
+            return float(ys[0])
+        if n <= xs[0]:
+            slope = (ys[1] - ys[0]) / max(xs[1] - xs[0], 1)
+            return float(max(ys[0] + slope * (n - xs[0]), 1e-9))
+        if n >= xs[-1]:
+            slope = (ys[-1] - ys[-2]) / max(xs[-1] - xs[-2], 1)
+            return float(max(ys[-1] + slope * (n - xs[-1]), 1e-9))
+        return float(np.interp(n, xs, ys))
+
+    def as_dict(self) -> Dict:
+        return {"sizes": list(map(int, self.sizes)),
+                "latency_s": list(map(float, self.latency_s)),
+                "source": self.source, "device": self.device,
+                "meta": self.meta}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "LatencyCurve":
+        return cls(sizes=list(d["sizes"]), latency_s=list(d["latency_s"]),
+                   source=d["source"], device=d.get("device", "?"),
+                   meta=d.get("meta", {}))
+
+
+def _device_kind() -> str:
+    try:
+        import jax
+        return jax.devices()[0].device_kind
+    except Exception:                                   # pragma: no cover
+        return "unknown"
+
+
+def curve_cache_key(cfg, batch_size: int, m: int, attn_backend=None,
+                    device_kind: Optional[str] = None,
+                    source: str = "measured",
+                    capacity: Optional[int] = None,
+                    ctx: Optional[int] = None) -> str:
+    """Calibration curves transfer across none of these: a different
+    device, config, batch size, m, or attention backend is a different
+    step program with a different latency.  ``source`` is part of the
+    key so a cached analytic curve never silently satisfies a request
+    for wall-clock measurement (or vice versa); ``capacity``/``ctx``
+    (the ring size and prefill length the harness timed against) are
+    included when known because the decode step reads the whole ring —
+    a curve measured on a small cache understates C(N) on a big one."""
+    dk = device_kind or _device_kind()
+    key = (f"{dk}|{cfg.name}|b{batch_size}|m{m}|"
+           f"{attn_backend or 'ref'}|{source}")
+    if capacity is not None:
+        key += f"|cap{capacity}"
+    if ctx is not None:
+        key += f"|ctx{ctx}"
+    return key
+
+
+def load_cached_curve(path: str, key: str) -> Optional[LatencyCurve]:
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return None
+    entry = blob.get("curves", {}).get(key)
+    return LatencyCurve.from_dict(entry) if entry else None
+
+
+def save_curve(path: str, key: str, curve: LatencyCurve) -> None:
+    blob = {"curves": {}}
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+            blob.setdefault("curves", {})
+    except (OSError, ValueError):
+        pass
+    blob["curves"][key] = curve.as_dict()
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(blob, f, indent=1)
+    os.replace(tmp, path)
+
+
+# ------------------------------------------------- measurement tree family
+def measurement_states(n_total: int, m: int,
+                       acc: Optional[np.ndarray] = None) -> List[TreeSpec]:
+    """A tree family whose padded node count is exactly ``n_total``.
+
+    Every state is the same spec (latency depends on the padded shape,
+    not the topology): a realistic ≤ top-10-wide candidate tree of
+    ``n_c ≈ n_total/2`` nodes plus prompt chains distributing the rest,
+    each chain capped at ``m`` (the chain-buffer width)."""
+    acc = PAPER_ACC if acc is None else acc
+    q = marginals(acc)
+    n_total = max(int(n_total), 2)
+    n_c = max(min(n_total // 2, 10 * min(m, q.shape[0])), 1)
+    cands = optimal_candidate_tree(n_c, min(m, q.shape[0]), q)
+    n_c = len(cands)
+    budget = n_total - 1 - n_c                  # chain tokens to place
+    chains: Dict[Choice, int] = {}
+    for node in [()] + list(cands):
+        if budget <= 0:
+            break
+        take = min(m, budget)
+        chains[node] = take
+        budget -= take
+    if not chains:
+        chains = {(): 1}
+    spec = TreeSpec(candidates=cands, prompt_chains=chains)
+    # trim the root chain so n_nodes lands on n_total (chain length stays
+    # in [1, m] — the stacked chain buffers are m wide)
+    drift = spec.n_nodes - n_total
+    if drift and () in chains:
+        chains[()] = int(np.clip(chains[()] - drift, 1, m))
+    return [TreeSpec(candidates=cands, prompt_chains=dict(chains))
+            for _ in range(m + 1)]
+
+
+# ------------------------------------------------------------- measurement
+def _prefill_state(params, cfg, *, batch_size, capacity, ctx,
+                   attn_backend=None):
+    """One prefilled (cache, first-token) pair for the timing harness —
+    tree-family independent, so calibration prefills once per grid."""
+    import jax.numpy as jnp
+
+    from repro.models import forward, init_cache
+
+    cache = init_cache(cfg, batch_size, capacity)
+    if cfg.modality == "audio":
+        tok = jnp.zeros((batch_size, ctx, cfg.n_codebooks), jnp.int32)
+    else:
+        tok = jnp.zeros((batch_size, ctx), jnp.int32)
+    logits, cache, _, _ = forward(params, cfg, tok, cache=cache,
+                                  moe_exact=True, attn_backend=attn_backend)
+    first = jnp.argmax(logits[:, -1], axis=-1)
+    return cache, first
+
+
+def time_step(params, ppd_params, cfg, states: Sequence[TreeSpec], *,
+              batch_size: int = 1, m: int = 3, capacity: int = 256,
+              ctx: int = 64, reps: int = 5, attn_backend=None,
+              prefilled=None) -> float:
+    """Median wall seconds of one jitted ``ppd_decode_step`` with the
+    given tree family, after compilation and one warmup call.  Chain
+    architectures include their commit forward (it runs inside the
+    step).  ``prefilled`` is an optional (cache, first) pair from
+    :func:`_prefill_state` so callers timing several families can pay
+    the prefill once."""
+    import jax
+
+    from .decode import device_buffers, init_ppd_state, ppd_decode_step
+
+    bufs = device_buffers(list(states), m)
+    if prefilled is None:
+        prefilled = _prefill_state(params, cfg, batch_size=batch_size,
+                                   capacity=capacity, ctx=ctx,
+                                   attn_backend=attn_backend)
+    cache, first = prefilled
+    st = init_ppd_state(cfg, cache, first, m,
+                        kmax=bufs.get("_kmax", 10))
+    step = jax.jit(lambda s: ppd_decode_step(
+        params, ppd_params, cfg, bufs, s, m=m, attn_backend=attn_backend))
+    warm, _ = step(st)                                   # compile
+    jax.block_until_ready(warm.root_token)
+    out, _ = step(st)                                    # warmup run
+    jax.block_until_ready(out.root_token)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out, _ = step(st)
+        jax.block_until_ready(out.root_token)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def calibrate_latency_curve(params, ppd_params, cfg, *, batch_size: int = 1,
+                            m: int = 3, sizes: Sequence[int] = None,
+                            capacity: int = 256, ctx: int = 64,
+                            reps: int = 5, attn_backend=None,
+                            acc: Optional[np.ndarray] = None
+                            ) -> LatencyCurve:
+    """Measure the per-step latency curve C(N) on the current device."""
+    sizes = tuple(sorted(set(int(s) for s in
+                             (sizes or DEFAULT_CALIB_SIZES))))
+    prefilled = _prefill_state(params, cfg, batch_size=batch_size,
+                               capacity=capacity, ctx=ctx,
+                               attn_backend=attn_backend)
+    pts = []
+    for n in sizes:
+        states = measurement_states(n, m, acc)
+        n_pad = max(s.n_nodes for s in states)
+        lat = time_step(params, ppd_params, cfg, states,
+                        batch_size=batch_size, m=m, capacity=capacity,
+                        ctx=ctx, reps=reps, attn_backend=attn_backend,
+                        prefilled=prefilled)
+        pts.append((n_pad, lat))
+    # dedupe (keep the min latency per size) and sort
+    by_n: Dict[int, float] = {}
+    for n, lat in pts:
+        by_n[n] = min(by_n.get(n, lat), lat)
+    xs = sorted(by_n)
+    return LatencyCurve(sizes=xs, latency_s=[by_n[n] for n in xs],
+                        source="measured", device=_device_kind(),
+                        meta={"batch_size": batch_size, "m": m, "ctx": ctx,
+                              "reps": reps, "config": cfg.name,
+                              "attn_backend": attn_backend or "ref"})
+
+
+# ------------------------------------------------------- analytic fallback
+def analytic_step_latency(cfg, n_tree: int, *, batch_size: int = 1,
+                          ctx: int = 2048, chips: int = 1) -> float:
+    """Roofline forward-latency model: ``max(compute, weight + KV
+    reads)`` with the :mod:`repro.launch.roofline` device constants,
+    plus a fixed step-launch overhead.  Chain architectures pay the
+    commit forward on top (a second tree-sized pass)."""
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+    from repro.models.config import active_param_count
+
+    from .decode import is_chain_arch
+
+    n_active = active_param_count(cfg)
+    flops = 2.0 * n_active * n_tree * batch_size
+    weight_bytes = 2.0 * n_active                     # bf16 weights
+    kv_bytes = (2.0 * ctx * cfg.n_layers
+                * max(cfg.n_kv_heads * cfg.head_dim, 1) * 2 * batch_size)
+    t = max(flops / (chips * PEAK_FLOPS),
+            (weight_bytes + kv_bytes) / (chips * HBM_BW)) + 6e-6
+    if is_chain_arch(cfg):
+        t *= 2.0
+    return t
+
+
+def analytic_latency_curve(cfg, *, batch_size: int = 1,
+                           sizes: Sequence[int] = None, ctx: int = 2048,
+                           chips: int = 1) -> LatencyCurve:
+    sizes = tuple(sorted(set(int(s) for s in
+                             (sizes or DEFAULT_CALIB_SIZES))))
+    lats = [analytic_step_latency(cfg, n, batch_size=batch_size, ctx=ctx,
+                                  chips=chips) for n in sizes]
+    return LatencyCurve(sizes=list(sizes), latency_s=lats,
+                        source="analytic", device=_device_kind(),
+                        meta={"batch_size": batch_size, "ctx": ctx,
+                              "chips": chips, "config": cfg.name})
+
+
+def get_latency_curve(params, ppd_params, cfg, *, batch_size: int = 1,
+                      m: int = 3, attn_backend=None,
+                      cache_path: Optional[str] = None,
+                      measure: bool = True,
+                      sizes: Sequence[int] = None,
+                      capacity: int = 256, ctx: int = 64,
+                      reps: int = 5) -> LatencyCurve:
+    """Cached-calibration front door: load the curve for this
+    (device, config, batch, m, backend) key, else calibrate (measured
+    when ``measure`` and params are given, analytic otherwise) and
+    cache it."""
+    path = cache_path or default_cache_path()
+    want = "measured" if (measure and params is not None) else "analytic"
+    grid = tuple(sorted(set(int(s) for s in
+                            (sizes or DEFAULT_CALIB_SIZES))))
+    key = curve_cache_key(cfg, batch_size, m, attn_backend, source=want,
+                          capacity=capacity,
+                          ctx=ctx if want == "measured" else None)
+    # the grid is part of the key: a coarse 2-point curve must not
+    # silently satisfy a later request for a finer one
+    key += "|g" + ",".join(map(str, grid))
+    cached = load_cached_curve(path, key)
+    if cached is not None:
+        return cached
+    if want == "measured":
+        curve = calibrate_latency_curve(
+            params, ppd_params, cfg, batch_size=batch_size, m=m,
+            sizes=sizes, capacity=capacity, ctx=ctx, reps=reps,
+            attn_backend=attn_backend)
+    else:
+        # the decode step reads the whole ring every step, so the KV term
+        # of the roofline model is sized by the serving ring capacity
+        curve = analytic_latency_curve(cfg, batch_size=batch_size,
+                                       sizes=sizes, ctx=capacity)
+    save_curve(path, key, curve)
+    return curve
+
+
+# ------------------------------------------------------------- the search
+@dataclasses.dataclass
+class TunedTree:
+    states: List[TreeSpec]
+    split: Tuple[int, int]       # (n_c, n_p)
+    n_total: int
+    n_padded: int                # what the compiled step pays for
+    r_tokens_per_step: float
+    latency_s: float             # C(n_padded)
+    tokens_per_s: float          # R / C — the objective
+    source: str                  # latency-curve provenance
+
+    def report(self) -> Dict:
+        return {"split": list(self.split), "n_total": self.n_total,
+                "n_padded": self.n_padded,
+                "r_tokens_per_step": self.r_tokens_per_step,
+                "step_latency_s": self.latency_s,
+                "pred_tokens_per_s": self.tokens_per_s,
+                "latency_source": self.source}
+
+
+def hardware_best_split(m: int, acc: np.ndarray,
+                        latency: Callable[[float], float], *,
+                        sizes: Sequence[int] = None,
+                        source: str = "?") -> TunedTree:
+    """Search ``n_total × (n_c, n_p)`` for max R(T)/C(N) — expected
+    tokens per wall-second, not per step.
+
+    ``latency`` maps a padded node count to seconds (a
+    :class:`LatencyCurve` or any callable).  R(T) is evaluated on the
+    family's steady state (Prop 4.4); C on the *padded* node count of
+    the stacked buffers, which is what the jitted step executes for
+    every state."""
+    sizes = tuple(sizes or DEFAULT_SEARCH_SIZES)
+    best: Optional[TunedTree] = None
+    if isinstance(latency, LatencyCurve):
+        source = latency.source
+    for n_total in sizes:
+        for n_c in range(1, n_total):
+            states = build_dynamic_tree(n_c, n_total - n_c, m, acc)
+            r, _ = amortized_tokens(states, acc)
+            n_pad = max(s.n_nodes for s in states)
+            c = max(float(latency(n_pad)), 1e-12)
+            rate = r / c
+            if best is None or rate > best.tokens_per_s:
+                best = TunedTree(states=states, split=(n_c, n_total - n_c),
+                                 n_total=n_total, n_padded=n_pad,
+                                 r_tokens_per_step=r, latency_s=c,
+                                 tokens_per_s=rate, source=source)
+    assert best is not None, "empty search grid"
+    return best
+
+
+def _extend_acc(acc: np.ndarray, m: int) -> np.ndarray:
+    """Pad the calibration to ``m`` distances when the measured table is
+    shorter (geometric decay of the last row — guesses further out are
+    strictly harder)."""
+    if acc.shape[0] >= m:
+        return acc
+    rows = [acc]
+    last = acc[-1]
+    for i in range(m - acc.shape[0]):
+        last = last * 0.6
+        rows.append(last[None])
+    return np.concatenate(rows, axis=0)
+
+
+def tuned_tree_states(params, ppd_params, cfg, *, m: int = 3,
+                      batch_size: int = 1, acc: Optional[np.ndarray] = None,
+                      attn_backend=None, cache_path: Optional[str] = None,
+                      measure: bool = True,
+                      search_sizes: Sequence[int] = None,
+                      calib_sizes: Sequence[int] = None,
+                      capacity: int = 256, ctx: int = 64,
+                      reps: int = 5) -> Tuple[List[TreeSpec], Dict]:
+    """Engine-facing auto-tuner: returns ``(tree_states, report)``.
+
+    Calibrates (or loads the cached) per-device latency curve, then runs
+    :func:`hardware_best_split`.  Chain architectures (SSM / RG-LRU) get
+    the default chain family back — a linear chain has no (n_c, n_p)
+    split to tune; its node count is pinned by ``m``."""
+    from .decode import is_chain_arch
+
+    if is_chain_arch(cfg):
+        states = [default_chain_spec(max(k, 1), m) for k in range(m + 1)]
+        return states, {"tuned": False,
+                        "reason": "chain architecture: tree is a linear "
+                                  "chain of size fixed by m"}
+    acc = _extend_acc(PAPER_ACC if acc is None else np.asarray(acc), m)
+    curve = get_latency_curve(params, ppd_params, cfg,
+                              batch_size=batch_size, m=m,
+                              attn_backend=attn_backend,
+                              cache_path=cache_path, measure=measure,
+                              sizes=calib_sizes, capacity=capacity,
+                              ctx=ctx, reps=reps)
+    best = hardware_best_split(m, acc, curve, sizes=search_sizes)
+    report = dict(best.report(), tuned=True,
+                  device=curve.device,
+                  curve={"sizes": curve.sizes,
+                         "latency_s": curve.latency_s})
+    return best.states, report
+
+
+# ------------------------------------------------------ file round-trip
+def tree_states_to_json(states: Sequence[TreeSpec],
+                        meta: Optional[Dict] = None) -> Dict:
+    return {
+        "meta": meta or {},
+        "states": [{
+            "candidates": [list(c) for c in s.candidates],
+            "prompt_chains": [[list(k), int(v)]
+                              for k, v in s.prompt_chains.items()],
+            "n_ept": s.n_ept,
+        } for s in states],
+    }
+
+
+def tree_states_from_json(obj: Dict) -> List[TreeSpec]:
+    out = []
+    for s in obj["states"]:
+        cands = [tuple(c) for c in s["candidates"]]
+        chains = {tuple(k): int(v) for k, v in s["prompt_chains"]}
+        out.append(TreeSpec(candidates=cands, prompt_chains=chains,
+                            n_ept=int(s.get("n_ept", 1))))
+    return out
+
+
+def save_tree_states(path: str, states: Sequence[TreeSpec],
+                     meta: Optional[Dict] = None) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(tree_states_to_json(states, meta), f, indent=1)
+
+
+def load_tree_states(path: str) -> Tuple[List[TreeSpec], Dict]:
+    with open(path) as f:
+        obj = json.load(f)
+    return tree_states_from_json(obj), obj.get("meta", {})

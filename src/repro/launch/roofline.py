@@ -30,34 +30,64 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
+def _one_shape_bytes(dt: str, dims: str) -> int:
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
 def _shape_bytes(shape_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+    return sum(_one_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(shape_str))
+
+
+def _start_output_bytes(shape_str: str) -> int:
+    """Bytes of the OUTPUT element(s) of an async ``*-start`` op.
+
+    Async collective starts return a tuple ``(operand(s)..., output(s)...,
+    [context...])`` — summing the whole tuple double-counts every byte
+    (input + output).  Trailing context fields (scalar ``u32[]``/``s32[]``
+    sync tokens, as printed by collective-permute-start) are stripped
+    first; the output shapes are then the second half of the remaining
+    operand/output pairs — with a single operand, simply the second
+    element."""
+    shapes = _SHAPE_RE.findall(shape_str)
+    while len(shapes) > 2 and shapes[-1][0] in ("u32", "s32") \
+            and not shapes[-1][1]:
+        shapes = shapes[:-1]
+    if len(shapes) < 2:
+        return _shape_bytes(shape_str)
+    return sum(_one_shape_bytes(dt, dims)
+               for dt, dims in shapes[len(shapes) // 2:])
 
 
 def collective_bytes(hlo_text: str) -> dict:
-    """Sum result bytes per collective kind over the HLO module text."""
+    """Sum result bytes per collective kind over the HLO module text.
+
+    Sync collectives count their full result shape.  Async pairs count
+    the ``*-start`` op's output element only (see
+    :func:`_start_output_bytes`); the matching ``*-done`` op is skipped —
+    it returns the same buffer and would double-count the transfer."""
     out = {k: 0 for k in _COLLECTIVES}
     out["count"] = 0
     for line in hlo_text.splitlines():
         ls = line.strip()
         m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=(]+?)\s*"
                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
-                     r"collective-permute)(-start)?\(", ls)
+                     r"collective-permute)(-start|-done)?\(", ls)
         if not m:
             continue
-        shape_str, kind, start = m.group(1), m.group(2), m.group(3)
-        if "-done" in ls.split("(")[0]:
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
             continue
-        out[kind] += _shape_bytes(shape_str)
+        if suffix == "-start":
+            out[kind] += _start_output_bytes(shape_str)
+        else:
+            out[kind] += _shape_bytes(shape_str)
         out["count"] += 1
     return out
 

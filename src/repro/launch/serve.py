@@ -13,8 +13,15 @@ per-request TTFT / TPOT / goodput are reported.  ``--arrival-rate``
 replays a Poisson arrival trace; ``--admission sjf`` switches the
 admission policy to shortest-job-first.
 
+``--tree`` selects the PPD sparse-tree family: ``default`` (hand-built),
+``auto`` (the §4.2 hardware-aware auto-tuner — calibrate or load cached
+per-device step latencies, then pick the split maximizing expected
+tokens per wall-second), or ``file:<path>`` (a saved family).  Greedy
+outputs are identical under every tree; only the speed changes.
+
 Usage:
   python -m repro.launch.serve --arch granite-3-2b --smoke --requests 8
+  python -m repro.launch.serve --arch granite-3-2b --smoke --tree auto
   python -m repro.launch.serve --arch granite-3-2b --smoke --continuous \
       --arrival-rate 4 --baseline vanilla
   python -m repro.launch.serve --arch deepseek-v3-671b --production
@@ -36,6 +43,19 @@ def main():
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--m", type=int, default=3)
+    ap.add_argument("--tree", default="default",
+                    help="PPD tree family: 'default' (hand-built), 'auto' "
+                         "(hardware-aware auto-tuner: calibrate or load "
+                         "cached per-device step latencies and pick the "
+                         "R(T)/C(N)-max split), or 'file:<path>' (a family "
+                         "saved with core.tree_tuner.save_tree_states)")
+    ap.add_argument("--tree-cache", default="",
+                    help="calibration-curve cache path for --tree auto "
+                         "(default: $PPD_TUNER_CACHE or "
+                         "~/.cache/ppd/tree_tuner.json)")
+    ap.add_argument("--tree-analytic", action="store_true",
+                    help="--tree auto: skip wall-clock calibration and use "
+                         "the roofline analytic latency model")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--attn-backend", choices=["ref", "pallas"],
                     default="ref",
@@ -63,6 +83,13 @@ def main():
     ap.add_argument("--shape", default="decode_32k",
                     choices=["prefill_32k", "decode_32k", "long_500k"])
     args = ap.parse_args()
+    if args.tree != "default" and args.tree != "auto" \
+            and not args.tree.startswith("file:"):
+        ap.error(f"--tree must be default, auto, or file:<path>; "
+                 f"got {args.tree!r}")
+    if args.tree.startswith("file:") \
+            and not os.path.exists(args.tree[len("file:"):]):
+        ap.error(f"--tree file not found: {args.tree[len('file:'):]}")
 
     if args.production:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -101,13 +128,40 @@ def main():
         ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=args.m,
                                  base_embed=params["embed"])
 
+    lens = [args.max_new * ([1, 2, 4][i % 3] if args.mixed_lens else 1)
+            for i in range(args.requests)]
+    capacity = max(256, args.prompt_len + max(lens) + 64)
+
+    tree_states = None
+    if args.tree == "auto":
+        from repro.core.tree_tuner import tuned_tree_states
+        # calibrate against the step the engine will actually run: the
+        # serving ring capacity and a prompt-length context
+        tree_states, rep = tuned_tree_states(
+            params, ppd, cfg, m=args.m, batch_size=args.batch,
+            attn_backend=args.attn_backend,
+            cache_path=args.tree_cache or None,
+            measure=not args.tree_analytic,
+            capacity=capacity, ctx=args.prompt_len)
+        if rep.get("tuned"):
+            print(f"tree auto-tuner [{rep['latency_source']}, "
+                  f"{rep['device']}]: split (n_c,n_p)={tuple(rep['split'])}"
+                  f" n_total={rep['n_total']} (padded {rep['n_padded']}), "
+                  f"R={rep['r_tokens_per_step']:.2f} tok/step, "
+                  f"C={rep['step_latency_s'] * 1e3:.2f} ms/step, "
+                  f"predicted {rep['pred_tokens_per_s']:.1f} tok/s")
+        else:
+            print(f"tree auto-tuner: not tuned ({rep['reason']})")
+    elif args.tree.startswith("file:"):
+        from repro.core.tree_tuner import load_tree_states
+        tree_states, meta = load_tree_states(args.tree[len("file:"):])
+        print(f"loaded {len(tree_states)} tree states from "
+              f"{args.tree[len('file:'):]} ({meta})")
+
     pipe = DataPipeline(cfg.vocab_size, args.prompt_len, args.batch,
                         n_codebooks=(cfg.n_codebooks
                                      if cfg.modality == "audio" else 0))
     prompts = pipe.val_prompts(args.requests, args.prompt_len)
-    lens = [args.max_new * ([1, 2, 4][i % 3] if args.mixed_lens else 1)
-            for i in range(args.requests)]
-    capacity = max(256, args.prompt_len + max(lens) + 64)
     reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
             for i in range(args.requests)]
     if args.continuous and args.arrival_rate > 0:
@@ -115,14 +169,16 @@ def main():
 
     if args.continuous:
         eng = ContinuousPPDEngine(params, ppd, cfg, m=args.m,
+                                  tree_states=tree_states,
                                   batch_size=args.batch, capacity=capacity,
                                   temperature=args.temperature,
                                   admission=args.admission,
                                   prefill_bucket=args.prefill_bucket,
                                   attn_backend=args.attn_backend)
     else:
-        eng = PPDEngine(params, ppd, cfg, m=args.m, batch_size=args.batch,
-                        capacity=capacity, temperature=args.temperature,
+        eng = PPDEngine(params, ppd, cfg, m=args.m, tree_states=tree_states,
+                        batch_size=args.batch, capacity=capacity,
+                        temperature=args.temperature,
                         attn_backend=args.attn_backend)
     for r in reqs:
         eng.add_request(r)

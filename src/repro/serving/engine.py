@@ -66,10 +66,42 @@ def aggregate_metrics(results: List["Result"], makespan_s: float) -> dict:
     }
 
 
-def _pack(requests: List[Request], cfg: ModelConfig):
+def check_cache_fits(prompt_len: int, max_new_tokens: int, capacity: int,
+                     uid=None, headroom: int = 0,
+                     prompt_desc: str = "prompt") -> None:
+    """The KV cache is a ring: positions past ``capacity`` silently wrap
+    and overwrite the oldest entries, corrupting output with no error.
+    Reject any request whose prompt + generation budget cannot fit.
+
+    ``headroom`` covers speculative overshoot: a guess-and-verify step
+    can commit up to tree-depth (= m) tokens past the budget on the
+    row's final step before it is marked done.  (Once a row IS done,
+    further scratch-region wraps touch only that row's own, already
+    harvested, ring — harmless.)"""
+    need = prompt_len + max_new_tokens + headroom
+    if need > capacity:
+        who = f"request {uid}: " if uid is not None else ""
+        extra = f" + speculation headroom ({headroom})" if headroom else ""
+        raise ValueError(
+            f"{who}{prompt_desc} ({prompt_len}) + max_new_tokens "
+            f"({max_new_tokens}){extra} = {need} exceeds the KV-cache "
+            f"capacity ({capacity}); the ring cache would wrap and "
+            f"silently corrupt output. Raise the engine's `capacity` or "
+            f"lower the request's budget.")
+
+
+def _pack(requests: List[Request], cfg: ModelConfig, capacity: int,
+          headroom: int = 0):
     """Right-align prompts into one [B,P] batch (audio [B,P,K])."""
     P = max(len(r.prompt) for r in requests)
     rows, starts = [], []
+    for r in requests:
+        # rows are left-padded to the batch max P, so every row's ring
+        # usage is bounded by P + its own budget — re-check at pack time
+        # (the add_request check only saw the row's own prompt length).
+        check_cache_fits(P, r.max_new_tokens, capacity, uid=r.uid,
+                         headroom=headroom,
+                         prompt_desc="batch-padded prompt length")
     for r in requests:
         pad = P - len(r.prompt)
         row = np.pad(np.asarray(r.prompt), ((pad, 0),) +
@@ -87,8 +119,12 @@ class _EngineBase:
         self.attn_backend = attn_backend    # "ref" / "pallas" (None = ref)
         self.queue: List[Request] = []
         self.total_forward_passes = 0   # prefill + decode, all batches
+        self._overshoot = 0     # speculative engines set this to m
 
     def add_request(self, req: Request):
+        check_cache_fits(len(req.prompt), req.max_new_tokens,
+                         self.capacity, uid=req.uid,
+                         headroom=self._overshoot)
         self.queue.append(req)
 
     def run(self) -> List[Result]:
@@ -109,6 +145,7 @@ class PPDEngine(_EngineBase):
                  temperature=0.0, attn_backend=None):
         super().__init__(params, cfg, capacity, batch_size, attn_backend)
         self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
+        self._overshoot = m     # final step may commit up to m extra
         self.temperature = temperature
         if tree_states is None:
             tree_states = ([default_chain_spec(max(k, 1), m)
@@ -125,7 +162,8 @@ class PPDEngine(_EngineBase):
 
     def _run_batch(self, batch: List[Request]) -> List[Result]:
         cfg = self.cfg
-        tokens, starts, P = _pack(batch, cfg)
+        tokens, starts, P = _pack(batch, cfg, self.capacity,
+                                  self._overshoot)
         B = len(batch)
         t0 = time.time()
         offset = t0 - getattr(self, "_clock0", t0)
@@ -199,7 +237,8 @@ class VanillaEngine(_EngineBase):
 
     def _run_batch(self, batch: List[Request]) -> List[Result]:
         cfg = self.cfg
-        tokens, starts, P = _pack(batch, cfg)
+        tokens, starts, P = _pack(batch, cfg, self.capacity,
+                                  self._overshoot)
         B = len(batch)
         t0 = time.time()
         offset = t0 - getattr(self, "_clock0", t0)
@@ -228,12 +267,22 @@ class VanillaEngine(_EngineBase):
 
 
 class MedusaEngine(_EngineBase):
-    def __init__(self, params, heads, cfg, *, m=3, capacity=1024,
-                 batch_size=4, attn_backend=None):
+    def __init__(self, params, heads, cfg, *, m=3, tree_states=None,
+                 capacity=1024, batch_size=4, attn_backend=None):
         super().__init__(params, cfg, capacity, batch_size, attn_backend)
+        from repro.core.tree import TreeSpec
         from repro.models.medusa import medusa_states, medusa_decode_step
         self.heads, self.m = heads, m
-        self.bufs = device_buffers(medusa_states(m), m)
+        self._overshoot = m     # final step may commit up to m extra
+        if tree_states is None:
+            tree_states = medusa_states(m)
+        else:
+            # Medusa has no trained prompt tokens: a tuned PPD family is
+            # reused candidate-topology-only (chains stripped).
+            tree_states = [TreeSpec(candidates=s.candidates,
+                                    prompt_chains={})
+                           for s in tree_states]
+        self.bufs = device_buffers(tree_states, m)
         self._fn = medusa_decode_step
         self._step = jax.jit(lambda st: self._fn(
             self.params, self.heads, self.cfg, self.bufs, st, m=self.m,
@@ -242,7 +291,8 @@ class MedusaEngine(_EngineBase):
     def _run_batch(self, batch: List[Request]) -> List[Result]:
         from repro.models.medusa import medusa_heads
         cfg = self.cfg
-        tokens, starts, P = _pack(batch, cfg)
+        tokens, starts, P = _pack(batch, cfg, self.capacity,
+                                  self._overshoot)
         B = len(batch)
         t0 = time.time()
         offset = t0 - getattr(self, "_clock0", t0)

@@ -56,6 +56,9 @@ class PromptLookupDecoder:
         return ctx[-1:] * g                     # no match: repeat last token
 
     def generate(self, prompt: np.ndarray, max_new_tokens: int = 64):
+        from .engine import check_cache_fits
+        check_cache_fits(len(prompt), max_new_tokens, self.capacity,
+                         headroom=self.gamma)
         prompt_l = [int(t) for t in prompt]
         pj = jnp.asarray(prompt)[None]
         cache = init_cache(self.cfg, 1, self.capacity)

@@ -46,7 +46,7 @@ from repro.models import (forward, init_cache, trim_cache,
                           write_cache_rows)
 from repro.models.config import ModelConfig
 
-from .engine import Request, Result, aggregate_metrics
+from .engine import Request, Result, aggregate_metrics, check_cache_fits
 
 
 def poisson_trace(requests: List[Request], rate_per_s: float,
@@ -105,6 +105,7 @@ class _ContinuousBase:
         # untrimmable recurrent state and always prefill exactly.
         self.prefill_bucket = 0 if is_chain_arch(cfg) else prefill_bucket
         self.queue: List[Request] = []
+        self._overshoot = 0     # PPD engine sets m (final-step commit)
         self.slots = [_Slot() for _ in range(batch_size)]
         self.total_forward_passes = 0   # prefills + decode steps
         self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
@@ -115,6 +116,22 @@ class _ContinuousBase:
 
     # ------------------------------------------------------------ queue
     def add_request(self, req: Request):
+        # bucket-rounded prefills forward the PADDED prompt into the ring
+        # before the tail is trimmed — the padded length must fit too.
+        plen = len(req.prompt)
+        if self.prefill_bucket:
+            padded = plen + (-plen) % self.prefill_bucket
+            if padded > self.capacity:
+                raise ValueError(
+                    f"request {req.uid}: prompt ({plen}) rounds up to "
+                    f"{padded} under prefill_bucket="
+                    f"{self.prefill_bucket}, exceeding the KV-cache "
+                    f"capacity ({self.capacity}); the padded prefill "
+                    f"would wrap the ring and silently corrupt the "
+                    f"prompt. Raise `capacity` or lower the bucket.")
+        # after the trim, a slot's ring usage is its own prompt + budget.
+        check_cache_fits(plen, req.max_new_tokens, self.capacity,
+                         uid=req.uid, headroom=self._overshoot)
         self.queue.append(req)
 
     def _active_mask(self) -> np.ndarray:
@@ -282,6 +299,7 @@ class ContinuousPPDEngine(_ContinuousBase):
         super().__init__(params, cfg, capacity, batch_size, temperature,
                          admission, prefill_bucket, seed, attn_backend)
         self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
+        self._overshoot = m     # final step may commit up to m extra
         if tree_states is None:
             tree_states = ([default_chain_spec(max(k, 1), m)
                             for k in range(m + 1)] if is_chain_arch(cfg)

@@ -33,13 +33,26 @@ from repro.models.config import ModelConfig
 
 @dataclasses.dataclass
 class SpecStats:
+    """Per-generate accounting.  Accepted DRAFT tokens and the per-step
+    bonus token are tracked separately: the paper's acceptance-length
+    metric counts how many *draft proposals* the target verified, and
+    folding the always-free bonus into it overstates the draft's hit
+    rate by exactly 1."""
     target_steps: int = 0
     draft_steps: int = 0
-    tokens: int = 0
+    accepted_draft_tokens: int = 0   # chain prefix the target verified
+    bonus_tokens: int = 0            # target's own argmax, 1 per step
+
+    @property
+    def tokens(self):
+        """Total output tokens produced by verify steps."""
+        return self.accepted_draft_tokens + self.bonus_tokens
 
     @property
     def accept_len(self):
-        return self.tokens / max(self.target_steps, 1)
+        """Paper metric: mean accepted draft tokens per target step
+        (0 <= accept_len <= gamma; excludes the bonus token)."""
+        return self.accepted_draft_tokens / max(self.target_steps, 1)
 
 
 class SpeculativeDecoder:
@@ -47,15 +60,21 @@ class SpeculativeDecoder:
 
     def __init__(self, target_params, target_cfg: ModelConfig,
                  draft_params, draft_cfg: ModelConfig, *, gamma: int = 4,
-                 ppd_params=None, m: int = 3, capacity: int = 512):
+                 ppd_params=None, m: int = 3, tree_states=None,
+                 capacity: int = 512):
         self.tp, self.tcfg = target_params, target_cfg
         self.dp, self.dcfg = draft_params, draft_cfg
         self.gamma, self.capacity = gamma, capacity
         self.ppd, self.m = ppd_params, m
         if ppd_params is not None:
-            states = ([default_chain_spec(max(k, 1), m)
-                       for k in range(m + 1)] if is_chain_arch(draft_cfg)
-                      else mk_default_tree(m))
+            # tree_states: tuned family for the PPD draft (e.g. from
+            # core.tree_tuner.tuned_tree_states on the DRAFT model)
+            states = tree_states
+            if states is None:
+                states = ([default_chain_spec(max(k, 1), m)
+                           for k in range(m + 1)]
+                          if is_chain_arch(draft_cfg)
+                          else mk_default_tree(m))
             self.bufs = device_buffers(states, m)
             self._ppd_step = jax.jit(lambda s: ppd_decode_step(
                 self.dp, self.ppd, self.dcfg, self.bufs, s, m=self.m,
@@ -63,12 +82,18 @@ class SpeculativeDecoder:
         self._draft_step = jax.jit(lambda c, t: vanilla_decode_step(
             self.dp, self.dcfg, c, t))
         self._verify = jax.jit(self._verify_impl)
+        self._catchup = jax.jit(self._catchup_impl)
+        # trace-time counters: each impl body runs once per XLA trace, so
+        # these count compilations (the catch-up must compile exactly
+        # once across all distinct accept lengths 1..gamma+1).
+        self.trace_counts = {"verify": 0, "catchup": 0}
 
     # ---------------------------------------------------------- target side
     def _verify_impl(self, tcache, root, chain):
         """root: [B]; chain: [B,gamma] draft proposals.  Returns
         (new_cache, n_acc [B], out_tokens [B,gamma+1]) where out_tokens
         holds the accepted chain prefix + bonus (rest -1)."""
+        self.trace_counts["verify"] += 1         # runs at trace time only
         B, g = chain.shape
         toks = jnp.concatenate([root[:, None], chain], axis=1)   # [B,g+1]
         pos = tcache["length"][:, None] + jnp.arange(g + 1)
@@ -88,6 +113,25 @@ class SpeculativeDecoder:
         out = jnp.concatenate([out, jnp.full((B, 1), -1)], axis=1)
         out = out.at[jnp.arange(B), n_acc].set(bonus)
         return cache, n_acc, out, bonus
+
+    def _catchup_impl(self, dcache, commit, n_commit):
+        """Draft catch-up at a FIXED [1, gamma+1] shape.
+
+        ``commit`` is the accepted chain prefix + bonus, right-padded
+        with zeros; ``n_commit`` [1] is the real length.  The pad tail is
+        masked out of the commit (``commit_mask``): attention layers
+        scatter only the first ``n_commit`` K/V and advance ``length`` by
+        ``n_commit``; recurrent layers see ``dt = 0`` identities.  One
+        shape -> one compile, instead of one re-trace per distinct
+        ``len(accepted)`` in 1..gamma+1."""
+        self.trace_counts["catchup"] += 1        # runs at trace time only
+        g1 = commit.shape[1]
+        pos = dcache["length"][:, None] + jnp.arange(g1)
+        mask = jnp.arange(g1)[None] < n_commit[:, None]          # [1,g+1]
+        _, dcache, _, _ = forward(self.dp, self.dcfg, commit,
+                                  positions=pos, cache=dcache,
+                                  commit_mask=mask, moe_exact=True)
+        return dcache
 
     # ---------------------------------------------------------- draft side
     def _draft_propose(self, dcache, root, stats: SpecStats):
@@ -117,6 +161,11 @@ class SpeculativeDecoder:
     # ---------------------------------------------------------- main loop
     def generate(self, prompt: np.ndarray, max_new_tokens: int = 64):
         """prompt: [P] ids.  Returns (tokens [<=max_new], SpecStats)."""
+        from .engine import check_cache_fits
+        # both ring caches hold prompt + output; the last verify step can
+        # commit up to gamma tokens past the budget before the loop exits
+        check_cache_fits(len(prompt), max_new_tokens, self.capacity,
+                         headroom=self.gamma)
         stats = SpecStats()
         prompt = jnp.asarray(prompt)[None]
         tcache = init_cache(self.tcfg, 1, self.capacity)
@@ -135,13 +184,14 @@ class SpeculativeDecoder:
             n = int(n_acc[0])
             accepted = [int(x) for x in np.asarray(out[0]) if x >= 0]
             produced.extend(accepted)
-            stats.tokens += len(accepted)
+            stats.accepted_draft_tokens += n         # = len(accepted) - 1
+            stats.bonus_tokens += 1
             # draft catch-up: commit accepted chain prefix + bonus from the
-            # pre-speculation snapshot (correct cache, no stale entries).
-            commit = jnp.asarray(accepted, jnp.int32)[None]
-            pos = d0["length"][:, None] + jnp.arange(len(accepted))
-            _, dcache, _, _ = forward(self.dp, self.dcfg, commit,
-                                      positions=pos, cache=d0,
-                                      moe_exact=True)
+            # pre-speculation snapshot (correct cache, no stale entries) at
+            # a fixed [1, gamma+1] shape (pad + mask -> one compile).
+            commit = np.zeros((1, self.gamma + 1), np.int32)
+            commit[0, :len(accepted)] = accepted
+            dcache = self._catchup(d0, jnp.asarray(commit),
+                                   jnp.asarray([len(accepted)], jnp.int32))
             root = bonus
         return np.asarray(produced[:max_new_tokens]), stats

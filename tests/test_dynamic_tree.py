@@ -96,6 +96,28 @@ def test_dynamic_beats_static_and_random():
         assert r_dyn >= r_rand - 1e-9, (n, r_dyn, r_rand)
 
 
+def test_transition_rows_stochastic_across_splits():
+    """Every (n_c, n_p) split the tuner's search visits must yield a
+    proper stochastic state machine."""
+    for n_c, n_p in ((2, 2), (3, 5), (6, 8), (9, 15)):
+        states = build_dynamic_tree(n_c, n_p, 3, PAPER_ACC)
+        P = transition_matrix(states, PAPER_ACC)
+        np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-9,
+                                   err_msg=f"split ({n_c},{n_p})")
+        assert (P >= 0).all()
+
+
+def test_best_split_monotone_in_budget():
+    """R*(n_total) is non-decreasing: a larger node budget never hurts
+    the analytic acceptance rate.  This backs the hardware-aware tuner's
+    search — R(T)/C(N) trades a monotone numerator against a monotone
+    denominator, so the argmax moves with the device's latency curve."""
+    rs = [best_split(n, 3, PAPER_ACC)[2]
+          for n in (4, 6, 8, 10, 12, 16, 20)]
+    for a, b in zip(rs, rs[1:]):
+        assert b >= a - 1e-9, rs
+
+
 def test_node_accept_probs_are_probabilities():
     q = marginals(PAPER_ACC)
     cands = optimal_candidate_tree(8, 3, q)

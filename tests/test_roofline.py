@@ -1,0 +1,68 @@
+"""Roofline HLO-parsing unit tests (launch/roofline.py).
+
+The async-collective parsing bug these pin down: ``all-*-start`` ops
+report a *tuple* result shape holding both the operand alias and the
+output, so summing the whole tuple double-counts the transfer, and the
+matching ``*-done`` op must be skipped entirely.
+"""
+import numpy as np
+
+from repro.launch.roofline import _shape_bytes, collective_bytes
+
+# A literal HLO module snippet with sync collectives, async start/done
+# pairs, and decoy lines that must not count.
+HLO = """\
+HloModule serve_step
+
+ENTRY %main (p0: f32[8,128]) -> f32[32,128] {
+  %p0 = f32[8,128] parameter(0)
+  %ar = f32[8,128] all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag-start = (f32[8,128], f32[32,128]) all-gather-start(%p0), dimensions={0}
+  %ag-done = f32[32,128] all-gather-done(%ag-start)
+  %cp-start.1 = (bf16[4,64], bf16[4,64], u32[], u32[]) collective-permute-start(%x), source_target_pairs={{0,1}}
+  %cp-done.1 = bf16[4,64] collective-permute-done(%cp-start.1)
+  %rs = f32[2,128] reduce-scatter(%ar), dimensions={0}, to_apply=%add
+  %convert = bf16[8,128] convert(%p0)
+  %all-gather-done-like-name = f32[8,128] add(%p0, %p0)
+  ROOT %out = f32[32,128] copy(%ag-done)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _shape_bytes("(f32[8,128], f32[32,128])") == (8 + 32) * 128 * 4
+    assert _shape_bytes("bf16[4,64]") == 4 * 64 * 2
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_counts_output_only():
+    out = collective_bytes(HLO)
+    # sync ops: full result shape
+    assert out["all-reduce"] == 8 * 128 * 4
+    assert out["reduce-scatter"] == 2 * 128 * 4
+    # async start: the OUTPUT tuple element only — NOT input + output,
+    # and NOT the trailing u32[] context/sync-token fields
+    assert out["all-gather"] == 32 * 128 * 4
+    assert out["collective-permute"] == 4 * 64 * 2
+    # done ops and decoy lines contribute nothing; 4 collectives total
+    assert out["count"] == 4
+    assert out["all-to-all"] == 0
+
+
+def test_done_ops_are_skipped():
+    """A lone *-done line (e.g. when start/done land in different
+    computations of the dumped text) must not count."""
+    out = collective_bytes(
+        "%ag-done = f32[1024] all-gather-done(%ag-start)\n")
+    assert out["count"] == 0
+    assert sum(v for k, v in out.items() if k != "count") == 0
+
+
+def test_start_without_tuple_still_counts():
+    """Some XLA versions print async wrappers with a plain result shape;
+    the full shape is then the output."""
+    out = collective_bytes(
+        "%ar-start = f32[256] all-reduce-start(%p0), to_apply=%add\n")
+    assert out["all-reduce"] == 256 * 4
+    assert out["count"] == 1

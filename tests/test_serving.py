@@ -71,7 +71,30 @@ def test_spec_decode_matches_target_greedy(model):
     van.add_request(Request(uid=0, prompt=prompt, max_new_tokens=16))
     ref = van.run()[0].tokens
     np.testing.assert_array_equal(out, ref)
-    assert stats.accept_len >= 1.0
+    # paper metric: accepted DRAFT tokens per target step, bonus excluded
+    assert 0.0 <= stats.accept_len <= sd.gamma
+    assert stats.bonus_tokens == stats.target_steps
+    assert stats.tokens == stats.accepted_draft_tokens + stats.bonus_tokens
+    # every verify step emits >= 1 token (the bonus), covering the output
+    assert stats.tokens + 1 >= len(out)       # +1: the prefill root token
+
+
+def test_spec_decode_catchup_compiles_once(model):
+    """The draft catch-up runs at a fixed [1, gamma+1] shape: one trace
+    total, not one per distinct accepted length."""
+    params, _ = model
+    dcfg = CFG.replace(name="draft", n_layers=1, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128)
+    dparams = init_params(dcfg, jax.random.PRNGKey(5))
+    sd = SpeculativeDecoder(params, CFG, dparams, dcfg, gamma=3,
+                            capacity=128)
+    prompt = _prompts(1)[0]
+    sd.generate(prompt, max_new_tokens=20)
+    assert sd.trace_counts["catchup"] == 1, sd.trace_counts
+    assert sd.trace_counts["verify"] == 1, sd.trace_counts
+    # a second generate reuses both compiled programs
+    sd.generate(_prompts(2)[1], max_new_tokens=12)
+    assert sd.trace_counts["catchup"] == 1, sd.trace_counts
 
 
 def test_spec_decode_with_ppd_draft_matches(model):
@@ -89,6 +112,59 @@ def test_spec_decode_with_ppd_draft_matches(model):
     van.add_request(Request(uid=0, prompt=prompt, max_new_tokens=16))
     ref = van.run()[0].tokens
     np.testing.assert_array_equal(out, ref)
+
+
+def test_ring_overflow_rejected(model):
+    """A request whose prompt + budget exceeds the ring-cache capacity
+    must fail loudly at add time, not wrap and corrupt output."""
+    params, ppd = model
+    eng = PPDEngine(params, ppd, CFG, m=3, batch_size=2, capacity=32)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.add_request(Request(uid=0, prompt=_prompts(1, plen=20)[0],
+                                max_new_tokens=20))
+    van = VanillaEngine(params, CFG, batch_size=1, capacity=24)
+    with pytest.raises(ValueError, match="ring"):
+        van.add_request(Request(uid=1, prompt=_prompts(1, plen=16)[0],
+                                max_new_tokens=16))
+    # pack-time re-check: a short prompt admitted alone can still overflow
+    # once left-padded to a longer batch-mate's length
+    eng2 = PPDEngine(params, ppd, CFG, m=3, batch_size=2, capacity=45)
+    eng2.add_request(Request(uid=0, prompt=_prompts(1, plen=30)[0],
+                             max_new_tokens=8))         # 30+8+3 fits
+    eng2.add_request(Request(uid=1, prompt=_prompts(1, plen=5)[0],
+                             max_new_tokens=16))        # 5+16+3 fits...
+    with pytest.raises(ValueError, match="capacity"):
+        eng2.run()                                      # ...30+16+3 does not
+
+
+def test_spec_and_pld_overflow_rejected(model):
+    params, _ = model
+    dcfg = CFG.replace(name="draft", n_layers=1, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128)
+    dparams = init_params(dcfg, jax.random.PRNGKey(5))
+    sd = SpeculativeDecoder(params, CFG, dparams, dcfg, gamma=3,
+                            capacity=32)
+    with pytest.raises(ValueError, match="capacity"):
+        sd.generate(_prompts(1, plen=20)[0], max_new_tokens=16)
+    dec = PromptLookupDecoder(params, CFG, gamma=3, capacity=24)
+    with pytest.raises(ValueError, match="ring"):
+        dec.generate(_prompts(1, plen=16)[0], max_new_tokens=16)
+
+
+def test_continuous_overflow_rejected(model):
+    from repro.serving import ContinuousPPDEngine
+    params, ppd = model
+    eng = ContinuousPPDEngine(params, ppd, CFG, m=3, batch_size=2,
+                              capacity=32)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.add_request(Request(uid=0, prompt=_prompts(1, plen=20)[0],
+                                max_new_tokens=20))
+    # a bucket-rounded prefill larger than the ring must also be rejected
+    eng2 = ContinuousPPDEngine(params, ppd, CFG, m=3, batch_size=2,
+                               capacity=64, prefill_bucket=128)
+    with pytest.raises(ValueError, match="prefill_bucket"):
+        eng2.add_request(Request(uid=1, prompt=_prompts(1, plen=10)[0],
+                                 max_new_tokens=8))
 
 
 def test_pld_matches_greedy(model):

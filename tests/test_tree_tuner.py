@@ -1,0 +1,228 @@
+"""Hardware-aware sparse-tree auto-tuner tests (core/tree_tuner.py)."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import init_prompt_params
+from repro.core.dynamic_tree import PAPER_ACC, amortized_tokens, best_split
+from repro.core.tree_tuner import (DEFAULT_CALIB_SIZES, LatencyCurve,
+                                   analytic_latency_curve,
+                                   calibrate_latency_curve, curve_cache_key,
+                                   hardware_best_split, load_cached_curve,
+                                   load_tree_states, measurement_states,
+                                   save_curve, save_tree_states,
+                                   tuned_tree_states)
+from repro.models import init_params
+
+CFG = get_smoke_config("granite-3-2b")
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    return params, ppd
+
+
+# ------------------------------------------------------------ pure pieces
+def test_measurement_states_hit_requested_sizes():
+    for n in DEFAULT_CALIB_SIZES:
+        states = measurement_states(n, 3)
+        assert len(states) == 4
+        pad = max(s.n_nodes for s in states)
+        assert abs(pad - max(n, 3)) <= 1, (n, pad)
+        for s in states:
+            assert all(v <= 3 for v in s.prompt_chains.values())
+
+
+def test_latency_curve_interp_and_extrapolation():
+    c = LatencyCurve(sizes=[10, 20], latency_s=[1e-3, 2e-3],
+                     source="measured", device="cpu")
+    assert c(10) == pytest.approx(1e-3)
+    assert c(15) == pytest.approx(1.5e-3)
+    # linear extrapolation outside the measured range — a flat clamp
+    # would make oversized trees look free
+    assert c(30) == pytest.approx(3e-3)
+    assert c(5) == pytest.approx(0.5e-3)
+    assert c(0) > 0                      # never nonpositive
+
+
+def test_analytic_curve_monotone():
+    c = analytic_latency_curve(CFG, batch_size=2, sizes=(2, 8, 16, 32))
+    assert all(b >= a for a, b in zip(c.latency_s, c.latency_s[1:]))
+    assert c.source == "analytic"
+
+
+def test_hardware_best_split_flat_latency_recovers_best_split():
+    """With a constant C(N) the objective degenerates to max R(T): the
+    tuner must agree with the hardware-independent best_split at the
+    largest budget (R* is monotone in n_total)."""
+    sizes = (8, 16, 24)
+    tuned = hardware_best_split(3, PAPER_ACC, lambda n: 1e-3, sizes=sizes)
+    _, split, r = best_split(24, 3, PAPER_ACC)
+    assert tuned.n_total == 24
+    assert tuned.split == split
+    assert tuned.r_tokens_per_step == pytest.approx(r)
+
+
+def test_hardware_best_split_steep_latency_prefers_small():
+    """Exponential per-node cost must push the argmax to the smallest
+    budget — the hardware-aware half the plain best_split lacks."""
+    tuned = hardware_best_split(3, PAPER_ACC, lambda n: 1e-6 * 4.0 ** n,
+                                sizes=(4, 8, 16, 24))
+    assert tuned.n_total == 4
+
+
+def test_hardware_best_split_is_argmax_over_grid():
+    curve = LatencyCurve(sizes=[4, 40], latency_s=[1e-4, 1.8e-3],
+                         source="measured", device="cpu")
+    sizes = (4, 8, 12, 16)
+    tuned = hardware_best_split(3, PAPER_ACC, curve, sizes=sizes)
+    # brute force the same grid
+    rates = []
+    from repro.core.dynamic_tree import build_dynamic_tree
+    for n_total in sizes:
+        for n_c in range(1, n_total):
+            st = build_dynamic_tree(n_c, n_total - n_c, 3, PAPER_ACC)
+            r, _ = amortized_tokens(st, PAPER_ACC)
+            rates.append(r / curve(max(s.n_nodes for s in st)))
+    assert tuned.tokens_per_s == pytest.approx(max(rates))
+
+
+# ------------------------------------------------------- cache round trip
+def test_curve_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "tuner.json")
+    key = curve_cache_key(CFG, 2, 3, device_kind="testdev")
+    assert load_cached_curve(path, key) is None
+    c = LatencyCurve(sizes=[3, 9], latency_s=[1e-3, 2e-3],
+                     source="measured", device="testdev",
+                     meta={"batch_size": 2})
+    save_curve(path, key, c)
+    back = load_cached_curve(path, key)
+    assert back is not None
+    assert back.sizes == c.sizes
+    assert back.latency_s == c.latency_s
+    assert back.source == "measured"
+    # a second key lands in the same file without clobbering the first
+    key2 = curve_cache_key(CFG, 4, 3, device_kind="testdev")
+    save_curve(path, key2, c)
+    assert load_cached_curve(path, key) is not None
+    with open(path) as f:
+        assert len(json.load(f)["curves"]) == 2
+
+
+def test_curve_cache_source_not_conflated(model, tmp_path):
+    """A cached analytic curve must not satisfy a request for wall-clock
+    measurement (the source is part of the cache key)."""
+    from repro.core.tree_tuner import get_latency_curve
+    params, ppd = model
+    path = str(tmp_path / "t.json")
+    a = get_latency_curve(None, None, CFG, batch_size=1, m=3,
+                          cache_path=path, measure=False)
+    assert a.source == "analytic"
+    b = get_latency_curve(params, ppd, CFG, batch_size=1, m=3,
+                          cache_path=path, measure=True, sizes=(2, 8),
+                          ctx=8, capacity=64, reps=1)
+    assert b.source == "measured"
+    # both now coexist in the cache file
+    assert get_latency_curve(None, None, CFG, batch_size=1, m=3,
+                             cache_path=path,
+                             measure=False).source == "analytic"
+
+
+def test_tree_states_file_roundtrip(tmp_path):
+    states, split, _ = best_split(10, 3, PAPER_ACC)
+    path = str(tmp_path / "tree.json")
+    save_tree_states(path, states, meta={"split": list(split)})
+    back, meta = load_tree_states(path)
+    assert meta["split"] == list(split)
+    assert [s.candidates for s in back] == [s.candidates for s in states]
+    assert [s.prompt_chains for s in back] == \
+        [s.prompt_chains for s in states]
+
+
+# -------------------------------------------------- measured calibration
+def test_calibrate_and_tune_measured(model, tmp_path):
+    """End-to-end measured path: calibrate a 2-point curve, tune, and hit
+    the cache on the second call."""
+    params, ppd = model
+    path = str(tmp_path / "tuner.json")
+    states, rep = tuned_tree_states(params, ppd, CFG, m=3, batch_size=1,
+                                    cache_path=path, reps=1,
+                                    calib_sizes=(2, 12), ctx=8,
+                                    capacity=64, search_sizes=(4, 8))
+    assert rep["tuned"]
+    assert rep["latency_source"] == "measured"
+    assert len(states) == 4
+    assert rep["step_latency_s"] > 0
+    # cached second call (same calibration conditions) returns the same
+    # family without re-measuring
+    states2, rep2 = tuned_tree_states(params, ppd, CFG, m=3, batch_size=1,
+                                      cache_path=path, ctx=8, capacity=64,
+                                      calib_sizes=(2, 12),
+                                      search_sizes=(4, 8))
+    assert [s.candidates for s in states2] == \
+        [s.candidates for s in states]
+    assert rep2["curve"] == rep["curve"]
+
+
+def test_tuned_tree_analytic_no_params(tmp_path):
+    """measure=False needs no model at all (CI / dry-run path)."""
+    states, rep = tuned_tree_states(None, None, CFG, m=3, batch_size=1,
+                                    cache_path=str(tmp_path / "t.json"),
+                                    measure=False, search_sizes=(4, 8, 12))
+    assert rep["tuned"] and rep["latency_source"] == "analytic"
+    assert len(states) == 4
+
+
+def test_chain_arch_returns_untuned_chain_family(tmp_path):
+    from repro.core import is_chain_arch
+    ccfg = get_smoke_config("mamba2-2.7b")
+    assert is_chain_arch(ccfg)
+    states, rep = tuned_tree_states(None, None, ccfg, m=3,
+                                    cache_path=str(tmp_path / "t.json"))
+    assert not rep["tuned"]
+    assert len(states) == 4
+    # linear chains: single spine candidates
+    assert states[3].candidates == [(0,), (0, 0), (0, 0, 0)]
+
+
+# ------------------------------------------- engines accept tuned trees
+def test_tuned_tree_greedy_equivalence(model, tmp_path):
+    """Greedy outputs are tree-shape-independent: a tuned family through
+    the static AND continuous PPD engines must match vanilla."""
+    from repro.serving import (ContinuousPPDEngine, PPDEngine, Request,
+                               VanillaEngine)
+    params, ppd = model
+    states, rep = tuned_tree_states(None, None, CFG, m=3, measure=False,
+                                    cache_path=str(tmp_path / "t.json"),
+                                    search_sizes=(6, 10))
+    # equal-length prompts: the static engines left-pad ragged batches
+    # (pads are attended, identically for ppd and vanilla), while the
+    # continuous engine prefills exact-length — equal lengths make all
+    # three engines' outputs directly comparable.
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, CFG.vocab_size, size=10) for _ in range(3)]
+    engines = {
+        "ppd": PPDEngine(params, ppd, CFG, m=3, tree_states=states,
+                         batch_size=2, capacity=128),
+        "cont": ContinuousPPDEngine(params, ppd, CFG, m=3,
+                                    tree_states=states, batch_size=2,
+                                    capacity=128),
+        "van": VanillaEngine(params, CFG, batch_size=2, capacity=128),
+    }
+    results = {}
+    for name, eng in engines.items():
+        for i, p in enumerate(prompts):
+            eng.add_request(Request(uid=i, prompt=p, max_new_tokens=10))
+        results[name] = {r.uid: r.tokens for r in eng.run()}
+    for uid in results["van"]:
+        np.testing.assert_array_equal(results["ppd"][uid],
+                                      results["van"][uid], f"ppd {uid}")
+        np.testing.assert_array_equal(results["cont"][uid],
+                                      results["van"][uid], f"cont {uid}")
