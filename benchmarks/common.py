@@ -81,7 +81,7 @@ def get_trained(fast: bool = False, n_ept: int = 1, force: bool = False):
 # ------------------------------------------------------------- generation
 def generate_vanilla(params, cfg, prompt, n_new, capacity=512):
     cache = init_cache(cfg, 1, capacity)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache, _, _ = forward(params, cfg, prompt, cache=cache)
     tok = jnp.argmax(logits[:, -1], -1)
     out = [int(tok[0])]
@@ -89,7 +89,7 @@ def generate_vanilla(params, cfg, prompt, n_new, capacity=512):
     while len(out) < n_new:
         cache, tok, _ = step(cache, tok)
         out.append(int(tok[0]))
-    return out, len(out), time.time() - t0
+    return out, len(out), time.perf_counter() - t0
 
 
 def generate_ppd(params, ppd, cfg, prompt, n_new, bufs=None, n_ept=1,
@@ -97,7 +97,7 @@ def generate_ppd(params, ppd, cfg, prompt, n_new, bufs=None, n_ept=1,
     bufs = bufs if bufs is not None else device_buffers(
         mk_default_tree(M, n_ept=n_ept), M, n_ept)
     cache = init_cache(cfg, 1, capacity)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache, _, _ = forward(params, cfg, prompt, cache=cache)
     first = jnp.argmax(logits[:, -1], -1)
     st = init_ppd_state(cfg, cache, first, M, n_ept,
@@ -115,7 +115,7 @@ def generate_ppd(params, ppd, cfg, prompt, n_new, bufs=None, n_ept=1,
             if t >= 0:
                 out.append(int(t))
         out.append(int(np.asarray(st.root_token)[0]))
-    return out[:n_new], steps, time.time() - t0
+    return out[:n_new], steps, time.perf_counter() - t0
 
 
 def generate_medusa(params, heads, cfg, prompt, n_new, capacity=512):
@@ -123,7 +123,7 @@ def generate_medusa(params, heads, cfg, prompt, n_new, capacity=512):
                                      medusa_states)
     bufs = device_buffers(medusa_states(M), M)
     cache = init_cache(cfg, 1, capacity)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache, _, _, hidden = forward(params, cfg, prompt, cache=cache,
                                           return_hidden=True)
     first = jnp.argmax(logits[:, -1], -1)
@@ -141,7 +141,7 @@ def generate_medusa(params, heads, cfg, prompt, n_new, capacity=512):
             if t >= 0:
                 out.append(int(t))
         out.append(int(np.asarray(st.root_token)[0]))
-    return out[:n_new], steps, time.time() - t0
+    return out[:n_new], steps, time.perf_counter() - t0
 
 
 def measure_acc_curve(params, guess_fn, cfg, pipe, m=M, n_prompts=8,

@@ -60,16 +60,16 @@ def run(fast: bool = False):
                 o, s, w = generate_medusa(params, heads, cfg, p, n_new)
             elif name == "pld":
                 dec = PromptLookupDecoder(params, cfg, gamma=4)
-                t0 = time.time()
+                t0 = time.perf_counter()
                 o, s = dec.generate(prompts[i], n_new)
-                w = time.time() - t0
+                w = time.perf_counter() - t0
                 o = [int(x) for x in o]
             else:
                 sd = SpeculativeDecoder(params, cfg, dparams, dcfg,
                                         gamma=4)
-                t0 = time.time()
+                t0 = time.perf_counter()
                 o, st = sd.generate(prompts[i], n_new)
-                w = time.time() - t0
+                w = time.perf_counter() - t0
                 s = st.target_steps + 1
                 o = [int(x) for x in o]
             outs.append(list(o))

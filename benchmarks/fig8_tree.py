@@ -57,10 +57,10 @@ def measure_l_fp(params, ppd, cfg, states, reps=6, ctx=128):
     jax.block_until_ready(st2.root_token)
     ts = []
     for _ in range(reps):
-        t0 = time.time()
+        t0 = time.perf_counter()
         out, _ = step(st)
         jax.block_until_ready(out.root_token)
-        ts.append(time.time() - t0)
+        ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 
 

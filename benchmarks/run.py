@@ -37,10 +37,10 @@ def main() -> None:
         if name not in only:
             continue
         print(f"=== {name} ===", flush=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mods[name].run(fast=args.fast)
-            print(f"=== {name} done in {time.time() - t0:.0f}s ===",
+            print(f"=== {name} done in {time.perf_counter() - t0:.0f}s ===",
                   flush=True)
         except Exception:
             failures.append(name)

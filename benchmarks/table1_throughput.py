@@ -110,9 +110,9 @@ def run_serving(fast: bool = False):
                                       batch_size=slots, capacity=capacity)
         for r in reqs:
             eng.add_request(r)
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = eng.run()
-        makespan = time.time() - t0
+        makespan = time.perf_counter() - t0
         agg = (eng.metrics(res) if mode == "continuous"
                else aggregate_metrics(res, makespan))
         rows[mode] = dict(

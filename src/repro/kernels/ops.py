@@ -48,7 +48,24 @@ def tree_decode_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree,
                           blk_s: int = 256, use_kernel: bool = True,
                           interpret: bool | None = None, scale=None,
                           softcap: float = 0.0, q2=None, k2_cache=None,
-                          k2_tree=None):
+                          k2_tree=None, block_tables=None):
+    """``block_tables`` ([B, MB] int32, -1 unallocated) switches the cache
+    operands to paged pools: K/V [NB, bs, Hkv, D(v)] while ``kv_pos`` is
+    the *gathered* per-sequence view [B, MB*bs].  The kernel block size is
+    then the pool block size ``bs`` and the S-loop loads block ``s`` of
+    sequence ``b`` via the prefetched table (see
+    :mod:`repro.models.paged_cache`)."""
+    if block_tables is not None:
+        if not use_kernel:
+            raise ValueError("paged tree_decode_attention requires the "
+                             "kernel path (use_kernel=True)")
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return tree_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree,
+                              q_pos, tree_mask, window=window,
+                              blk_s=k_cache.shape[1], interpret=interp,
+                              scale=scale, softcap=softcap, q2=q2,
+                              k2_cache=k2_cache, k2_tree=k2_tree,
+                              block_tables=block_tables)
     if not use_kernel:
         return tree_attention_ref(q, k_cache, v_cache, kv_pos, k_tree,
                                   v_tree, q_pos, tree_mask, window=window,

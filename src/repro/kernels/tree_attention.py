@@ -128,71 +128,125 @@ def tree_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree, q_pos,
                    tree_mask, *, window: int = 0, blk_s: int = 256,
                    interpret: bool = True, scale: float | None = None,
                    softcap: float = 0.0, q2=None, k2_cache=None,
-                   k2_tree=None):
+                   k2_tree=None, block_tables=None):
     """Shapes as in :func:`repro.kernels.ref.tree_attention_ref`.
 
     ``q2``/``k2_cache``/``k2_tree`` (all-or-none) add a second score stream
     ``q2 @ k2`` to the logits (MLA-absorb decode); ``scale`` overrides the
     default ``D ** -0.5`` (required when the score is a two-stream sum).
+
+    ``block_tables`` ([B, MB] int32, -1 unallocated) switches to the paged
+    layout: cache K/V arrive as pools [NB, bs, Hkv, D(v)] with
+    ``bs == blk_s``, ``kv_pos`` is the gathered per-sequence view
+    [B, MB*bs], and the table rides in as a scalar-prefetch operand so the
+    S-loop's K/V BlockSpec index maps resolve grid step ``s`` of batch row
+    ``b`` to pool block ``bt[b, s]`` — the HBM loads themselves are
+    block-indexed; nothing dense is ever gathered.  Unallocated entries
+    clamp to block 0 and are killed by their -1 positions (and usually
+    skipped outright by the block-level relevance check).
     """
     B, T, H, D = q.shape
-    S = k_cache.shape[1]
+    paged = block_tables is not None
     Hkv = k_cache.shape[2]
     Dv = v_cache.shape[-1]
     G = H // Hkv
     scale = D ** -0.5 if scale is None else scale
-    blk_s = min(blk_s, S)
-    assert S % blk_s == 0, (S, blk_s)
-    ns = S // blk_s
+    if paged:
+        bs = k_cache.shape[1]
+        assert blk_s == bs, (blk_s, bs)
+        ns = block_tables.shape[1]                    # MB blocks / sequence
+        assert kv_pos.shape == (B, ns * bs), (kv_pos.shape, ns, bs)
+    else:
+        S = k_cache.shape[1]
+        blk_s = min(blk_s, S)
+        assert S % blk_s == 0, (S, blk_s)
+        ns = S // blk_s
     two_stream = q2 is not None
     assert two_stream == (k2_cache is not None) == (k2_tree is not None)
 
     q5 = q.reshape(B, T, Hkv, G, D)
     grid = (B, Hkv, ns + 1)
 
+    # In paged mode every index map takes a trailing scalar-prefetch ref
+    # (the block table); `sblk` maps grid step s to the cache block to
+    # load — per-sequence pool block in paged mode, row-local block
+    # otherwise.  The s == ns (tree-tail) step clamps into range; its
+    # loads are unused.
+    if paged:
+        def fix(idx_fn):
+            return lambda b, h, s, bt: idx_fn(b, h, s)
+
+        def sblk(b, h, s, bt, _ns=ns):
+            return jnp.maximum(bt[b, jnp.minimum(s, _ns - 1)], 0)
+    else:
+        def fix(idx_fn):
+            return idx_fn
+
+        def sblk(b, h, s, _ns=ns):
+            return b, jnp.minimum(s, _ns - 1)
+
+    if paged:
+        def kmap(b, h, s, bt):
+            return sblk(b, h, s, bt), 0, h, 0
+    else:
+        def kmap(b, h, s):
+            row, blk = sblk(b, h, s)
+            return row, blk, h, 0
+
     in_specs = [
-        pl.BlockSpec((1, T), lambda b, h, s: (b, 0)),                 # qpos
+        pl.BlockSpec((1, T), fix(lambda b, h, s: (b, 0))),            # qpos
         pl.BlockSpec((1, blk_s),
-                     lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1))),
-        pl.BlockSpec((1, T, T), lambda b, h, s: (b, 0, 0)),           # tmask
-        pl.BlockSpec((1, T, 1, G, D), lambda b, h, s: (b, 0, h, 0, 0)),
-        pl.BlockSpec((1, blk_s, 1, D),
-                     lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
-                                              h, 0)),
-        pl.BlockSpec((1, blk_s, 1, Dv),
-                     lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
-                                              h, 0)),
-        pl.BlockSpec((1, T, 1, D), lambda b, h, s: (b, 0, h, 0)),     # ktree
-        pl.BlockSpec((1, T, 1, Dv), lambda b, h, s: (b, 0, h, 0)),    # vtree
+                     fix(lambda b, h, s, _ns=ns:
+                         (b, jnp.minimum(s, _ns - 1)))),              # kpos
+        pl.BlockSpec((1, T, T), fix(lambda b, h, s: (b, 0, 0))),      # tmask
+        pl.BlockSpec((1, T, 1, G, D), fix(lambda b, h, s: (b, 0, h, 0, 0))),
+        pl.BlockSpec((1, blk_s, 1, D), kmap),                         # k
+        pl.BlockSpec((1, blk_s, 1, Dv), kmap),                        # v
+        pl.BlockSpec((1, T, 1, D), fix(lambda b, h, s: (b, 0, h, 0))),
+        pl.BlockSpec((1, T, 1, Dv), fix(lambda b, h, s: (b, 0, h, 0))),
     ]
     inputs = [q_pos, kv_pos, tree_mask, q5, k_cache, v_cache, k_tree,
               v_tree]
     if two_stream:
         D2 = q2.shape[-1]
         in_specs += [
-            pl.BlockSpec((1, T, 1, G, D2), lambda b, h, s: (b, 0, h, 0, 0)),
-            pl.BlockSpec((1, blk_s, 1, D2),
-                         lambda b, h, s, _ns=ns: (b, jnp.minimum(s, _ns - 1),
-                                                  h, 0)),
-            pl.BlockSpec((1, T, 1, D2), lambda b, h, s: (b, 0, h, 0)),
+            pl.BlockSpec((1, T, 1, G, D2),
+                         fix(lambda b, h, s: (b, 0, h, 0, 0))),
+            pl.BlockSpec((1, blk_s, 1, D2), kmap),
+            pl.BlockSpec((1, T, 1, D2), fix(lambda b, h, s: (b, 0, h, 0))),
         ]
         inputs += [q2.reshape(B, T, Hkv, G, D2), k2_cache, k2_tree]
 
     kernel = functools.partial(_kernel, ns=ns, blk_s=blk_s, window=window,
                                scale=scale, softcap=softcap,
                                two_stream=two_stream)
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, T, 1, G, Dv),
-                               lambda b, h, s: (b, 0, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, T, Hkv, G, Dv), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((T, G, Dv), jnp.float32),
-            pltpu.VMEM((T, G), jnp.float32),
-            pltpu.VMEM((T, G), jnp.float32),
-        ],
-        interpret=interpret,
-    )(*inputs)
+    out_spec = pl.BlockSpec((1, T, 1, G, Dv),
+                            fix(lambda b, h, s: (b, 0, h, 0, 0)))
+    out_shape = jax.ShapeDtypeStruct((B, T, Hkv, G, Dv), q.dtype)
+    scratch = [
+        pltpu.VMEM((T, G, Dv), jnp.float32),
+        pltpu.VMEM((T, G), jnp.float32),
+        pltpu.VMEM((T, G), jnp.float32),
+    ]
+    if paged:
+        # the table is consumed by the index maps only; drop the ref the
+        # grid spec prepends to the kernel arguments
+        paged_kernel = lambda bt_ref, *args: kernel(*args)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=out_spec, scratch_shapes=scratch)
+        out = pl.pallas_call(
+            paged_kernel, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(block_tables, *inputs)
+    else:
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(*inputs)
     return out.reshape(B, T, H, Dv)

@@ -68,6 +68,19 @@ def main():
                     default="", help="also run a baseline engine")
     ap.add_argument("--continuous", action="store_true",
                     help="slot-based continuous batching scheduler")
+    ap.add_argument("--kv", choices=["ring", "paged"], default="ring",
+                    help="KV-cache layout (continuous mode): 'ring' = one "
+                         "contiguous capacity-slot strip per slot; "
+                         "'paged' = shared block pool + per-sequence "
+                         "block tables with admission-time block "
+                         "budgeting and copy-on-write prefix sharing "
+                         "(identical greedy outputs, lower peak cache "
+                         "memory on mixed-length / shared-prefix traces)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV-cache block size in tokens")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged KV-cache pool size in blocks (0 = ring "
+                         "parity: batch * ceil(capacity / block_size))")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson request arrivals per second (0 = all "
                          "queued at t0); continuous mode only")
@@ -90,6 +103,9 @@ def main():
     if args.tree.startswith("file:") \
             and not os.path.exists(args.tree[len("file:"):]):
         ap.error(f"--tree file not found: {args.tree[len('file:'):]}")
+    if args.kv == "paged" and not args.continuous:
+        ap.error("--kv paged requires --continuous (the static engines "
+                 "keep the ring cache)")
 
     if args.production:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -174,7 +190,9 @@ def main():
                                   temperature=args.temperature,
                                   admission=args.admission,
                                   prefill_bucket=args.prefill_bucket,
-                                  attn_backend=args.attn_backend)
+                                  attn_backend=args.attn_backend,
+                                  kv=args.kv, block_size=args.block_size,
+                                  num_blocks=args.num_blocks or None)
     else:
         eng = PPDEngine(params, ppd, cfg, m=args.m, tree_states=tree_states,
                         batch_size=args.batch, capacity=capacity,
@@ -182,9 +200,9 @@ def main():
                         attn_backend=args.attn_backend)
     for r in reqs:
         eng.add_request(r)
-    t0 = time.time()
+    t0 = time.perf_counter()
     results = eng.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total = sum(len(r.tokens) for r in results)
     steps = sum(r.steps for r in results)
     print(f"PPD: {len(results)} requests, {total} tokens in {dt:.1f}s "
@@ -197,6 +215,12 @@ def main():
               f"mean TPOT {m['mean_tpot_s'] * 1e3:.1f} ms  "
               f"max concurrency {m['max_concurrency']}  "
               f"idle slot-steps {m['idle_slot_steps']}")
+        if args.kv == "paged":
+            print(f"     paged KV: peak {m['block_peak_used_blocks']}"
+                  f"/{m['block_num_blocks']} blocks "
+                  f"({m['peak_cache_bytes'] / 1e6:.2f} MB), "
+                  f"{m['block_shared_block_hits']} prefix-shared block "
+                  f"hits, {m['admission_waits']} admission waits")
 
     if args.baseline == "vanilla":
         if args.continuous:
@@ -206,16 +230,20 @@ def main():
                                           temperature=args.temperature,
                                           admission=args.admission,
                                           prefill_bucket=args.prefill_bucket,
-                                          attn_backend=args.attn_backend)
+                                          attn_backend=args.attn_backend,
+                                          kv=args.kv,
+                                          block_size=args.block_size,
+                                          num_blocks=args.num_blocks
+                                          or None)
         else:
             van = VanillaEngine(params, cfg, batch_size=args.batch,
                                 capacity=capacity,
                                 attn_backend=args.attn_backend)
         for r in reqs:
             van.add_request(dataclasses.replace(r))
-        t0 = time.time()
+        t0 = time.perf_counter()
         vres = van.run()
-        vdt = time.time() - t0
+        vdt = time.perf_counter() - t0
         vtotal = sum(len(r.tokens) for r in vres)
         print(f"vanilla: {vtotal} tokens in {vdt:.1f}s "
               f"({vtotal / vdt:.1f} tok/s)  speedup {vdt / dt:.2f}x")

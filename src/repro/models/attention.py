@@ -23,6 +23,7 @@ from . import layers
 from .backend import get_backend
 from .config import ModelConfig, LayerSpec, SLIDING
 from .layers import apply_rope, rms_norm, dense_init, chunked_attend
+from .paged_cache import is_paged_entry, scatter_paged
 
 
 # ------------------------------------------------------------------ GQA
@@ -42,8 +43,12 @@ def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def make_attn_cache(cfg: ModelConfig, spec: LayerSpec, batch, capacity,
-                    dtype=jnp.float32):
-    if spec.span == SLIDING:
+                    dtype=jnp.float32, full_span: bool = False):
+    """``full_span`` keeps sliding-window layers at the full capacity
+    instead of the ``min(capacity, window)`` ring cap — required for
+    prefill rows that feed paged-pool splices, where block content must
+    not depend on how much of the prompt outlived this row's ring."""
+    if spec.span == SLIDING and not full_span:
         capacity = min(capacity, spec.window)
     Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
     return {
@@ -78,7 +83,12 @@ def scatter_kv(cache, k_new, v_new, positions, accept_mask=None):
     """Write staged K/V into the ring cache at ``positions % C``.
 
     ``accept_mask`` ([B,T] bool) drops rejected tree tokens (OOB-slot trick).
+    Paged entries scatter through the block table instead (position ``p``
+    lands at ``(bt[b, p // bs], p % bs)``; no ring wrap).
     """
+    if is_paged_entry(cache):
+        return scatter_paged(cache, {"k": k_new, "v": v_new}, positions,
+                             accept_mask)
     C = cache["k"].shape[1]
     slots = positions % C
     if accept_mask is not None:
@@ -122,13 +132,14 @@ def attn_apply(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
         out = get_backend(backend).tree_decode(
             q, cache["k"], cache["v"], cache["pos"], k, v, positions,
             extra_mask, window=window, scale=scale,
-            softcap=cfg.logit_softcap, q_chunk=q_chunk)
+            softcap=cfg.logit_softcap, q_chunk=q_chunk,
+            bt=cache.get("bt"))
     else:
         cache = scatter_kv(cache, k, v, positions)
         out = get_backend(backend).cache_decode(
             q, cache["k"], cache["v"], cache["pos"], positions, k, v,
             window=window, scale=scale, softcap=cfg.logit_softcap,
-            q_chunk=q_chunk, extra_mask=extra_mask)
+            q_chunk=q_chunk, extra_mask=extra_mask, bt=cache.get("bt"))
     out = out.reshape(B, T, cfg.n_heads * cfg.head_dim) @ params["wo"]
     return out, cache, staged
 
@@ -160,6 +171,9 @@ def make_mla_cache(cfg: ModelConfig, batch, capacity, dtype=jnp.float32):
 
 
 def scatter_mla(cache, ckv, krope, positions, accept_mask=None):
+    if is_paged_entry(cache):
+        return scatter_paged(cache, {"ckv": ckv, "krope": krope},
+                             positions, accept_mask)
     C = cache["ckv"].shape[1]
     slots = positions % C
     if accept_mask is not None:
@@ -262,13 +276,14 @@ def mla_apply(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
                 q_lat, lat(cache["ckv"]), lat(cache["ckv"]), cache["pos"],
                 lat(ckv), lat(ckv), positions, extra_mask, scale=scale,
                 q_chunk=q_chunk, q2=q_rope, k2_cache=lat(cache["krope"]),
-                k2_tree=lat(krope))
+                k2_tree=lat(krope), bt=cache.get("bt"))
         else:
             o_lat = be.cache_decode(
                 q_lat, lat(cache["ckv"]), lat(cache["ckv"]), cache["pos"],
                 positions, lat(ckv), lat(ckv), scale=scale,
                 q_chunk=q_chunk, extra_mask=extra_mask, q2=q_rope,
-                k2_cache=lat(cache["krope"]), k2_self=lat(krope))
+                k2_cache=lat(cache["krope"]), k2_self=lat(krope),
+                bt=cache.get("bt"))
         out = jnp.einsum("bthr,rhd->bthd", o_lat,
                          w_ukv[..., m.qk_nope_dim:])          # [B,T,H,Dv]
     else:
@@ -281,10 +296,11 @@ def mla_apply(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
         if stage_only:
             out = be.tree_decode(q_cat, k_c, v_c, cache["pos"], k_t, v_t,
                                  positions, extra_mask, scale=scale,
-                                 q_chunk=q_chunk)
+                                 q_chunk=q_chunk, bt=cache.get("bt"))
         else:
             out = be.cache_decode(q_cat, k_c, v_c, cache["pos"], positions,
                                   k_t, v_t, scale=scale, q_chunk=q_chunk,
-                                  extra_mask=extra_mask)
+                                  extra_mask=extra_mask,
+                                  bt=cache.get("bt"))
     out = out.reshape(B, T, H * m.v_head_dim) @ params["wo"]
     return out, cache, staged

@@ -40,6 +40,8 @@ import jax.numpy as jnp
 
 from repro.kernels.ops import tree_decode_attention
 
+from .paged_cache import gather_view
+
 from .layers import chunked_attend
 
 _REGISTRY: dict = {}
@@ -116,19 +118,26 @@ class AttentionBackend:
     q [B,T,H,D]; cache K/V [B,S,Hkv,D(v)] with per-slot positions
     kv_pos [B,S] (-1 invalid); tree/self K/V [B,T,Hkv,D(v)]; q_pos [B,T].
     The optional ``q2``/``k2_*`` pair is a second score stream summed into
-    the logits (MLA-absorb latents); ``scale`` is then mandatory."""
+    the logits (MLA-absorb latents); ``scale`` is then mandatory.
+
+    With ``bt`` (a [B, MB] block table) the cache operands are *paged
+    pools* instead — K/V [NB, bs, Hkv, D(v)], kv_pos [NB, bs] — and the
+    backend reads them through the table (see
+    :mod:`repro.models.paged_cache`): ref gathers block rows up front,
+    pallas block-indexes the loads inside the kernel's S-loop."""
 
     name = "?"
 
     def tree_decode(self, q, k_cache, v_cache, kv_pos, k_tree, v_tree,
                     q_pos, tree_mask, *, window=0, scale=None, softcap=0.0,
-                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None):
+                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None,
+                    bt=None):
         raise NotImplementedError
 
     def cache_decode(self, q, k_cache, v_cache, kv_pos, q_pos, k_self,
                      v_self, *, window=0, scale=None, softcap=0.0,
                      q_chunk=0, extra_mask=None, q2=None, k2_cache=None,
-                     k2_self=None):
+                     k2_self=None, bt=None):
         raise NotImplementedError
 
 
@@ -140,7 +149,11 @@ class RefBackend(AttentionBackend):
 
     def tree_decode(self, q, k_cache, v_cache, kv_pos, k_tree, v_tree,
                     q_pos, tree_mask, *, window=0, scale=None, softcap=0.0,
-                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None):
+                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None,
+                    bt=None):
+        if bt is not None:
+            (k_cache, v_cache, k2_cache), kv_pos = gather_view(
+                bt, kv_pos, (k_cache, v_cache, k2_cache))
         if q2 is not None:
             q = jnp.concatenate([q, q2], axis=-1)
             k_cache = jnp.concatenate([k_cache, k2_cache], axis=-1)
@@ -153,7 +166,7 @@ class RefBackend(AttentionBackend):
         kv_valid = jnp.concatenate([kv_pos >= 0, jnp.ones((B, T), bool)], 1)
         tm = _norm_tree_mask(tree_mask, q_pos, window)
         em = jnp.concatenate([jnp.ones((B, T, S), bool), tm], axis=2)
-        _record(backend=self.name, op="tree_decode",
+        _record(backend=self.name, op="tree_decode", paged=bt is not None,
                 kv_len=k_all.shape[1], mask=tuple(em.shape))
         return chunked_attend(q, k_all, v_all, q_positions=q_pos,
                               kv_positions=kv_pos_all, kv_valid=kv_valid,
@@ -163,11 +176,14 @@ class RefBackend(AttentionBackend):
     def cache_decode(self, q, k_cache, v_cache, kv_pos, q_pos, k_self,
                      v_self, *, window=0, scale=None, softcap=0.0,
                      q_chunk=0, extra_mask=None, q2=None, k2_cache=None,
-                     k2_self=None):
+                     k2_self=None, bt=None):
+        if bt is not None:
+            (k_cache, v_cache, k2_cache), kv_pos = gather_view(
+                bt, kv_pos, (k_cache, v_cache, k2_cache))
         if q2 is not None:
             q = jnp.concatenate([q, q2], axis=-1)
             k_cache = jnp.concatenate([k_cache, k2_cache], axis=-1)
-        _record(backend=self.name, op="cache_decode",
+        _record(backend=self.name, op="cache_decode", paged=bt is not None,
                 kv_len=k_cache.shape[1],
                 mask=(q.shape[0], q.shape[1], k_cache.shape[1]))
         return chunked_attend(q, k_cache, v_cache, q_positions=q_pos,
@@ -190,21 +206,28 @@ class PallasBackend(AttentionBackend):
 
     def tree_decode(self, q, k_cache, v_cache, kv_pos, k_tree, v_tree,
                     q_pos, tree_mask, *, window=0, scale=None, softcap=0.0,
-                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None):
+                    q_chunk=0, q2=None, k2_cache=None, k2_tree=None,
+                    bt=None):
         del q_chunk                      # the kernel streams over S instead
         tm = _norm_tree_mask(tree_mask, q_pos, window)
-        _record(backend=self.name, op="tree_decode",
+        if bt is not None:
+            # per-sequence positions are gathered (a [B, S] int view —
+            # cheap); K/V stay in the pool and the kernel's S-loop loads
+            # each block via the prefetched table.
+            _, kv_pos = gather_view(bt, kv_pos, ())
+        _record(backend=self.name, op="tree_decode", paged=bt is not None,
                 cache_len=k_cache.shape[1], tree_len=k_tree.shape[1],
                 mask=tuple(tm.shape))
         return tree_decode_attention(q, k_cache, v_cache, kv_pos, k_tree,
                                      v_tree, q_pos, tm, window=window,
                                      scale=scale, softcap=softcap, q2=q2,
-                                     k2_cache=k2_cache, k2_tree=k2_tree)
+                                     k2_cache=k2_cache, k2_tree=k2_tree,
+                                     block_tables=bt)
 
     def cache_decode(self, q, k_cache, v_cache, kv_pos, q_pos, k_self,
                      v_self, *, window=0, scale=None, softcap=0.0,
                      q_chunk=0, extra_mask=None, q2=None, k2_cache=None,
-                     k2_self=None):
+                     k2_self=None, bt=None):
         B, T = q.shape[:2]
         if T != 1 or extra_mask is not None:
             # prefill / masked commit: not the decode hot path
@@ -212,13 +235,16 @@ class PallasBackend(AttentionBackend):
                 q, k_cache, v_cache, kv_pos, q_pos, k_self, v_self,
                 window=window, scale=scale, softcap=softcap,
                 q_chunk=q_chunk, extra_mask=extra_mask, q2=q2,
-                k2_cache=k2_cache, k2_self=k2_self)
+                k2_cache=k2_cache, k2_self=k2_self, bt=bt)
         # single-token decode: the token is already in the ring (committed
         # before this call), so mask the tail off entirely.
         tm = jnp.zeros((B, 1, 1), bool)
-        _record(backend=self.name, op="cache_decode",
+        if bt is not None:
+            _, kv_pos = gather_view(bt, kv_pos, ())
+        _record(backend=self.name, op="cache_decode", paged=bt is not None,
                 cache_len=k_cache.shape[1], mask=tuple(tm.shape))
         return tree_decode_attention(q, k_cache, v_cache, kv_pos, k_self,
                                      v_self, q_pos, tm, window=window,
                                      scale=scale, softcap=softcap, q2=q2,
-                                     k2_cache=k2_cache, k2_tree=k2_self)
+                                     k2_cache=k2_cache, k2_tree=k2_self,
+                                     block_tables=bt)

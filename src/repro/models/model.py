@@ -115,15 +115,47 @@ def unembed(params, cfg: ModelConfig, h):
 
 
 # ------------------------------------------------------------------ caches
-def init_cache(cfg: ModelConfig, batch, capacity, dtype=jnp.float32):
+def init_cache(cfg: ModelConfig, batch, capacity, dtype=jnp.float32, *,
+               paged: bool = False, block_size: int = 16,
+               num_blocks: int | None = None,
+               sliding_full_span: bool = False):
+    """Decode cache pytree.
+
+    ``paged=True`` replaces each attention layer's per-row ring strip
+    with a block pool + per-sequence block table (see
+    :mod:`repro.models.paged_cache`); recurrent (SSM / RG-LRU) state is
+    unaffected.  ``num_blocks`` sizes the shared pool (default: ring
+    parity — ``batch * ceil(capacity / block_size)``).
+    ``sliding_full_span`` (ring only) skips the ``min(capacity, window)``
+    cap on sliding-window layers — used for prefill rows whose content is
+    spliced into paged pools, where shared-block content must be the same
+    whatever the owning sequence's prompt length."""
+    from . import paged_cache as paged_mod
+    if paged:
+        if cfg.scan_layers:
+            raise NotImplementedError(
+                "paged KV caches are not supported for scan-stacked layer "
+                "configs (cfg.scan_layers); use the ring cache")
+        if num_blocks is None:
+            num_blocks = batch * paged_mod.num_seq_blocks(capacity,
+                                                          block_size)
     layers = []
     for spec in layer_specs(cfg):
         if spec.mixer == ATTN:
-            layers.append(attn_mod.make_attn_cache(cfg, spec, batch,
-                                                   capacity, dtype))
+            if paged:
+                layers.append(paged_mod.make_paged_attn_cache(
+                    cfg, batch, capacity, block_size, num_blocks, dtype))
+            else:
+                layers.append(attn_mod.make_attn_cache(
+                    cfg, spec, batch, capacity, dtype,
+                    full_span=sliding_full_span))
         elif spec.mixer == MLA:
-            layers.append(attn_mod.make_mla_cache(cfg, batch, capacity,
-                                                  dtype))
+            if paged:
+                layers.append(paged_mod.make_paged_mla_cache(
+                    cfg, batch, capacity, block_size, num_blocks, dtype))
+            else:
+                layers.append(attn_mod.make_mla_cache(cfg, batch, capacity,
+                                                      dtype))
         elif spec.mixer == SSM:
             layers.append(ssm_mod.make_ssm_cache(cfg, batch, dtype))
         elif spec.mixer == RGLRU:
@@ -165,7 +197,15 @@ def write_cache_rows(cfg: ModelConfig, cache, rows, index):
 
     This is the per-slot admission primitive of the continuous-batching
     scheduler: one request's prefilled K/V (or recurrent state) replaces a
-    retired slot's row without reinitialising the whole pool cache."""
+    retired slot's row without reinitialising the whole pool cache.
+    Paged caches splice rows through
+    :func:`repro.models.paged_cache.write_prefill_blocks` instead — pool
+    leaves have no batch axis to copy into."""
+    from .paged_cache import is_paged_cache
+    if is_paged_cache(cache):
+        raise ValueError("write_cache_rows on a paged cache; use "
+                         "paged_cache.write_prefill_blocks")
+
     def put(ax, dst, src):
         return jax.lax.dynamic_update_slice_in_dim(
             dst, src.astype(dst.dtype), index, axis=ax)
@@ -181,6 +221,13 @@ def trim_cache(cfg: ModelConfig, cache, lengths):
     positions and cannot be trimmed — chain architectures must prefill at
     exact prompt length instead of a padded bucket."""
     from jax.tree_util import DictKey, tree_map_with_path
+
+    from .paged_cache import is_paged_cache
+    if is_paged_cache(cache):
+        # pool "pos" leaves are block-indexed, not row-indexed; trimming
+        # a paged sequence means freeing its tail blocks (block manager).
+        raise ValueError("trim_cache on a paged cache; free tail blocks "
+                         "via the serving block manager instead")
 
     body = {k: v for k, v in cache.items() if k != "length"}
 

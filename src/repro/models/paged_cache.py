@@ -1,0 +1,300 @@
+"""Paged KV cache: a shared block pool read through per-sequence block
+tables.
+
+The ring cache (`make_attn_cache` / `make_mla_cache`) gives every batch
+row a contiguous ``capacity``-slot strip, so short requests strand memory
+and identical prompt prefixes are stored once *per row*.  The paged
+layout replaces the per-row strip with a pool of fixed-size blocks:
+
+* per attention layer, K/V/pos live in pools with a leading *block* axis
+  — ``k``: [NB, bs, Hkv, D] (MLA: ``ckv`` [NB, bs, R], ``krope``
+  [NB, bs, Dr]), ``pos``: [NB, bs] (-1 = invalid slot);
+* each layer entry also carries the (shared) block table ``bt``:
+  [B, MB] int32 of pool block ids, -1 = unallocated.  Token position
+  ``p`` of sequence ``b`` lives at ``(bt[b, p // bs], p % bs)``;
+* block ids are identical across layers (one logical table), so the
+  host-side :class:`repro.serving.block_manager.BlockManager` does all
+  allocation/refcount/prefix bookkeeping once per sequence.
+
+A paged layer entry is recognized by ``"bt" in entry`` — everything else
+(`scatter_kv`, the attention backends, `forward`) dispatches on that.
+
+Prefix sharing is copy-on-write at block granularity: a block is keyed by
+the hash of the *cumulative* prompt prefix it completes (K/V at position
+``p`` depend only on tokens ``<= p`` and model params, so equal prefixes
+yield bit-identical blocks), shared blocks carry a refcount, and a write
+into a block with refcount > 1 must be preceded by a copy
+(:func:`copy_blocks`).  In the serving engines shared blocks are always
+*fully inside* the prompt while decode writes start at the prompt end, so
+the engines never trigger CoW — ``fork`` (sequence cloning) is where it
+bites, and the property tests exercise it directly.
+
+Sliding-window layers are paged at full length (no ``min(capacity,
+window)`` cap): position->block indexing must stay injective, and the
+kernel's block skip already prunes out-of-window blocks from the read
+path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ATTN, MLA, ModelConfig, layer_specs
+
+DEFAULT_BLOCK_SIZE = 16
+
+# Pool-leaf names per paged layer kind ("pos" and "bt" ride along both).
+_POOL_KEYS = ("k", "v", "ckv", "krope", "pos")
+
+
+def is_paged_entry(entry) -> bool:
+    return isinstance(entry, dict) and "bt" in entry
+
+
+def is_paged_cache(cache) -> bool:
+    layers = cache.get("layers", cache.get("prefix", []))
+    return any(is_paged_entry(e) for e in layers)
+
+
+def num_seq_blocks(capacity: int, block_size: int) -> int:
+    """Block-table width: blocks covering one sequence of ``capacity``."""
+    return -(-capacity // block_size)
+
+
+# ------------------------------------------------------------------ init
+def make_paged_attn_cache(cfg: ModelConfig, batch, capacity, block_size,
+                          num_blocks, dtype=jnp.float32):
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    MB = num_seq_blocks(capacity, block_size)
+    return {
+        "k": jnp.zeros((num_blocks, block_size, Hkv, Dh), dtype),
+        "v": jnp.zeros((num_blocks, block_size, Hkv, Dh), dtype),
+        "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+        "bt": jnp.full((batch, MB), -1, jnp.int32),
+    }
+
+
+def make_paged_mla_cache(cfg: ModelConfig, batch, capacity, block_size,
+                         num_blocks, dtype=jnp.float32):
+    m = cfg.mla
+    MB = num_seq_blocks(capacity, block_size)
+    return {
+        "ckv": jnp.zeros((num_blocks, block_size, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((num_blocks, block_size, m.qk_rope_dim), dtype),
+        "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+        "bt": jnp.full((batch, MB), -1, jnp.int32),
+    }
+
+
+# ------------------------------------------------------------------ views
+def gather_view(bt, pos_pool, pools):
+    """Dense per-sequence views of paged pool leaves — THE paged read
+    indexing rule (one home for it; the ref backend and every dense
+    oracle go through here).
+
+    bt: [B, MB] block table (-1 unallocated); pos_pool: [NB, bs];
+    pools: iterable of [NB, bs, ...] leaves (None passes through).
+    Returns ``(gathered_pools, positions)``: leaves [B, MB*bs, ...] and
+    positions [B, MB*bs] with -1 wherever the table row is unallocated
+    (hole blocks clamp to pool block 0; their dead values are killed by
+    the -1 positions)."""
+    B, MB = bt.shape
+    idx = jnp.maximum(bt, 0)
+    outs = []
+    for pool in pools:
+        if pool is None:
+            outs.append(None)
+            continue
+        g = pool[idx]                                 # [B, MB, bs, ...]
+        outs.append(g.reshape((B, MB * pool.shape[1]) + pool.shape[2:]))
+    pos = jnp.where((bt >= 0)[..., None], pos_pool[idx], -1)
+    return outs, pos.reshape(B, -1)
+
+
+def gather_pos(entry):
+    """Per-sequence positions [B, MB*bs] read through the block table."""
+    return gather_view(entry["bt"], entry["pos"], ())[1]
+
+
+def gather_kv(entry, keys=("k", "v")):
+    """Dense per-sequence views [B, MB*bs, ...] of a layer entry's pool
+    leaves, plus positions."""
+    outs, pos = gather_view(entry["bt"], entry["pos"],
+                            [entry[k] for k in keys])
+    return tuple(outs) + (pos,)
+
+
+# ------------------------------------------------------------------ write
+def _write_slots(entry, positions, accept_mask=None):
+    """(block_id, offset) scatter coordinates for per-token writes.
+
+    Invalid targets — masked tokens, negative positions, positions past
+    the table span, unallocated table entries — are routed to the
+    out-of-range block id NB so ``.at[...].set(mode="drop")`` drops them
+    (the same OOB-slot trick the ring scatter uses)."""
+    bt = entry["bt"]
+    NB = entry["pos"].shape[0]
+    bs = entry["pos"].shape[1]
+    MB = bt.shape[1]
+    valid = (positions >= 0) & (positions < MB * bs)
+    if accept_mask is not None:
+        valid &= accept_mask
+    blk = jnp.where(valid, positions // bs, 0)
+    bidx = jnp.arange(positions.shape[0])[:, None]
+    bid = bt[bidx, blk]                               # [B, T]
+    valid &= bid >= 0
+    bid = jnp.where(valid, bid, NB)
+    off = jnp.where(valid, positions % bs, 0)
+    pos = jnp.where(valid, positions, -1)
+    return bid, off, pos
+
+
+def scatter_paged(entry, new_leaves: dict, positions, accept_mask=None):
+    """Write per-token rows into the pools at ``positions``.
+
+    ``new_leaves`` maps pool-leaf names ("k"/"v" or "ckv"/"krope") to
+    [B, T, ...] arrays.  Returns the updated entry (bt unchanged)."""
+    bid, off, pos = _write_slots(entry, positions, accept_mask)
+    out = dict(entry)
+    for key, val in new_leaves.items():
+        out[key] = entry[key].at[bid, off].set(val, mode="drop")
+    out["pos"] = entry["pos"].at[bid, off].set(pos, mode="drop")
+    return out
+
+
+# ------------------------------------------------------- admission splice
+def write_prefill_blocks(cfg: ModelConfig, cache, row_cache, slot: int,
+                         block_ids, n_shared: int, plen: int):
+    """Splice a freshly prefilled batch-1 *ring* row cache into the pool.
+
+    ``block_ids`` (host ints) are the sequence's allocated pool blocks in
+    table order; the first ``n_shared`` are prefix-shared and already
+    populated (bit-identical content), so only the private tail is
+    copied.  Ring rows may be window-capped and wrapped (sliding
+    layers), so each target position is gathered from its ring slot and
+    validated against the ring's own position record.  Non-paged entries
+    (recurrent SSM / RG-LRU state) are row-copied as in
+    :func:`repro.models.model.write_cache_rows`.  Sets
+    ``length[slot] = plen``."""
+    block_ids = np.asarray(block_ids, np.int32)
+    priv = block_ids[n_shared:]
+    out = dict(cache)
+    new_layers = []
+    for entry, row in zip(cache["layers"], row_cache["layers"]):
+        if not is_paged_entry(entry):
+            new_layers.append(jax.tree.map(
+                lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                    d, s.astype(d.dtype), slot, axis=0), entry, row))
+            continue
+        e = dict(entry)
+        bs = entry["pos"].shape[1]
+        MB = entry["bt"].shape[1]
+        if len(priv):
+            # target positions covered by the private blocks
+            starts = jnp.asarray(np.arange(n_shared, len(block_ids),
+                                           dtype=np.int32) * bs)
+            tpos = starts[:, None] + jnp.arange(bs)[None, :]   # [P, bs]
+            Cr = row["pos"].shape[1]                # ring row capacity
+            src_slot = tpos % Cr
+            rpos = row["pos"][0, src_slot]                      # [P, bs]
+            valid = rpos == tpos
+            ids = jnp.asarray(priv)
+            for key in ("k", "v", "ckv", "krope"):
+                if key not in entry:
+                    continue
+                src = row[key][0, src_slot]                     # [P, bs, ...]
+                src = jnp.where(
+                    valid.reshape(valid.shape + (1,) * (src.ndim - 2)),
+                    src, 0.0).astype(entry[key].dtype)
+                e[key] = entry[key].at[ids].set(src)
+            e["pos"] = entry["pos"].at[ids].set(
+                jnp.where(valid, tpos, -1))
+        table = np.full((MB,), -1, np.int32)
+        table[:len(block_ids)] = block_ids
+        e["bt"] = entry["bt"].at[slot].set(jnp.asarray(table))
+        new_layers.append(e)
+    out["layers"] = new_layers
+    out["length"] = cache["length"].at[slot].set(plen)
+    return out
+
+
+def release_slot(cache, slot: int):
+    """Clear a retired slot's block-table row (every paged layer).
+
+    The pool bytes themselves are reclaimed host-side by the block
+    manager; clearing the table keeps the device state from ever reading
+    freed blocks through a stale row."""
+    out = dict(cache)
+    out["layers"] = [
+        dict(e, bt=e["bt"].at[slot].set(-1)) if is_paged_entry(e) else e
+        for e in cache["layers"]]
+    return out
+
+
+# ------------------------------------------------------------------- CoW
+def copy_blocks(cache, pairs):
+    """Device-side block copies ``[(src, dst), ...]`` across every paged
+    layer — the data half of copy-on-write (the table/refcount half lives
+    in the block manager).  Copies K/V *and* pos."""
+    if not pairs:
+        return cache
+    src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    out = dict(cache)
+    new_layers = []
+    for entry in cache["layers"]:
+        if not is_paged_entry(entry):
+            new_layers.append(entry)
+            continue
+        e = dict(entry)
+        for key in _POOL_KEYS:
+            if key in entry:
+                e[key] = entry[key].at[dst].set(entry[key][src])
+        new_layers.append(e)
+    out["layers"] = new_layers
+    return out
+
+
+def set_block_table_row(cache, slot: int, block_ids):
+    """Point ``slot``'s table row at ``block_ids`` (pad with -1)."""
+    out = dict(cache)
+    new_layers = []
+    for entry in cache["layers"]:
+        if not is_paged_entry(entry):
+            new_layers.append(entry)
+            continue
+        MB = entry["bt"].shape[1]
+        table = np.full((MB,), -1, np.int32)
+        table[:len(block_ids)] = np.asarray(block_ids, np.int32)
+        new_layers.append(dict(entry,
+                               bt=entry["bt"].at[slot].set(
+                                   jnp.asarray(table))))
+    out["layers"] = new_layers
+    return out
+
+
+# ------------------------------------------------------------- accounting
+def paged_block_bytes(cache) -> int:
+    """Bytes one pool block occupies summed over all paged layers."""
+    total = 0
+    for entry in cache["layers"]:
+        if not is_paged_entry(entry):
+            continue
+        for key in _POOL_KEYS:
+            if key in entry:
+                leaf = entry[key]
+                total += int(np.prod(leaf.shape[1:])) * leaf.dtype.itemsize
+    return total
+
+
+def ring_cache_bytes(cache) -> int:
+    """Total allocated bytes of a ring cache's K/V/pos leaves (the paged
+    comparison baseline: the ring allocates its full footprint upfront)."""
+    total = 0
+    for entry in cache["layers"]:
+        for key in _POOL_KEYS:
+            if isinstance(entry, dict) and key in entry:
+                leaf = entry[key]
+                total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,4 +1,5 @@
+from .block_manager import BlockManager
 from .engine import (MedusaEngine, PPDEngine, Request, Result,
-                     VanillaEngine, aggregate_metrics)
+                     VanillaEngine, aggregate_metrics, tpot_of)
 from .scheduler import (ContinuousPPDEngine, ContinuousVanillaEngine,
                         poisson_trace)

@@ -1,0 +1,221 @@
+"""Host-side block accounting for the paged KV cache.
+
+The device half of paging (pools, block tables, scatter/gather) lives in
+:mod:`repro.models.paged_cache`; this module owns the *policy*: which pool
+blocks belong to which sequence, reference counts for prefix-shared
+blocks, the cumulative-prompt-hash registry that finds sharable prefixes,
+watermark-based admission budgeting, and copy-on-write bookkeeping for
+forked sequences.
+
+Admission contract (used by the continuous schedulers):
+
+* :meth:`BlockManager.can_never_fit` — the request exceeds the pool
+  itself or the per-sequence table span; rejecting it at ``add_request``
+  with a ``ValueError`` is correct because no amount of waiting helps.
+* :meth:`BlockManager.can_admit` — the request fits *eventually* but not
+  now (free blocks after prefix sharing would dip below the watermark);
+  the scheduler leaves it queued instead of erroring — admission is a
+  scheduling decision, not a correctness error (this replaces the PR-3
+  hard ``ValueError`` for schedulable requests).
+
+Prefix sharing: block ``j`` of a prompt is keyed by the hash of tokens
+``[0, (j+1)*block_size)`` — K/V at position ``p`` depend only on tokens
+``<= p`` (and the model), so sequences agreeing on that cumulative prefix
+hold bit-identical block content and can share the physical block.  Only
+*full* prompt blocks are registered; the partial tail block (and every
+decode block) is private, so in engine flow shared blocks are never
+written.  ``fork`` creates a sequence sharing *all* of another's blocks —
+there a write inside the shared region must copy first
+(:meth:`cow_targets` / :meth:`cow`).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    return -(-n_tokens // block_size)
+
+
+def _prefix_keys(prompt, block_size: int) -> List[bytes]:
+    """Cumulative-prefix hash per *full* prompt block."""
+    prompt = np.ascontiguousarray(np.asarray(prompt, np.int64))
+    n_full = len(prompt) // block_size
+    keys, h = [], hashlib.sha1()
+    for j in range(n_full):
+        h.update(prompt[j * block_size:(j + 1) * block_size].tobytes())
+        keys.append(h.digest())
+    return keys
+
+
+class BlockManager:
+    """Refcounted free-list allocator over ``num_blocks`` pool blocks.
+
+    ``watermark`` (fraction of the pool) is held back from admissions so
+    a burst of same-time arrivals cannot drain the pool to zero before
+    the scheduler reacts; forks and CoW copies may still dip into it.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 watermark: float = 0.01):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.watermark_blocks = int(np.ceil(watermark * num_blocks))
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref = np.zeros(num_blocks, np.int64)
+        self._registry: Dict[bytes, int] = {}       # prefix key -> block id
+        self._block_key: Dict[int, bytes] = {}      # inverse (for free)
+        self._seq: Dict[int, List[int]] = {}        # uid -> block ids
+        self._seq_shared: Dict[int, int] = {}       # uid -> n prefix-shared
+        self.peak_used_blocks = 0
+        self.shared_block_hits = 0                  # blocks NOT re-stored
+
+    # ---------------------------------------------------------- queries
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def seq_blocks(self, uid: int) -> List[int]:
+        return list(self._seq[uid])
+
+    def ref_count(self, block_id: int) -> int:
+        return int(self._ref[block_id])
+
+    def blocks_needed(self, prompt_len: int, budget: int) -> int:
+        return blocks_for(prompt_len + budget, self.block_size)
+
+    def match_prefix(self, prompt) -> int:
+        """Longest run of already-resident prefix blocks (count)."""
+        n = 0
+        for key in _prefix_keys(prompt, self.block_size):
+            if key not in self._registry:
+                break
+            n += 1
+        return n
+
+    def can_never_fit(self, prompt_len: int, budget: int,
+                      table_span: int) -> Optional[str]:
+        """A reason string if no schedule can ever run this request."""
+        need_tokens = prompt_len + budget
+        need = blocks_for(need_tokens, self.block_size)
+        if need_tokens > table_span:
+            return (f"prompt ({prompt_len}) + budget ({budget}) = "
+                    f"{need_tokens} tokens exceeds the block-table span "
+                    f"({table_span})")
+        if need > self.num_blocks:
+            return (f"needs {need} blocks, pool holds {self.num_blocks}")
+        return None
+
+    def can_admit(self, prompt, budget: int) -> bool:
+        """Would :meth:`allocate` succeed right now, respecting the
+        watermark?  Prefix-shared blocks cost nothing."""
+        need = self.blocks_needed(len(np.asarray(prompt)), budget)
+        need -= self.match_prefix(prompt)
+        return need <= max(self.free_blocks - self.watermark_blocks, 0)
+
+    # ------------------------------------------------------- alloc/free
+    def _pop_free(self, n: int) -> List[int]:
+        assert n <= len(self._free), (n, len(self._free))
+        out = [self._free.pop() for _ in range(n)]
+        self.peak_used_blocks = max(self.peak_used_blocks,
+                                    self.used_blocks)
+        return out
+
+    def allocate(self, uid: int, prompt, budget: int
+                 ) -> Tuple[List[int], int]:
+        """Reserve every block the sequence can ever touch (prompt +
+        decode budget, speculation headroom included by the caller in
+        ``budget``).  Returns ``(block_ids, n_shared)``: the first
+        ``n_shared`` ids are prefix-shared, already-populated blocks.
+        Registers the sequence's own full prompt blocks for future
+        sharers.  Call :meth:`can_admit` first."""
+        assert uid not in self._seq, f"uid {uid} already allocated"
+        prompt = np.asarray(prompt)
+        keys = _prefix_keys(prompt, self.block_size)
+        n_shared = self.match_prefix(prompt)
+        need = self.blocks_needed(len(prompt), budget) - n_shared
+        assert need >= 0
+        shared = [self._registry[k] for k in keys[:n_shared]]
+        for bid in shared:
+            self._ref[bid] += 1
+        self.shared_block_hits += n_shared
+        fresh = self._pop_free(need)
+        for bid in fresh:
+            self._ref[bid] = 1
+        # register this sequence's private full prompt blocks
+        for j in range(n_shared, len(keys)):
+            bid = fresh[j - n_shared]
+            self._registry[keys[j]] = bid
+            self._block_key[bid] = keys[j]
+        ids = shared + fresh
+        self._seq[uid] = ids
+        self._seq_shared[uid] = n_shared
+        return list(ids), n_shared
+
+    def free_seq(self, uid: int) -> None:
+        """Drop the sequence's references; blocks whose refcount hits 0
+        return to the free list (and leave the prefix registry)."""
+        for bid in self._seq.pop(uid):
+            self._ref[bid] -= 1
+            assert self._ref[bid] >= 0
+            if self._ref[bid] == 0:
+                key = self._block_key.pop(bid, None)
+                if key is not None and self._registry.get(key) == bid:
+                    del self._registry[key]
+                self._free.append(bid)
+        self._seq_shared.pop(uid, None)
+
+    # ------------------------------------------------------- fork / CoW
+    def fork(self, src_uid: int, dst_uid: int) -> List[int]:
+        """Clone ``src``'s table for ``dst``: every block shared, every
+        refcount bumped.  Writes must go through :meth:`cow_targets`."""
+        assert dst_uid not in self._seq
+        ids = list(self._seq[src_uid])
+        for bid in ids:
+            self._ref[bid] += 1
+        self._seq[dst_uid] = ids
+        self._seq_shared[dst_uid] = len(ids)
+        return list(ids)
+
+    def cow_targets(self, uid: int, pos_lo: int, pos_hi: int
+                    ) -> List[int]:
+        """Table indices of blocks overlapping positions [lo, hi) that
+        are shared (refcount > 1) and would need a copy before a write."""
+        ids = self._seq[uid]
+        lo = pos_lo // self.block_size
+        hi = blocks_for(pos_hi, self.block_size)
+        return [j for j in range(lo, min(hi, len(ids)))
+                if self._ref[ids[j]] > 1]
+
+    def cow(self, uid: int, table_index: int) -> Tuple[int, int]:
+        """Copy-on-write block ``table_index`` of ``uid``: allocate a
+        private block, move the table entry, drop one reference on the
+        shared original.  Returns ``(src_id, dst_id)`` for the device
+        copy (:func:`repro.models.paged_cache.copy_blocks`)."""
+        ids = self._seq[uid]
+        src = ids[table_index]
+        assert self._ref[src] > 1, "cow on an exclusive block"
+        (dst,) = self._pop_free(1)
+        self._ref[dst] = 1
+        self._ref[src] -= 1
+        ids[table_index] = dst
+        return src, dst
+
+    # ---------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        return {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "used_blocks": self.used_blocks,
+            "peak_used_blocks": self.peak_used_blocks,
+            "shared_block_hits": self.shared_block_hits,
+            "live_sequences": len(self._seq),
+        }

@@ -14,6 +14,7 @@ Engines:
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import List, Optional
 
@@ -49,20 +50,39 @@ class Result:
     # continuous scheduler reports exact per-request values.
     ttft_s: float = 0.0           # arrival -> first output token
     tpot_s: float = 0.0           # mean inter-token latency after the first
+    #   (NaN when undefined: a 1-token request has no inter-token gaps)
     goodput_tok_s: float = 0.0    # tokens / (finish - arrival)
 
 
+def tpot_of(decode_span_s: float, n_tokens: int) -> float:
+    """Mean inter-token latency over ``n_tokens`` output tokens.
+
+    Undefined (NaN) for n <= 1: there is no inter-token gap, and folding
+    the whole decode span in (the old ``/ max(n-1, 1)``) reported a
+    request's entire wall time as its "inter-token" latency.  Clamped at
+    0 so a misbehaving caller clock cannot yield negative latency."""
+    if n_tokens <= 1:
+        return math.nan
+    return max(decode_span_s, 0.0) / (n_tokens - 1)
+
+
 def aggregate_metrics(results: List["Result"], makespan_s: float) -> dict:
-    """Fleet-level serving metrics over a finished request set."""
+    """Fleet-level serving metrics over a finished request set.
+
+    Undefined per-request TPOTs (NaN — single-token requests) are
+    *skipped*, not averaged in: a NaN would poison the mean, and
+    substituting 0 would bias it low."""
     total = sum(len(r.tokens) for r in results)
     n = max(len(results), 1)
+    tpots = [r.tpot_s for r in results if not math.isnan(r.tpot_s)]
     return {
         "requests": len(results),
         "total_tokens": total,
         "makespan_s": makespan_s,
         "goodput_tok_s": total / makespan_s if makespan_s > 0 else 0.0,
         "mean_ttft_s": sum(r.ttft_s for r in results) / n,
-        "mean_tpot_s": sum(r.tpot_s for r in results) / n,
+        "mean_tpot_s": sum(tpots) / len(tpots) if tpots else 0.0,
+        "tpot_defined_requests": len(tpots),
     }
 
 
@@ -128,7 +148,7 @@ class _EngineBase:
         self.queue.append(req)
 
     def run(self) -> List[Result]:
-        self._clock0 = time.time()
+        self._clock0 = time.perf_counter()
         out = []
         while self.queue:
             batch = self.queue[:self.batch_size]
@@ -165,14 +185,14 @@ class PPDEngine(_EngineBase):
         tokens, starts, P = _pack(batch, cfg, self.capacity,
                                   self._overshoot)
         B = len(batch)
-        t0 = time.time()
+        t0 = time.perf_counter()
         offset = t0 - getattr(self, "_clock0", t0)
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
                                       moe_exact=True,
                                       attn_backend=self.attn_backend)
         first = jnp.argmax(logits[:, -1], axis=-1)
-        t_prefill = time.time() - t0
+        t_prefill = time.perf_counter() - t0
         st = init_ppd_state(cfg, cache, first, self.m, self.n_ept,
                             kmax=self.bufs.get("_kmax", 10))
         done = np.zeros(B, bool)
@@ -200,7 +220,7 @@ class PPDEngine(_EngineBase):
                 done[b] = len(produced[b]) >= batch[b].max_new_tokens
             if steps > max_new + 8:
                 break
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         # chain archs run a second (commit) forward per PPD step
         per_step = 2 if is_chain_arch(cfg) else 1
         self.total_forward_passes += steps * per_step + 1
@@ -222,7 +242,7 @@ def _batch_result(req: Request, produced, steps, wall, t_prefill,
     latency = max(offset + wall - req.arrival_s, 1e-9)
     return Result(uid=req.uid, tokens=toks, steps=steps, wall_s=latency,
                   ttft_s=ttft,
-                  tpot_s=(wall - t_prefill) / max(n - 1, 1),
+                  tpot_s=tpot_of(wall - t_prefill, n),
                   goodput_tok_s=n / latency)
 
 
@@ -240,14 +260,14 @@ class VanillaEngine(_EngineBase):
         tokens, starts, P = _pack(batch, cfg, self.capacity,
                                   self._overshoot)
         B = len(batch)
-        t0 = time.time()
+        t0 = time.perf_counter()
         offset = t0 - getattr(self, "_clock0", t0)
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
                                       moe_exact=True,
                                       attn_backend=self.attn_backend)
         nxt = jnp.argmax(logits[:, -1], axis=-1)
-        t_prefill = time.time() - t0
+        t_prefill = time.perf_counter() - t0
         produced = [[np.asarray(nxt[b])] for b in range(B)]
         steps = 0
         key = jax.random.PRNGKey(0)
@@ -259,7 +279,7 @@ class VanillaEngine(_EngineBase):
             for b in range(B):
                 if len(produced[b]) < batch[b].max_new_tokens:
                     produced[b].append(np.asarray(nxt[b]))
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         self.total_forward_passes += steps + 1
         return [_batch_result(r, produced[b], steps, wall, t_prefill,
                               offset)
@@ -294,7 +314,7 @@ class MedusaEngine(_EngineBase):
         tokens, starts, P = _pack(batch, cfg, self.capacity,
                                   self._overshoot)
         B = len(batch)
-        t0 = time.time()
+        t0 = time.perf_counter()
         offset = t0 - getattr(self, "_clock0", t0)
         cache = init_cache(cfg, B, self.capacity)
         logits, cache, _, _, hidden = forward(self.params, cfg, tokens,
@@ -307,7 +327,7 @@ class MedusaEngine(_EngineBase):
         g0 = medusa_heads(self.heads, hidden[:, -1])
         gv, gi = jax.lax.top_k(g0, self.bufs.get("_kmax", 10))
         st = st._replace(guess_vals=gv.astype(jnp.float32), guess_idx=gi)
-        t_prefill = time.time() - t0
+        t_prefill = time.perf_counter() - t0
         produced = [[np.asarray(first[b])] for b in range(B)]
         done = np.zeros(B, bool)
         steps = 0
@@ -328,7 +348,7 @@ class MedusaEngine(_EngineBase):
                 done[b] = len(produced[b]) >= batch[b].max_new_tokens
             if steps > max_new + 8:
                 break
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         self.total_forward_passes += steps + 1
         return [_batch_result(r, produced[b], steps, wall, t_prefill,
                               offset)

@@ -24,10 +24,31 @@ At temperature 0 the output of every request is token-for-token identical
 to the static engines (and hence to vanilla decoding) — the scheduler
 changes *which* rows share a forward pass, never the math of a row.
 
-Admission policies: ``"fcfs"`` (default) and ``"sjf"`` (shortest job
-first by ``max_new_tokens``).  Requests may carry ``arrival_s`` (seconds
+KV memory modes (``kv=``):
+
+* ``"ring"`` (default) — one contiguous ``capacity``-slot strip per
+  slot.  A request whose prompt + budget cannot fit raises at
+  ``add_request``.
+* ``"paged"`` — attention K/V live in a shared block pool read through
+  per-sequence block tables (:mod:`repro.models.paged_cache`), with
+  admission-time block budgeting, prefix sharing of identical prompt
+  prefixes, and watermark-based back-pressure handled by
+  :class:`repro.serving.block_manager.BlockManager`.  A request that
+  does not fit *right now* simply waits in the queue (admission is a
+  scheduling decision); ``add_request`` raises only for requests that
+  can never fit.  Greedy outputs are token-identical to ``"ring"``.
+
+Admission policies: ``"fcfs"`` (default, strict: a blocked queue head
+waits rather than being bypassed) and ``"sjf"`` (shortest job first by
+``max_new_tokens``, with an aging term — waiting time discounts the job
+length at ``sjf_age_rate`` tokens/second — so sustained short arrivals
+cannot starve a long request).  Requests may carry ``arrival_s`` (seconds
 relative to ``run()`` start) to replay an arrival trace, e.g. a Poisson
 trace from :func:`poisson_trace`.
+
+All engine timing uses a monotonic clock (``time.perf_counter``;
+injectable via ``clock=`` for tests) — wall-clock ``time.time`` can step
+backwards under NTP and yield negative TTFT/TPOT.
 """
 from __future__ import annotations
 
@@ -42,11 +63,15 @@ import numpy as np
 from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
                         is_chain_arch, mk_default_tree, ppd_decode_step,
                         vanilla_decode_step)
-from repro.models import (forward, init_cache, trim_cache,
-                          write_cache_rows)
+from repro.models import (forward, init_cache, num_seq_blocks,
+                          paged_block_bytes, release_slot,
+                          ring_cache_bytes, trim_cache, write_cache_rows,
+                          write_prefill_blocks)
 from repro.models.config import ModelConfig
 
-from .engine import Request, Result, aggregate_metrics, check_cache_fits
+from .block_manager import BlockManager
+from .engine import (Request, Result, aggregate_metrics, check_cache_fits,
+                     tpot_of)
 
 
 def poisson_trace(requests: List[Request], rate_per_s: float,
@@ -92,13 +117,21 @@ class _ContinuousBase:
     def __init__(self, params, cfg: ModelConfig, capacity: int = 1024,
                  batch_size: int = 4, temperature: float = 0.0,
                  admission: str = "fcfs", prefill_bucket: int = 0,
-                 seed: int = 0, attn_backend=None):
+                 seed: int = 0, attn_backend=None, kv: str = "ring",
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 watermark: float = 0.01, sjf_age_rate: float = 1.0,
+                 clock=None):
         assert admission in ("fcfs", "sjf"), admission
+        assert kv in ("ring", "paged"), kv
         self.params, self.cfg = params, cfg
         self.capacity, self.batch_size = capacity, batch_size
         self.temperature = temperature
         self.admission = admission
+        self.sjf_age_rate = sjf_age_rate
         self.attn_backend = attn_backend    # "ref" / "pallas" (None = ref)
+        self.kv = kv
+        self.block_size = block_size
+        self._clock = clock if clock is not None else time.perf_counter
         # Round prompt prefills up to a multiple of ``prefill_bucket`` to
         # bound recompilation across prompt lengths (0 = exact length).
         # Padded tail entries are killed with trim_cache; chain archs hold
@@ -110,9 +143,26 @@ class _ContinuousBase:
         self.total_forward_passes = 0   # prefills + decode steps
         self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
                       "retired": 0, "max_concurrency": 0,
-                      "active_slot_steps": 0, "idle_slot_steps": 0}
+                      "active_slot_steps": 0, "idle_slot_steps": 0,
+                      "admission_waits": 0}
         self.makespan_s = 0.0
         self._base_key = jax.random.PRNGKey(seed)
+        self.block_mgr: Optional[BlockManager] = None
+        if kv == "paged":
+            mb = num_seq_blocks(capacity, block_size)
+            self._table_span = mb * block_size
+            if num_blocks is None:
+                num_blocks = batch_size * mb    # ring-parity worst case
+            self.block_mgr = BlockManager(num_blocks, block_size,
+                                          watermark=watermark)
+        self._pending_alloc = None   # (block_ids, n_shared) of admit in flight
+
+    def _init_pool_cache(self):
+        if self.kv == "paged":
+            return init_cache(self.cfg, self.batch_size, self.capacity,
+                              paged=True, block_size=self.block_size,
+                              num_blocks=self.block_mgr.num_blocks)
+        return init_cache(self.cfg, self.batch_size, self.capacity)
 
     # ------------------------------------------------------------ queue
     def add_request(self, req: Request):
@@ -129,22 +179,76 @@ class _ContinuousBase:
                     f"capacity ({self.capacity}); the padded prefill "
                     f"would wrap the ring and silently corrupt the "
                     f"prompt. Raise `capacity` or lower the bucket.")
-        # after the trim, a slot's ring usage is its own prompt + budget.
-        check_cache_fits(plen, req.max_new_tokens, self.capacity,
-                         uid=req.uid, headroom=self._overshoot)
+        if self.kv == "paged":
+            # Admission is a scheduling decision: a request that merely
+            # doesn't fit *now* waits in the queue.  Reject only what no
+            # schedule can ever run.
+            reason = self.block_mgr.can_never_fit(
+                plen, req.max_new_tokens + self._overshoot,
+                self._table_span)
+            if reason is not None:
+                raise ValueError(
+                    f"request {req.uid} can never be scheduled: {reason}. "
+                    f"Raise `capacity` / `num_blocks` or lower the "
+                    f"request's budget.")
+            if plen > self.capacity:
+                raise ValueError(
+                    f"request {req.uid}: prompt ({plen}) exceeds the "
+                    f"prefill row capacity ({self.capacity})")
+        else:
+            # after the trim, a slot's ring usage is its own prompt +
+            # budget.
+            check_cache_fits(plen, req.max_new_tokens, self.capacity,
+                             uid=req.uid, headroom=self._overshoot)
         self.queue.append(req)
 
     def _active_mask(self) -> np.ndarray:
         return np.asarray([s.busy for s in self.slots], bool)
 
+    def _can_admit_now(self, req: Request) -> bool:
+        if self.block_mgr is None:
+            return True
+        if self.block_mgr.can_admit(req.prompt,
+                                    req.max_new_tokens + self._overshoot):
+            return True
+        # the watermark is back-pressure, not a deadlock: an otherwise
+        # idle pool admits anything that fits at all
+        if self.block_mgr.used_blocks == 0:
+            need = self.block_mgr.blocks_needed(
+                len(req.prompt), req.max_new_tokens + self._overshoot)
+            return need <= self.block_mgr.free_blocks
+        return False
+
     def _pick_next(self, now: float) -> Optional[int]:
-        """Index into self.queue of the next admissible request."""
+        """Index into self.queue of the next admissible request.
+
+        SJF orders by an *aged* job length — waiting time discounts
+        ``max_new_tokens`` at ``sjf_age_rate`` tokens/second, with a
+        deterministic (arrival, uid) tie-break — so a long request's
+        priority strictly rises while short jobs stream past it.
+
+        Both policies are *strict* about their head: if the
+        highest-priority ready request cannot be admitted right now
+        (paged mode, not enough free blocks), nothing is bypassed —
+        admitting smaller jobs past a blocked head would keep the pool
+        busy forever and starve it (aging raises a request's rank, but
+        only head-blocking converts rank into blocks: while the head
+        waits, retirements drain the pool until it fits)."""
         ready = [i for i, r in enumerate(self.queue) if r.arrival_s <= now]
         if not ready:
             return None
         if self.admission == "sjf":
-            return min(ready, key=lambda i: self.queue[i].max_new_tokens)
-        return ready[0]                 # fcfs: queue order = arrival order
+            def aged(i):
+                r = self.queue[i]
+                wait = max(now - r.arrival_s, 0.0)
+                return (r.max_new_tokens - self.sjf_age_rate * wait,
+                        r.arrival_s, r.uid)
+            ready.sort(key=aged)
+        head = ready[0]
+        if self._can_admit_now(self.queue[head]):
+            return head
+        self.stats["admission_waits"] += 1
+        return None
 
     # ------------------------------------------------------------ admit
     def _padded_prompt(self, prompt: np.ndarray):
@@ -160,19 +264,32 @@ class _ContinuousBase:
         return jnp.asarray(prompt)[None], plen
 
     def _admit(self, slot_idx: int, req: Request):
+        if self.block_mgr is not None:
+            self._pending_alloc = self.block_mgr.allocate(
+                req.uid, req.prompt, req.max_new_tokens + self._overshoot)
         row_cache, first = self._prefill_row(req)
         self.total_forward_passes += 1
         self.stats["prefills"] += 1
         self.stats["admitted"] += 1
-        self._admit_device(slot_idx, row_cache, first)
+        self._admit_device(slot_idx, row_cache, first, len(req.prompt))
+        self._pending_alloc = None
         slot = self.slots[slot_idx]
         slot.req = req
         slot.produced = [np.asarray(first)]      # forces prefill to finish
         slot.decode_steps = 0
         slot.budget = req.max_new_tokens + 8
         slot.arrival_t = req.arrival_s
-        slot.first_tok_t = time.time() - self._t0   # TTFT includes prefill
+        slot.first_tok_t = self._clock() - self._t0  # TTFT includes prefill
         slot.key = jax.random.fold_in(self._base_key, req.uid)
+
+    def _write_row(self, cache, row_cache, slot_idx: int, plen: int):
+        """Splice a prefilled batch-1 row into the pool cache (ring row
+        copy, or paged block splice of the admission's allocation)."""
+        if self.block_mgr is not None:
+            ids, n_shared = self._pending_alloc
+            return write_prefill_blocks(self.cfg, cache, row_cache,
+                                        slot_idx, ids, n_shared, plen)
+        return write_cache_rows(self.cfg, cache, row_cache, slot_idx)
 
     def _retire(self, slot_idx: int, now: float) -> Result:
         slot = self.slots[slot_idx]
@@ -183,23 +300,31 @@ class _ContinuousBase:
         res = Result(
             uid=req.uid, tokens=toks, steps=slot.decode_steps + 1,
             wall_s=latency,
-            ttft_s=slot.first_tok_t - slot.arrival_t,
-            tpot_s=(now - slot.first_tok_t) / max(n - 1, 1),
+            ttft_s=max(slot.first_tok_t - slot.arrival_t, 0.0),
+            tpot_s=tpot_of(now - slot.first_tok_t, n),
             goodput_tok_s=n / latency)
         slot.req = None
         slot.produced = []
         self.stats["retired"] += 1
-        # No device-side reset needed: the retired row is masked out of
-        # every commit (active=False), and admission overwrites the whole
-        # row via write_cache_rows before it is ever read again.
+        if self.block_mgr is not None:
+            # free the sequence's blocks and clear the slot's block-table
+            # row: a freed block may be re-allocated immediately, and the
+            # retired slot keeps stepping (masked) until re-admission —
+            # a stale table row would let its dead writes land in blocks
+            # now owned by another sequence.
+            self.block_mgr.free_seq(req.uid)
+            self._release_device(slot_idx)
+        # No device-side reset needed beyond that: the retired row is
+        # masked out of every commit (active=False), and admission
+        # overwrites the whole row before it is ever read again.
         return res
 
     # ------------------------------------------------------------ run
     def run(self) -> List[Result]:
-        t0 = self._t0 = time.time()
+        t0 = self._t0 = self._clock()
         results: List[Result] = []
         while self.queue or any(s.busy for s in self.slots):
-            now = time.time() - t0
+            now = self._clock() - t0
             # fill free slots with every admissible request
             for i, s in enumerate(self.slots):
                 if s.busy:
@@ -208,7 +333,7 @@ class _ContinuousBase:
                 if pick is None:
                     break
                 self._admit(i, self.queue.pop(pick))
-                now = time.time() - t0
+                now = self._clock() - t0
             active = self._active_mask()
             conc = int(active.sum())
             self.stats["max_concurrency"] = max(
@@ -223,7 +348,7 @@ class _ContinuousBase:
             self.stats["decode_steps"] += 1
             self.stats["active_slot_steps"] += conc
             self.stats["idle_slot_steps"] += self.batch_size - conc
-            now = time.time() - t0
+            now = self._clock() - t0
             for i, s in enumerate(self.slots):
                 if not s.busy:
                     continue
@@ -234,13 +359,23 @@ class _ContinuousBase:
                         s.produced.append(t)
                 if len(s.produced) >= limit or s.decode_steps > s.budget:
                     results.append(self._retire(i, now))
-        self.makespan_s = time.time() - t0
+        self.makespan_s = self._clock() - t0
         return results
 
     def metrics(self, results: List[Result]) -> dict:
         out = aggregate_metrics(results, self.makespan_s)
         out.update(self.stats)
         out["total_forward_passes"] = self.total_forward_passes
+        out["kv"] = self.kv
+        pool = self._pool_cache()
+        if self.block_mgr is not None:
+            bm = self.block_mgr.stats()
+            out.update({f"block_{k}": v for k, v in bm.items()})
+            out["peak_cache_bytes"] = (bm["peak_used_blocks"] *
+                                       paged_block_bytes(pool))
+        elif pool is not None:
+            # the ring allocates its full footprint upfront
+            out["peak_cache_bytes"] = ring_cache_bytes(pool)
         return out
 
     def _step_cost(self) -> int:
@@ -253,9 +388,13 @@ class _ContinuousBase:
         With a prefill bucket the prompt is right-padded; the padded tail
         is causally invisible during the forward (positions > prompt) and
         its cache entries are killed with trim_cache afterwards, so the
-        row is bit-identical to an exact-length prefill."""
+        row is bit-identical to an exact-length prefill.  In paged mode
+        the row keeps sliding-window layers at full span: its content is
+        spliced into pool blocks whose content must depend only on the
+        prompt prefix, not on what survived a window-capped ring."""
         tokens, plen = self._padded_prompt(req.prompt)
-        row_cache = init_cache(self.cfg, 1, self.capacity)
+        row_cache = init_cache(self.cfg, 1, self.capacity,
+                               sliding_full_span=(self.kv == "paged"))
         logits, row_cache, _, _ = forward(self.params, self.cfg, tokens,
                                           cache=row_cache, moe_exact=True,
                                           attn_backend=self.attn_backend)
@@ -282,11 +421,17 @@ class _ContinuousBase:
         return jnp.stack(keys)
 
     # hooks ------------------------------------------------------------
-    def _admit_device(self, slot_idx, row_cache, first):
+    def _admit_device(self, slot_idx, row_cache, first, plen):
         raise NotImplementedError
 
     def _decode_active(self, active: np.ndarray):
         raise NotImplementedError
+
+    def _release_device(self, slot_idx):
+        raise NotImplementedError
+
+    def _pool_cache(self):
+        return None
 
 
 class ContinuousPPDEngine(_ContinuousBase):
@@ -295,9 +440,13 @@ class ContinuousPPDEngine(_ContinuousBase):
     def __init__(self, params, ppd_params, cfg: ModelConfig, *, m=3,
                  n_ept=1, tree_states=None, capacity=1024, batch_size=4,
                  temperature=0.0, admission="fcfs", prefill_bucket=0,
-                 seed=0, attn_backend=None):
+                 seed=0, attn_backend=None, kv="ring", block_size=16,
+                 num_blocks=None, watermark=0.01, sjf_age_rate=1.0,
+                 clock=None):
         super().__init__(params, cfg, capacity, batch_size, temperature,
-                         admission, prefill_bucket, seed, attn_backend)
+                         admission, prefill_bucket, seed, attn_backend,
+                         kv, block_size, num_blocks, watermark,
+                         sjf_age_rate, clock)
         self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
         self._overshoot = m     # final step may commit up to m extra
         if tree_states is None:
@@ -305,7 +454,7 @@ class ContinuousPPDEngine(_ContinuousBase):
                             for k in range(m + 1)] if is_chain_arch(cfg)
                            else mk_default_tree(m))
         self.bufs = device_buffers(tree_states, m, n_ept)
-        cache = init_cache(cfg, batch_size, capacity)
+        cache = self._init_pool_cache()
         if cfg.modality == "audio":
             first = jnp.zeros((batch_size, cfg.n_codebooks), jnp.int32)
         else:
@@ -321,9 +470,9 @@ class ContinuousPPDEngine(_ContinuousBase):
                                active=active,
                                attn_backend=self.attn_backend)
 
-    def _admit_device(self, slot_idx, row_cache, first):
+    def _admit_device(self, slot_idx, row_cache, first, plen):
         st = self.state
-        cache = write_cache_rows(self.cfg, st.cache, row_cache, slot_idx)
+        cache = self._write_row(st.cache, row_cache, slot_idx, plen)
         # fresh root token, zero guesses, dynamic-tree state 0 — the
         # single-row equivalent of init_ppd_state after prefill
         self.state = st._replace(
@@ -332,6 +481,13 @@ class ContinuousPPDEngine(_ContinuousBase):
             guess_vals=st.guess_vals.at[slot_idx].set(0.0),
             guess_idx=st.guess_idx.at[slot_idx].set(0),
             tree_state=st.tree_state.at[slot_idx].set(0))
+
+    def _release_device(self, slot_idx):
+        self.state = self.state._replace(
+            cache=release_slot(self.state.cache, slot_idx))
+
+    def _pool_cache(self):
+        return self.state.cache
 
     def _decode_active(self, active: np.ndarray):
         keys = self._slot_keys()
@@ -360,10 +516,14 @@ class ContinuousVanillaEngine(_ContinuousBase):
 
     def __init__(self, params, cfg: ModelConfig, capacity=1024,
                  batch_size=4, temperature=0.0, admission="fcfs",
-                 prefill_bucket=0, seed=0, attn_backend=None):
+                 prefill_bucket=0, seed=0, attn_backend=None, kv="ring",
+                 block_size=16, num_blocks=None, watermark=0.01,
+                 sjf_age_rate=1.0, clock=None):
         super().__init__(params, cfg, capacity, batch_size, temperature,
-                         admission, prefill_bucket, seed, attn_backend)
-        self.cache = init_cache(cfg, batch_size, capacity)
+                         admission, prefill_bucket, seed, attn_backend,
+                         kv, block_size, num_blocks, watermark,
+                         sjf_age_rate, clock)
+        self.cache = self._init_pool_cache()
         if cfg.modality == "audio":
             self.tokens = jnp.zeros((batch_size, cfg.n_codebooks),
                                     jnp.int32)
@@ -375,10 +535,16 @@ class ContinuousVanillaEngine(_ContinuousBase):
                 temperature=self.temperature, key=keys, active=active,
                 attn_backend=self.attn_backend))
 
-    def _admit_device(self, slot_idx, row_cache, first):
-        self.cache = write_cache_rows(self.cfg, self.cache, row_cache,
-                                      slot_idx)
+    def _admit_device(self, slot_idx, row_cache, first, plen):
+        self.cache = self._write_row(self.cache, row_cache, slot_idx,
+                                     plen)
         self.tokens = self.tokens.at[slot_idx].set(first)
+
+    def _release_device(self, slot_idx):
+        self.cache = release_slot(self.cache, slot_idx)
+
+    def _pool_cache(self):
+        return self.cache
 
     def _decode_active(self, active: np.ndarray):
         keys = self._slot_keys()

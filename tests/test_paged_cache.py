@@ -1,0 +1,351 @@
+"""Paged KV cache: block-manager properties (no leaks, refcounts,
+prefix sharing, fork/CoW), device pool round-trips, and the acceptance
+sweep — greedy outputs token-identical between ``kv="ring"`` and
+``kv="paged"`` across both attention backends and engine families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.core import init_prompt_params
+from repro.models import init_cache, init_params
+from repro.models.paged_cache import (copy_blocks, gather_kv, gather_pos,
+                                      is_paged_cache, paged_block_bytes,
+                                      ring_cache_bytes, scatter_paged,
+                                      set_block_table_row)
+from repro.serving import (BlockManager, ContinuousPPDEngine,
+                           ContinuousVanillaEngine, Request)
+from repro.serving.block_manager import blocks_for
+
+CFG = get_smoke_config("granite-3-2b")
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    return params, ppd
+
+
+def _prompt(seed, n, prefix=None):
+    rng = np.random.default_rng(seed)
+    p = rng.integers(0, CFG.vocab_size, size=n)
+    if prefix is not None:
+        p = np.concatenate([prefix, p])
+    return p
+
+
+# ----------------------------------------------------------- BlockManager
+def test_admit_retire_readmit_never_leaks():
+    """Blocks are conserved across arbitrary admit -> retire -> re-admit
+    cycles: after every sequence is freed, every block is free again and
+    the prefix registry is empty."""
+    bm = BlockManager(num_blocks=32, block_size=8, watermark=0.0)
+    rng = np.random.default_rng(0)
+    live = {}
+    uid = 0
+    for _ in range(200):
+        if live and (rng.random() < 0.5 or len(live) == 4):
+            victim = rng.choice(sorted(live))
+            bm.free_seq(victim)
+            del live[victim]
+            continue
+        plen = int(rng.integers(1, 40))
+        budget = int(rng.integers(1, 24))
+        if bm.can_never_fit(plen, budget, 64) is not None:
+            continue
+        if not bm.can_admit(_prompt(uid, plen), budget):
+            continue
+        ids, n_shared = bm.allocate(uid, _prompt(uid, plen), budget)
+        assert len(ids) == blocks_for(plen + budget, 8)
+        assert len(set(ids)) == len(ids)
+        live[uid] = ids
+        uid += 1
+    for u in sorted(live):
+        bm.free_seq(u)
+    assert bm.used_blocks == 0
+    assert bm.free_blocks == bm.num_blocks
+    assert bm._registry == {} and bm._block_key == {}
+    assert (bm._ref == 0).all()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 30), st.integers(1, 16)),
+                    min_size=1, max_size=12),
+           st.integers(0, 2 ** 31 - 1))
+    def test_block_conservation_property(jobs, seed):
+        """used + free == num_blocks at every step; refcounts match the
+        number of live sequences holding each block."""
+        bm = BlockManager(num_blocks=24, block_size=4, watermark=0.0)
+        rng = np.random.default_rng(seed)
+        live = []
+        for uid, (plen, budget) in enumerate(jobs):
+            if bm.can_never_fit(plen, budget, 1024) is not None:
+                continue
+            prompt = _prompt(seed ^ uid if rng.random() < 0.5 else seed,
+                             plen)
+            if not bm.can_admit(prompt, budget):
+                if live:
+                    bm.free_seq(live.pop(0))
+                if not bm.can_admit(prompt, budget):
+                    continue
+            bm.allocate(uid, prompt, budget)
+            live.append(uid)
+            assert bm.used_blocks + bm.free_blocks == bm.num_blocks
+            held = np.zeros(bm.num_blocks, np.int64)
+            for u in live:
+                for bid in bm.seq_blocks(u):
+                    held[bid] += 1
+            assert (held == bm._ref).all()
+        for u in live:
+            bm.free_seq(u)
+        assert bm.used_blocks == 0
+
+
+def test_prefix_sharing_refcounts():
+    bm = BlockManager(num_blocks=32, block_size=8, watermark=0.0)
+    sys_prompt = _prompt(0, 20)              # 2 full blocks + partial
+    a = np.concatenate([sys_prompt, _prompt(1, 4)])
+    b = np.concatenate([sys_prompt, _prompt(2, 4)])
+    ids_a, sh_a = bm.allocate(1, a, budget=8)
+    assert sh_a == 0                         # first holder stores blocks
+    ids_b, sh_b = bm.allocate(2, b, budget=8)
+    assert sh_b == 2                         # 20 // 8 full prefix blocks
+    assert ids_b[:2] == ids_a[:2]            # physically shared
+    assert ids_b[2:] != ids_a[2:len(ids_b)]
+    assert bm.ref_count(ids_a[0]) == 2
+    bm.free_seq(1)
+    assert bm.ref_count(ids_a[0]) == 1       # survives for seq 2
+    c = np.concatenate([sys_prompt, _prompt(3, 4)])
+    ids_c, sh_c = bm.allocate(3, c, budget=8)
+    assert sh_c == 2 and ids_c[:2] == ids_b[:2]
+    bm.free_seq(2)
+    bm.free_seq(3)
+    assert bm.used_blocks == 0 and bm._registry == {}
+
+
+def test_fork_cow_before_divergent_write():
+    """A forked sequence shares every block; the first divergent write
+    copies exactly the written block and leaves the rest shared."""
+    bm = BlockManager(num_blocks=16, block_size=4, watermark=0.0)
+    ids, _ = bm.allocate(1, _prompt(0, 10), budget=6)   # 4 blocks
+    forked = bm.fork(1, 2)
+    assert forked == ids
+    assert all(bm.ref_count(i) == 2 for i in ids)
+    # writing positions [10, 12) hits block 2 only
+    targets = bm.cow_targets(2, 10, 12)
+    assert targets == [2]
+    src, dst = bm.cow(2, 2)
+    assert src == ids[2] and dst not in ids
+    assert bm.seq_blocks(2)[2] == dst
+    assert bm.seq_blocks(1)[2] == src        # original untouched
+    assert bm.ref_count(src) == 1 and bm.ref_count(dst) == 1
+    assert bm.cow_targets(2, 10, 12) == []   # now exclusive: no CoW left
+    bm.free_seq(1)
+    bm.free_seq(2)
+    assert bm.used_blocks == 0
+
+
+def test_watermark_blocks_admission_but_not_idle_pool():
+    bm = BlockManager(num_blocks=10, block_size=4, watermark=0.2)
+    # 10 blocks, watermark 2: a 9-block request fails can_admit...
+    assert not bm.can_admit(_prompt(0, 20), budget=16)   # 36 tok = 9 blk
+    # ...but a 8-block one passes
+    assert bm.can_admit(_prompt(0, 20), budget=12)       # 32 tok = 8 blk
+
+
+# ------------------------------------------------------------ device pool
+def test_scatter_gather_roundtrip_and_cow_copy():
+    cache = init_cache(CFG, batch=2, capacity=64, paged=True,
+                       block_size=8, num_blocks=12)
+    assert is_paged_cache(cache)
+    bm = BlockManager(12, 8, watermark=0.0)
+    ids, _ = bm.allocate(7, _prompt(0, 10), budget=10)   # 3 blocks
+    cache = set_block_table_row(cache, 0, ids)
+    entry = cache["layers"][0]
+    rng = np.random.default_rng(0)
+    Hkv, Dh = CFG.n_kv_heads, CFG.head_dim
+    k = jnp.asarray(rng.normal(size=(1, 10, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 10, Hkv, Dh)), jnp.float32)
+    posn = jnp.arange(10, dtype=jnp.int32)[None]
+    entry = scatter_paged(entry, {"k": k, "v": v}, posn)
+    kd, vd, pos = gather_kv(entry)
+    np.testing.assert_array_equal(np.asarray(pos[0][:10]), np.arange(10))
+    assert (np.asarray(pos[0][10:]) == -1).all()
+    np.testing.assert_allclose(np.asarray(kd[0, :10]), np.asarray(k[0]))
+    # out-of-table positions are dropped, not clamped into real blocks
+    k_bad = jnp.ones((1, 1, Hkv, Dh))
+    before = gather_kv(entry)[0]
+    entry2 = scatter_paged(entry, {"k": k_bad, "v": k_bad},
+                           jnp.asarray([[999]], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(gather_kv(entry2)[0]),
+                                  np.asarray(before))
+    # CoW device copy: fork row 0's sequence into row 1, copy block 1
+    # (positions 8..15) before a divergent write at position 9.
+    cache["layers"][0] = entry
+    cache = set_block_table_row(cache, 1, bm.fork(7, 8))
+    src, dst = bm.cow(8, 1)
+    cache = copy_blocks(cache, [(src, dst)])
+    cache = set_block_table_row(cache, 1, bm.seq_blocks(8))
+    k0, _, _ = gather_kv(cache["layers"][0])
+    np.testing.assert_allclose(np.asarray(k0[1, :10]),
+                               np.asarray(k0[0, :10]))   # copy == original
+    # divergent write lands in row 1's private block dst, not row 0's src
+    wk = jnp.zeros((2, 1, Hkv, Dh)).at[1].set(9.0)
+    posw = jnp.asarray([[999], [9]], jnp.int32)          # row 0: dropped
+    e2 = scatter_paged(cache["layers"][0], {"k": wk, "v": wk}, posw)
+    k2, _, _ = gather_kv(e2)
+    assert float(k2[1, 9, 0, 0]) == 9.0
+    np.testing.assert_allclose(np.asarray(k2[0, :10]),
+                               np.asarray(k0[0, :10]))   # row 0 untouched
+    assert not np.allclose(np.asarray(k2[1, 9]), np.asarray(k2[0, 9]))
+
+
+def test_bytes_accounting():
+    ring = init_cache(CFG, batch=4, capacity=64)
+    paged = init_cache(CFG, batch=4, capacity=64, paged=True,
+                       block_size=8)            # ring-parity pool
+    rb = ring_cache_bytes(ring)
+    bb = paged_block_bytes(paged)
+    assert rb > 0 and bb > 0
+    # ring-parity pool: all blocks used == ring footprint
+    n_blocks = paged["layers"][0]["k"].shape[0]
+    assert bb * n_blocks == rb
+
+
+# ----------------------------------------------- engines: ring == paged
+def _requests(lens, shared_len=20, tail=6):
+    shared = _prompt(42, shared_len)
+    return [Request(uid=i, prompt=_prompt(100 + i, tail, prefix=shared),
+                    max_new_tokens=L) for i, L in enumerate(lens)]
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_ppd_ring_paged_token_identical(model, backend):
+    params, ppd = model
+    outs = {}
+    for kv in ("ring", "paged"):
+        eng = ContinuousPPDEngine(params, ppd, CFG, m=3, batch_size=2,
+                                  capacity=128, kv=kv, block_size=8,
+                                  attn_backend=backend)
+        for r in _requests([4, 12, 7, 16]):
+            eng.add_request(r)
+        outs[kv] = {r.uid: r.tokens for r in eng.run()}
+    assert set(outs["ring"]) == set(outs["paged"]) == {0, 1, 2, 3}
+    for uid in outs["ring"]:
+        np.testing.assert_array_equal(outs["ring"][uid], outs["paged"][uid],
+                                      f"backend={backend} uid={uid}")
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_vanilla_ring_paged_token_identical(model, backend):
+    params, _ = model
+    outs = {}
+    for kv in ("ring", "paged"):
+        eng = ContinuousVanillaEngine(params, CFG, batch_size=2,
+                                      capacity=128, kv=kv, block_size=8,
+                                      attn_backend=backend)
+        for r in _requests([3, 9, 5]):
+            eng.add_request(r)
+        outs[kv] = {r.uid: r.tokens for r in eng.run()}
+    for uid in outs["ring"]:
+        np.testing.assert_array_equal(outs["ring"][uid], outs["paged"][uid])
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "minicpm3-4b"])
+def test_sliding_and_mla_ring_paged_identical(arch):
+    """Sliding-window layers (full-span pool blocks + kernel block skip)
+    and MLA latent pools stay token-identical under paging."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, size=20)
+    reqs = [Request(uid=i, prompt=np.concatenate(
+                [shared, np.random.default_rng(100 + i).integers(
+                    0, cfg.vocab_size, size=6)]), max_new_tokens=L)
+            for i, L in enumerate([4, 11, 7])]
+    outs = {}
+    for kv in ("ring", "paged"):
+        eng = ContinuousPPDEngine(params, ppd, cfg, m=3, batch_size=2,
+                                  capacity=128, kv=kv, block_size=8,
+                                  attn_backend="pallas")
+        for r in reqs:
+            eng.add_request(r)
+        outs[kv] = {r.uid: r.tokens for r in eng.run()}
+    for uid in outs["ring"]:
+        np.testing.assert_array_equal(outs["ring"][uid], outs["paged"][uid])
+
+
+def test_paged_prefix_sharing_saves_blocks(model):
+    """The shared-system-prompt trace reuses prefix blocks: peak usage
+    with sharing is strictly below a no-sharing pool, and both stay below
+    the ring footprint."""
+    params, _ = model
+    eng = ContinuousVanillaEngine(params, CFG, batch_size=4, capacity=256,
+                                  kv="paged", block_size=8)
+    for r in _requests([6, 6, 6, 6], shared_len=32, tail=4):
+        eng.add_request(r)
+    res = eng.run()
+    m = eng.metrics(res)
+    assert m["block_shared_block_hits"] > 0
+    # with a 32-token shared prefix at bs=8: 3 sharers x 4 blocks saved
+    assert m["block_shared_block_hits"] == 12
+    ring = ContinuousVanillaEngine(params, CFG, batch_size=4,
+                                   capacity=256)
+    for r in _requests([6, 6, 6, 6], shared_len=32, tail=4):
+        ring.add_request(r)
+    rm = ring.metrics(ring.run())
+    assert m["peak_cache_bytes"] < rm["peak_cache_bytes"]
+
+
+def test_paged_overflow_queues_instead_of_error(model):
+    """A request that exceeds the *currently free* blocks waits in the
+    queue (the PR-3 add-time ValueError is gone for schedulable
+    requests); one that can never fit still raises."""
+    params, _ = model
+    eng = ContinuousVanillaEngine(params, CFG, batch_size=3, capacity=64,
+                                  kv="paged", block_size=8,
+                                  num_blocks=10, watermark=0.0)
+    # 10-block pool, 3 slots: two 4-block requests fill 8 blocks; the
+    # third slot is free but the 5-block request must wait for a
+    # retirement to free blocks, then completes.
+    for i, (plen, mx) in enumerate([(20, 12), (20, 12), (30, 10)]):
+        eng.add_request(Request(uid=i, prompt=_prompt(i, plen),
+                                max_new_tokens=mx))
+    res = {r.uid: r for r in eng.run()}
+    assert set(res) == {0, 1, 2}
+    assert len(res[2].tokens) == 10
+    assert eng.stats["admission_waits"] > 0
+    # never-fits: more blocks than the pool has
+    with pytest.raises(ValueError, match="can never be scheduled"):
+        eng.add_request(Request(uid=9, prompt=_prompt(9, 60),
+                                max_new_tokens=30))
+
+
+def test_paged_slot_reuse_many_cycles(model):
+    """Admit -> retire -> re-admit across more requests than slots or
+    pool headroom: no leaks (pool drains to empty) and exact outputs
+    per request vs ring."""
+    params, _ = model
+    lens = [3, 7, 4, 6, 5, 8, 3, 4]
+    outs = {}
+    for kv in ("ring", "paged"):
+        eng = ContinuousVanillaEngine(params, CFG, batch_size=2,
+                                      capacity=64, kv=kv, block_size=8,
+                                      num_blocks=12)
+        for r in _requests(lens, shared_len=10, tail=3):
+            eng.add_request(r)
+        outs[kv] = {r.uid: r.tokens for r in eng.run()}
+        if kv == "paged":
+            assert eng.block_mgr.used_blocks == 0
+            assert eng.block_mgr._registry == {}
+    for uid in outs["ring"]:
+        np.testing.assert_array_equal(outs["ring"][uid], outs["paged"][uid])

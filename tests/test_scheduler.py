@@ -209,3 +209,142 @@ def test_poisson_trace_and_metrics(model):
     assert m["goodput_tok_s"] > 0
     assert m["mean_ttft_s"] >= 0
     assert m["total_forward_passes"] == eng.total_forward_passes
+
+
+# --------------------------------------------------- metrics & admission
+class _ScriptClock:
+    """Injectable clock returning scripted values (then holding the last)."""
+
+    def __init__(self, values):
+        self.values = list(values)
+
+    def __call__(self):
+        return self.values.pop(0) if len(self.values) > 1 \
+            else self.values[0]
+
+
+def test_engine_clock_is_monotonic_by_default():
+    """Serving latencies must come from a monotonic clock: time.time can
+    step backwards under NTP and yield negative TTFT/TPOT."""
+    import time
+    eng = ContinuousVanillaEngine(None, CFG, batch_size=1, capacity=64)
+    assert eng._clock is time.perf_counter
+
+
+def test_retire_metrics_fake_clock():
+    """TTFT / TPOT / goodput computed exactly from an injected clock."""
+    eng = ContinuousVanillaEngine(None, CFG, batch_size=1, capacity=64,
+                                  clock=_ScriptClock([0.0]))
+    eng._t0 = 0.0
+    slot = eng.slots[0]
+    slot.req = Request(uid=0, prompt=np.arange(4), max_new_tokens=3,
+                       arrival_s=1.0)
+    slot.produced = [np.int32(1), np.int32(2), np.int32(3)]
+    slot.decode_steps = 2
+    slot.arrival_t = 1.0
+    slot.first_tok_t = 2.5
+    res = eng._retire(0, now=4.5)
+    assert res.ttft_s == pytest.approx(1.5)
+    assert res.tpot_s == pytest.approx((4.5 - 2.5) / 2)
+    assert res.goodput_tok_s == pytest.approx(3 / 3.5)
+
+
+def test_retire_n1_tpot_undefined_and_skipped():
+    """A 1-token request has no inter-token gap: TPOT is NaN (not the
+    whole decode span) and aggregate_metrics skips it."""
+    import math
+
+    from repro.serving import Result, aggregate_metrics
+    eng = ContinuousVanillaEngine(None, CFG, batch_size=1, capacity=64)
+    eng._t0 = 0.0
+    slot = eng.slots[0]
+    slot.req = Request(uid=0, prompt=np.arange(4), max_new_tokens=1,
+                       arrival_s=0.0)
+    slot.produced = [np.int32(1)]
+    slot.decode_steps = 0
+    slot.arrival_t = 0.0
+    slot.first_tok_t = 1.0
+    res = eng._retire(0, now=9.0)
+    assert math.isnan(res.tpot_s)          # NOT the 8 s decode span
+    other = Result(uid=1, tokens=np.arange(5), steps=5, wall_s=1.0,
+                   ttft_s=0.1, tpot_s=0.25, goodput_tok_s=5.0)
+    m = aggregate_metrics([res, other], makespan_s=9.0)
+    assert m["mean_tpot_s"] == pytest.approx(0.25)   # NaN skipped
+    assert m["tpot_defined_requests"] == 1
+
+
+def test_retire_negative_clock_step_clamped():
+    """Even if the caller's clock misbehaves (the old time.time failure:
+    an NTP step between first token and retire), latencies never go
+    negative."""
+    eng = ContinuousVanillaEngine(None, CFG, batch_size=1, capacity=64)
+    eng._t0 = 0.0
+    slot = eng.slots[0]
+    slot.req = Request(uid=0, prompt=np.arange(4), max_new_tokens=2,
+                       arrival_s=0.0)
+    slot.produced = [np.int32(1), np.int32(2)]
+    slot.decode_steps = 1
+    slot.arrival_t = 0.0
+    slot.first_tok_t = 5.0                 # clock stepped back afterwards
+    res = eng._retire(0, now=4.0)
+    assert res.tpot_s >= 0.0 and res.ttft_s >= 0.0 and res.wall_s > 0.0
+
+
+def test_sjf_aging_admits_long_request_under_short_stream():
+    """Regression: plain SJF starves a long request behind an endless
+    stream of short ones; the aging term (waiting time discounts
+    max_new_tokens) must eventually admit it."""
+    def drive(age_rate, rounds=200):
+        eng = ContinuousVanillaEngine(None, CFG, batch_size=1,
+                                      capacity=512, admission="sjf",
+                                      sjf_age_rate=age_rate)
+        eng.queue.append(Request(uid=0, prompt=np.arange(4),
+                                 max_new_tokens=100, arrival_s=0.0))
+        picked, uid, t = [], 1, 0.0
+        for _ in range(rounds):
+            t += 1.0
+            eng.queue.append(Request(uid=uid, prompt=np.arange(4),
+                                     max_new_tokens=5, arrival_s=t))
+            uid += 1
+            pick = eng._pick_next(t)
+            picked.append(eng.queue.pop(pick).uid)
+            if picked[-1] == 0:
+                break
+        return picked
+    aged = drive(age_rate=1.0)
+    assert aged[-1] == 0                   # admitted once its age wins
+    assert len(aged) < 200
+    starved = drive(age_rate=0.0)          # plain SJF: never picked
+    assert 0 not in starved
+
+
+def test_sjf_tie_break_deterministic():
+    """Equal aged scores break ties by (arrival, uid) — admission order
+    must not depend on queue insertion order."""
+    eng = ContinuousVanillaEngine(None, CFG, batch_size=1, capacity=512,
+                                  admission="sjf")
+    reqs = [Request(uid=u, prompt=np.arange(4), max_new_tokens=8,
+                    arrival_s=0.0) for u in (3, 1, 2)]
+    eng.queue.extend(reqs)
+    assert eng.queue[eng._pick_next(1.0)].uid == 1
+
+
+def test_sjf_paged_blocked_head_not_bypassed():
+    """Regression: under kv='paged', a blocked aged-SJF head must not be
+    bypassed by smaller admissible jobs — bypassing keeps the pool busy
+    forever, so the head's rising rank never becomes free blocks."""
+    eng = ContinuousVanillaEngine(None, CFG, batch_size=2, capacity=64,
+                                  kv="paged", block_size=8, num_blocks=8,
+                                  watermark=0.0, admission="sjf")
+    eng.block_mgr.allocate(99, np.arange(30), budget=10)   # 5/8 blocks used
+    eng.add_request(Request(uid=0, prompt=np.arange(100, 120),
+                            max_new_tokens=10, arrival_s=0.0))   # 4 blocks
+    eng.add_request(Request(uid=1, prompt=np.arange(200, 204),
+                            max_new_tokens=4, arrival_s=100.0))  # 1 block
+    # at t=101 aging puts uid 0 first (score 10-101 vs 4-1); it needs 4
+    # blocks but only 3 are free -> nothing admits, nothing bypasses
+    assert eng._pick_next(101.0) is None
+    assert eng.stats["admission_waits"] == 1
+    # once the running sequence retires its blocks, the head admits
+    eng.block_mgr.free_seq(99)
+    assert eng.queue[eng._pick_next(102.0)].uid == 0
