@@ -34,7 +34,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 def build_trace(cfg, n_requests, shared_len, tail_len, lens):
     """Mixed-length requests sharing one system prompt prefix."""
-    from repro.serving import Request
+    from repro.serving.engine import Request
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, size=shared_len)
     reqs = []
@@ -50,7 +50,7 @@ def build_trace(cfg, n_requests, shared_len, tail_len, lens):
 def run_engine(params, cfg, reqs, kv, capacity, batch, block_size):
     import dataclasses
 
-    from repro.serving import ContinuousVanillaEngine
+    from repro.serving.scheduler import ContinuousVanillaEngine
     eng = ContinuousVanillaEngine(params, cfg, batch_size=batch,
                                   capacity=capacity, kv=kv,
                                   block_size=block_size)

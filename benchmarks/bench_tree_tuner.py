@@ -34,7 +34,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 
 def run_engine(params, ppd, cfg, tree_states, reqs, *, m, batch, capacity):
-    from repro.serving import PPDEngine, Request
+    from repro.serving.engine import PPDEngine, Request
 
     eng = PPDEngine(params, ppd, cfg, m=m, tree_states=tree_states,
                     batch_size=batch, capacity=capacity)
@@ -78,7 +78,7 @@ def main():
     from repro.configs import get_smoke_config
     from repro.core import init_prompt_params, tuned_tree_states
     from repro.models import init_params
-    from repro.serving import Request
+    from repro.serving.engine import Request
 
     cfg = get_smoke_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))

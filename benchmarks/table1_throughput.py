@@ -85,9 +85,13 @@ def run(fast: bool = False):
 
 
 def run_serving(fast: bool = False):
-    """Static vs continuous-batching PPD serving on a Poisson trace."""
-    from repro.serving import (ContinuousPPDEngine, PPDEngine, Request,
-                               aggregate_metrics, poisson_trace)
+    """Static vs continuous-batching PPD serving on a Poisson trace,
+    driven through the unified ``LLMEngine`` facade — the scheduler is
+    one ``EngineConfig`` field, not a different engine class."""
+    from repro.serving import (EngineConfig, LLMEngine, SamplingParams,
+                               aggregate_metrics)
+    from repro.serving.engine import Request
+    from repro.serving.scheduler import poisson_trace
 
     params, ppd, _, cfg = get_trained(fast)
     pipe = pipeline()
@@ -102,21 +106,20 @@ def run_serving(fast: bool = False):
 
     rows = {}
     for mode in ("static", "continuous"):
-        if mode == "static":
-            eng = PPDEngine(params, ppd, cfg, m=M, batch_size=slots,
-                            capacity=capacity)
-        else:
-            eng = ContinuousPPDEngine(params, ppd, cfg, m=M,
-                                      batch_size=slots, capacity=capacity)
+        llm = LLMEngine(EngineConfig(decode="ppd", scheduler=mode, m=M,
+                                     batch_size=slots, capacity=capacity),
+                        params=params, cfg=cfg, ppd_params=ppd)
         for r in reqs:
-            eng.add_request(r)
+            llm.add_request(r.prompt,
+                            SamplingParams(max_tokens=r.max_new_tokens),
+                            request_id=r.uid, arrival_s=r.arrival_s)
         t0 = time.perf_counter()
-        res = eng.run()
+        res = llm.engine.run()
         makespan = time.perf_counter() - t0
-        agg = (eng.metrics(res) if mode == "continuous"
+        agg = (llm.metrics(res) if mode == "continuous"
                else aggregate_metrics(res, makespan))
         rows[mode] = dict(
-            forward_passes=eng.total_forward_passes,
+            forward_passes=llm.total_forward_passes,
             goodput_tok_s=agg["goodput_tok_s"],
             mean_ttft_s=agg["mean_ttft_s"],
             mean_tpot_s=agg["mean_tpot_s"],

@@ -26,7 +26,7 @@ from repro.configs.demo import CONFIG as TARGET_CFG
 from repro.core import init_prompt_params
 from repro.data.pipeline import DataPipeline
 from repro.models import init_params
-from repro.serving.spec_decode import SpeculativeDecoder
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
 from repro.training.train_loop import pretrain_base, train_prompt_tokens
 
 DRAFT_CFG = TARGET_CFG.replace(name="ppd-demo-draft", n_layers=3,
@@ -57,23 +57,29 @@ def main():
                                  m=M, lr=3e-2, verbose=False)
 
     prompt = pipe.val_prompts(1, 32)[0]
+    config = EngineConfig(decode="ppd+spec", scheduler="static", m=M,
+                          gamma=GAMMA, capacity=512, batch_size=1)
+    sampling = SamplingParams(max_tokens=args.n_new)
 
     print("== spec-decode: vanilla draft ==")
-    sd = SpeculativeDecoder(tparams, TARGET_CFG, dparams, DRAFT_CFG,
-                            gamma=GAMMA)
+    sd = LLMEngine(config, params=tparams, cfg=TARGET_CFG,
+                   draft_params=dparams, draft_cfg=DRAFT_CFG)
     t0 = time.time()
-    out_v, st_v = sd.generate(prompt, args.n_new)
+    out_v = sd.generate([prompt], sampling)[0].token_ids
     t_v = time.time() - t0
+    st_v = sd.strategy.stats
     print(f"  {st_v.tokens} tokens | target steps {st_v.target_steps} "
           f"(accept-len {st_v.accept_len:.2f}) | draft steps "
           f"{st_v.draft_steps} | {t_v:.1f}s")
 
     print("== spec-decode: PPD-accelerated draft ==")
-    sp = SpeculativeDecoder(tparams, TARGET_CFG, dparams, DRAFT_CFG,
-                            gamma=GAMMA, ppd_params=ppd, m=M)
+    sp = LLMEngine(config, params=tparams, cfg=TARGET_CFG,
+                   draft_params=dparams, draft_cfg=DRAFT_CFG,
+                   draft_ppd=ppd)
     t0 = time.time()
-    out_p, st_p = sp.generate(prompt, args.n_new)
+    out_p = sp.generate([prompt], sampling)[0].token_ids
     t_p = time.time() - t0
+    st_p = sp.strategy.stats
     print(f"  {st_p.tokens} tokens | target steps {st_p.target_steps} "
           f"(accept-len {st_p.accept_len:.2f}) | draft steps "
           f"{st_p.draft_steps} | {t_p:.1f}s")

@@ -1,70 +1,51 @@
-"""Quickstart: PPD guess-and-verify decoding in ~60 lines.
+"""Quickstart: PPD guess-and-verify serving in ~40 lines.
 
-Builds a small decoder, appends 3 trained-embedding prompt tokens, and runs
-greedy PPD decoding — demonstrating the core guarantee: the output is
-EXACTLY the vanilla autoregressive output, in fewer forward passes.
+Builds a small decoder, appends 3 trained-embedding prompt tokens, and
+serves one batch of prompts through the unified ``LLMEngine`` facade
+twice — decode="ppd" and decode="vanilla" — demonstrating the core
+guarantee: the PPD output is EXACTLY the vanilla autoregressive output,
+in fewer forward passes.  (See examples/quickstart_core.py-style usage
+in docs/architecture.md for the low-level decode-step API.)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.demo import SMOKE as CFG
-from repro.core import (device_buffers, init_ppd_state, init_prompt_params,
-                        mk_default_tree, ppd_decode_step,
-                        vanilla_decode_step)
-from repro.models import forward, init_cache, init_params
+from repro.core import init_prompt_params
+from repro.models import init_params
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
 
 M = 3                       # prompt tokens (paper §5: 3 for all experiments)
 N_NEW = 48
 
-key = jax.random.PRNGKey(0)
-params = init_params(CFG, key)
+params = init_params(CFG, jax.random.PRNGKey(0))
 ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=M,
                          base_embed=params["embed"])
-bufs = device_buffers(mk_default_tree(M), M)
+prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(2), (16,), 0,
+                                         CFG.vocab_size))]
+sampling = SamplingParams(max_tokens=N_NEW)   # greedy, 48 tokens
 
-prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0,
-                            CFG.vocab_size)
+outs, walls, fwd = {}, {}, {}
+for decode in ("vanilla", "ppd"):
+    llm = LLMEngine(EngineConfig(decode=decode, scheduler="static",
+                                 capacity=256, batch_size=1),
+                    params=params, cfg=CFG, ppd_params=ppd)
+    t0 = time.time()
+    outs[decode] = llm.generate(prompts, sampling)[0].token_ids.tolist()
+    walls[decode] = time.time() - t0
+    fwd[decode] = llm.total_forward_passes
 
-# ---------------------------------------------------------------- vanilla
-cache = init_cache(CFG, 1, 256)
-logits, cache, _, _ = forward(params, CFG, prompt, cache=cache)
-tok = jnp.argmax(logits[:, -1], -1)
-vanilla, steps_v = [int(tok[0])], 0
-step_v = jax.jit(lambda c, t: vanilla_decode_step(params, CFG, c, t))
-t0 = time.time()
-while len(vanilla) < N_NEW:
-    cache, tok, _ = step_v(cache, tok)
-    steps_v += 1
-    vanilla.append(int(tok[0]))
-t_vanilla = time.time() - t0
-
-# ---------------------------------------------------------------- PPD
-cache = init_cache(CFG, 1, 256)
-logits, cache, _, _ = forward(params, CFG, prompt, cache=cache)
-first = jnp.argmax(logits[:, -1], -1)
-st = init_ppd_state(CFG, cache, first, M, kmax=bufs["_kmax"])
-ppd_out, steps_p = [int(first[0])], 0
-step_p = jax.jit(lambda s: ppd_decode_step(params, ppd, CFG, bufs, s, m=M))
-t0 = time.time()
-while len(ppd_out) < N_NEW:
-    st, info = step_p(st)
-    steps_p += 1
-    for t in np.asarray(info["accepted_path_tokens"])[0][1:]:
-        if t >= 0:
-            ppd_out.append(int(t))
-    ppd_out.append(int(np.asarray(st.root_token)[0]))
-t_ppd = time.time() - t0
-
-vanilla, ppd_out = vanilla[:N_NEW], ppd_out[:N_NEW]
-print(f"vanilla : {steps_v + 1} forward passes, {t_vanilla:.2f}s")
-print(f"PPD     : {steps_p + 1} forward passes, {t_ppd:.2f}s "
-      f"(accept-len {N_NEW / (steps_p + 1):.2f})")
-print(f"outputs identical: {vanilla == ppd_out}")
-assert vanilla == ppd_out, "PPD must reproduce the vanilla output exactly"
+print(f"vanilla : {fwd['vanilla']} forward passes, "
+      f"{walls['vanilla']:.2f}s")
+print(f"PPD     : {fwd['ppd']} forward passes, {walls['ppd']:.2f}s "
+      f"(accept-len {N_NEW / fwd['ppd']:.2f})")
+print(f"outputs identical: {outs['vanilla'] == outs['ppd']}")
+assert outs["vanilla"] == outs["ppd"], \
+    "PPD must reproduce the vanilla output exactly"
+assert fwd["ppd"] < fwd["vanilla"]
 print("NOTE: prompt tokens here are UNTRAINED — see train_ppd_e2e.py for "
       "the full pipeline where acceptance length (and speedup) grows.")

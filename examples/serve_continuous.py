@@ -1,8 +1,8 @@
-"""Continuous-batching PPD serving demo.
+"""Continuous-batching PPD serving demo, on the unified LLMEngine API.
 
-Replays the ISSUE acceptance workload — 12 requests with mixed
-``max_new_tokens`` in {16, 64, 256} over 4 decode slots — through the
-static and continuous engines and shows:
+Replays the mixed-length workload — 12 requests with ``max_tokens`` in
+{16, 64, 256} over 4 decode slots — through all four decode x scheduler
+combinations of one ``EngineConfig`` and shows:
 
 * identical outputs, token for token (temperature 0), and
 * measurably fewer model forward passes for the continuous scheduler
@@ -20,8 +20,7 @@ from repro.configs.demo import SMOKE as CFG
 from repro.core import init_prompt_params
 from repro.data.pipeline import DataPipeline
 from repro.models import init_params
-from repro.serving import (ContinuousPPDEngine, ContinuousVanillaEngine,
-                           PPDEngine, Request, VanillaEngine)
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--fast", action="store_true",
@@ -38,50 +37,41 @@ ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
                          base_embed=params["embed"])
 pipe = DataPipeline(CFG.vocab_size, PROMPT_LEN, 4, seed=0)
 prompts = pipe.val_prompts(len(LENS), PROMPT_LEN)
-
-engines = {
-    "static PPD": PPDEngine(params, ppd, CFG, m=3, batch_size=args.slots,
-                            capacity=CAP),
-    "continuous PPD": ContinuousPPDEngine(params, ppd, CFG, m=3,
-                                          batch_size=args.slots,
-                                          capacity=CAP),
-    "static vanilla": VanillaEngine(params, CFG, batch_size=args.slots,
-                                    capacity=CAP),
-    "continuous vanilla": ContinuousVanillaEngine(
-        params, CFG, batch_size=args.slots, capacity=CAP),
-}
+sampling = [SamplingParams(max_tokens=L) for L in LENS]
 
 outputs, fwd, walls = {}, {}, {}
-for name, eng in engines.items():
-    for i, L in enumerate(LENS):
-        eng.add_request(Request(uid=i, prompt=prompts[i],
-                                max_new_tokens=L))
-    t0 = time.time()
-    res = {r.uid: r for r in eng.run()}
-    walls[name] = time.time() - t0
-    outputs[name] = res
-    fwd[name] = eng.total_forward_passes
-    total = sum(len(r.tokens) for r in res.values())
-    print(f"{name:>20}: {len(res)} requests, {total} tokens, "
-          f"{eng.total_forward_passes} forward passes, "
-          f"{walls[name]:.1f}s")
-    if hasattr(eng, "metrics"):
-        m = eng.metrics(list(res.values()))
-        print(f"{'':>20}  goodput {m['goodput_tok_s']:.1f} tok/s, "
-              f"mean TTFT {m['mean_ttft_s'] * 1e3:.0f} ms, "
-              f"mean TPOT {m['mean_tpot_s'] * 1e3:.1f} ms, "
-              f"idle slot-steps {m['idle_slot_steps']}")
+for decode in ("ppd", "vanilla"):
+    for sched in ("static", "continuous"):
+        name = f"{sched} {decode}"
+        llm = LLMEngine(EngineConfig(decode=decode, scheduler=sched,
+                                     capacity=CAP,
+                                     batch_size=args.slots),
+                        params=params, cfg=CFG, ppd_params=ppd)
+        t0 = time.time()
+        outs = llm.generate(list(prompts), sampling)
+        walls[name] = time.time() - t0
+        outputs[name] = {o.request_id: o.token_ids for o in outs}
+        fwd[name] = llm.total_forward_passes
+        total = sum(len(t) for t in outputs[name].values())
+        print(f"{name:>20}: {len(outs)} requests, {total} tokens, "
+              f"{fwd[name]} forward passes, {walls[name]:.1f}s")
+        if sched == "continuous":
+            m = llm.metrics([o.metrics for o in outs])
+            print(f"{'':>20}  goodput {m['goodput_tok_s']:.1f} tok/s, "
+                  f"mean TTFT {m['mean_ttft_s'] * 1e3:.0f} ms, "
+                  f"mean TPOT {m['mean_tpot_s'] * 1e3:.1f} ms, "
+                  f"idle slot-steps {m['idle_slot_steps']}")
 
-for uid in outputs["static PPD"]:
-    a = outputs["static PPD"][uid].tokens
-    for name in ("continuous PPD", "static vanilla", "continuous vanilla"):
-        np.testing.assert_array_equal(a, outputs[name][uid].tokens,
+for uid in outputs["static ppd"]:
+    a = outputs["static ppd"][uid]
+    for name in ("continuous ppd", "static vanilla", "continuous vanilla"):
+        np.testing.assert_array_equal(a, outputs[name][uid],
                                       f"{name} diverged on request {uid}")
-print("\nall four engines agree token-for-token on every request")
-for kind in ("PPD", "vanilla"):
+print("\nall four engine configs agree token-for-token on every request")
+for kind in ("ppd", "vanilla"):
     s, c = fwd[f"static {kind}"], fwd[f"continuous {kind}"]
     print(f"{kind}: continuous batching saves "
           f"{s - c} forward passes ({s} -> {c}, "
           f"{100.0 * (s - c) / s:.0f}% fewer)")
 assert fwd["continuous vanilla"] < fwd["static vanilla"]
-assert fwd["continuous PPD"] < fwd["static PPD"]
+assert fwd["continuous ppd"] < fwd["static ppd"]

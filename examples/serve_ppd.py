@@ -1,9 +1,11 @@
-"""Batched PPD serving with the engine API.
+"""Batched PPD serving with the unified LLMEngine API.
 
-Packs a queue of requests into fixed-size batches, prefills once, then
-runs PPD guess-and-verify steps until every row finishes — the static-
-shape serving pattern a TPU deployment uses.  Compares against the
-vanilla autoregressive engine and (optionally) the Medusa-head baseline.
+One ``EngineConfig`` per decode strategy — the static scheduler packs a
+queue of requests into fixed-size batches, prefills once, then runs
+guess-and-verify steps until every row finishes (the static-shape
+serving pattern a TPU deployment uses).  Compares PPD against the
+vanilla autoregressive strategy and (optionally) the Medusa-head
+baseline, all through the same facade.
 
 Run:  PYTHONPATH=src python examples/serve_ppd.py [--arch granite-3-2b]
 """
@@ -16,8 +18,7 @@ import numpy as np
 from repro.core import init_prompt_params
 from repro.data.pipeline import DataPipeline
 from repro.models import init_params
-from repro.serving.engine import (MedusaEngine, PPDEngine, Request,
-                                  VanillaEngine)
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
 
 M = 3
 
@@ -44,51 +45,44 @@ def main():
     pipe = DataPipeline(cfg.vocab_size, 32, args.batch,
                         n_codebooks=(cfg.n_codebooks
                                      if cfg.modality == "audio" else 0))
-    prompts = pipe.val_prompts(args.requests, 32)
-
-    def reqs():
-        return [Request(uid=i, prompt=prompts[i],
-                        max_new_tokens=args.max_new)
-                for i in range(args.requests)]
-
+    prompts = list(pipe.val_prompts(args.requests, 32))
+    sampling = SamplingParams(max_tokens=args.max_new)
     cap = 32 + args.max_new + 96
-    eng = PPDEngine(params, ppd, cfg, m=M, batch_size=args.batch,
-                    capacity=cap)
-    for r in reqs():
-        eng.add_request(r)
+
+    def build(decode, **weights):
+        return LLMEngine(EngineConfig(decode=decode, scheduler="static",
+                                      m=M, capacity=cap,
+                                      batch_size=args.batch),
+                         params=params, cfg=cfg, **weights)
+
+    llm = build("ppd", ppd_params=ppd)
     t0 = time.time()
-    res_p = eng.run()
+    res_p = llm.generate(prompts, sampling)
     tp = time.time() - t0
-    tok_p = sum(len(r.tokens) for r in res_p)
-    steps = sum(r.steps for r in res_p)
+    tok_p = sum(len(o.token_ids) for o in res_p)
+    steps = sum(o.metrics.steps for o in res_p)
     print(f"PPD     : {tok_p} tokens, {tp:.1f}s, {tok_p / tp:.1f} tok/s, "
           f"accept-len {tok_p / max(steps, 1):.2f}")
 
-    van = VanillaEngine(params, cfg, batch_size=args.batch, capacity=cap)
-    for r in reqs():
-        van.add_request(r)
+    van = build("vanilla")
     t0 = time.time()
-    res_v = van.run()
+    res_v = van.generate(prompts, sampling)
     tv = time.time() - t0
-    tok_v = sum(len(r.tokens) for r in res_v)
+    tok_v = sum(len(o.token_ids) for o in res_v)
     print(f"vanilla : {tok_v} tokens, {tv:.1f}s, {tok_v / tv:.1f} tok/s  "
           f"-> PPD speedup {tv / tp:.2f}x")
-    same = all(np.array_equal(a.tokens, b.tokens) for a, b in
-               zip(sorted(res_p, key=lambda r: r.uid),
-                   sorted(res_v, key=lambda r: r.uid)))
+    same = all(np.array_equal(a.token_ids, b.token_ids)
+               for a, b in zip(res_p, res_v))
     print(f"outputs exactly match vanilla: {same}")
 
     if args.medusa and cfg.modality == "text":
         from repro.models.medusa import init_medusa
         heads = init_medusa(cfg, jax.random.PRNGKey(2), m=M)
-        med = MedusaEngine(params, heads, cfg, m=M,
-                           batch_size=args.batch, capacity=cap)
-        for r in reqs():
-            med.add_request(r)
+        med = build("medusa", medusa_heads=heads)
         t0 = time.time()
-        res_m = med.run()
+        res_m = med.generate(prompts, sampling)
         tm = time.time() - t0
-        tok_m = sum(len(r.tokens) for r in res_m)
+        tok_m = sum(len(o.token_ids) for o in res_m)
         print(f"medusa  : {tok_m} tokens, {tm:.1f}s, {tok_m / tm:.1f} tok/s "
               "(heads untrained — see benchmarks for trained comparison)")
 

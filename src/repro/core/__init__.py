@@ -12,4 +12,5 @@ from .tree_tuner import (LatencyCurve, TunedTree, analytic_latency_curve,
                          save_tree_states, tuned_tree_states)
 from .tree import (TreeSpec, build_buffers, default_chain_spec,
                    mk_default_tree, stack_states)
-from .verify import sample_token, verify_greedy, verify_typical
+from .verify import (apply_top_k, apply_top_p, sample_token, verify_greedy,
+                     verify_typical)

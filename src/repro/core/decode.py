@@ -278,9 +278,9 @@ def commit_staged(cfg: ModelConfig, cache, staged_list, positions,
 
 
 def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
-                    *, m: int, n_ept: int = 1, temperature: float = 0.0,
+                    *, m: int, n_ept: int = 1, temperature=0.0,
                     key=None, moe_exact: bool = True, active=None,
-                    attn_backend=None):
+                    attn_backend=None, top_k=None, top_p=None):
     """One guess-and-verify step.  Returns (new_state, step_info).
 
     ``active`` ([B] bool, optional) marks live decode slots (continuous
@@ -289,6 +289,15 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
     length is frozen, and their carried state (root token, guesses, tree
     state) passes through unchanged.  Their ``accepted_path_tokens`` rows
     come back as -1 so schedulers can harvest without masking again.
+
+    ``temperature`` is either a python float (whole batch, the legacy
+    engine-global path: 0 -> greedy verification, >0 -> typical
+    acceptance) or a per-row [B] array (per-request sampling): both
+    verdicts are computed and selected per row, so greedy and sampled
+    requests can share one jitted step — rows with temperature 0 stay
+    token-identical to a pure-greedy batch.  ``top_k`` / ``top_p``
+    (scalars or [B] arrays) filter the sampled bonus token's support;
+    greedy rows ignore them.  Audio models verify greedily regardless.
 
     ``attn_backend`` selects the decode attention backend ("ref" or
     "pallas"); greedy outputs are backend-independent."""
@@ -305,10 +314,26 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
         extra_mask=rb["mask"], stage_only=True, moe_exact=moe_exact,
         attn_backend=attn_backend)
 
-    if temperature > 0.0:
-        verdict = verify_typical(rb, logits, tokens, key, temperature)
-    else:
+    if isinstance(temperature, (int, float)):
+        if temperature > 0.0:
+            verdict = verify_typical(rb, logits, tokens, key, temperature,
+                                     top_k=top_k, top_p=top_p)
+        else:
+            verdict = verify_greedy(rb, logits, tokens)
+    elif logits.ndim == 4:
+        # audio: per-request sampling is unsupported — greedy per codebook
         verdict = verify_greedy(rb, logits, tokens)
+    else:
+        sampled_rows = jnp.asarray(temperature) > 0.0            # [B]
+        vg = verify_greedy(rb, logits, tokens)
+        vt = verify_typical(rb, logits, tokens, key, temperature,
+                            top_k=top_k, top_p=top_p)
+
+        def _sel(t, g):
+            mask = sampled_rows.reshape((-1,) + (1,) * (t.ndim - 1))
+            return jnp.where(mask, t, g)
+
+        verdict = Verdict(*(_sel(t, g) for t, g in zip(vt, vg)))
 
     accept_mask = verdict.accept_mask
     n_committed = verdict.n_acc + 1                              # + root
@@ -362,14 +387,17 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
 
 
 def vanilla_decode_step(params, cfg: ModelConfig, cache, token, *,
-                        temperature: float = 0.0, key=None,
+                        temperature=0.0, key=None,
                         moe_exact: bool = True, active=None,
-                        attn_backend=None):
+                        attn_backend=None, top_k=None, top_p=None):
     """Plain autoregressive baseline step (1 token).
 
     ``active`` ([B] bool, optional): retired slots keep their cache length
     frozen and echo their input token back (continuous batching).  Chain
     architectures additionally freeze the recurrent state via a dt mask.
+    ``temperature`` is a python float (whole batch) or a per-row [B]
+    array — rows with temperature 0 take the greedy argmax, sampled rows
+    draw through the optional ``top_k`` / ``top_p`` filters.
     ``attn_backend`` selects the decode attention backend."""
     B = cache["length"].shape[0]
     tok = token[:, None] if token.ndim == 1 else token[:, None, :]
@@ -387,10 +415,20 @@ def vanilla_decode_step(params, cfg: ModelConfig, cache, token, *,
         # slot (length frozen -> overwritten on the next admission).
         cache = dict(cache, length=jnp.where(active, old_len + 1, old_len))
     lg = logits[:, 0]
-    if temperature > 0.0:
-        nxt = sample_token(key, lg / temperature)
+    if isinstance(temperature, (int, float)):
+        if temperature > 0.0:
+            nxt = sample_token(key, lg / temperature, top_k=top_k,
+                               top_p=top_p)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
     else:
-        nxt = jnp.argmax(lg, axis=-1)
+        t = jnp.asarray(temperature, jnp.float32)
+        safe = jnp.where(t > 0.0, t, 1.0)
+        scaled = lg / safe.reshape((-1,) + (1,) * (lg.ndim - 1))
+        sampled = sample_token(key, scaled, top_k=top_k, top_p=top_p)
+        greedy = jnp.argmax(lg, axis=-1)
+        nxt = jnp.where((t > 0.0).reshape((-1,) + (1,) * (greedy.ndim - 1)),
+                        sampled, greedy)
     if active is not None:
         nxt = jnp.where(active.reshape((-1,) + (1,) * (nxt.ndim - 1)),
                         nxt, token)

@@ -22,13 +22,71 @@ class Verdict(NamedTuple):
     next_state: jnp.ndarray    # [B] next dynamic-tree state (chain length)
 
 
-def sample_token(key, logits):
+def _bcast_rows(v, ref):
+    """Reshape a per-row [B] array so it broadcasts over ``ref``'s
+    trailing axes ([B] -> [B,1], audio [B] -> [B,1,1]); scalars pass
+    through."""
+    v = jnp.asarray(v)
+    if v.ndim == 0:
+        return v
+    return v.reshape(v.shape + (1,) * (ref.ndim - v.ndim))
+
+
+def apply_top_k(logits, top_k):
+    """Mask all but the ``top_k`` highest logits to -inf (last axis).
+
+    ``top_k`` is a python int, a scalar array, or a per-row [B] array;
+    ``top_k <= 0`` disables the filter (for that row).  Shape-stable and
+    jit-safe: the filter is a full sort + threshold compare, the same
+    program for every k, so per-row k values never retrigger a trace.
+    Ties at the k-th value are all kept (the standard convention)."""
+    V = logits.shape[-1]
+    k = _bcast_rows(top_k, logits)
+    kk = jnp.where(k <= 0, V, jnp.minimum(k, V))
+    srt = jnp.sort(logits, axis=-1)                        # ascending
+    idx = jnp.clip(V - kk, 0, V - 1)                       # k-th largest
+    thr = jnp.take_along_axis(
+        srt, jnp.broadcast_to(idx, logits.shape[:-1] + (1,)), axis=-1)
+    return jnp.where(logits < thr, -jnp.inf, logits)
+
+
+def apply_top_p(logits, top_p):
+    """Nucleus filter: keep the smallest prefix of the sorted distribution
+    whose mass reaches ``top_p``; everything else goes to -inf.
+
+    ``top_p`` is a float, scalar array, or per-row [B] array; a token is
+    kept when the probability mass strictly before it (sorted descending)
+    is < top_p, so the argmax always survives.  ``top_p >= 1`` keeps the
+    logits bit-identical (explicit pass-through, not a float comparison
+    against cumulative sums)."""
+    p = _bcast_rows(jnp.asarray(top_p, jnp.float32), logits)
+    order = jnp.argsort(logits, axis=-1)[..., ::-1]        # descending
+    srt = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(srt.astype(jnp.float32), axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs            # exclusive mass
+    keep_sorted = (before < p) | (p >= 1.0)
+    inv = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def sample_token(key, logits, top_k=None, top_p=None):
     """Categorical sample over ``logits`` [B,V] with either one key for the
     whole batch or a per-row batch of keys ([B] typed / [B,2] raw).
 
     Per-row keys give every continuous-batching slot its own RNG stream:
     a request's samples do not depend on which other requests share the
-    batch, or on how many retired slots sit beside it."""
+    batch, or on how many retired slots sit beside it.
+
+    ``top_k`` / ``top_p`` (optional; python scalars or per-row [B] arrays)
+    restrict the support before sampling: top-k keeps the k highest
+    logits (k <= 0 = off), top-p keeps the smallest nucleus whose mass
+    reaches p (p >= 1 = off).  top_k=1 reproduces greedy argmax exactly;
+    top_p=1.0 is bit-identical to plain temperature sampling."""
+    if top_k is not None:
+        logits = apply_top_k(logits, top_k)
+    if top_p is not None:
+        logits = apply_top_p(logits, top_p)
     per_row = (getattr(key, "ndim", 0) >= 1
                and key.shape[0] == logits.shape[0]
                and (key.ndim == 2
@@ -114,14 +172,27 @@ def verify_greedy(bufs, logits, tokens) -> Verdict:
 
 
 def verify_typical(bufs, logits, tokens, key, temperature=0.7,
-                   epsilon=0.3, delta=0.09) -> Verdict:
+                   epsilon=0.3, delta=0.09, top_k=None,
+                   top_p=None) -> Verdict:
     """Typical acceptance (Medusa §3.2): accept candidate x if
     p_parent(x) > min(epsilon, delta * exp(-H(p_parent))); the greedy
-    argmax is always accepted.  Bonus token is sampled at temperature."""
+    argmax is always accepted.  Bonus token is sampled at temperature,
+    optionally through a top-k / top-p filter.
+
+    ``temperature`` may be a python float (one temperature for the whole
+    batch — the legacy engine-global path) or a per-row [B] array; rows
+    with temperature <= 0 are scaled by 1.0 instead (their verdict is
+    discarded by the caller's per-row greedy/sampled select)."""
     if logits.ndim == 4:
         # audio: fall back to greedy per-codebook verification
         return verify_greedy(bufs, logits, tokens)
-    lp = jax.nn.log_softmax(logits.astype(jnp.float32) / temperature, -1)
+    if isinstance(temperature, (int, float)):
+        t2 = t1 = temperature
+    else:
+        t = jnp.where(jnp.asarray(temperature, jnp.float32) > 0.0,
+                      temperature, 1.0)
+        t2, t1 = t[:, None, None], t[:, None]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32) / t2, -1)
     probs = jnp.exp(lp)
     ent = -(probs * lp).sum(-1)                           # [B,N]
     thresh = jnp.minimum(epsilon, delta * jnp.exp(-ent))  # [B,N]
@@ -138,7 +209,7 @@ def verify_typical(bufs, logits, tokens, key, temperature=0.7,
     lg_star = jnp.take_along_axis(
         logits, v_star[:, None, None].repeat(logits.shape[-1], -1),
         axis=1)[:, 0]
-    bonus = sample_token(key, lg_star / temperature)
+    bonus = sample_token(key, lg_star / t1, top_k=top_k, top_p=top_p)
     next_state = jnp.take_along_axis(bufs["chain_len"], v_star[:, None],
                                      1)[:, 0]
     return Verdict(v_star, n_acc, accept_mask, bonus, next_state)

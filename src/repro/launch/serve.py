@@ -1,13 +1,17 @@
 """Distributed PPD serving driver.
 
-Builds the batched PPD engine for ``--arch`` and serves a stream of
+Builds an :class:`repro.serving.LLMEngine` for ``--arch`` — every CLI
+flag funnels through :meth:`repro.serving.EngineConfig.from_cli_args`,
+so the flag set IS the config dataclass — and serves a stream of
 synthetic requests (offline environment), printing throughput and
-acceptance statistics.  With ``--production`` it instead lowers + compiles
-the sharded serve step on the 16x16 (or 2x16x16) placeholder mesh — the
-same path the multi-pod dry-run exercises.
+acceptance statistics.  With ``--production`` it instead lowers +
+compiles the sharded serve step on the 16x16 (or 2x16x16) placeholder
+mesh — the same path the multi-pod dry-run exercises.
 
-With ``--continuous`` the slot-based continuous-batching scheduler
-replaces static batching: finished rows retire immediately, queued
+``--decode`` selects the decode strategy ({vanilla, ppd, medusa}) and
+``--scheduler`` the request scheduler ({static, continuous});
+``--continuous`` remains as an alias for ``--scheduler continuous``.
+Finished rows retire immediately under the continuous scheduler, queued
 requests are admitted into freed slots via per-slot prefill, and
 per-request TTFT / TPOT / goodput are reported.  ``--arrival-rate``
 replays a Poisson arrival trace; ``--admission sjf`` switches the
@@ -19,6 +23,10 @@ per-device step latencies, then pick the split maximizing expected
 tokens per wall-second), or ``file:<path>`` (a saved family).  Greedy
 outputs are identical under every tree; only the speed changes.
 
+Sampling is per-request (``repro.serving.SamplingParams``);
+``--temperature`` sets the deprecated engine-global default for requests
+that don't specify their own.
+
 Usage:
   python -m repro.launch.serve --arch granite-3-2b --smoke --requests 8
   python -m repro.launch.serve --arch granite-3-2b --smoke --tree auto
@@ -29,7 +37,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import time
 
@@ -42,6 +49,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode", choices=["vanilla", "ppd", "medusa"],
+                    default="ppd",
+                    help="decode strategy (medusa runs untrained heads "
+                         "in this offline driver)")
+    ap.add_argument("--scheduler", choices=["static", "continuous"],
+                    default=None,
+                    help="request scheduler (default static; see also "
+                         "--continuous)")
     ap.add_argument("--m", type=int, default=3)
     ap.add_argument("--tree", default="default",
                     help="PPD tree family: 'default' (hand-built), 'auto' "
@@ -56,7 +71,9 @@ def main():
     ap.add_argument("--tree-analytic", action="store_true",
                     help="--tree auto: skip wall-clock calibration and use "
                          "the roofline analytic latency model")
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="DEPRECATED engine-global sampling default; "
+                         "requests carry their own SamplingParams")
     ap.add_argument("--attn-backend", choices=["ref", "pallas"],
                     default="ref",
                     help="decode attention backend: 'ref' (concat+mask "
@@ -67,7 +84,7 @@ def main():
     ap.add_argument("--baseline", choices=["vanilla", "medusa", ""],
                     default="", help="also run a baseline engine")
     ap.add_argument("--continuous", action="store_true",
-                    help="slot-based continuous batching scheduler")
+                    help="alias for --scheduler continuous")
     ap.add_argument("--kv", choices=["ring", "paged"], default="ring",
                     help="KV-cache layout (continuous mode): 'ring' = one "
                          "contiguous capacity-slot strip per slot; "
@@ -96,16 +113,9 @@ def main():
     ap.add_argument("--shape", default="decode_32k",
                     choices=["prefill_32k", "decode_32k", "long_500k"])
     args = ap.parse_args()
-    if args.tree != "default" and args.tree != "auto" \
-            and not args.tree.startswith("file:"):
-        ap.error(f"--tree must be default, auto, or file:<path>; "
-                 f"got {args.tree!r}")
     if args.tree.startswith("file:") \
             and not os.path.exists(args.tree[len("file:"):]):
         ap.error(f"--tree file not found: {args.tree[len('file:'):]}")
-    if args.kv == "paged" and not args.continuous:
-        ap.error("--kv paged requires --continuous (the static engines "
-                 "keep the ring cache)")
 
     if args.production:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -123,9 +133,9 @@ def main():
     from repro.core import init_prompt_params
     from repro.data.pipeline import DataPipeline
     from repro.models import init_params
-    from repro.serving import (ContinuousPPDEngine, ContinuousVanillaEngine,
-                               PPDEngine, Request, VanillaEngine,
+    from repro.serving import (EngineConfig, LLMEngine, SamplingParams,
                                poisson_trace)
+    from repro.serving.engine import Request
 
     if args.arch == "ppd-demo":
         from repro.configs.demo import CONFIG as cfg, SMOKE
@@ -143,114 +153,95 @@ def main():
     else:
         ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=args.m,
                                  base_embed=params["embed"])
+    heads = None
+    if args.decode == "medusa" or args.baseline == "medusa":
+        from repro.models.medusa import init_medusa
+        heads = init_medusa(cfg, jax.random.PRNGKey(2), m=args.m)
 
     lens = [args.max_new * ([1, 2, 4][i % 3] if args.mixed_lens else 1)
             for i in range(args.requests)]
     capacity = max(256, args.prompt_len + max(lens) + 64)
 
-    tree_states = None
-    if args.tree == "auto":
-        from repro.core.tree_tuner import tuned_tree_states
-        # calibrate against the step the engine will actually run: the
-        # serving ring capacity and a prompt-length context
-        tree_states, rep = tuned_tree_states(
-            params, ppd, cfg, m=args.m, batch_size=args.batch,
-            attn_backend=args.attn_backend,
-            cache_path=args.tree_cache or None,
-            measure=not args.tree_analytic,
-            capacity=capacity, ctx=args.prompt_len)
-        if rep.get("tuned"):
+    # one dataclass holds every engine knob the flags used to hand-thread
+    config = EngineConfig.from_cli_args(args, capacity=capacity,
+                                        tree_ctx=args.prompt_len)
+    print(f"engine config: {config.to_json()}")
+
+    import dataclasses
+
+    def build(decode):
+        c = dataclasses.replace(config, decode=decode)
+        return LLMEngine(c.validate(), params=params, cfg=cfg,
+                         ppd_params=ppd, medusa_heads=heads)
+
+    llm = build(args.decode)
+    if llm.tree_report is not None:
+        rep = llm.tree_report
+        if rep.get("tuned") and "split" in rep:
             print(f"tree auto-tuner [{rep['latency_source']}, "
                   f"{rep['device']}]: split (n_c,n_p)={tuple(rep['split'])}"
                   f" n_total={rep['n_total']} (padded {rep['n_padded']}), "
                   f"R={rep['r_tokens_per_step']:.2f} tok/step, "
                   f"C={rep['step_latency_s'] * 1e3:.2f} ms/step, "
                   f"predicted {rep['pred_tokens_per_s']:.1f} tok/s")
+        elif rep.get("tuned"):
+            print(f"tree states loaded from {rep.get('source')}")
         else:
             print(f"tree auto-tuner: not tuned ({rep['reason']})")
-    elif args.tree.startswith("file:"):
-        from repro.core.tree_tuner import load_tree_states
-        tree_states, meta = load_tree_states(args.tree[len("file:"):])
-        print(f"loaded {len(tree_states)} tree states from "
-              f"{args.tree[len('file:'):]} ({meta})")
 
     pipe = DataPipeline(cfg.vocab_size, args.prompt_len, args.batch,
                         n_codebooks=(cfg.n_codebooks
                                      if cfg.modality == "audio" else 0))
     prompts = pipe.val_prompts(args.requests, args.prompt_len)
-    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i],
+                    sampling=SamplingParams(temperature=args.temperature,
+                                            max_tokens=lens[i]))
             for i in range(args.requests)]
-    if args.continuous and args.arrival_rate > 0:
+    continuous = config.scheduler == "continuous"
+    if continuous and args.arrival_rate > 0:
         reqs = poisson_trace(reqs, args.arrival_rate)
 
-    if args.continuous:
-        eng = ContinuousPPDEngine(params, ppd, cfg, m=args.m,
-                                  tree_states=tree_states,
-                                  batch_size=args.batch, capacity=capacity,
-                                  temperature=args.temperature,
-                                  admission=args.admission,
-                                  prefill_bucket=args.prefill_bucket,
-                                  attn_backend=args.attn_backend,
-                                  kv=args.kv, block_size=args.block_size,
-                                  num_blocks=args.num_blocks or None)
-    else:
-        eng = PPDEngine(params, ppd, cfg, m=args.m, tree_states=tree_states,
-                        batch_size=args.batch, capacity=capacity,
-                        temperature=args.temperature,
-                        attn_backend=args.attn_backend)
-    for r in reqs:
-        eng.add_request(r)
-    t0 = time.perf_counter()
-    results = eng.run()
-    dt = time.perf_counter() - t0
+    def drive(llm):
+        for r in reqs:
+            llm.add_request(r.prompt, r.sampling, request_id=r.uid,
+                            arrival_s=r.arrival_s)
+        t0 = time.perf_counter()
+        results = llm.engine.run()
+        return results, time.perf_counter() - t0
+
+    results, dt = drive(llm)
     total = sum(len(r.tokens) for r in results)
     steps = sum(r.steps for r in results)
-    print(f"PPD: {len(results)} requests, {total} tokens in {dt:.1f}s "
-          f"({total / dt:.1f} tok/s), accept-len {total / max(steps,1):.2f}, "
-          f"{eng.total_forward_passes} forward passes")
-    if args.continuous:
-        m = eng.metrics(results)
+    print(f"{args.decode}: {len(results)} requests, {total} tokens in "
+          f"{dt:.1f}s ({total / dt:.1f} tok/s), "
+          f"accept-len {total / max(steps, 1):.2f}, "
+          f"{llm.total_forward_passes} forward passes")
+    if continuous:
+        m = llm.metrics(results)
         print(f"     goodput {m['goodput_tok_s']:.1f} tok/s  "
               f"mean TTFT {m['mean_ttft_s'] * 1e3:.0f} ms  "
               f"mean TPOT {m['mean_tpot_s'] * 1e3:.1f} ms  "
               f"max concurrency {m['max_concurrency']}  "
               f"idle slot-steps {m['idle_slot_steps']}")
-        if args.kv == "paged":
+        if config.kv == "paged":
             print(f"     paged KV: peak {m['block_peak_used_blocks']}"
                   f"/{m['block_num_blocks']} blocks "
                   f"({m['peak_cache_bytes'] / 1e6:.2f} MB), "
                   f"{m['block_shared_block_hits']} prefix-shared block "
                   f"hits, {m['admission_waits']} admission waits")
 
-    if args.baseline == "vanilla":
-        if args.continuous:
-            van = ContinuousVanillaEngine(params, cfg,
-                                          batch_size=args.batch,
-                                          capacity=capacity,
-                                          temperature=args.temperature,
-                                          admission=args.admission,
-                                          prefill_bucket=args.prefill_bucket,
-                                          attn_backend=args.attn_backend,
-                                          kv=args.kv,
-                                          block_size=args.block_size,
-                                          num_blocks=args.num_blocks
-                                          or None)
-        else:
-            van = VanillaEngine(params, cfg, batch_size=args.batch,
-                                capacity=capacity,
-                                attn_backend=args.attn_backend)
-        for r in reqs:
-            van.add_request(dataclasses.replace(r))
-        t0 = time.perf_counter()
-        vres = van.run()
-        vdt = time.perf_counter() - t0
+    if args.baseline and args.baseline != args.decode:
+        van = build(args.baseline)
+        vres, vdt = drive(van)
         vtotal = sum(len(r.tokens) for r in vres)
-        print(f"vanilla: {vtotal} tokens in {vdt:.1f}s "
+        print(f"{args.baseline}: {vtotal} tokens in {vdt:.1f}s "
               f"({vtotal / vdt:.1f} tok/s)  speedup {vdt / dt:.2f}x")
-        match = all(np.array_equal(a.tokens, b.tokens)
-                    for a, b in zip(sorted(results, key=lambda r: r.uid),
-                                    sorted(vres, key=lambda r: r.uid)))
-        print(f"outputs exactly match vanilla: {match}")
+        if args.baseline == "vanilla" and args.temperature == 0.0:
+            match = all(np.array_equal(a.tokens, b.tokens)
+                        for a, b in zip(
+                            sorted(results, key=lambda r: r.uid),
+                            sorted(vres, key=lambda r: r.uid)))
+            print(f"outputs exactly match vanilla: {match}")
 
 
 if __name__ == "__main__":

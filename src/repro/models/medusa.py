@@ -53,8 +53,12 @@ def medusa_states(m: int, topk=(4, 2, 2)) -> list:
 
 def medusa_decode_step(params, heads, cfg: ModelConfig, bufs, state: PPDState,
                        *, m: int, moe_exact: bool = True,
-                       attn_backend=None):
-    """Tree decode with head-generated guesses (always full-depth state)."""
+                       attn_backend=None, active=None):
+    """Tree decode with head-generated guesses (always full-depth state).
+
+    ``active`` ([B] bool, optional) mirrors ``ppd_decode_step``: retired
+    continuous-batching slots commit no K/V, freeze their cache length,
+    carry their state through unchanged, and report -1 output rows."""
     full_state = jnp.full_like(state.tree_state,
                                bufs["node_type"].shape[0] - 1)
     rb = _row_bufs(bufs, full_state)
@@ -71,22 +75,34 @@ def medusa_decode_step(params, heads, cfg: ModelConfig, bufs, state: PPDState,
         extra_mask=rb["mask"], stage_only=True, moe_exact=moe_exact,
         return_hidden=True, attn_backend=attn_backend)
     verdict = verify_greedy(rb, logits, tokens)
+    accept_mask = verdict.accept_mask
     n_committed = verdict.n_acc + 1
+    if active is not None:
+        accept_mask = accept_mask & active[:, None]
+        n_committed = jnp.where(active, n_committed, 0)
     cache = commit_staged(cfg, state.cache, staged, positions,
-                          verdict.accept_mask, n_committed)
+                          accept_mask, n_committed)
     h_star = jnp.take_along_axis(
         hidden, verdict.v_star[:, None, None].repeat(hidden.shape[-1], -1),
         axis=1)[:, 0]
     guess = medusa_heads(heads, h_star)                  # [B,m,V]
     gvals, gidx = jax.lax.top_k(guess, bufs.get("_kmax", 10))
-    new_state = PPDState(cache=cache, root_token=verdict.bonus,
-                         guess_vals=gvals.astype(jnp.float32),
+    root = verdict.bonus
+    gvals = gvals.astype(jnp.float32)
+    if active is not None:
+        root = jnp.where(active, root, state.root_token)
+        gvals = jnp.where(active[:, None, None], gvals, state.guess_vals)
+        gidx = jnp.where(active[:, None, None], gidx, state.guess_idx)
+    new_state = PPDState(cache=cache, root_token=root,
+                         guess_vals=gvals,
                          guess_idx=gidx, tree_state=state.tree_state)
     path = jnp.take_along_axis(
         rb["path_nodes"], verdict.v_star[:, None, None].repeat(
             rb["path_nodes"].shape[-1], 2), axis=1)[:, 0]
     ptok = jnp.where(path >= 0,
                      jnp.take_along_axis(tokens, jnp.maximum(path, 0), 1), -1)
+    if active is not None:
+        ptok = jnp.where(active[:, None], ptok, -1)
     return new_state, dict(accepted_path_tokens=ptok,
                            n_accepted=n_committed, verdict=verdict)
 

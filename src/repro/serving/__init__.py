@@ -1,5 +1,73 @@
+"""Serving layer.
+
+Public surface (see docs/api.md):
+
+* :class:`LLMEngine` + :class:`EngineConfig` + :class:`SamplingParams` —
+  the unified facade composing a decode strategy (vanilla / ppd / medusa
+  / ppd+spec) with a scheduler (static / continuous).
+* :class:`Request` / :class:`Result` / :class:`TokenEvent` /
+  :class:`RequestOutput` — request/response types.
+* :class:`StaticEngine` / :class:`ContinuousEngine` — the two schedulers
+  (strategy-composed; importable for direct use).
+* :class:`BlockManager`, :func:`poisson_trace`,
+  :func:`aggregate_metrics`, :func:`tpot_of` — serving utilities.
+
+The historical engine class names (``PPDEngine``, ``VanillaEngine``,
+``MedusaEngine``, ``SpeculativeDecoder``, ``ContinuousPPDEngine``,
+``ContinuousVanillaEngine``) remain importable from this package as thin
+shims that emit a ``DeprecationWarning`` (once per name per process) and
+return the equivalent strategy-composed engine.
+"""
+import warnings as _warnings
+
+from .api import (DECODE_STRATEGIES, SCHEDULERS, EngineConfig, LLMEngine,
+                  RequestOutput, STRATEGY_REGISTRY, SCHEDULER_REGISTRY)
 from .block_manager import BlockManager
-from .engine import (MedusaEngine, PPDEngine, Request, Result,
-                     VanillaEngine, aggregate_metrics, tpot_of)
-from .scheduler import (ContinuousPPDEngine, ContinuousVanillaEngine,
-                        poisson_trace)
+from .engine import (Request, Result, StaticEngine, TokenEvent,
+                     aggregate_metrics, tpot_of)
+from .sampling import SamplingParams
+from .scheduler import ContinuousEngine, poisson_trace
+
+from . import engine as _engine_mod
+from . import scheduler as _scheduler_mod
+from . import spec_decode as _spec_mod
+
+# ----------------------------------------------------- deprecation shims
+_WARNED = set()
+
+
+def _deprecated(name, target, replacement):
+    def shim(*args, **kwargs):
+        if name not in _WARNED:
+            _WARNED.add(name)
+            _warnings.warn(
+                f"repro.serving.{name} is deprecated; use {replacement} "
+                f"(see docs/api.md for the migration table)",
+                DeprecationWarning, stacklevel=2)
+        return target(*args, **kwargs)
+    shim.__name__ = name
+    shim.__qualname__ = name
+    shim.__doc__ = (f"Deprecated alias for {replacement}; emits a "
+                    f"DeprecationWarning once per process.")
+    return shim
+
+
+PPDEngine = _deprecated(
+    "PPDEngine", _engine_mod.PPDEngine,
+    "LLMEngine(EngineConfig(decode='ppd', scheduler='static'), ...)")
+VanillaEngine = _deprecated(
+    "VanillaEngine", _engine_mod.VanillaEngine,
+    "LLMEngine(EngineConfig(decode='vanilla', scheduler='static'), ...)")
+MedusaEngine = _deprecated(
+    "MedusaEngine", _engine_mod.MedusaEngine,
+    "LLMEngine(EngineConfig(decode='medusa', scheduler='static'), ...)")
+ContinuousPPDEngine = _deprecated(
+    "ContinuousPPDEngine", _scheduler_mod.ContinuousPPDEngine,
+    "LLMEngine(EngineConfig(decode='ppd', scheduler='continuous'), ...)")
+ContinuousVanillaEngine = _deprecated(
+    "ContinuousVanillaEngine", _scheduler_mod.ContinuousVanillaEngine,
+    "LLMEngine(EngineConfig(decode='vanilla', scheduler='continuous'), "
+    "...)")
+SpeculativeDecoder = _deprecated(
+    "SpeculativeDecoder", _spec_mod.SpeculativeDecoder,
+    "LLMEngine(EngineConfig(decode='ppd+spec'), ...)")

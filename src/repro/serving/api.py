@@ -1,0 +1,442 @@
+"""Unified serving facade: ``EngineConfig`` + ``SamplingParams`` +
+``LLMEngine``.
+
+One engine object, configured by a single dataclass, replaces the
+historical six-engine class explosion (``PPDEngine`` / ``VanillaEngine``
+/ ``MedusaEngine`` / ``SpeculativeDecoder`` / ``ContinuousPPDEngine`` /
+``ContinuousVanillaEngine``).  The engine *composes* a decode strategy
+(:mod:`repro.serving.strategies`) with a scheduler
+(:class:`repro.serving.engine.StaticEngine` /
+:class:`repro.serving.scheduler.ContinuousEngine`) from registries, so
+every decode-strategy x scheduler combination is reachable without a
+per-pair subclass:
+
+    config = EngineConfig(decode="ppd", scheduler="continuous",
+                          kv="paged", capacity=2048, batch_size=8)
+    llm = LLMEngine(config, params=params, cfg=model_cfg,
+                    ppd_params=ppd)
+    outs = llm.generate(prompts, SamplingParams(max_tokens=128))
+
+or incrementally, with tokens streamed as they are produced (TTFT is the
+first event, not a post-hoc metric):
+
+    llm.add_request(prompt, SamplingParams(temperature=0.8, top_p=0.9))
+    while llm.has_unfinished:
+        for ev in llm.step():
+            ...   # TokenEvent(uid, token, index, time_s, finished)
+
+See docs/api.md for the full reference and the migration table from the
+old engine classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+from .engine import Request, Result, StaticEngine, TokenEvent
+from .sampling import SamplingParams
+from .scheduler import ContinuousEngine
+from .strategies import (DecodeStrategy, MedusaStrategy, PPDStrategy,
+                         SpecDecodeStrategy, VanillaStrategy)
+
+DECODE_STRATEGIES = ("vanilla", "ppd", "medusa", "ppd+spec")
+SCHEDULERS = ("static", "continuous")
+KV_LAYOUTS = ("ring", "paged")
+ADMISSION_POLICIES = ("fcfs", "sjf")
+ATTN_BACKENDS = (None, "ref", "pallas")
+
+DEFAULT_MAX_TOKENS = 64
+
+_WARNED_GLOBAL_TEMPERATURE = [False]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Every serving knob in one validated dataclass.
+
+    Consolidates what used to be scattered across six engine
+    constructors and ~25 hand-threaded CLI flags in ``launch/serve.py``.
+    ``from_cli_args`` builds one from an argparse namespace;
+    ``to_json`` / ``from_json`` round-trip it for run manifests.
+    """
+    # what decodes, and how requests are scheduled onto the device
+    decode: str = "ppd"            # vanilla | ppd | medusa | ppd+spec
+    scheduler: str = "continuous"  # static | continuous
+    # capacity / batching
+    capacity: int = 1024           # KV positions per sequence
+    batch_size: int = 4            # rows (static) / decode slots (cont.)
+    # PPD / Medusa tree knobs
+    m: int = 3                     # prompt tokens / decoding heads
+    n_ept: int = 1                 # ensembled prompt tokens per guess
+    tree: str = "default"          # default | auto | file:<path>
+    tree_cache: Optional[str] = None   # calibration cache for tree=auto
+    tree_analytic: bool = False    # tree=auto: roofline model, no timing
+    tree_ctx: int = 32             # tree=auto: calibration context length
+    # spec-decode (decode="ppd+spec")
+    gamma: int = 4                 # draft proposal length
+    # KV-cache layout (continuous scheduler)
+    kv: str = "ring"               # ring | paged
+    block_size: int = 16
+    num_blocks: Optional[int] = None   # None = ring-parity pool
+    watermark: float = 0.01
+    # attention backend for the decode hot path
+    attn_backend: Optional[str] = None  # None/ref | pallas
+    # admission (continuous scheduler)
+    admission: str = "fcfs"        # fcfs | sjf
+    sjf_age_rate: float = 1.0
+    prefill_bucket: int = 0
+    # DEPRECATED: engine-global sampling default.  Per-request
+    # SamplingParams (or Request.temperature) always win; this only
+    # fills in for requests that specify neither.
+    temperature: float = 0.0
+    seed: int = 0
+
+    def validate(self) -> "EngineConfig":
+        def _in(name, value, allowed):
+            if value not in allowed:
+                raise ValueError(f"EngineConfig.{name} must be one of "
+                                 f"{allowed}, got {value!r}")
+        _in("decode", self.decode, DECODE_STRATEGIES)
+        _in("scheduler", self.scheduler, SCHEDULERS)
+        _in("kv", self.kv, KV_LAYOUTS)
+        _in("admission", self.admission, ADMISSION_POLICIES)
+        _in("attn_backend", self.attn_backend, ATTN_BACKENDS)
+        for name in ("capacity", "batch_size", "m", "gamma", "block_size"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"EngineConfig.{name} must be a positive "
+                                 f"int, got {v!r}")
+        if self.n_ept < 1:
+            raise ValueError(f"EngineConfig.n_ept must be >= 1, "
+                             f"got {self.n_ept}")
+        if self.prefill_bucket < 0:
+            raise ValueError("EngineConfig.prefill_bucket must be >= 0")
+        if self.num_blocks is not None and self.num_blocks < 1:
+            raise ValueError("EngineConfig.num_blocks must be None or a "
+                             "positive int")
+        if not 0.0 <= self.watermark < 1.0:
+            raise ValueError(f"EngineConfig.watermark must be in [0, 1), "
+                             f"got {self.watermark}")
+        if self.temperature < 0.0:
+            raise ValueError("EngineConfig.temperature must be >= 0")
+        if not (self.tree in ("default", "auto")
+                or self.tree.startswith("file:")):
+            raise ValueError(f"EngineConfig.tree must be 'default', "
+                             f"'auto', or 'file:<path>', got {self.tree!r}")
+        if self.kv == "paged" and self.scheduler != "continuous":
+            raise ValueError("kv='paged' requires scheduler='continuous' "
+                             "(the static scheduler keeps the ring cache)")
+        if self.decode == "ppd+spec" and self.kv != "ring":
+            raise ValueError("decode='ppd+spec' requires kv='ring': its "
+                             "per-slot target/draft caches are "
+                             "self-managed rings, not pool blocks")
+        if self.temperature > 0.0 and not _WARNED_GLOBAL_TEMPERATURE[0]:
+            _WARNED_GLOBAL_TEMPERATURE[0] = True
+            warnings.warn(
+                "EngineConfig.temperature (engine-global sampling) is "
+                "deprecated; pass per-request SamplingParams instead",
+                DeprecationWarning, stacklevel=2)
+        return self
+
+    # -------------------------------------------------------- CLI / JSON
+    @classmethod
+    def from_cli_args(cls, args, **overrides) -> "EngineConfig":
+        """Build a config from an argparse namespace (launch/serve.py's
+        flag set).  Unknown namespace entries are ignored; ``overrides``
+        win over everything.  Convenience mappings: ``--batch`` ->
+        ``batch_size``, ``--continuous`` -> ``scheduler='continuous'``,
+        ``--num-blocks 0`` -> ``None`` (ring-parity pool), empty
+        ``--tree-cache`` -> ``None``."""
+        kw = {}
+        names = {f.name for f in dataclasses.fields(cls)}
+        for name in names:
+            if hasattr(args, name) and getattr(args, name) is not None:
+                kw[name] = getattr(args, name)
+        if "batch_size" not in kw and getattr(args, "batch", None):
+            kw["batch_size"] = args.batch
+        if "scheduler" not in kw:
+            kw["scheduler"] = ("continuous"
+                               if getattr(args, "continuous", False)
+                               else "static")
+        if not kw.get("num_blocks"):
+            kw["num_blocks"] = None
+        if not kw.get("tree_cache"):
+            kw["tree_cache"] = None
+        kw.update(overrides)
+        return cls(**kw).validate()
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "EngineConfig":
+        d = json.loads(blob)
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"EngineConfig.from_json: unknown fields "
+                             f"{sorted(unknown)}")
+        return cls(**d).validate()
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One finished request, as returned by :meth:`LLMEngine.generate`."""
+    request_id: int
+    prompt: np.ndarray
+    token_ids: np.ndarray
+    finished: bool = True
+    finish_reason: str = "length"   # "length" | "stop"
+    metrics: Optional[Result] = None
+
+
+# ------------------------------------------------------------- registries
+def _build_vanilla(config, cfg, w):
+    return VanillaStrategy(w["params"], cfg,
+                           attn_backend=config.attn_backend)
+
+
+def _build_ppd(config, cfg, w):
+    if w.get("ppd_params") is None:
+        raise ValueError("decode='ppd' needs ppd_params= (trained or "
+                         "initialized prompt-token parameters)")
+    return PPDStrategy(w["params"], w["ppd_params"], cfg, m=config.m,
+                       n_ept=config.n_ept, tree_states=w.get("tree_states"),
+                       attn_backend=config.attn_backend)
+
+
+def _build_medusa(config, cfg, w):
+    if w.get("medusa_heads") is None:
+        raise ValueError("decode='medusa' needs medusa_heads= (see "
+                         "repro.models.medusa.init_medusa)")
+    return MedusaStrategy(w["params"], w["medusa_heads"], cfg, m=config.m,
+                          tree_states=w.get("tree_states"),
+                          attn_backend=config.attn_backend)
+
+
+def _build_spec(config, cfg, w):
+    if w.get("draft_params") is None or w.get("draft_cfg") is None:
+        raise ValueError("decode='ppd+spec' needs draft_params= and "
+                         "draft_cfg= (the draft model); pass draft_ppd= "
+                         "to PPD-accelerate the draft (paper §5.3)")
+    return SpecDecodeStrategy(w["params"], cfg, w["draft_params"],
+                              w["draft_cfg"], gamma=config.gamma,
+                              draft_ppd=w.get("draft_ppd"), m=config.m,
+                              tree_states=w.get("tree_states"),
+                              capacity=config.capacity,
+                              attn_backend=config.attn_backend)
+
+
+STRATEGY_REGISTRY = {
+    "vanilla": _build_vanilla,
+    "ppd": _build_ppd,
+    "medusa": _build_medusa,
+    "ppd+spec": _build_spec,
+}
+
+
+def _build_static(config, strategy, cfg, clock):
+    return StaticEngine(strategy, cfg, capacity=config.capacity,
+                        batch_size=config.batch_size,
+                        temperature=config.temperature, seed=config.seed,
+                        clock=clock)
+
+
+def _build_continuous(config, strategy, cfg, clock):
+    return ContinuousEngine(strategy, cfg, capacity=config.capacity,
+                            batch_size=config.batch_size,
+                            temperature=config.temperature,
+                            admission=config.admission,
+                            prefill_bucket=config.prefill_bucket,
+                            seed=config.seed, kv=config.kv,
+                            block_size=config.block_size,
+                            num_blocks=config.num_blocks,
+                            watermark=config.watermark,
+                            sjf_age_rate=config.sjf_age_rate, clock=clock)
+
+
+SCHEDULER_REGISTRY = {
+    "static": _build_static,
+    "continuous": _build_continuous,
+}
+
+
+class LLMEngine:
+    """The one serving engine: decode strategy x scheduler, composed.
+
+    Weights are passed explicitly (this repo initializes/loads them
+    outside the engine): ``params`` + the strategy's extras
+    (``ppd_params`` for PPD, ``medusa_heads`` for Medusa,
+    ``draft_params``/``draft_cfg``/``draft_ppd`` for spec-decode).
+    ``tree_states`` overrides the config's ``tree`` source with an
+    explicit family.
+
+    Two ways to drive it:
+
+    * ``generate(prompts, sampling_params)`` — batch API; blocks until
+      every request finishes and returns :class:`RequestOutput`s.
+    * ``add_request(...)`` + ``step()`` — incremental: ``add_request``
+      returns the request id, each ``step()`` advances the scheduler one
+      action and returns the :class:`TokenEvent`s it produced.  The
+      concatenated streamed tokens of a request are identical to its
+      ``generate`` output.
+    """
+
+    def __init__(self, config: EngineConfig, *, params,
+                 cfg: ModelConfig, ppd_params=None, medusa_heads=None,
+                 draft_params=None, draft_cfg=None, draft_ppd=None,
+                 tree_states=None, clock=None):
+        config.validate()
+        self.config = config
+        self.model_cfg = cfg
+        self.tree_report: Optional[dict] = None
+        if tree_states is None:
+            # ppd+spec: the tree drives the DRAFT model's PPD decoding —
+            # tune/load against the draft triple, not the target
+            if config.decode == "ppd+spec":
+                tree_states = self._resolve_tree(config, draft_params,
+                                                 draft_ppd, draft_cfg)
+            else:
+                tree_states = self._resolve_tree(config, params,
+                                                 ppd_params, cfg)
+        weights = dict(params=params, ppd_params=ppd_params,
+                       medusa_heads=medusa_heads,
+                       draft_params=draft_params, draft_cfg=draft_cfg,
+                       draft_ppd=draft_ppd, tree_states=tree_states)
+        self.strategy: DecodeStrategy = STRATEGY_REGISTRY[config.decode](
+            config, cfg, weights)
+        self.engine = SCHEDULER_REGISTRY[config.scheduler](
+            config, self.strategy, cfg, clock)
+        self._next_uid = 0
+        self._prompts: Dict[int, np.ndarray] = {}
+        self._stashed_results: List[Result] = []
+
+    # ------------------------------------------------------------- tree
+    def _resolve_tree(self, config, params, ppd_params, cfg):
+        """Materialize the config's tree source: None (strategy default),
+        a tuned family (``auto``), or a saved family (``file:<path>``).
+
+        Applies to the tree-decoding strategies: ppd, medusa (the family
+        is reused candidate-topology-only), and the ppd+spec draft (the
+        caller passes the draft triple).  A vanilla-draft spec engine has
+        no tree to tune."""
+        if config.tree == "default" or config.decode == "vanilla":
+            return None
+        if config.decode == "ppd+spec" and ppd_params is None:
+            self.tree_report = {"tuned": False,
+                                "reason": "vanilla draft — no PPD tree"}
+            return None
+        if config.tree == "auto":
+            if ppd_params is None:
+                raise ValueError(
+                    f"tree='auto' with decode='{config.decode}' needs "
+                    f"ppd_params: the tuner calibrates the PPD decode "
+                    f"step (medusa reuses the tuned family candidate-"
+                    f"topology-only)")
+            from repro.core.tree_tuner import tuned_tree_states
+            states, rep = tuned_tree_states(
+                params, ppd_params, cfg, m=config.m,
+                batch_size=config.batch_size,
+                attn_backend=config.attn_backend,
+                cache_path=config.tree_cache,
+                measure=not config.tree_analytic,
+                capacity=config.capacity, ctx=config.tree_ctx)
+            self.tree_report = rep
+            return states
+        from repro.core.tree_tuner import load_tree_states
+        path = config.tree[len("file:"):]
+        states, meta = load_tree_states(path)
+        self.tree_report = {"tuned": True, "source": path, **(meta or {})}
+        return states
+
+    # ---------------------------------------------------------- serving
+    def add_request(self, prompt,
+                    sampling_params: Optional[SamplingParams] = None,
+                    request_id: Optional[int] = None,
+                    arrival_s: float = 0.0) -> int:
+        """Queue one prompt; returns its request id (the handle carried
+        by every TokenEvent / RequestOutput)."""
+        sp = sampling_params or SamplingParams()
+        uid = request_id if request_id is not None else self._next_uid
+        self._next_uid = max(self._next_uid, uid) + 1
+        max_new = sp.max_tokens if sp.max_tokens is not None \
+            else DEFAULT_MAX_TOKENS
+        self._prompts[uid] = np.asarray(prompt)
+        self.engine.add_request(Request(
+            uid=uid, prompt=np.asarray(prompt), max_new_tokens=max_new,
+            arrival_s=arrival_s, sampling=sp))
+        return uid
+
+    def step(self) -> List[TokenEvent]:
+        """Advance the scheduler one action; returns the TokenEvents it
+        produced.  A request's first event is its first output token
+        (TTFT observed live); its last is a ``finished`` marker."""
+        return self.engine.step()
+
+    @property
+    def has_unfinished(self) -> bool:
+        return self.engine.has_unfinished
+
+    def drain_results(self) -> List[Result]:
+        """Raw per-request Results finished since the last drain
+        (step-driven callers; ``generate`` wraps this).  Streamed
+        Results a ``generate()`` call found undrained are preserved
+        here, never discarded."""
+        out = self._stashed_results + self.engine.drain_results()
+        self._stashed_results = []
+        for r in out:
+            self._prompts.pop(r.uid, None)
+        return out
+
+    def generate(self, prompts: Sequence,
+                 sampling_params: Union[SamplingParams,
+                                        Sequence[SamplingParams],
+                                        None] = None
+                 ) -> List[RequestOutput]:
+        """Run a batch of prompts to completion.  ``sampling_params`` is
+        one SamplingParams for all prompts, a per-prompt sequence, or
+        None (greedy, 64 tokens).  Outputs come back in prompt order."""
+        if self.engine.has_unfinished:
+            raise RuntimeError(
+                "generate() cannot start while streamed requests are in "
+                "flight; drive step() until has_unfinished is False")
+        # streamed-but-undrained Results stay retrievable via
+        # drain_results() instead of being swallowed by this run
+        self._stashed_results.extend(self.engine.drain_results())
+        if sampling_params is None or isinstance(sampling_params,
+                                                 SamplingParams):
+            sp_list = [sampling_params] * len(prompts)
+        else:
+            sp_list = list(sampling_params)
+            if len(sp_list) != len(prompts):
+                raise ValueError(
+                    f"got {len(prompts)} prompts but {len(sp_list)} "
+                    f"SamplingParams")
+        uids = [self.add_request(p, sp)
+                for p, sp in zip(prompts, sp_list)]
+        results = {r.uid: r for r in self.engine.run()}
+        out = []
+        for uid in uids:
+            r = results[uid]
+            out.append(RequestOutput(
+                request_id=uid, prompt=self._prompts.pop(uid),
+                token_ids=r.tokens, finished=True,
+                finish_reason=r.finish_reason, metrics=r))
+        return out
+
+    # ---------------------------------------------------------- metrics
+    @property
+    def total_forward_passes(self) -> int:
+        return self.engine.total_forward_passes
+
+    def metrics(self, results: List[Result]) -> dict:
+        """Scheduler metrics (continuous scheduler only)."""
+        if not hasattr(self.engine, "metrics"):
+            raise ValueError("metrics() requires scheduler='continuous'")
+        return self.engine.metrics(results)

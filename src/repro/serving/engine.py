@@ -1,15 +1,25 @@
-"""Batched serving engine.
+"""Static-batch serving: the pad-and-batch scheduler over any decode
+strategy.
 
-Static-shape serving: requests are packed into a fixed batch; prefill runs
-once (left-padded to a common length), then PPD guess-and-verify steps run
-until every row has produced ``max_new_tokens`` (finished rows keep
-decoding into a scratch region and are masked out of the results —
-standard static-batch TPU serving).
+Requests are packed into fixed-size batches; prefill runs once
+(left-padded to a common length), then decode steps run until every row
+has produced its tokens (finished rows keep decoding into a scratch
+region and are masked out of the results — standard static-batch TPU
+serving).
 
-Engines:
-* ``PPDEngine``      — the paper's system (tree or chain mode by arch).
-* ``VanillaEngine``  — autoregressive baseline.
-* ``MedusaEngine``   — decoding-head baseline.
+The scheduler (:class:`StaticEngine`) is strategy-agnostic: it composes
+with any :class:`repro.serving.strategies.DecodeStrategy` (vanilla /
+PPD / Medusa / spec-decode), so there is one scheduling implementation
+instead of one engine subclass per decoding method.  The historical
+class names (``PPDEngine``, ``VanillaEngine``, ``MedusaEngine``) remain
+as thin factory functions composing the matching strategy; new code
+should use :class:`repro.serving.api.LLMEngine`.
+
+Engines are step-driven: ``step()`` advances one scheduling action
+(start a batch, or run one decode step) and returns the
+:class:`TokenEvent` stream produced by it — TTFT is observable as the
+first event, not a post-hoc metric.  ``run()`` simply loops ``step()``
+to completion.
 """
 from __future__ import annotations
 
@@ -22,11 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
-                        is_chain_arch, mk_default_tree, ppd_decode_step,
-                        vanilla_decode_step)
-from repro.models import forward, init_cache
 from repro.models.config import ModelConfig
+
+from .sampling import SamplingParams, resolve_sampling
 
 
 @dataclasses.dataclass
@@ -34,8 +42,12 @@ class Request:
     uid: int
     prompt: np.ndarray            # [P] (audio: [P,K])
     max_new_tokens: int = 64
-    temperature: float = 0.0
+    # Per-request decode temperature; None = inherit the engine-global
+    # default.  An explicitly set value always wins over the engine's.
+    temperature: Optional[float] = None
     arrival_s: float = 0.0        # arrival time relative to engine start
+    # Full per-request sampling control; wins over `temperature`.
+    sampling: Optional[SamplingParams] = None
 
 
 @dataclasses.dataclass
@@ -52,6 +64,26 @@ class Result:
     tpot_s: float = 0.0           # mean inter-token latency after the first
     #   (NaN when undefined: a 1-token request has no inter-token gaps)
     goodput_tok_s: float = 0.0    # tokens / (finish - arrival)
+    finish_reason: str = "length"  # "length" | "stop"
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One element of an engine's incremental output stream.
+
+    Token events carry a freshly produced token (``token`` is an int32
+    scalar array; audio models: an [K] codebook array).  Each request's
+    stream ends with exactly one *finish* event (``finished=True``,
+    ``token=None``) whose ``index`` equals the request's output length.
+    ``time_s`` is seconds on the engine clock since the engine started
+    stepping — the first token event's ``time_s`` minus the request's
+    ``arrival_s`` is its TTFT."""
+    uid: int
+    token: Optional[np.ndarray]
+    index: int
+    time_s: float
+    finished: bool = False
+    finish_reason: Optional[str] = None
 
 
 def tpot_of(decode_span_s: float, n_tokens: int) -> float:
@@ -131,225 +163,271 @@ def _pack(requests: List[Request], cfg: ModelConfig, capacity: int,
     return jnp.asarray(np.stack(rows)), np.asarray(starts), P
 
 
-class _EngineBase:
-    def __init__(self, params, cfg: ModelConfig, capacity: int = 1024,
-                 batch_size: int = 4, attn_backend=None):
-        self.params, self.cfg = params, cfg
+def harvest_tokens(produced: list, toks, sp: SamplingParams, limit: int,
+                   uid: int, events: List["TokenEvent"],
+                   time_s: float) -> Optional[str]:
+    """Append freshly produced tokens to ``produced``, honoring the token
+    budget and per-request stop ids, emitting one TokenEvent per accepted
+    token (suppressed for dummy rows, uid < 0).  Returns the finish
+    reason ("stop" / "length") or None if the request is still going.
+
+    Shared by both schedulers so stop/limit/streaming semantics cannot
+    drift between static and continuous serving."""
+    for t in toks:
+        if sp.stop_token_ids and np.ndim(t) == 0 \
+                and int(t) in sp.stop_token_ids:
+            return "stop"           # stop token itself is not emitted
+        if len(produced) < limit:
+            tok = np.asarray(t)
+            produced.append(tok)
+            if uid >= 0:
+                events.append(TokenEvent(uid=uid, token=tok,
+                                         index=len(produced) - 1,
+                                         time_s=time_s))
+        if len(produced) >= limit:
+            return "length"
+    return None
+
+
+def decode_arrays(samplings):
+    """Per-row [B] (temperature, top_k, top_p) device arrays for one
+    decode step, or ``(None, None, None)`` when every live row is greedy
+    — the sentinel strategies use to run their greedy-only compiled step
+    (no sampling math on the exact-output hot path).  ``samplings`` holds
+    one SamplingParams per row (None for idle slots)."""
+    B = len(samplings)
+    temps = np.zeros(B, np.float32)
+    tks = np.zeros(B, np.int32)
+    tps = np.ones(B, np.float32)
+    any_sampled = False
+    for i, sp in enumerate(samplings):
+        if sp is not None and sp.temperature > 0.0:
+            any_sampled = True
+            temps[i] = sp.temperature
+            tks[i] = sp.top_k
+            tps[i] = sp.top_p
+    if not any_sampled:
+        return None, None, None
+    return jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps)
+
+
+@dataclasses.dataclass
+class _Batch:
+    """Host-side bookkeeping for one in-flight static batch."""
+    reqs: List[Request]
+    sampling: List[SamplingParams]
+    produced: list
+    done: np.ndarray
+    finish: list
+    keys: list                    # per-row base RNG keys
+    steps: int = 0
+    budget: int = 0
+    t_start: float = 0.0          # absolute engine-clock times
+    t_first: float = 0.0
+
+
+class StaticEngine:
+    """Pad-and-batch scheduler over one :class:`DecodeStrategy`."""
+
+    def __init__(self, strategy, cfg: ModelConfig, capacity: int = 1024,
+                 batch_size: int = 4, temperature: float = 0.0,
+                 seed: int = 0, clock=None):
+        self.strategy, self.cfg = strategy, cfg
         self.capacity, self.batch_size = capacity, batch_size
-        self.attn_backend = attn_backend    # "ref" / "pallas" (None = ref)
+        self.temperature = temperature   # deprecated engine-global default
         self.queue: List[Request] = []
         self.total_forward_passes = 0   # prefill + decode, all batches
-        self._overshoot = 0     # speculative engines set this to m
+        self._overshoot = strategy.overshoot
+        strategy.bind(batch_size, capacity)
+        self._clock = clock if clock is not None else time.perf_counter
+        self._base_key = jax.random.PRNGKey(seed)
+        self._t0: Optional[float] = None
+        self._started = False    # a step() has run since the last run()
+        self._cur: Optional[_Batch] = None
+        self._results: List[Result] = []
 
+    # ------------------------------------------------------------ queue
     def add_request(self, req: Request):
         check_cache_fits(len(req.prompt), req.max_new_tokens,
                          self.capacity, uid=req.uid,
                          headroom=self._overshoot)
+        sp = resolve_sampling(req, self.temperature)
+        if not self.strategy.supports_sampling and not sp.is_greedy:
+            raise ValueError(
+                f"request {req.uid}: decode strategy "
+                f"'{self.strategy.name}' is greedy-only; per-request "
+                f"temperature > 0 is not supported")
         self.queue.append(req)
 
+    @property
+    def has_unfinished(self) -> bool:
+        return bool(self.queue) or self._cur is not None
+
+    # ------------------------------------------------------------- step
+    def step(self) -> List[TokenEvent]:
+        """Advance one scheduling action: start the next batch (prefill,
+        emitting every row's first-token event) or run one decode step
+        (emitting the freshly accepted tokens).  Returns the events."""
+        if self._t0 is None:
+            self._t0 = self._clock()
+        self._started = True
+        events: List[TokenEvent] = []
+        if self._cur is None:
+            if self.queue:
+                self._begin_batch(events)
+            return events
+        self._decode_once(events)
+        return events
+
     def run(self) -> List[Result]:
-        self._clock0 = time.perf_counter()
-        out = []
-        while self.queue:
-            batch = self.queue[:self.batch_size]
-            self.queue = self.queue[self.batch_size:]
-            while len(batch) < self.batch_size:     # pad with a dummy copy
-                batch.append(dataclasses.replace(batch[-1], uid=-1))
-            out.extend(r for r in self._run_batch(batch) if r.uid >= 0)
+        # fresh timeline per run — unless resuming a step-driven workload
+        # whose timestamps are already on the current clock
+        if self._t0 is None or not self._started:
+            self._t0 = self._clock()
+        while self.has_unfinished:
+            self.step()
+        self._started = False
+        return self.drain_results()
+
+    def drain_results(self) -> List[Result]:
+        out, self._results = self._results, []
         return out
 
+    # ------------------------------------------------------------ batch
+    def _begin_batch(self, events: List[TokenEvent]):
+        n = 1 if self.strategy.batch1 else self.batch_size
+        batch = self.queue[:n]
+        self.queue = self.queue[n:]
+        while len(batch) < n:           # pad with a dummy copy
+            batch.append(dataclasses.replace(batch[-1], uid=-1))
+        tokens, _, _ = _pack(batch, self.cfg, self.capacity,
+                             self._overshoot)
+        t_start = self._clock()
+        first, cost = self.strategy.begin_batch(tokens)
+        self.total_forward_passes += cost
+        t_first = self._clock()
+        sp = [resolve_sampling(r, self.temperature) for r in batch]
+        keys = [jax.random.fold_in(
+            self._base_key,
+            (s.seed if s.seed is not None else r.uid) & 0xffffffff)
+            for r, s in zip(batch, sp)]
+        st = _Batch(reqs=batch, sampling=sp,
+                    produced=[[] for _ in batch],
+                    done=np.zeros(len(batch), bool),
+                    finish=[None] * len(batch), keys=keys,
+                    budget=max(r.max_new_tokens for r in batch) + 8,
+                    t_start=t_start, t_first=t_first)
+        self._cur = st
+        for b in range(len(batch)):
+            self._harvest(st, b, [first[b]], events, t_first)
+        self._maybe_finalize(events)
 
-class PPDEngine(_EngineBase):
-    def __init__(self, params, ppd_params, cfg, *, m=3, n_ept=1,
-                 tree_states=None, capacity=1024, batch_size=4,
-                 temperature=0.0, attn_backend=None):
-        super().__init__(params, cfg, capacity, batch_size, attn_backend)
-        self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
-        self._overshoot = m     # final step may commit up to m extra
-        self.temperature = temperature
-        if tree_states is None:
-            tree_states = ([default_chain_spec(max(k, 1), m)
-                            for k in range(m + 1)] if is_chain_arch(cfg)
-                           else mk_default_tree(m))
-        self.bufs = device_buffers(tree_states, m, n_ept)
-        self._step = jax.jit(self._step_impl)
+    def _harvest(self, st: _Batch, b: int, toks, events, now: float):
+        if st.done[b]:
+            return
+        fin = harvest_tokens(st.produced[b], toks, st.sampling[b],
+                             st.reqs[b].max_new_tokens, st.reqs[b].uid,
+                             events, now - self._t0)
+        if fin is not None:
+            st.done[b] = True
+            st.finish[b] = fin
 
-    def _step_impl(self, st, key):
-        return ppd_decode_step(self.params, self.ppd, self.cfg, self.bufs,
-                               st, m=self.m, n_ept=self.n_ept,
-                               temperature=self.temperature, key=key,
-                               attn_backend=self.attn_backend)
-
-    def _run_batch(self, batch: List[Request]) -> List[Result]:
-        cfg = self.cfg
-        tokens, starts, P = _pack(batch, cfg, self.capacity,
-                                  self._overshoot)
-        B = len(batch)
-        t0 = time.perf_counter()
-        offset = t0 - getattr(self, "_clock0", t0)
-        cache = init_cache(cfg, B, self.capacity)
-        logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
-                                      moe_exact=True,
-                                      attn_backend=self.attn_backend)
-        first = jnp.argmax(logits[:, -1], axis=-1)
-        t_prefill = time.perf_counter() - t0
-        st = init_ppd_state(cfg, cache, first, self.m, self.n_ept,
-                            kmax=self.bufs.get("_kmax", 10))
-        done = np.zeros(B, bool)
-        produced = [[] for _ in range(B)]
-        steps = 0
-        key = jax.random.PRNGKey(0)
-        for b in range(B):
-            produced[b].append(np.asarray(first[b]))
-        max_new = max(r.max_new_tokens for r in batch)
-        while not done.all():
-            key, sub = jax.random.split(key)
-            st, info = self._step(st, sub)
-            steps += 1
-            ptok = np.asarray(info["accepted_path_tokens"])
-            bonus = np.asarray(st.root_token)
-            for b in range(B):
-                if done[b]:
-                    continue
-                for t in ptok[b][1:]:                  # skip root (=prev bonus)
-                    if (np.all(t >= 0) and
-                            len(produced[b]) < batch[b].max_new_tokens):
-                        produced[b].append(t)
-                if len(produced[b]) < batch[b].max_new_tokens:
-                    produced[b].append(bonus[b])
-                done[b] = len(produced[b]) >= batch[b].max_new_tokens
-            if steps > max_new + 8:
-                break
-        wall = time.perf_counter() - t0
-        # chain archs run a second (commit) forward per PPD step
-        per_step = 2 if is_chain_arch(cfg) else 1
-        self.total_forward_passes += steps * per_step + 1
-        return [_batch_result(r, produced[b], steps, wall, t_prefill,
-                              offset)
-                for b, r in enumerate(batch)]
-
-
-def _batch_result(req: Request, produced, steps, wall, t_prefill,
-                  offset=0.0) -> Result:
-    """Static-batch Result on the shared engine clock.  Rows of one batch
-    share the batch timeline (``offset`` = batch start − engine run
-    start), so TTFT includes the queue wait of later batches and the
-    numbers are directly comparable with the continuous scheduler's exact
-    per-request metrics."""
-    toks = np.stack(produced)[:req.max_new_tokens]
-    n = len(toks)
-    ttft = max(offset + t_prefill - req.arrival_s, 0.0)
-    latency = max(offset + wall - req.arrival_s, 1e-9)
-    return Result(uid=req.uid, tokens=toks, steps=steps, wall_s=latency,
-                  ttft_s=ttft,
-                  tpot_s=tpot_of(wall - t_prefill, n),
-                  goodput_tok_s=n / latency)
-
-
-class VanillaEngine(_EngineBase):
-    def __init__(self, params, cfg, capacity=1024, batch_size=4,
-                 temperature=0.0, attn_backend=None):
-        super().__init__(params, cfg, capacity, batch_size, attn_backend)
-        self.temperature = temperature
-        self._step = jax.jit(lambda cache, tok, key: vanilla_decode_step(
-            params, cfg, cache, tok, temperature=temperature, key=key,
-            attn_backend=attn_backend))
-
-    def _run_batch(self, batch: List[Request]) -> List[Result]:
-        cfg = self.cfg
-        tokens, starts, P = _pack(batch, cfg, self.capacity,
-                                  self._overshoot)
-        B = len(batch)
-        t0 = time.perf_counter()
-        offset = t0 - getattr(self, "_clock0", t0)
-        cache = init_cache(cfg, B, self.capacity)
-        logits, cache, _, _ = forward(self.params, cfg, tokens, cache=cache,
-                                      moe_exact=True,
-                                      attn_backend=self.attn_backend)
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
-        t_prefill = time.perf_counter() - t0
-        produced = [[np.asarray(nxt[b])] for b in range(B)]
-        steps = 0
-        key = jax.random.PRNGKey(0)
-        max_new = max(r.max_new_tokens for r in batch)
-        for _ in range(max_new - 1):
-            key, sub = jax.random.split(key)
-            cache, nxt, _ = self._step(cache, nxt, sub)
-            steps += 1
-            for b in range(B):
-                if len(produced[b]) < batch[b].max_new_tokens:
-                    produced[b].append(np.asarray(nxt[b]))
-        wall = time.perf_counter() - t0
-        self.total_forward_passes += steps + 1
-        return [_batch_result(r, produced[b], steps, wall, t_prefill,
-                              offset)
-                for b, r in enumerate(batch)]
-
-
-class MedusaEngine(_EngineBase):
-    def __init__(self, params, heads, cfg, *, m=3, tree_states=None,
-                 capacity=1024, batch_size=4, attn_backend=None):
-        super().__init__(params, cfg, capacity, batch_size, attn_backend)
-        from repro.core.tree import TreeSpec
-        from repro.models.medusa import medusa_states, medusa_decode_step
-        self.heads, self.m = heads, m
-        self._overshoot = m     # final step may commit up to m extra
-        if tree_states is None:
-            tree_states = medusa_states(m)
+    def _decode_arrays(self, st: _Batch):
+        temps, tks, tps = decode_arrays(st.sampling)
+        if temps is None:
+            keys = jnp.zeros((len(st.reqs), 2), jnp.uint32)
         else:
-            # Medusa has no trained prompt tokens: a tuned PPD family is
-            # reused candidate-topology-only (chains stripped).
-            tree_states = [TreeSpec(candidates=s.candidates,
-                                    prompt_chains={})
-                           for s in tree_states]
-        self.bufs = device_buffers(tree_states, m)
-        self._fn = medusa_decode_step
-        self._step = jax.jit(lambda st: self._fn(
-            self.params, self.heads, self.cfg, self.bufs, st, m=self.m,
-            attn_backend=self.attn_backend))
+            keys = jnp.stack([_raw_key(jax.random.fold_in(k, st.steps))
+                              for k in st.keys])
+        return keys, temps, tks, tps
 
-    def _run_batch(self, batch: List[Request]) -> List[Result]:
-        from repro.models.medusa import medusa_heads
-        cfg = self.cfg
-        tokens, starts, P = _pack(batch, cfg, self.capacity,
-                                  self._overshoot)
-        B = len(batch)
-        t0 = time.perf_counter()
-        offset = t0 - getattr(self, "_clock0", t0)
-        cache = init_cache(cfg, B, self.capacity)
-        logits, cache, _, _, hidden = forward(self.params, cfg, tokens,
-                                              cache=cache, moe_exact=True,
-                                              return_hidden=True,
-                                              attn_backend=self.attn_backend)
-        first = jnp.argmax(logits[:, -1], axis=-1)
-        st = init_ppd_state(cfg, cache, first, self.m,
-                            kmax=self.bufs.get("_kmax", 10))
-        g0 = medusa_heads(self.heads, hidden[:, -1])
-        gv, gi = jax.lax.top_k(g0, self.bufs.get("_kmax", 10))
-        st = st._replace(guess_vals=gv.astype(jnp.float32), guess_idx=gi)
-        t_prefill = time.perf_counter() - t0
-        produced = [[np.asarray(first[b])] for b in range(B)]
-        done = np.zeros(B, bool)
-        steps = 0
-        max_new = max(r.max_new_tokens for r in batch)
-        while not done.all():
-            st, info = self._step(st)
-            steps += 1
-            ptok = np.asarray(info["accepted_path_tokens"])
-            bonus = np.asarray(st.root_token)
-            for b in range(B):
-                if done[b]:
-                    continue
-                for t in ptok[b][1:]:
-                    if t >= 0 and len(produced[b]) < batch[b].max_new_tokens:
-                        produced[b].append(t)
-                if len(produced[b]) < batch[b].max_new_tokens:
-                    produced[b].append(bonus[b])
-                done[b] = len(produced[b]) >= batch[b].max_new_tokens
-            if steps > max_new + 8:
-                break
-        wall = time.perf_counter() - t0
-        self.total_forward_passes += steps + 1
-        return [_batch_result(r, produced[b], steps, wall, t_prefill,
-                              offset)
-                for b, r in enumerate(batch)]
+    def _decode_once(self, events: List[TokenEvent]):
+        st = self._cur
+        keys, temps, tks, tps = self._decode_arrays(st)
+        toks, cost = self.strategy.decode(~st.done, keys, temps, tks, tps)
+        st.steps += 1
+        self.total_forward_passes += cost
+        now = self._clock()
+        for b in range(len(st.reqs)):
+            self._harvest(st, b, toks[b], events, now)
+        if st.steps > st.budget:        # PPD fallback guard
+            for b in range(len(st.reqs)):
+                if not st.done[b]:
+                    st.done[b] = True
+                    st.finish[b] = "length"
+        self._maybe_finalize(events)
+
+    def _maybe_finalize(self, events: List[TokenEvent]):
+        st = self._cur
+        if st is None or not st.done.all():
+            return
+        now = self._clock()
+        wall = now - st.t_start
+        offset = st.t_start - self._t0
+        t_prefill = st.t_first - st.t_start
+        for b, r in enumerate(st.reqs):
+            if r.uid < 0:
+                continue
+            n = len(st.produced[b])
+            toks = (np.stack(st.produced[b]) if n
+                    else np.zeros((0,), np.int32))
+            ttft = max(offset + t_prefill - r.arrival_s, 0.0)
+            latency = max(offset + wall - r.arrival_s, 1e-9)
+            events.append(TokenEvent(
+                uid=r.uid, token=None, index=n, time_s=now - self._t0,
+                finished=True, finish_reason=st.finish[b] or "length"))
+            self._results.append(Result(
+                uid=r.uid, tokens=toks, steps=st.steps, wall_s=latency,
+                ttft_s=ttft, tpot_s=tpot_of(wall - t_prefill, n),
+                goodput_tok_s=n / latency,
+                finish_reason=st.finish[b] or "length"))
+        self._cur = None
+
+
+def _raw_key(k):
+    """Typed PRNG key -> raw [2] uint32 (stackable across rows)."""
+    if jnp.issubdtype(k.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(k)
+    return k
+
+
+# ------------------------------------------------------- legacy factories
+# The historical per-pair engine classes are now strategy compositions.
+# These module-level factories keep the old constructor signatures for
+# in-tree callers and tests; the *package*-level names
+# (``repro.serving.PPDEngine`` etc.) additionally emit a
+# DeprecationWarning — see repro/serving/__init__.py.
+
+def PPDEngine(params, ppd_params, cfg, *, m=3, n_ept=1, tree_states=None,
+              capacity=1024, batch_size=4, temperature=0.0,
+              attn_backend=None, seed=0, clock=None) -> StaticEngine:
+    """static scheduler x PPD strategy (old ``PPDEngine``)."""
+    from .strategies import PPDStrategy
+    return StaticEngine(
+        PPDStrategy(params, ppd_params, cfg, m=m, n_ept=n_ept,
+                    tree_states=tree_states, attn_backend=attn_backend),
+        cfg, capacity=capacity, batch_size=batch_size,
+        temperature=temperature, seed=seed, clock=clock)
+
+
+def VanillaEngine(params, cfg, capacity=1024, batch_size=4,
+                  temperature=0.0, attn_backend=None, seed=0,
+                  clock=None) -> StaticEngine:
+    """static scheduler x vanilla strategy (old ``VanillaEngine``)."""
+    from .strategies import VanillaStrategy
+    return StaticEngine(
+        VanillaStrategy(params, cfg, attn_backend=attn_backend), cfg,
+        capacity=capacity, batch_size=batch_size, temperature=temperature,
+        seed=seed, clock=clock)
+
+
+def MedusaEngine(params, heads, cfg, *, m=3, tree_states=None,
+                 capacity=1024, batch_size=4, attn_backend=None, seed=0,
+                 clock=None) -> StaticEngine:
+    """static scheduler x Medusa strategy (old ``MedusaEngine``)."""
+    from .strategies import MedusaStrategy
+    return StaticEngine(
+        MedusaStrategy(params, heads, cfg, m=m, tree_states=tree_states,
+                       attn_backend=attn_backend),
+        cfg, capacity=capacity, batch_size=batch_size, seed=seed,
+        clock=clock)

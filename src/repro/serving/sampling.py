@@ -1,0 +1,75 @@
+"""Per-request sampling parameters (vLLM-style ``SamplingParams``).
+
+Every request carries its own sampling configuration; the engines thread
+the per-row values (temperature / top-k / top-p as [B] arrays) into one
+jitted decode step, so greedy and sampled requests share a batch without
+recompilation and a request's output never depends on its batch-mates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How one request's tokens are chosen.
+
+    * ``temperature`` — 0 = greedy argmax (the default; required for the
+      exact-output PPD guarantee), > 0 = typical-acceptance verification
+      with sampled bonus tokens.
+    * ``top_k`` — keep only the k highest-probability tokens (0 = off).
+    * ``top_p`` — nucleus sampling: keep the smallest set of tokens whose
+      probability mass reaches p (1.0 = off).
+    * ``max_tokens`` — output-length cap; when set, the engine uses it as
+      the request's ``max_new_tokens``.
+    * ``stop_token_ids`` — generation stops the moment one of these ids
+      is produced; the stop token itself is not included in the output,
+      and the request's slot (and any paged KV blocks) is freed
+      immediately.
+    * ``seed`` — per-request RNG seed (default: the request uid), making
+      sampled outputs reproducible independent of batch composition.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    max_tokens: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if not isinstance(self.top_k, int) or self.top_k < 0:
+            raise ValueError(f"top_k must be a non-negative int, "
+                             f"got {self.top_k!r}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, "
+                             f"got {self.max_tokens}")
+        # tolerate lists; store a hashable tuple of ints
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def resolve_sampling(req, engine_temperature: float = 0.0) -> SamplingParams:
+    """The request's effective sampling parameters.
+
+    Precedence: an explicit ``Request.sampling`` wins outright; otherwise
+    ``Request.temperature`` (when set) wins over the engine-global
+    ``temperature`` — the engine-global knob is a deprecated default, not
+    an override."""
+    if req.sampling is not None:
+        return req.sampling
+    t = req.temperature if req.temperature is not None \
+        else engine_temperature
+    return SamplingParams(temperature=float(t))

@@ -1,28 +1,42 @@
 """Slot-based continuous-batching scheduler.
 
-The static engines in :mod:`repro.serving.engine` pad every batch to the
-slowest request's ``max_new_tokens``: with mixed-length workloads most of
-each forward pass is spent decoding rows that already finished — exactly
-the bandwidth-bound waste PPD exists to remove.  The continuous engines
-here keep a fixed pool of ``batch_size`` decode *slots* backed by one
-persistent KV cache:
+The static scheduler in :mod:`repro.serving.engine` pads every batch to
+the slowest request's ``max_new_tokens``: with mixed-length workloads
+most of each forward pass is spent decoding rows that already finished —
+exactly the bandwidth-bound waste PPD exists to remove.  The
+:class:`ContinuousEngine` here keeps a fixed pool of ``batch_size``
+decode *slots* backed by one persistent KV cache:
 
-* a finished row is retired the moment it hits its token budget — its
-  result is emitted immediately and its slot is freed;
+* a finished row is retired the moment it hits its token budget, emits a
+  stop token, or runs out of step budget — its result is emitted
+  immediately and its slot (and any paged KV blocks) is freed;
 * a queued request is admitted into a freed slot via an *incremental
   per-slot prefill*: a batch-1 forward fills a scratch row cache, which
-  then replaces the slot's row (``write_cache_rows``) — the other slots
-  never stop decoding and the pool cache is never reinitialised;
-* each slot carries its own PPD tree state, step budget, and RNG key, so
-  a request's output is independent of which other requests share the
-  batch (per-row keys route through :func:`repro.core.sample_token`);
-* retired slots are masked out of every decode step (``active=...`` in
-  ``ppd_decode_step`` / ``vanilla_decode_step``): they commit no K/V, no
-  recurrent state, and no cache-length advance.
+  then replaces the slot's row — the other slots never stop decoding and
+  the pool cache is never reinitialised;
+* each slot carries its own decode state, step budget, RNG key, and
+  :class:`repro.serving.sampling.SamplingParams`, so a request's output
+  is independent of which other requests share the batch (per-row
+  temperature / top-k / top-p arrays route through one jitted step);
+* retired slots are masked out of every decode step: they commit no
+  K/V, no recurrent state, and no cache-length advance.
 
-At temperature 0 the output of every request is token-for-token identical
-to the static engines (and hence to vanilla decoding) — the scheduler
-changes *which* rows share a forward pass, never the math of a row.
+The scheduler is strategy-agnostic: the per-step decoding math lives in
+a :class:`repro.serving.strategies.DecodeStrategy` (vanilla / PPD /
+Medusa / spec-decode), composed by :class:`repro.serving.api.LLMEngine`
+— there is no per-pair engine subclass.  The historical names
+(``ContinuousPPDEngine`` / ``ContinuousVanillaEngine``) remain as thin
+factory functions.
+
+At temperature 0 the output of every request is token-for-token
+identical to static scheduling (and hence to vanilla decoding) — the
+scheduler changes *which* rows share a forward pass, never the math of a
+row.
+
+Engines are step-driven: ``step()`` performs one scheduling iteration
+(admit into free slots, one masked decode step, retire finished slots)
+and returns the :class:`TokenEvent` stream it produced — a request's
+first event IS its TTFT observation.  ``run()`` loops ``step()``.
 
 KV memory modes (``kv=``):
 
@@ -60,18 +74,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
-                        is_chain_arch, mk_default_tree, ppd_decode_step,
-                        vanilla_decode_step)
-from repro.models import (forward, init_cache, num_seq_blocks,
-                          paged_block_bytes, release_slot,
-                          ring_cache_bytes, trim_cache, write_cache_rows,
+from repro.core import is_chain_arch
+from repro.models import (num_seq_blocks, paged_block_bytes,
+                          ring_cache_bytes, write_cache_rows,
                           write_prefill_blocks)
 from repro.models.config import ModelConfig
 
 from .block_manager import BlockManager
-from .engine import (Request, Result, aggregate_metrics, check_cache_fits,
-                     tpot_of)
+from .engine import (Request, Result, TokenEvent, aggregate_metrics,
+                     check_cache_fits, decode_arrays, harvest_tokens,
+                     tpot_of, _raw_key)
+from .sampling import SamplingParams, resolve_sampling
 
 
 def poisson_trace(requests: List[Request], rate_per_s: float,
@@ -100,35 +113,30 @@ class _Slot:
     arrival_t: float = 0.0        # absolute times (engine clock)
     first_tok_t: float = 0.0
     key: Optional[jnp.ndarray] = None
+    sampling: Optional[SamplingParams] = None
+    finish: Optional[str] = None  # set -> retire at next reap
 
     @property
     def busy(self) -> bool:
         return self.req is not None
 
 
-class _ContinuousBase:
-    """Shared slot pool, admission, and run loop.
+class ContinuousEngine:
+    """Slot pool + admission + run loop over one decode strategy."""
 
-    Subclasses implement ``_prefill_row`` (batch-1 prefill returning a row
-    cache + first token), ``_admit_device`` (splice the row into the pool
-    device state), and ``_decode_active`` (one masked decode step
-    returning per-slot freshly produced tokens)."""
-
-    def __init__(self, params, cfg: ModelConfig, capacity: int = 1024,
+    def __init__(self, strategy, cfg: ModelConfig, capacity: int = 1024,
                  batch_size: int = 4, temperature: float = 0.0,
                  admission: str = "fcfs", prefill_bucket: int = 0,
-                 seed: int = 0, attn_backend=None, kv: str = "ring",
-                 block_size: int = 16, num_blocks: Optional[int] = None,
-                 watermark: float = 0.01, sjf_age_rate: float = 1.0,
-                 clock=None):
+                 seed: int = 0, kv: str = "ring", block_size: int = 16,
+                 num_blocks: Optional[int] = None, watermark: float = 0.01,
+                 sjf_age_rate: float = 1.0, clock=None):
         assert admission in ("fcfs", "sjf"), admission
         assert kv in ("ring", "paged"), kv
-        self.params, self.cfg = params, cfg
+        self.strategy, self.cfg = strategy, cfg
         self.capacity, self.batch_size = capacity, batch_size
-        self.temperature = temperature
+        self.temperature = temperature   # deprecated engine-global default
         self.admission = admission
         self.sjf_age_rate = sjf_age_rate
-        self.attn_backend = attn_backend    # "ref" / "pallas" (None = ref)
         self.kv = kv
         self.block_size = block_size
         self._clock = clock if clock is not None else time.perf_counter
@@ -138,7 +146,7 @@ class _ContinuousBase:
         # untrimmable recurrent state and always prefill exactly.
         self.prefill_bucket = 0 if is_chain_arch(cfg) else prefill_bucket
         self.queue: List[Request] = []
-        self._overshoot = 0     # PPD engine sets m (final-step commit)
+        self._overshoot = strategy.overshoot
         self.slots = [_Slot() for _ in range(batch_size)]
         self.total_forward_passes = 0   # prefills + decode steps
         self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
@@ -155,14 +163,13 @@ class _ContinuousBase:
                 num_blocks = batch_size * mb    # ring-parity worst case
             self.block_mgr = BlockManager(num_blocks, block_size,
                                           watermark=watermark)
-        self._pending_alloc = None   # (block_ids, n_shared) of admit in flight
-
-    def _init_pool_cache(self):
-        if self.kv == "paged":
-            return init_cache(self.cfg, self.batch_size, self.capacity,
-                              paged=True, block_size=self.block_size,
-                              num_blocks=self.block_mgr.num_blocks)
-        return init_cache(self.cfg, self.batch_size, self.capacity)
+        strategy.bind(batch_size, capacity, kv=kv, block_size=block_size,
+                      num_blocks=(self.block_mgr.num_blocks
+                                  if self.block_mgr is not None else None),
+                      pool=True)
+        self._t0: Optional[float] = None
+        self._started = False    # a step() has run since the last run()
+        self._results: List[Result] = []
 
     # ------------------------------------------------------------ queue
     def add_request(self, req: Request):
@@ -200,7 +207,17 @@ class _ContinuousBase:
             # budget.
             check_cache_fits(plen, req.max_new_tokens, self.capacity,
                              uid=req.uid, headroom=self._overshoot)
+        sp = resolve_sampling(req, self.temperature)
+        if not self.strategy.supports_sampling and not sp.is_greedy:
+            raise ValueError(
+                f"request {req.uid}: decode strategy "
+                f"'{self.strategy.name}' is greedy-only; per-request "
+                f"temperature > 0 is not supported")
         self.queue.append(req)
+
+    @property
+    def has_unfinished(self) -> bool:
+        return bool(self.queue) or any(s.busy for s in self.slots)
 
     def _active_mask(self) -> np.ndarray:
         return np.asarray([s.busy for s in self.slots], bool)
@@ -263,111 +280,197 @@ class _ContinuousBase:
                             ((0, 0),) * (prompt.ndim - 1))
         return jnp.asarray(prompt)[None], plen
 
-    def _admit(self, slot_idx: int, req: Request):
+    def _admit(self, slot_idx: int, req: Request,
+               events: List[TokenEvent]):
+        alloc = None
         if self.block_mgr is not None:
-            self._pending_alloc = self.block_mgr.allocate(
+            alloc = self.block_mgr.allocate(
                 req.uid, req.prompt, req.max_new_tokens + self._overshoot)
-        row_cache, first = self._prefill_row(req)
-        self.total_forward_passes += 1
+        tokens, plen = self._padded_prompt(req.prompt)
+        row, first, cost = self.strategy.prefill_request(tokens, plen)
+        self.total_forward_passes += cost
         self.stats["prefills"] += 1
         self.stats["admitted"] += 1
-        self._admit_device(slot_idx, row_cache, first, len(req.prompt))
-        self._pending_alloc = None
+        if alloc is not None:
+            ids, n_shared = alloc
+
+            def write_row(cache, row_cache):
+                """Paged block splice of the admission's allocation."""
+                return write_prefill_blocks(self.cfg, cache, row_cache,
+                                            slot_idx, ids, n_shared, plen)
+        else:
+            def write_row(cache, row_cache):
+                """Ring row copy."""
+                return write_cache_rows(self.cfg, cache, row_cache,
+                                        slot_idx)
+        self.strategy.admit(slot_idx, row, write_row)
         slot = self.slots[slot_idx]
+        sp = resolve_sampling(req, self.temperature)
         slot.req = req
-        slot.produced = [np.asarray(first)]      # forces prefill to finish
+        slot.produced = []
         slot.decode_steps = 0
         slot.budget = req.max_new_tokens + 8
         slot.arrival_t = req.arrival_s
         slot.first_tok_t = self._clock() - self._t0  # TTFT includes prefill
-        slot.key = jax.random.fold_in(self._base_key, req.uid)
+        slot.sampling = sp
+        slot.finish = None
+        slot.key = jax.random.fold_in(
+            self._base_key,
+            (sp.seed if sp.seed is not None else req.uid) & 0xffffffff)
+        # np.asarray forces the prefill to finish before the TTFT stamp
+        self._harvest(slot_idx, [np.asarray(first)], events,
+                      slot.first_tok_t)
 
-    def _write_row(self, cache, row_cache, slot_idx: int, plen: int):
-        """Splice a prefilled batch-1 row into the pool cache (ring row
-        copy, or paged block splice of the admission's allocation)."""
-        if self.block_mgr is not None:
-            ids, n_shared = self._pending_alloc
-            return write_prefill_blocks(self.cfg, cache, row_cache,
-                                        slot_idx, ids, n_shared, plen)
-        return write_cache_rows(self.cfg, cache, row_cache, slot_idx)
+    def _harvest(self, slot_idx: int, toks, events: List[TokenEvent],
+                 now: float):
+        """Append freshly produced tokens to a slot (shared
+        stop/limit/streaming semantics: :func:`engine.harvest_tokens`)."""
+        s = self.slots[slot_idx]
+        if s.finish is not None:
+            return
+        s.finish = harvest_tokens(s.produced, toks, s.sampling,
+                                  s.req.max_new_tokens, s.req.uid,
+                                  events, now)
 
     def _retire(self, slot_idx: int, now: float) -> Result:
         slot = self.slots[slot_idx]
         req = slot.req
-        toks = np.stack(slot.produced)[:req.max_new_tokens]
-        n = len(toks)
+        n = len(slot.produced)
+        toks = (np.stack(slot.produced) if n else np.zeros((0,), np.int32))
         latency = max(now - slot.arrival_t, 1e-9)
         res = Result(
             uid=req.uid, tokens=toks, steps=slot.decode_steps + 1,
             wall_s=latency,
             ttft_s=max(slot.first_tok_t - slot.arrival_t, 0.0),
             tpot_s=tpot_of(now - slot.first_tok_t, n),
-            goodput_tok_s=n / latency)
+            goodput_tok_s=n / latency,
+            finish_reason=slot.finish or "length")
         slot.req = None
         slot.produced = []
+        slot.sampling = None
+        slot.finish = None
         self.stats["retired"] += 1
         if self.block_mgr is not None:
-            # free the sequence's blocks and clear the slot's block-table
-            # row: a freed block may be re-allocated immediately, and the
-            # retired slot keeps stepping (masked) until re-admission —
-            # a stale table row would let its dead writes land in blocks
-            # now owned by another sequence.
+            # free the sequence's blocks right away: a freed block may be
+            # re-allocated immediately.
             self.block_mgr.free_seq(req.uid)
-            self._release_device(slot_idx)
-        # No device-side reset needed beyond that: the retired row is
-        # masked out of every commit (active=False), and admission
-        # overwrites the whole row before it is ever read again.
+        # Paged caches also clear the slot's block-table row (the retired
+        # slot keeps stepping, masked, until re-admission — a stale table
+        # row would let its dead writes land in blocks now owned by
+        # another sequence); ring caches need nothing beyond the mask, so
+        # the strategy's release is a no-op there.  Spec-decode drops the
+        # slot's self-managed caches.
+        self.strategy.release(slot_idx)
         return res
 
-    # ------------------------------------------------------------ run
-    def run(self) -> List[Result]:
-        t0 = self._t0 = self._clock()
-        results: List[Result] = []
-        while self.queue or any(s.busy for s in self.slots):
-            now = self._clock() - t0
-            # fill free slots with every admissible request
-            for i, s in enumerate(self.slots):
-                if s.busy:
-                    continue
-                pick = self._pick_next(now)
-                if pick is None:
-                    break
-                self._admit(i, self.queue.pop(pick))
-                now = self._clock() - t0
-            active = self._active_mask()
-            conc = int(active.sum())
-            self.stats["max_concurrency"] = max(
-                self.stats["max_concurrency"], conc)
-            if conc == 0:
+    def _reap(self, events: List[TokenEvent], now: float):
+        """Retire every slot whose finish reason is set, emitting the
+        terminal event.  Runs after admission (stop-on-first-token /
+        1-token budgets retire before costing a decode step) and after
+        each decode step."""
+        for i, s in enumerate(self.slots):
+            if not s.busy:
+                continue
+            if s.finish is None and s.decode_steps > s.budget:
+                s.finish = "length"          # PPD fallback guard tripped
+            if s.finish is not None:
+                events.append(TokenEvent(
+                    uid=s.req.uid, token=None, index=len(s.produced),
+                    time_s=now, finished=True, finish_reason=s.finish))
+                self._results.append(self._retire(i, now))
+
+    # ------------------------------------------------------------- step
+    def _decode_arrays(self):
+        temps, tks, tps = decode_arrays(
+            [s.sampling if s.busy else None for s in self.slots])
+        return self._slot_keys(temps is not None), temps, tks, tps
+
+    def _slot_keys(self, any_sampled: bool):
+        """[B,2] raw per-slot sampling keys (each slot folds its own key
+        with its own step count, so a request's RNG stream is independent
+        of batch composition)."""
+        if not any_sampled:
+            return jnp.zeros((self.batch_size, 2), jnp.uint32)
+        keys = []
+        for s in self.slots:
+            if not s.busy:
+                keys.append(jnp.zeros((2,), jnp.uint32))
+                continue
+            keys.append(_raw_key(jax.random.fold_in(s.key,
+                                                    s.decode_steps)))
+        return jnp.stack(keys)
+
+    def step(self) -> List[TokenEvent]:
+        """One scheduling iteration: admit into free slots, retire
+        anything already finished, run one masked decode step over the
+        active slots, harvest + retire.  Returns the TokenEvents
+        produced (first-token events double as TTFT observations)."""
+        if self._t0 is None:
+            self._t0 = self._clock()
+        self._started = True
+        events: List[TokenEvent] = []
+        now = self._clock() - self._t0
+        # fill free slots with every admissible request
+        for i, s in enumerate(self.slots):
+            if s.busy:
+                continue
+            pick = self._pick_next(now)
+            if pick is None:
+                break
+            self._admit(i, self.queue.pop(pick), events)
+            now = self._clock() - self._t0
+        # stop-on-first-token / 1-token budgets retire without a step
+        self._reap(events, now)
+        active = self._active_mask()
+        conc = int(active.sum())
+        self.stats["max_concurrency"] = max(
+            self.stats["max_concurrency"], conc)
+        if conc == 0:
+            if self.queue:
                 # idle: wait for the next arrival
                 nxt = min(r.arrival_s for r in self.queue)
                 time.sleep(min(max(nxt - now, 0.0), 0.05))
+            return events
+        keys, temps, tks, tps = self._decode_arrays()
+        new_tokens, cost = self.strategy.decode(active, keys, temps, tks,
+                                                tps)
+        self.total_forward_passes += cost
+        self.stats["decode_steps"] += 1
+        self.stats["active_slot_steps"] += conc
+        self.stats["idle_slot_steps"] += self.batch_size - conc
+        now = self._clock() - self._t0
+        for i, s in enumerate(self.slots):
+            if not s.busy:
                 continue
-            new_tokens = self._decode_active(active)
-            self.total_forward_passes += self._step_cost()
-            self.stats["decode_steps"] += 1
-            self.stats["active_slot_steps"] += conc
-            self.stats["idle_slot_steps"] += self.batch_size - conc
-            now = self._clock() - t0
-            for i, s in enumerate(self.slots):
-                if not s.busy:
-                    continue
-                s.decode_steps += 1
-                limit = s.req.max_new_tokens
-                for t in new_tokens[i]:
-                    if len(s.produced) < limit:
-                        s.produced.append(t)
-                if len(s.produced) >= limit or s.decode_steps > s.budget:
-                    results.append(self._retire(i, now))
-        self.makespan_s = self._clock() - t0
-        return results
+            s.decode_steps += 1
+            self._harvest(i, new_tokens[i], events, now)
+        self._reap(events, now)
+        return events
 
+    def run(self) -> List[Result]:
+        # fresh timeline per run — unless resuming a step-driven workload
+        # (in-flight slots AND queued arrival offsets were stamped on the
+        # current clock; restarting it would replay elapsed arrivals).
+        # Finished-but-undrained Results are never discarded.
+        if self._t0 is None or not self._started:
+            self._t0 = self._clock()
+        while self.has_unfinished:
+            self.step()
+        self.makespan_s = self._clock() - self._t0
+        self._started = False
+        return self.drain_results()
+
+    def drain_results(self) -> List[Result]:
+        out, self._results = self._results, []
+        return out
+
+    # ---------------------------------------------------------- metrics
     def metrics(self, results: List[Result]) -> dict:
         out = aggregate_metrics(results, self.makespan_s)
         out.update(self.stats)
         out["total_forward_passes"] = self.total_forward_passes
         out["kv"] = self.kv
-        pool = self._pool_cache()
+        pool = self.strategy.pool_cache()
         if self.block_mgr is not None:
             bm = self.block_mgr.stats()
             out.update({f"block_{k}": v for k, v in bm.items()})
@@ -378,178 +481,40 @@ class _ContinuousBase:
             out["peak_cache_bytes"] = ring_cache_bytes(pool)
         return out
 
-    def _step_cost(self) -> int:
-        """Forward passes consumed by one decode step."""
-        return 1
 
-    def _prefill_row(self, req: Request):
-        """Batch-1 prefill into a scratch row cache -> (row_cache, first).
-
-        With a prefill bucket the prompt is right-padded; the padded tail
-        is causally invisible during the forward (positions > prompt) and
-        its cache entries are killed with trim_cache afterwards, so the
-        row is bit-identical to an exact-length prefill.  In paged mode
-        the row keeps sliding-window layers at full span: its content is
-        spliced into pool blocks whose content must depend only on the
-        prompt prefix, not on what survived a window-capped ring."""
-        tokens, plen = self._padded_prompt(req.prompt)
-        row_cache = init_cache(self.cfg, 1, self.capacity,
-                               sliding_full_span=(self.kv == "paged"))
-        logits, row_cache, _, _ = forward(self.params, self.cfg, tokens,
-                                          cache=row_cache, moe_exact=True,
-                                          attn_backend=self.attn_backend)
-        first = jnp.argmax(logits[0, plen - 1], axis=-1)
-        if tokens.shape[1] != plen:
-            row_cache = trim_cache(self.cfg, row_cache,
-                                   jnp.full((1,), plen, jnp.int32))
-        return row_cache, first
-
-    def _slot_keys(self):
-        """[B,2] raw per-slot sampling keys (each slot folds its own key
-        with its own step count — see repro.core.sample_token)."""
-        if self.temperature <= 0.0:
-            return jnp.zeros((self.batch_size, 2), jnp.uint32)
-        keys = []
-        for s in self.slots:
-            if not s.busy:
-                keys.append(jnp.zeros((2,), jnp.uint32))
-                continue
-            k = jax.random.fold_in(s.key, s.decode_steps)
-            if jnp.issubdtype(k.dtype, jax.dtypes.prng_key):
-                k = jax.random.key_data(k)
-            keys.append(k)
-        return jnp.stack(keys)
-
-    # hooks ------------------------------------------------------------
-    def _admit_device(self, slot_idx, row_cache, first, plen):
-        raise NotImplementedError
-
-    def _decode_active(self, active: np.ndarray):
-        raise NotImplementedError
-
-    def _release_device(self, slot_idx):
-        raise NotImplementedError
-
-    def _pool_cache(self):
-        return None
+# ------------------------------------------------------- legacy factories
+def ContinuousPPDEngine(params, ppd_params, cfg: ModelConfig, *, m=3,
+                        n_ept=1, tree_states=None, capacity=1024,
+                        batch_size=4, temperature=0.0, admission="fcfs",
+                        prefill_bucket=0, seed=0, attn_backend=None,
+                        kv="ring", block_size=16, num_blocks=None,
+                        watermark=0.01, sjf_age_rate=1.0,
+                        clock=None) -> ContinuousEngine:
+    """continuous scheduler x PPD strategy (old ``ContinuousPPDEngine``)."""
+    from .strategies import PPDStrategy
+    return ContinuousEngine(
+        PPDStrategy(params, ppd_params, cfg, m=m, n_ept=n_ept,
+                    tree_states=tree_states, attn_backend=attn_backend),
+        cfg, capacity=capacity, batch_size=batch_size,
+        temperature=temperature, admission=admission,
+        prefill_bucket=prefill_bucket, seed=seed, kv=kv,
+        block_size=block_size, num_blocks=num_blocks, watermark=watermark,
+        sjf_age_rate=sjf_age_rate, clock=clock)
 
 
-class ContinuousPPDEngine(_ContinuousBase):
-    """PPD guess-and-verify decoding over a continuous slot pool."""
-
-    def __init__(self, params, ppd_params, cfg: ModelConfig, *, m=3,
-                 n_ept=1, tree_states=None, capacity=1024, batch_size=4,
-                 temperature=0.0, admission="fcfs", prefill_bucket=0,
-                 seed=0, attn_backend=None, kv="ring", block_size=16,
-                 num_blocks=None, watermark=0.01, sjf_age_rate=1.0,
-                 clock=None):
-        super().__init__(params, cfg, capacity, batch_size, temperature,
-                         admission, prefill_bucket, seed, attn_backend,
-                         kv, block_size, num_blocks, watermark,
-                         sjf_age_rate, clock)
-        self.ppd, self.m, self.n_ept = ppd_params, m, n_ept
-        self._overshoot = m     # final step may commit up to m extra
-        if tree_states is None:
-            tree_states = ([default_chain_spec(max(k, 1), m)
-                            for k in range(m + 1)] if is_chain_arch(cfg)
-                           else mk_default_tree(m))
-        self.bufs = device_buffers(tree_states, m, n_ept)
-        cache = self._init_pool_cache()
-        if cfg.modality == "audio":
-            first = jnp.zeros((batch_size, cfg.n_codebooks), jnp.int32)
-        else:
-            first = jnp.zeros((batch_size,), jnp.int32)
-        self.state = init_ppd_state(cfg, cache, first, m, n_ept,
-                                    kmax=self.bufs.get("_kmax", 10))
-        self._step = jax.jit(self._step_impl)
-
-    def _step_impl(self, st, keys, active):
-        return ppd_decode_step(self.params, self.ppd, self.cfg, self.bufs,
-                               st, m=self.m, n_ept=self.n_ept,
-                               temperature=self.temperature, key=keys,
-                               active=active,
-                               attn_backend=self.attn_backend)
-
-    def _admit_device(self, slot_idx, row_cache, first, plen):
-        st = self.state
-        cache = self._write_row(st.cache, row_cache, slot_idx, plen)
-        # fresh root token, zero guesses, dynamic-tree state 0 — the
-        # single-row equivalent of init_ppd_state after prefill
-        self.state = st._replace(
-            cache=cache,
-            root_token=st.root_token.at[slot_idx].set(first),
-            guess_vals=st.guess_vals.at[slot_idx].set(0.0),
-            guess_idx=st.guess_idx.at[slot_idx].set(0),
-            tree_state=st.tree_state.at[slot_idx].set(0))
-
-    def _release_device(self, slot_idx):
-        self.state = self.state._replace(
-            cache=release_slot(self.state.cache, slot_idx))
-
-    def _pool_cache(self):
-        return self.state.cache
-
-    def _decode_active(self, active: np.ndarray):
-        keys = self._slot_keys()
-        self.state, info = self._step(self.state, keys,
-                                      jnp.asarray(active))
-        ptok = np.asarray(info["accepted_path_tokens"])
-        bonus = np.asarray(self.state.root_token)
-        out = []
-        for i, s in enumerate(self.slots):
-            if not s.busy:
-                out.append([])
-                continue
-            toks = [t for t in ptok[i][1:] if np.all(t >= 0)]  # skip root
-            toks.append(bonus[i])
-            out.append(toks)
-        return out
-
-    def _step_cost(self) -> int:
-        # chain archs run a second (commit) forward per step
-        return 2 if is_chain_arch(self.cfg) else 1
-
-
-class ContinuousVanillaEngine(_ContinuousBase):
-    """Autoregressive baseline over the same continuous slot pool —
-    isolates the scheduling win from the PPD win."""
-
-    def __init__(self, params, cfg: ModelConfig, capacity=1024,
-                 batch_size=4, temperature=0.0, admission="fcfs",
-                 prefill_bucket=0, seed=0, attn_backend=None, kv="ring",
-                 block_size=16, num_blocks=None, watermark=0.01,
-                 sjf_age_rate=1.0, clock=None):
-        super().__init__(params, cfg, capacity, batch_size, temperature,
-                         admission, prefill_bucket, seed, attn_backend,
-                         kv, block_size, num_blocks, watermark,
-                         sjf_age_rate, clock)
-        self.cache = self._init_pool_cache()
-        if cfg.modality == "audio":
-            self.tokens = jnp.zeros((batch_size, cfg.n_codebooks),
-                                    jnp.int32)
-        else:
-            self.tokens = jnp.zeros((batch_size,), jnp.int32)
-        self._step = jax.jit(
-            lambda cache, tok, keys, active: vanilla_decode_step(
-                self.params, self.cfg, cache, tok,
-                temperature=self.temperature, key=keys, active=active,
-                attn_backend=self.attn_backend))
-
-    def _admit_device(self, slot_idx, row_cache, first, plen):
-        self.cache = self._write_row(self.cache, row_cache, slot_idx,
-                                     plen)
-        self.tokens = self.tokens.at[slot_idx].set(first)
-
-    def _release_device(self, slot_idx):
-        self.cache = release_slot(self.cache, slot_idx)
-
-    def _pool_cache(self):
-        return self.cache
-
-    def _decode_active(self, active: np.ndarray):
-        keys = self._slot_keys()
-        self.cache, self.tokens, _ = self._step(self.cache, self.tokens,
-                                                keys, jnp.asarray(active))
-        nxt = np.asarray(self.tokens)
-        return [[nxt[i]] if s.busy else [] for i, s in
-                enumerate(self.slots)]
+def ContinuousVanillaEngine(params, cfg: ModelConfig, capacity=1024,
+                            batch_size=4, temperature=0.0,
+                            admission="fcfs", prefill_bucket=0, seed=0,
+                            attn_backend=None, kv="ring", block_size=16,
+                            num_blocks=None, watermark=0.01,
+                            sjf_age_rate=1.0,
+                            clock=None) -> ContinuousEngine:
+    """continuous scheduler x vanilla strategy (old
+    ``ContinuousVanillaEngine``)."""
+    from .strategies import VanillaStrategy
+    return ContinuousEngine(
+        VanillaStrategy(params, cfg, attn_backend=attn_backend), cfg,
+        capacity=capacity, batch_size=batch_size, temperature=temperature,
+        admission=admission, prefill_bucket=prefill_bucket, seed=seed,
+        kv=kv, block_size=block_size, num_blocks=num_blocks,
+        watermark=watermark, sjf_age_rate=sjf_age_rate, clock=clock)

@@ -158,6 +158,49 @@ class SpeculativeDecoder:
             out.append(int(np.asarray(st.root_token)[0]))
         return jnp.asarray(out[:self.gamma])[None]
 
+    # ------------------------------------------------------- incremental
+    def begin(self, prompt: np.ndarray):
+        """Prefill both models on ``prompt`` [P].  Returns (state, first)
+        where ``state`` is the opaque per-sequence carry for
+        :meth:`propose_verify` and ``first`` is the target's first output
+        token.  Costs 2 forward passes (target + draft prefill)."""
+        prompt = jnp.asarray(prompt)[None]
+        tcache = init_cache(self.tcfg, 1, self.capacity)
+        tlog, tcache, _, _ = forward(self.tp, self.tcfg, prompt,
+                                     cache=tcache, moe_exact=True)
+        dcache = init_cache(self.dcfg, 1, self.capacity)
+        _, dcache, _, _ = forward(self.dp, self.dcfg, prompt, cache=dcache,
+                                  moe_exact=True)
+        root = jnp.argmax(tlog[:, -1], axis=-1)                  # [1]
+        return {"tcache": tcache, "dcache": dcache, "root": root}, root[0]
+
+    def propose_verify(self, state, stats: SpecStats):
+        """One speculation cycle: draft proposes gamma tokens, the target
+        verifies them in one forward, the draft catches up from its
+        pre-speculation snapshot.  Returns (state, accepted) where
+        ``accepted`` is the accepted chain prefix + bonus token (>= 1
+        output tokens per cycle)."""
+        d0 = state["dcache"]                                     # snapshot
+        draft0 = stats.draft_steps
+        chain = self._draft_propose(state["dcache"], state["root"], stats)
+        tcache, n_acc, out, bonus = self._verify(state["tcache"],
+                                                 state["root"], chain)
+        stats.target_steps += 1
+        accepted = [int(x) for x in np.asarray(out[0]) if x >= 0]
+        stats.accepted_draft_tokens += int(n_acc[0])  # = len(accepted) - 1
+        stats.bonus_tokens += 1
+        # draft catch-up: commit accepted chain prefix + bonus from the
+        # pre-speculation snapshot (correct cache, no stale entries) at
+        # a fixed [1, gamma+1] shape (pad + mask -> one compile).
+        commit = np.zeros((1, self.gamma + 1), np.int32)
+        commit[0, :len(accepted)] = accepted
+        dcache = self._catchup(d0, jnp.asarray(commit),
+                               jnp.asarray([len(accepted)], jnp.int32))
+        # cost: draft proposals + target verify + draft catch-up
+        cost = (stats.draft_steps - draft0) + 2
+        return ({"tcache": tcache, "dcache": dcache, "root": bonus},
+                accepted, cost)
+
     # ---------------------------------------------------------- main loop
     def generate(self, prompt: np.ndarray, max_new_tokens: int = 64):
         """prompt: [P] ids.  Returns (tokens [<=max_new], SpecStats)."""
@@ -167,31 +210,9 @@ class SpeculativeDecoder:
         check_cache_fits(len(prompt), max_new_tokens, self.capacity,
                          headroom=self.gamma)
         stats = SpecStats()
-        prompt = jnp.asarray(prompt)[None]
-        tcache = init_cache(self.tcfg, 1, self.capacity)
-        tlog, tcache, _, _ = forward(self.tp, self.tcfg, prompt,
-                                     cache=tcache, moe_exact=True)
-        dcache = init_cache(self.dcfg, 1, self.capacity)
-        _, dcache, _, _ = forward(self.dp, self.dcfg, prompt, cache=dcache,
-                                  moe_exact=True)
-        root = jnp.argmax(tlog[:, -1], axis=-1)                  # [1]
-        produced = [int(root[0])]
+        state, first = self.begin(prompt)
+        produced = [int(first)]
         while len(produced) < max_new_tokens:
-            d0 = dcache                                          # snapshot
-            chain = self._draft_propose(dcache, root, stats)
-            tcache, n_acc, out, bonus = self._verify(tcache, root, chain)
-            stats.target_steps += 1
-            n = int(n_acc[0])
-            accepted = [int(x) for x in np.asarray(out[0]) if x >= 0]
+            state, accepted, _ = self.propose_verify(state, stats)
             produced.extend(accepted)
-            stats.accepted_draft_tokens += n         # = len(accepted) - 1
-            stats.bonus_tokens += 1
-            # draft catch-up: commit accepted chain prefix + bonus from the
-            # pre-speculation snapshot (correct cache, no stale entries) at
-            # a fixed [1, gamma+1] shape (pad + mask -> one compile).
-            commit = np.zeros((1, self.gamma + 1), np.int32)
-            commit[0, :len(accepted)] = accepted
-            dcache = self._catchup(d0, jnp.asarray(commit),
-                                   jnp.asarray([len(accepted)], jnp.int32))
-            root = bonus
         return np.asarray(produced[:max_new_tokens]), stats

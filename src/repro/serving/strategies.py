@@ -1,0 +1,490 @@
+"""Decode strategies: the per-step math of each decoding method, decoupled
+from request scheduling.
+
+A :class:`DecodeStrategy` owns the model weights, the jitted decode step,
+and the device-side carry (KV cache + decode state).  Schedulers —
+``StaticEngine`` (pad-and-batch) and ``ContinuousEngine`` (slot pool) in
+:mod:`repro.serving.engine` / :mod:`repro.serving.scheduler` — own
+request queues, admission, timing, and memory budgeting, and drive any
+strategy through one narrow interface:
+
+* ``bind(batch_size, capacity, ...)``    — record geometry; allocate the
+  persistent slot pool when ``pool=True`` (continuous scheduling);
+* ``begin_batch(tokens)``                — fresh batched prefill (static);
+* ``prefill_request(tokens, plen, ...)`` — batch-1 prefill -> opaque row
+  (continuous admission);
+* ``admit(slot, row, write_row)``        — splice a prefilled row into
+  the live state (``write_row`` performs the scheduler-chosen cache
+  write: ring row copy or paged block splice);
+* ``decode(active, keys, temps, top_k, top_p)`` — one masked decode step
+  over every slot, returning freshly produced tokens per slot + the
+  number of model forward passes consumed.  ``temps=None`` means "every
+  live row is greedy": the strategy runs its greedy-only compiled step
+  (argmax / exact-match verify, no sampling math on the hot path — the
+  paper's exact-output mode costs what it did before per-request
+  sampling existed).  Per-row arrays select the sampled program, which
+  computes both verdicts and picks per row;
+* ``release(slot)``                      — drop a retired slot's device
+  state (paged caches: clear the block-table row so dead writes drop).
+
+The ``LLMEngine`` facade (:mod:`repro.serving.api`) composes strategy x
+scheduler from registries — there is no per-pair engine subclass.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
+                        is_chain_arch, mk_default_tree, ppd_decode_step,
+                        vanilla_decode_step)
+from repro.models import (forward, init_cache, is_paged_cache,
+                          release_slot, trim_cache)
+from repro.models.config import ModelConfig
+
+
+def _prefill(params, cfg, tokens, plen, capacity, *, attn_backend=None,
+             paged=False, return_hidden=False):
+    """Batch-1 prefill into a scratch row cache.
+
+    With a prefill bucket the prompt arrives right-padded; the padded
+    tail is causally invisible during the forward (positions > prompt)
+    and its cache entries are killed with trim_cache afterwards, so the
+    row is bit-identical to an exact-length prefill.  In paged mode the
+    row keeps sliding-window layers at full span: its content is spliced
+    into pool blocks whose content must depend only on the prompt
+    prefix, not on what survived a window-capped ring."""
+    row_cache = init_cache(cfg, 1, capacity, sliding_full_span=paged)
+    out = forward(params, cfg, tokens, cache=row_cache, moe_exact=True,
+                  return_hidden=return_hidden, attn_backend=attn_backend)
+    logits, row_cache = out[0], out[1]
+    first = jnp.argmax(logits[0, plen - 1], axis=-1)
+    if tokens.shape[1] != plen:
+        row_cache = trim_cache(cfg, row_cache,
+                               jnp.full((1,), plen, jnp.int32))
+    if return_hidden:
+        return row_cache, first, out[4]
+    return row_cache, first, None
+
+
+def _maybe_release(cache, slot):
+    """Paged pools must clear a retired slot's block-table row (a freed
+    block may be re-allocated immediately; the retired slot keeps
+    stepping masked until re-admission, and a stale table row would let
+    its dead writes land in blocks now owned by another sequence).  Ring
+    caches need nothing: the row is overwritten wholesale on admit."""
+    return release_slot(cache, slot) if is_paged_cache(cache) else cache
+
+
+class DecodeStrategy:
+    """Interface + shared geometry bookkeeping (see module docstring)."""
+
+    name = "base"
+    overshoot = 0            # speculative commit past the budget (m/gamma)
+    supports_sampling = True  # per-request temperature / top-k / top-p
+    batch1 = False           # host-side batch-1 method (spec-decode)
+
+    def bind(self, batch_size: int, capacity: int, *, kv: str = "ring",
+             block_size: int = 16, num_blocks: Optional[int] = None,
+             pool: bool = False):
+        self.batch_size, self.capacity = batch_size, capacity
+        self.kv, self.block_size, self.num_blocks = kv, block_size, \
+            num_blocks
+        if pool:
+            self._init_pool()
+
+    def _pool_kv_cache(self):
+        if self.kv == "paged":
+            return init_cache(self.cfg, self.batch_size, self.capacity,
+                              paged=True, block_size=self.block_size,
+                              num_blocks=self.num_blocks)
+        return init_cache(self.cfg, self.batch_size, self.capacity)
+
+    # hooks ------------------------------------------------------------
+    def _init_pool(self):
+        raise NotImplementedError
+
+    def begin_batch(self, tokens):
+        raise NotImplementedError
+
+    def prefill_request(self, tokens, plen):
+        raise NotImplementedError
+
+    def admit(self, slot, row, write_row):
+        raise NotImplementedError
+
+    def decode(self, active, keys, temps, top_k, top_p):
+        raise NotImplementedError
+
+    def release(self, slot):
+        pass
+
+    def pool_cache(self):
+        return None
+
+
+class VanillaStrategy(DecodeStrategy):
+    """Plain autoregressive decoding (1 token / forward pass)."""
+
+    name = "vanilla"
+
+    def __init__(self, params, cfg: ModelConfig, *, attn_backend=None):
+        self.params, self.cfg = params, cfg
+        self.attn_backend = attn_backend
+        # two compiled programs: greedy-only (argmax, the default and the
+        # exact-output mode) and per-row sampled; an all-greedy workload
+        # never traces the sampled one (trace_counts asserts it)
+        self.trace_counts = {"greedy": 0, "sampled": 0}
+
+        def _greedy_impl(cache, tok, active):
+            self.trace_counts["greedy"] += 1     # runs at trace time only
+            return vanilla_decode_step(self.params, self.cfg, cache, tok,
+                                       active=active,
+                                       attn_backend=self.attn_backend)
+
+        def _sampled_impl(cache, tok, keys, active, temps, tks, tps):
+            self.trace_counts["sampled"] += 1
+            return vanilla_decode_step(self.params, self.cfg, cache, tok,
+                                       temperature=temps, key=keys,
+                                       active=active, top_k=tks,
+                                       top_p=tps,
+                                       attn_backend=self.attn_backend)
+
+        self._step_greedy = jax.jit(_greedy_impl)
+        self._step = jax.jit(_sampled_impl)
+
+    def _first0(self):
+        if self.cfg.modality == "audio":
+            return jnp.zeros((self.batch_size, self.cfg.n_codebooks),
+                             jnp.int32)
+        return jnp.zeros((self.batch_size,), jnp.int32)
+
+    def _init_pool(self):
+        self.cache = self._pool_kv_cache()
+        self.tokens = self._first0()
+
+    def begin_batch(self, tokens):
+        B = tokens.shape[0]
+        cache = init_cache(self.cfg, B, self.capacity)
+        logits, cache, _, _ = forward(self.params, self.cfg, tokens,
+                                      cache=cache, moe_exact=True,
+                                      attn_backend=self.attn_backend)
+        self.cache = cache
+        self.tokens = jnp.argmax(logits[:, -1], axis=-1)
+        return np.asarray(self.tokens), 1
+
+    def prefill_request(self, tokens, plen):
+        row_cache, first, _ = _prefill(self.params, self.cfg, tokens, plen,
+                                       self.capacity,
+                                       attn_backend=self.attn_backend,
+                                       paged=self.kv == "paged")
+        return (row_cache, first), first, 1
+
+    def admit(self, slot, row, write_row):
+        row_cache, first = row
+        self.cache = write_row(self.cache, row_cache)
+        self.tokens = self.tokens.at[slot].set(first)
+
+    def release(self, slot):
+        self.cache = _maybe_release(self.cache, slot)
+
+    def pool_cache(self):
+        return self.cache
+
+    def decode(self, active, keys, temps, top_k, top_p):
+        if temps is None:
+            self.cache, self.tokens, _ = self._step_greedy(
+                self.cache, self.tokens, jnp.asarray(active))
+        else:
+            self.cache, self.tokens, _ = self._step(
+                self.cache, self.tokens, keys, jnp.asarray(active), temps,
+                top_k, top_p)
+        nxt = np.asarray(self.tokens)
+        return [[nxt[i]] if active[i] else [] for i in
+                range(len(active))], 1
+
+
+class PPDStrategy(DecodeStrategy):
+    """The paper's parallel-prompt guess-and-verify decoding (tree mode
+    for attention archs, chain mode + commit forward for SSM/RG-LRU)."""
+
+    name = "ppd"
+
+    def __init__(self, params, ppd_params, cfg: ModelConfig, *, m=3,
+                 n_ept=1, tree_states=None, attn_backend=None):
+        self.params, self.ppd, self.cfg = params, ppd_params, cfg
+        self.m, self.n_ept = m, n_ept
+        self.attn_backend = attn_backend
+        self.overshoot = m      # final step may commit up to m extra
+        if tree_states is None:
+            tree_states = ([default_chain_spec(max(k, 1), m)
+                            for k in range(m + 1)] if is_chain_arch(cfg)
+                           else mk_default_tree(m))
+        self.bufs = device_buffers(tree_states, m, n_ept)
+        # greedy-only vs per-row-sampled compiled steps (see module doc);
+        # trace_counts asserts all-greedy workloads never pay for the
+        # sampled program (double verify + top-k/top-p filters)
+        self.trace_counts = {"greedy": 0, "sampled": 0}
+
+        def _greedy_impl(st, active):
+            self.trace_counts["greedy"] += 1     # runs at trace time only
+            return ppd_decode_step(
+                self.params, self.ppd, self.cfg, self.bufs, st, m=self.m,
+                n_ept=self.n_ept, active=active,
+                attn_backend=self.attn_backend)
+
+        def _sampled_impl(st, keys, active, temps, tks, tps):
+            self.trace_counts["sampled"] += 1
+            return ppd_decode_step(
+                self.params, self.ppd, self.cfg, self.bufs, st, m=self.m,
+                n_ept=self.n_ept, temperature=temps, key=keys,
+                active=active, top_k=tks, top_p=tps,
+                attn_backend=self.attn_backend)
+
+        self._step_greedy = jax.jit(_greedy_impl)
+        self._step = jax.jit(_sampled_impl)
+
+    def _init_state(self, cache, first):
+        self.state = init_ppd_state(self.cfg, cache, first, self.m,
+                                    self.n_ept,
+                                    kmax=self.bufs.get("_kmax", 10))
+
+    def _init_pool(self):
+        if self.cfg.modality == "audio":
+            first = jnp.zeros((self.batch_size, self.cfg.n_codebooks),
+                              jnp.int32)
+        else:
+            first = jnp.zeros((self.batch_size,), jnp.int32)
+        self._init_state(self._pool_kv_cache(), first)
+
+    def begin_batch(self, tokens):
+        B = tokens.shape[0]
+        cache = init_cache(self.cfg, B, self.capacity)
+        logits, cache, _, _ = forward(self.params, self.cfg, tokens,
+                                      cache=cache, moe_exact=True,
+                                      attn_backend=self.attn_backend)
+        first = jnp.argmax(logits[:, -1], axis=-1)
+        self._init_state(cache, first)
+        return np.asarray(first), 1
+
+    def prefill_request(self, tokens, plen):
+        row_cache, first, _ = _prefill(self.params, self.cfg, tokens, plen,
+                                       self.capacity,
+                                       attn_backend=self.attn_backend,
+                                       paged=self.kv == "paged")
+        return (row_cache, first), first, 1
+
+    def admit(self, slot, row, write_row):
+        row_cache, first = row
+        st = self.state
+        cache = write_row(st.cache, row_cache)
+        # fresh root token, zero guesses, dynamic-tree state 0 — the
+        # single-row equivalent of init_ppd_state after prefill
+        self.state = st._replace(
+            cache=cache,
+            root_token=st.root_token.at[slot].set(first),
+            guess_vals=st.guess_vals.at[slot].set(0.0),
+            guess_idx=st.guess_idx.at[slot].set(0),
+            tree_state=st.tree_state.at[slot].set(0))
+
+    def release(self, slot):
+        self.state = self.state._replace(
+            cache=_maybe_release(self.state.cache, slot))
+
+    def pool_cache(self):
+        return self.state.cache
+
+    def decode(self, active, keys, temps, top_k, top_p):
+        if temps is None:
+            self.state, info = self._step_greedy(self.state,
+                                                 jnp.asarray(active))
+        else:
+            self.state, info = self._step(self.state, keys,
+                                          jnp.asarray(active), temps,
+                                          top_k, top_p)
+        ptok = np.asarray(info["accepted_path_tokens"])
+        bonus = np.asarray(self.state.root_token)
+        out = []
+        for i, live in enumerate(active):
+            if not live:
+                out.append([])
+                continue
+            toks = [t for t in ptok[i][1:] if np.all(t >= 0)]  # skip root
+            toks.append(bonus[i])
+            out.append(toks)
+        # chain archs run a second (commit) forward per step
+        return out, 2 if is_chain_arch(self.cfg) else 1
+
+
+class MedusaStrategy(DecodeStrategy):
+    """Decoding-head baseline [Cai et al. 2024]: tree decode with
+    head-generated guesses over the same verification machinery.  Greedy
+    only (typical acceptance of head guesses is out of scope)."""
+
+    name = "medusa"
+    supports_sampling = False
+
+    def __init__(self, params, heads, cfg: ModelConfig, *, m=3,
+                 tree_states=None, attn_backend=None):
+        from repro.core.tree import TreeSpec
+        from repro.models.medusa import medusa_states, medusa_decode_step
+        self.params, self.heads, self.cfg = params, heads, cfg
+        self.m = m
+        self.attn_backend = attn_backend
+        self.overshoot = m      # final step may commit up to m extra
+        if tree_states is None:
+            tree_states = medusa_states(m)
+        else:
+            # Medusa has no trained prompt tokens: a tuned PPD family is
+            # reused candidate-topology-only (chains stripped).
+            tree_states = [TreeSpec(candidates=s.candidates,
+                                    prompt_chains={})
+                           for s in tree_states]
+        self.bufs = device_buffers(tree_states, m)
+        self._fn = medusa_decode_step
+        self._step = jax.jit(lambda st, active: self._fn(
+            self.params, self.heads, self.cfg, self.bufs, st, m=self.m,
+            active=active, attn_backend=self.attn_backend))
+
+    def _kmax(self):
+        return self.bufs.get("_kmax", 10)
+
+    def _guesses(self, hidden_last):
+        from repro.models.medusa import medusa_heads
+        g = medusa_heads(self.heads, hidden_last)            # [...,m,V]
+        gv, gi = jax.lax.top_k(g, self._kmax())
+        return gv.astype(jnp.float32), gi
+
+    def _init_pool(self):
+        first = jnp.zeros((self.batch_size,), jnp.int32)
+        self.state = init_ppd_state(self.cfg, self._pool_kv_cache(), first,
+                                    self.m, kmax=self._kmax())
+
+    def begin_batch(self, tokens):
+        B = tokens.shape[0]
+        cache = init_cache(self.cfg, B, self.capacity)
+        logits, cache, _, _, hidden = forward(
+            self.params, self.cfg, tokens, cache=cache, moe_exact=True,
+            return_hidden=True, attn_backend=self.attn_backend)
+        first = jnp.argmax(logits[:, -1], axis=-1)
+        st = init_ppd_state(self.cfg, cache, first, self.m,
+                            kmax=self._kmax())
+        gv, gi = self._guesses(hidden[:, -1])
+        self.state = st._replace(guess_vals=gv, guess_idx=gi)
+        return np.asarray(first), 1
+
+    def prefill_request(self, tokens, plen):
+        row_cache, first, hidden = _prefill(
+            self.params, self.cfg, tokens, plen, self.capacity,
+            attn_backend=self.attn_backend, paged=self.kv == "paged",
+            return_hidden=True)
+        gv, gi = self._guesses(hidden[:1, plen - 1])      # [1,m,kmax]
+        return (row_cache, first, gv[0], gi[0]), first, 1
+
+    def admit(self, slot, row, write_row):
+        row_cache, first, gv, gi = row
+        st = self.state
+        self.state = st._replace(
+            cache=write_row(st.cache, row_cache),
+            root_token=st.root_token.at[slot].set(first),
+            guess_vals=st.guess_vals.at[slot].set(gv),
+            guess_idx=st.guess_idx.at[slot].set(gi),
+            tree_state=st.tree_state.at[slot].set(0))
+
+    def release(self, slot):
+        self.state = self.state._replace(
+            cache=_maybe_release(self.state.cache, slot))
+
+    def pool_cache(self):
+        return self.state.cache
+
+    def decode(self, active, keys, temps, top_k, top_p):
+        self.state, info = self._step(self.state, jnp.asarray(active))
+        ptok = np.asarray(info["accepted_path_tokens"])
+        bonus = np.asarray(self.state.root_token)
+        out = []
+        for i, live in enumerate(active):
+            if not live:
+                out.append([])
+                continue
+            toks = [t for t in ptok[i][1:] if t >= 0]
+            toks.append(bonus[i])
+            out.append(toks)
+        return out, 1
+
+
+class SpecDecodeStrategy(DecodeStrategy):
+    """Classic speculative decoding with an optional PPD-accelerated
+    draft (paper §5.3) behind the same strategy interface.
+
+    The underlying machinery is batch-1 (the paper's setting): device
+    state is one (target cache, draft cache, root) triple per slot, and
+    a decode step runs one propose→verify→catch-up cycle per active slot
+    host-side.  Greedy only; ring KV only (the two per-slot caches are
+    self-managed, not pool-resident)."""
+
+    name = "ppd+spec"
+    supports_sampling = False
+    batch1 = True
+
+    def __init__(self, params, cfg: ModelConfig, draft_params,
+                 draft_cfg: ModelConfig, *, gamma=4, draft_ppd=None, m=3,
+                 tree_states=None, capacity=512, attn_backend=None):
+        from .spec_decode import SpeculativeDecoder, SpecStats
+        if attn_backend not in (None, "ref"):
+            raise ValueError("spec-decode supports only the ref attention "
+                             "backend (its verify forward is a prefill-"
+                             "shaped stage, not a decode step)")
+        self.cfg = cfg
+        self.gamma = gamma
+        self.overshoot = gamma  # last verify can commit gamma extra
+        self.sd = SpeculativeDecoder(params, cfg, draft_params, draft_cfg,
+                                     gamma=gamma, ppd_params=draft_ppd,
+                                     m=m, tree_states=tree_states,
+                                     capacity=capacity)
+        self.stats = SpecStats()
+        self._slots = {}
+
+    def bind(self, batch_size, capacity, *, kv="ring", block_size=16,
+             num_blocks=None, pool=False):
+        if kv != "ring":
+            raise ValueError("decode='ppd+spec' requires kv='ring': the "
+                             "per-slot target/draft caches are "
+                             "self-managed rings, not pool blocks")
+        super().bind(batch_size, capacity, kv=kv, block_size=block_size,
+                     num_blocks=num_blocks, pool=pool)
+        self.sd.capacity = capacity
+
+    def _init_pool(self):
+        self._slots = {}
+
+    def begin_batch(self, tokens):
+        assert tokens.shape[0] == 1, "spec-decode packs batch-1 batches"
+        state, first = self.sd.begin(tokens[0])
+        self._slots = {0: state}
+        return np.asarray(first)[None], 2
+
+    def prefill_request(self, tokens, plen):
+        state, first = self.sd.begin(tokens[0, :plen])
+        return state, first, 2
+
+    def admit(self, slot, row, write_row):
+        self._slots[slot] = row
+
+    def release(self, slot):
+        self._slots.pop(slot, None)
+
+    def decode(self, active, keys, temps, top_k, top_p):
+        out, cost = [], 0
+        for i, live in enumerate(active):
+            if not live or i not in self._slots:
+                out.append([])
+                continue
+            self._slots[i], accepted, c = self.sd.propose_verify(
+                self._slots[i], self.stats)
+            out.append([np.int32(t) for t in accepted])
+            cost += c
+        return out, cost

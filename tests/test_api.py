@@ -1,0 +1,400 @@
+"""Unified serving API tests: EngineConfig round-trips, the 8-combo
+decode x scheduler registry, streaming TokenEvents, per-request
+SamplingParams (mixed greedy + sampled batches), stop-token early exit,
+and the deprecation shims.
+"""
+import argparse
+import math
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.serving as serving
+from repro.configs import get_smoke_config
+from repro.core import init_prompt_params
+from repro.models import init_params
+from repro.serving import (EngineConfig, LLMEngine, RequestOutput,
+                           SamplingParams)
+from repro.serving.api import _WARNED_GLOBAL_TEMPERATURE
+from repro.serving.engine import Request, StaticEngine
+from repro.serving.scheduler import ContinuousEngine
+
+CFG = get_smoke_config("granite-3-2b")
+N = 8                                    # tokens per request in this file
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    return params, ppd
+
+
+@pytest.fixture(scope="module")
+def extras(model):
+    params, _ = model
+    from repro.models.medusa import init_medusa
+    heads = init_medusa(CFG, jax.random.PRNGKey(2), m=3)
+    dcfg = CFG.replace(name="draft", n_layers=1, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128)
+    dparams = init_params(dcfg, jax.random.PRNGKey(5))
+    return heads, dparams, dcfg
+
+
+def _prompts(n, plen=10):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, CFG.vocab_size, size=plen) for _ in range(n)]
+
+
+def _llm(model, extras=None, clock=None, **cfg_kw):
+    params, ppd = model
+    cfg_kw.setdefault("capacity", 128)
+    cfg_kw.setdefault("batch_size", 2)
+    kw = dict(params=params, cfg=CFG, ppd_params=ppd)
+    if extras is not None:
+        heads, dparams, dcfg = extras
+        kw.update(medusa_heads=heads, draft_params=dparams,
+                  draft_cfg=dcfg, draft_ppd=None)
+    return LLMEngine(EngineConfig(**cfg_kw), clock=clock, **kw)
+
+
+# ------------------------------------------------------------ EngineConfig
+def test_config_json_roundtrip():
+    c = EngineConfig(decode="ppd", scheduler="continuous", kv="paged",
+                     block_size=8, num_blocks=32, capacity=512,
+                     batch_size=8, admission="sjf", attn_backend="pallas",
+                     tree="auto", tree_analytic=True, prefill_bucket=16)
+    assert EngineConfig.from_json(c.to_json()) == c
+    with pytest.raises(ValueError, match="unknown fields"):
+        EngineConfig.from_json('{"decoder": "ppd"}')
+
+
+def test_config_from_cli_args_roundtrip():
+    """launch/serve.py's flag set maps onto the dataclass: --batch,
+    --continuous, --num-blocks 0 and empty --tree-cache all normalize."""
+    ns = argparse.Namespace(
+        batch=8, continuous=True, kv="paged", block_size=8, num_blocks=0,
+        attn_backend="ref", tree="default", tree_cache="",
+        tree_analytic=False, admission="sjf", prefill_bucket=4,
+        temperature=0.0, m=3)
+    c = EngineConfig.from_cli_args(ns, capacity=256)
+    assert (c.batch_size, c.scheduler, c.kv) == (8, "continuous", "paged")
+    assert c.num_blocks is None and c.tree_cache is None
+    assert c.capacity == 256 and c.admission == "sjf"
+    assert EngineConfig.from_json(c.to_json()) == c
+    ns.continuous = False
+    ns.kv = "ring"
+    assert EngineConfig.from_cli_args(ns).scheduler == "static"
+
+
+def test_config_validation_rejects_bad_combos():
+    with pytest.raises(ValueError, match="decode"):
+        EngineConfig(decode="turbo").validate()
+    with pytest.raises(ValueError, match="scheduler"):
+        EngineConfig(scheduler="round-robin").validate()
+    with pytest.raises(ValueError, match="continuous"):
+        EngineConfig(kv="paged", scheduler="static").validate()
+    with pytest.raises(ValueError, match="ring"):
+        EngineConfig(decode="ppd+spec", kv="paged",
+                     scheduler="continuous").validate()
+    with pytest.raises(ValueError, match="tree"):
+        EngineConfig(tree="fancy").validate()
+    with pytest.raises(ValueError, match="batch_size"):
+        EngineConfig(batch_size=0).validate()
+    with pytest.raises(ValueError, match="watermark"):
+        EngineConfig(watermark=1.0).validate()
+
+
+def test_config_global_temperature_deprecated():
+    _WARNED_GLOBAL_TEMPERATURE[0] = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        EngineConfig(temperature=0.5).validate()
+        EngineConfig(temperature=0.5).validate()
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1                 # once per process, not per call
+
+
+# ---------------------------------------------------------- 8-combo matrix
+def test_registry_reaches_all_8_combos(model, extras):
+    """One LLMEngine + EngineConfig covers every decode x scheduler pair,
+    composed from the registries — the engine object is always one of
+    the two scheduler classes, never a per-pair subclass."""
+    prompts = _prompts(2)
+    sp = SamplingParams(max_tokens=N)
+    ref, med = None, None
+    for decode in serving.DECODE_STRATEGIES:
+        for sched in serving.SCHEDULERS:
+            llm = _llm(model, extras, decode=decode, scheduler=sched)
+            assert type(llm.engine) is (
+                StaticEngine if sched == "static" else ContinuousEngine)
+            assert llm.strategy.name == decode
+            outs = llm.generate(prompts, sp)
+            assert [o.request_id for o in outs] == [0, 1]
+            toks = [o.token_ids.tolist() for o in outs]
+            assert all(len(t) == N for t in toks)
+            assert all(o.finish_reason == "length" for o in outs)
+            if decode == "medusa":
+                # untrained heads decode their own greedy stream, but the
+                # two schedulers must agree with each other
+                med = med or toks
+                assert toks == med
+            else:
+                # vanilla / ppd / ppd+spec are exact-output methods
+                ref = ref or toks
+                assert toks == ref, (decode, sched)
+
+
+# ------------------------------------------------------------- streaming
+class _Tick:
+    """Deterministic fake clock: every read advances 1s."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+def test_stream_equals_generate_and_ttft(model, scheduler):
+    """The acceptance criterion: a mixed per-request SamplingParams batch
+    (greedy + temperature + top-p in one continuous batch) streams
+    per-token events whose concatenation equals generate() output; event
+    indices are monotone per request and the first event's timestamp is
+    the request's TTFT (exact under a fake clock)."""
+    prompts = _prompts(3)
+    sps = [SamplingParams(max_tokens=N),
+           SamplingParams(max_tokens=N, temperature=0.8, seed=11),
+           SamplingParams(max_tokens=N, temperature=0.8, top_p=0.9,
+                          seed=5)]
+    llm = _llm(model, decode="ppd", scheduler=scheduler, batch_size=3,
+               clock=_Tick())
+    uids = [llm.add_request(p, sp) for p, sp in zip(prompts, sps)]
+    events = []
+    while llm.has_unfinished:
+        events.extend(llm.step())
+    results = {r.uid: r for r in llm.drain_results()}
+
+    llm2 = _llm(model, decode="ppd", scheduler=scheduler, batch_size=3)
+    outs = llm2.generate(prompts, sps)
+
+    for u, out in zip(uids, outs):
+        evs = [e for e in events if e.uid == u]
+        toks = [int(e.token) for e in evs if e.token is not None]
+        # stream == generate, token for token (incl. the sampled rows)
+        assert toks == out.token_ids.tolist(), u
+        # ordering: indices 0..n then the finish marker at index n
+        assert [e.index for e in evs] == list(range(len(evs)))
+        assert all(a.time_s <= b.time_s for a, b in zip(evs, evs[1:]))
+        assert evs[-1].finished and evs[-1].token is None
+        assert evs[-1].finish_reason == "length"
+        # TTFT is the first event (arrival_s = 0), exactly, on the fake
+        # clock
+        assert evs[0].time_s == pytest.approx(results[u].ttft_s)
+    # the sampled rows actually sampled (differ from the greedy row's
+    # stream would be prompt-dependent; instead check greedy row matches
+    # an isolated greedy run — per-request params, not engine-global)
+    llm3 = _llm(model, decode="ppd", scheduler=scheduler, batch_size=3)
+    solo = llm3.generate(prompts[:1], SamplingParams(max_tokens=N))
+    assert outs[0].token_ids.tolist() == solo[0].token_ids.tolist()
+
+
+def test_sampled_outputs_reproducible(model):
+    """Per-request seed makes sampling deterministic across runs and
+    independent of batch composition."""
+    prompts = _prompts(2)
+    sp = SamplingParams(max_tokens=N, temperature=1.0, seed=42)
+    a = _llm(model, decode="vanilla", scheduler="continuous").generate(
+        prompts[:1], sp)[0].token_ids.tolist()
+    # same request co-batched with a greedy neighbour: identical output
+    b = _llm(model, decode="vanilla", scheduler="continuous").generate(
+        prompts, [sp, SamplingParams(max_tokens=N)])[0].token_ids.tolist()
+    assert a == b
+
+
+# ------------------------------------------- per-request temperature bug
+def test_per_request_temperature_wins(model):
+    """Regression (satellite 1): Request.temperature was defined but
+    ignored — engines applied their global temperature to every slot.
+    A greedy request in a sampled continuous batch must stay greedy."""
+    params, ppd = model
+    from repro.serving.scheduler import ContinuousPPDEngine
+    prompts = _prompts(2)
+    greedy_ref = _llm(model, decode="ppd", scheduler="continuous")\
+        .generate(prompts[:1], SamplingParams(max_tokens=N))[0]
+    eng = ContinuousPPDEngine(params, ppd, CFG, m=3, batch_size=2,
+                              capacity=128, temperature=0.9)
+    eng.add_request(Request(uid=0, prompt=prompts[0], max_new_tokens=N,
+                            temperature=0.0))     # explicit greedy
+    eng.add_request(Request(uid=1, prompt=prompts[1], max_new_tokens=N))
+    res = {r.uid: r.tokens.tolist() for r in eng.run()}
+    assert res[0] == greedy_ref.token_ids.tolist()   # greedy row exact
+    # the engine-global default still applies to the unspecified request
+    van = _llm(model, decode="ppd", scheduler="continuous").generate(
+        prompts[1:], SamplingParams(max_tokens=N))[0]
+    assert res[1] != van.token_ids.tolist()
+
+
+# ------------------------------------------------------------ stop tokens
+@pytest.mark.parametrize("scheduler,kv", [("static", "ring"),
+                                          ("continuous", "ring"),
+                                          ("continuous", "paged")])
+def test_stop_token_early_exit(model, scheduler, kv):
+    """stop_token_ids end generation the moment the token appears (it is
+    excluded from the output); continuous slots — and paged KV blocks —
+    are freed immediately."""
+    prompts = _prompts(1)
+    full = _llm(model, decode="ppd", scheduler="continuous").generate(
+        prompts, SamplingParams(max_tokens=N))[0].token_ids.tolist()
+    cut = 4
+    llm = _llm(model, decode="ppd", scheduler=scheduler, kv=kv,
+               block_size=8)
+    out = llm.generate(prompts, SamplingParams(
+        max_tokens=N, stop_token_ids=(full[cut],)))[0]
+    assert out.finish_reason == "stop"
+    assert out.token_ids.tolist() == full[:cut]
+    if kv == "paged":
+        assert llm.engine.block_mgr.used_blocks == 0
+    if scheduler == "continuous":
+        assert not any(s.busy for s in llm.engine.slots)
+
+
+def test_stop_token_frees_slot_for_queued_request(model):
+    """An early-stopped slot is reused: with 1 slot and 2 requests, the
+    second request runs to completion after the first stops."""
+    prompts = _prompts(2)
+    full = [_llm(model, decode="ppd", scheduler="continuous",
+                 batch_size=1).generate([p], SamplingParams(
+                     max_tokens=N))[0].token_ids.tolist()
+            for p in prompts]
+    llm = _llm(model, decode="ppd", scheduler="continuous", batch_size=1)
+    outs = llm.generate(prompts, [
+        SamplingParams(max_tokens=N, stop_token_ids=(full[0][2],)),
+        SamplingParams(max_tokens=N)])
+    assert outs[0].finish_reason == "stop"
+    assert outs[0].token_ids.tolist() == full[0][:2]
+    assert outs[1].finish_reason == "length"
+    assert outs[1].token_ids.tolist() == full[1]
+    assert llm.engine.stats["admitted"] == 2
+
+
+def test_greedy_workload_never_traces_sampled_step(model):
+    """Regression: all-greedy batches (the default, exact-output mode)
+    must run the greedy-only compiled step — not the sampled program
+    (double verify + full-vocab top-k/top-p filters) with its results
+    discarded.  The sampled program is traced only once a sampled
+    request actually shares a step."""
+    for sched in ("static", "continuous"):
+        llm = _llm(model, decode="ppd", scheduler=sched)
+        llm.generate(_prompts(2), SamplingParams(max_tokens=N))
+        assert llm.strategy.trace_counts["greedy"] >= 1
+        assert llm.strategy.trace_counts["sampled"] == 0, sched
+    # a mixed batch compiles the sampled program (once)
+    llm = _llm(model, decode="vanilla", scheduler="continuous")
+    llm.generate(_prompts(2), [
+        SamplingParams(max_tokens=N),
+        SamplingParams(max_tokens=N, temperature=0.8)])
+    assert llm.strategy.trace_counts["sampled"] == 1
+
+
+def test_run_resumes_streamed_requests(model):
+    """run() must not restart the clock or discard undrained Results when
+    step-driven requests are in flight: TTFT/wall stay on one timeline
+    and every request's Result survives."""
+    llm = _llm(model, decode="vanilla", scheduler="continuous",
+               batch_size=1, clock=_Tick())
+    llm.add_request(_prompts(1)[0], SamplingParams(max_tokens=4))
+    llm.add_request(_prompts(2)[1], SamplingParams(max_tokens=4))
+    first = []
+    while len(first) < 2:                   # step past request 0's TTFT
+        first.extend(llm.step())
+    res = llm.engine.run()                  # finish the rest inline
+    assert sorted(r.uid for r in res) == [0, 1]
+    for r in res:
+        assert r.ttft_s >= 0 and r.wall_s > 0 and r.tpot_s >= 0
+    # request 0's first event was stamped on the same timeline run() kept
+    ev0 = [e for e in first if e.uid == 0 and e.token is not None][0]
+    r0 = [r for r in res if r.uid == 0][0]
+    assert ev0.time_s == pytest.approx(r0.ttft_s)
+
+
+# ------------------------------------------------------------ deprecation
+def test_deprecated_names_warn_once(model):
+    params, ppd = model
+    for name in ("VanillaEngine", "ContinuousPPDEngine"):
+        serving._WARNED.discard(name)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        e1 = serving.VanillaEngine(params, CFG, batch_size=1, capacity=64)
+        e2 = serving.VanillaEngine(params, CFG, batch_size=1, capacity=64)
+        c1 = serving.ContinuousPPDEngine(params, ppd, CFG, m=3,
+                                         batch_size=1, capacity=64)
+    msgs = [str(x.message) for x in w
+            if issubclass(x.category, DeprecationWarning)]
+    assert sum("VanillaEngine" in m for m in msgs) == 1   # exactly once
+    assert sum("ContinuousPPDEngine" in m for m in msgs) == 1
+    # the shims build the real composed engines
+    assert type(e1) is type(e2) is StaticEngine
+    assert type(c1) is ContinuousEngine
+
+
+def test_greedy_only_strategies_reject_sampling(model, extras):
+    llm = _llm(model, extras, decode="medusa", scheduler="continuous")
+    with pytest.raises(ValueError, match="greedy-only"):
+        llm.add_request(_prompts(1)[0],
+                        SamplingParams(max_tokens=N, temperature=0.5))
+
+
+def test_generate_guards_in_flight_streaming(model):
+    llm = _llm(model, decode="vanilla", scheduler="continuous")
+    llm.add_request(_prompts(1)[0], SamplingParams(max_tokens=2))
+    with pytest.raises(RuntimeError, match="in flight"):
+        llm.generate(_prompts(1), SamplingParams(max_tokens=2))
+    while llm.has_unfinished:
+        llm.step()
+    assert len(llm.drain_results()) == 1
+
+
+def test_generate_preserves_undrained_streamed_results(model):
+    """A generate() after a finished-but-undrained streamed session must
+    not swallow the streamed requests' Results — they stay retrievable
+    via drain_results()."""
+    llm = _llm(model, decode="vanilla", scheduler="continuous")
+    uid = llm.add_request(_prompts(1)[0], SamplingParams(max_tokens=2))
+    while llm.has_unfinished:
+        llm.step()
+    outs = llm.generate(_prompts(2), SamplingParams(max_tokens=2))
+    assert len(outs) == 2
+    stashed = llm.drain_results()
+    assert [r.uid for r in stashed] == [uid]
+    assert len(stashed[0].tokens) == 2
+
+
+def test_spec_rejects_pallas_backend(model, extras):
+    """attn_backend='pallas' must not be silently downgraded for
+    spec-decode (its verify forward is prefill-shaped)."""
+    with pytest.raises(ValueError, match="ref"):
+        _llm(model, extras, decode="ppd+spec", attn_backend="pallas")
+
+
+def test_tree_file_resolves_for_medusa_and_spec(model, extras, tmp_path):
+    """tree='file:<path>' applies to every tree-decoding strategy:
+    medusa reuses the family candidate-topology-only, and ppd+spec loads
+    it for the draft (a vanilla draft has no tree and reports why)."""
+    from repro.core import mk_default_tree
+    from repro.core.tree_tuner import save_tree_states
+    path = str(tmp_path / "family.json")
+    save_tree_states(path, mk_default_tree(3), meta={"src": "test"})
+    llm = _llm(model, extras, decode="medusa", tree=f"file:{path}")
+    assert llm.tree_report is not None and llm.tree_report.get("tuned")
+    out = llm.generate(_prompts(1), SamplingParams(max_tokens=4))[0]
+    assert len(out.token_ids) == 4
+    # vanilla-draft spec: no PPD tree to load — reported, not crashed
+    spec = _llm(model, extras, decode="ppd+spec", tree=f"file:{path}")
+    assert spec.tree_report == {"tuned": False,
+                                "reason": "vanilla draft — no PPD tree"}

@@ -17,8 +17,10 @@ from repro.models.paged_cache import (copy_blocks, gather_kv, gather_pos,
                                       is_paged_cache, paged_block_bytes,
                                       ring_cache_bytes, scatter_paged,
                                       set_block_table_row)
-from repro.serving import (BlockManager, ContinuousPPDEngine,
-                           ContinuousVanillaEngine, Request)
+from repro.serving import BlockManager
+from repro.serving.engine import Request
+from repro.serving.scheduler import (ContinuousPPDEngine,
+                                     ContinuousVanillaEngine)
 from repro.serving.block_manager import blocks_for
 
 CFG = get_smoke_config("granite-3-2b")

@@ -1,0 +1,139 @@
+"""Sampling-primitive tests: top-k / top-p filters in core.verify and
+per-request sampling resolution in serving.sampling.
+
+Covers the satellite acceptance list: top_k=1 == greedy, top_p=1.0 ==
+plain temperature sampling (bit-identical), distribution-mass property
+(samples always land in the nucleus / top-k set), jit shape-stability
+(per-row knob values never retrigger a trace), and SamplingParams
+validation + precedence.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.verify import apply_top_k, apply_top_p, sample_token
+from repro.serving.engine import Request
+from repro.serving.sampling import SamplingParams, resolve_sampling
+
+
+@pytest.fixture(scope="module")
+def logits():
+    return jax.random.normal(jax.random.PRNGKey(1), (4, 64)) * 2.0
+
+
+def test_top_k_1_is_greedy(logits):
+    """k=1 leaves only the argmax: sampling must reproduce greedy."""
+    for seed in range(5):
+        s = sample_token(jax.random.PRNGKey(seed), logits, top_k=1)
+        np.testing.assert_array_equal(np.asarray(s),
+                                      np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_top_p_1_is_plain_sampling(logits):
+    """p=1.0 is an explicit pass-through: with the same key the sample is
+    bit-identical to unfiltered categorical sampling."""
+    for seed in range(5):
+        key = jax.random.PRNGKey(seed)
+        a = sample_token(key, logits)
+        b = sample_token(key, logits, top_p=1.0)
+        c = sample_token(key, logits, top_k=0)     # 0 = disabled
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_top_k_mask_structure(logits):
+    """Per-row k: exactly k finite entries survive, and they are the k
+    largest."""
+    k = jnp.asarray([0, 1, 5, 64])
+    masked = np.asarray(apply_top_k(logits, k))
+    lg = np.asarray(logits)
+    assert np.isfinite(masked[0]).all()                 # 0 = disabled
+    assert np.isfinite(masked[3]).all()                 # k = V keeps all
+    for row, kk in ((1, 1), (2, 5)):
+        keep = np.where(np.isfinite(masked[row]))[0]
+        assert len(keep) == kk
+        topk = set(np.argsort(-lg[row])[:kk])
+        assert set(keep) == topk
+
+
+def test_top_p_nucleus_membership(logits):
+    """The kept set is exactly the minimal prefix of the sorted
+    distribution reaching mass p (argmax always kept)."""
+    p = 0.5
+    masked = np.asarray(apply_top_p(logits, p))
+    probs = np.asarray(jax.nn.softmax(logits, -1))
+    for r in range(probs.shape[0]):
+        cum, keep = 0.0, set()
+        for i in np.argsort(-probs[r]):
+            if cum < p:
+                keep.add(int(i))
+            cum += probs[r][i]
+        got = set(np.where(np.isfinite(masked[r]))[0])
+        assert got == keep
+        assert int(np.argmax(probs[r])) in got
+
+
+def test_sampled_tokens_stay_in_support(logits):
+    """Distribution-mass property: every drawn token lies inside the
+    top-k / nucleus support, for per-row mixed knob values."""
+    tk = jnp.asarray([3, 0, 8, 1])
+    tp = jnp.asarray([1.0, 0.4, 0.7, 1.0])
+    mask = np.isfinite(np.asarray(apply_top_p(apply_top_k(logits, tk),
+                                              tp)))
+    for seed in range(25):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+        toks = np.asarray(sample_token(keys, logits, top_k=tk, top_p=tp))
+        for r, t in enumerate(toks):
+            assert mask[r, t], (seed, r, t)
+
+
+def test_filters_jit_shape_stable(logits):
+    """Per-row temperature / top-k / top-p are traced values: changing
+    them must not retrigger compilation."""
+    traces = [0]
+
+    @jax.jit
+    def f(lg, t, k, p, key):
+        traces[0] += 1
+        return sample_token(key, lg / t[:, None], top_k=k, top_p=p)
+
+    key = jax.random.PRNGKey(0)
+    for i in range(3):
+        f(logits, jnp.full((4,), 0.5 + i), jnp.asarray([i, 1, 2, 3]),
+          jnp.asarray([1.0, 0.9, 0.5, 1.0]), key)
+    assert traces[0] == 1
+
+
+# ------------------------------------------------------- SamplingParams
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError, match="max_tokens"):
+        SamplingParams(max_tokens=0)
+    sp = SamplingParams(stop_token_ids=[3, np.int64(7)])
+    assert sp.stop_token_ids == (3, 7)
+    assert SamplingParams().is_greedy
+    assert not SamplingParams(temperature=0.5).is_greedy
+
+
+def test_sampling_resolution_precedence():
+    """SamplingParams > Request.temperature > engine-global default."""
+    p = np.arange(4)
+    explicit = SamplingParams(temperature=0.3, top_k=5)
+    r = Request(uid=0, prompt=p, sampling=explicit, temperature=0.9)
+    assert resolve_sampling(r, engine_temperature=0.7) is explicit
+    r = Request(uid=1, prompt=p, temperature=0.9)
+    assert resolve_sampling(r, engine_temperature=0.7).temperature == 0.9
+    # explicit per-request greedy beats a sampled engine default
+    r = Request(uid=2, prompt=p, temperature=0.0)
+    assert resolve_sampling(r, engine_temperature=0.7).temperature == 0.0
+    # unset -> engine-global (deprecated) default
+    r = Request(uid=3, prompt=p)
+    assert resolve_sampling(r, engine_temperature=0.7).temperature == 0.7

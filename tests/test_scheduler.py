@@ -13,9 +13,10 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core import init_prompt_params
 from repro.models import init_params
-from repro.serving import (ContinuousPPDEngine, ContinuousVanillaEngine,
-                           PPDEngine, Request, VanillaEngine,
-                           poisson_trace)
+from repro.serving.engine import PPDEngine, Request, VanillaEngine
+from repro.serving.scheduler import (ContinuousPPDEngine,
+                                     ContinuousVanillaEngine,
+                                     poisson_trace)
 
 CFG = get_smoke_config("granite-3-2b")
 

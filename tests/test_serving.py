@@ -152,7 +152,7 @@ def test_spec_and_pld_overflow_rejected(model):
 
 
 def test_continuous_overflow_rejected(model):
-    from repro.serving import ContinuousPPDEngine
+    from repro.serving.scheduler import ContinuousPPDEngine
     params, ppd = model
     eng = ContinuousPPDEngine(params, ppd, CFG, m=3, batch_size=2,
                               capacity=32)

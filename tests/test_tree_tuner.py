@@ -196,8 +196,8 @@ def test_chain_arch_returns_untuned_chain_family(tmp_path):
 def test_tuned_tree_greedy_equivalence(model, tmp_path):
     """Greedy outputs are tree-shape-independent: a tuned family through
     the static AND continuous PPD engines must match vanilla."""
-    from repro.serving import (ContinuousPPDEngine, PPDEngine, Request,
-                               VanillaEngine)
+    from repro.serving.engine import PPDEngine, Request, VanillaEngine
+    from repro.serving.scheduler import ContinuousPPDEngine
     params, ppd = model
     states, rep = tuned_tree_states(None, None, CFG, m=3, measure=False,
                                     cache_path=str(tmp_path / "t.json"),
