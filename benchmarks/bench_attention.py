@@ -75,8 +75,11 @@ def bench_backend(name, S, iters):
     fn = jax.jit(step)
     compiled = fn.lower(*args).compile()
     mem = compiled.memory_analysis()
+    # warmup BEFORE the baseline peak reading: the first call's compile-
+    # time scratch would otherwise pollute the peak-memory delta, and the
+    # timer must start on a quiet device
+    fn(*args).block_until_ready()
     peak0 = device_peak_bytes()
-    fn(*args).block_until_ready()                     # warmup
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

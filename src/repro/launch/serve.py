@@ -105,6 +105,12 @@ def main():
     ap.add_argument("--prefill-bucket", type=int, default=0,
                     help="round per-slot prefills up to a multiple of "
                          "this to bound recompiles (0 = exact length)")
+    ap.add_argument("--harvest-every", type=int, default=1,
+                    help="async host loop: sync device-side tokens/stop "
+                         "state to the host every K decode steps (>= 1; "
+                         "larger K = fewer blocking syncs, coarser "
+                         "streaming granularity; 0 = legacy per-step "
+                         "host harvest)")
     ap.add_argument("--mixed-lens", action="store_true",
                     help="cycle max_new_tokens through {1,2,4}x --max-new "
                          "to show the continuous-batching win")

@@ -5,6 +5,6 @@ from .config import (ATTN, FULL, MLA, RGLRU, SLIDING, SSM, LayerSpec,
 from .model import (embed_tokens, forward, init_cache, init_params,
                     mtp_logits, trim_cache, unembed, write_cache_rows)
 from .paged_cache import (copy_blocks, is_paged_cache, num_seq_blocks,
-                          paged_block_bytes, release_slot,
+                          paged_block_bytes, release_slot, release_slots,
                           ring_cache_bytes, set_block_table_row,
                           write_prefill_blocks)

@@ -164,21 +164,40 @@ def scatter_paged(entry, new_leaves: dict, positions, accept_mask=None):
 
 
 # ------------------------------------------------------- admission splice
-def write_prefill_blocks(cfg: ModelConfig, cache, row_cache, slot: int,
-                         block_ids, n_shared: int, plen: int):
-    """Splice a freshly prefilled batch-1 *ring* row cache into the pool.
+def _splice_entry(entry, row, table):
+    """Write one paged layer's full table span from a prefilled ring row.
 
-    ``block_ids`` (host ints) are the sequence's allocated pool blocks in
-    table order; the first ``n_shared`` are prefix-shared and already
-    populated (bit-identical content), so only the private tail is
-    copied.  Ring rows may be window-capped and wrapped (sliding
-    layers), so each target position is gathered from its ring slot and
-    validated against the ring's own position record.  Non-paged entries
-    (recurrent SSM / RG-LRU state) are row-copied as in
-    :func:`repro.models.model.write_cache_rows`.  Sets
-    ``length[slot] = plen``."""
-    block_ids = np.asarray(block_ids, np.int32)
-    priv = block_ids[n_shared:]
+    Every allocated table block is written (unallocated tail entries are
+    -1 and route to the OOB block id, so ``mode="drop"`` drops them).
+    Ring rows may be window-capped and wrapped (sliding layers), so each
+    target position is gathered from its ring slot and validated against
+    the ring's own position record; invalid targets (past the prompt)
+    are zeroed with pos -1."""
+    bs = entry["pos"].shape[1]
+    MB = entry["bt"].shape[1]
+    NB = entry["pos"].shape[0]
+    tpos = (jnp.arange(MB, dtype=jnp.int32)[:, None] * bs
+            + jnp.arange(bs, dtype=jnp.int32)[None, :])     # [MB, bs]
+    Cr = row["pos"].shape[1]                    # ring row capacity
+    src_slot = tpos % Cr
+    rpos = row["pos"][0, src_slot]                          # [MB, bs]
+    valid = rpos == tpos
+    ids = jnp.where(table >= 0, table, NB)      # OOB-drop unallocated
+    e = dict(entry)
+    for key in ("k", "v", "ckv", "krope"):
+        if key not in entry:
+            continue
+        src = row[key][0, src_slot]                         # [MB, bs, ...]
+        src = jnp.where(
+            valid.reshape(valid.shape + (1,) * (src.ndim - 2)),
+            src, 0.0).astype(entry[key].dtype)
+        e[key] = entry[key].at[ids].set(src, mode="drop")
+    e["pos"] = entry["pos"].at[ids].set(jnp.where(valid, tpos, -1),
+                                        mode="drop")
+    return e
+
+
+def _splice_impl(cache, row_cache, slot, table, plen):
     out = dict(cache)
     new_layers = []
     for entry, row in zip(cache["layers"], row_cache["layers"]):
@@ -187,36 +206,42 @@ def write_prefill_blocks(cfg: ModelConfig, cache, row_cache, slot: int,
                 lambda d, s: jax.lax.dynamic_update_slice_in_dim(
                     d, s.astype(d.dtype), slot, axis=0), entry, row))
             continue
-        e = dict(entry)
-        bs = entry["pos"].shape[1]
-        MB = entry["bt"].shape[1]
-        if len(priv):
-            # target positions covered by the private blocks
-            starts = jnp.asarray(np.arange(n_shared, len(block_ids),
-                                           dtype=np.int32) * bs)
-            tpos = starts[:, None] + jnp.arange(bs)[None, :]   # [P, bs]
-            Cr = row["pos"].shape[1]                # ring row capacity
-            src_slot = tpos % Cr
-            rpos = row["pos"][0, src_slot]                      # [P, bs]
-            valid = rpos == tpos
-            ids = jnp.asarray(priv)
-            for key in ("k", "v", "ckv", "krope"):
-                if key not in entry:
-                    continue
-                src = row[key][0, src_slot]                     # [P, bs, ...]
-                src = jnp.where(
-                    valid.reshape(valid.shape + (1,) * (src.ndim - 2)),
-                    src, 0.0).astype(entry[key].dtype)
-                e[key] = entry[key].at[ids].set(src)
-            e["pos"] = entry["pos"].at[ids].set(
-                jnp.where(valid, tpos, -1))
-        table = np.full((MB,), -1, np.int32)
-        table[:len(block_ids)] = block_ids
-        e["bt"] = entry["bt"].at[slot].set(jnp.asarray(table))
+        e = _splice_entry(entry, row, table)
+        e["bt"] = entry["bt"].at[slot].set(table)
         new_layers.append(e)
     out["layers"] = new_layers
     out["length"] = cache["length"].at[slot].set(plen)
     return out
+
+
+_splice_jit = jax.jit(_splice_impl)
+
+
+def write_prefill_blocks(cfg: ModelConfig, cache, row_cache, slot: int,
+                         block_ids, n_shared: int, plen: int):
+    """Splice a freshly prefilled batch-1 *ring* row cache into the pool.
+
+    ``block_ids`` (host ints) are the sequence's allocated pool blocks in
+    table order.  The whole splice runs as ONE jitted program with
+    shape-stable arguments (row caches are always full-capacity, the
+    table is padded to the table span MB), so an admission costs one
+    compiled dispatch instead of ~8 eager scatter ops per layer — the
+    compile is paid once per engine.  Prefix-shared blocks
+    (``block_ids[:n_shared]``) are re-written with this row's prefill
+    content; that is a no-op by the prefix-sharing invariant (K/V at
+    position ``p`` depend only on tokens ``<= p`` and the weights, and
+    the forward is deterministic), and keeping the write makes the
+    program independent of ``n_shared``.  Non-paged entries (recurrent
+    SSM / RG-LRU state) are row-copied as in
+    :func:`repro.models.model.write_cache_rows`.  Sets
+    ``length[slot] = plen``."""
+    del cfg, n_shared
+    MB = next(e["bt"].shape[1] for e in cache["layers"]
+              if is_paged_entry(e))
+    table = np.full((MB,), -1, np.int32)
+    table[:len(block_ids)] = np.asarray(block_ids, np.int32)
+    return _splice_jit(cache, row_cache, np.int32(slot),
+                       jnp.asarray(table), np.int32(plen))
 
 
 def release_slot(cache, slot: int):
@@ -230,6 +255,34 @@ def release_slot(cache, slot: int):
         dict(e, bt=e["bt"].at[slot].set(-1)) if is_paged_entry(e) else e
         for e in cache["layers"]]
     return out
+
+
+def _release_impl(cache, rows):
+    out = dict(cache)
+    out["layers"] = [
+        dict(e, bt=e["bt"].at[rows].set(-1, mode="drop"))
+        if is_paged_entry(e) else e
+        for e in cache["layers"]]
+    return out
+
+
+_release_jit = jax.jit(_release_impl)
+
+
+def release_slots(cache, slots):
+    """Batched :func:`release_slot`: clear all the retired slots' table
+    rows with ONE jitted dispatch (the continuous scheduler's
+    batched-retire path — a reap of R slots used to issue R x n_layers
+    eager scatter ops).  The row vector is padded to the slot count with
+    an out-of-range index (dropped by the scatter) so every reap hits
+    the same compiled program regardless of how many slots retire."""
+    if not slots:
+        return cache
+    B = next(e["bt"].shape[0] for e in cache["layers"]
+             if is_paged_entry(e))
+    rows = np.full((B,), B, np.int32)        # B = OOB -> mode="drop"
+    rows[:len(slots)] = np.asarray(list(slots), np.int32)
+    return _release_jit(cache, jnp.asarray(rows))
 
 
 # ------------------------------------------------------------------- CoW

@@ -91,6 +91,12 @@ class EngineConfig:
     admission: str = "fcfs"        # fcfs | sjf
     sjf_age_rate: float = 1.0
     prefill_bucket: int = 0
+    # Async host loop: harvest device-side tokens / stop flags every K
+    # decode steps (>= 1; one blocking device->host sync per interval).
+    # 0 selects the legacy per-step host-harvest loop — the parity
+    # reference the tests diff the device path against.  Strategies
+    # without device slot state (ppd+spec) always use the legacy loop.
+    harvest_every: int = 1
     # DEPRECATED: engine-global sampling default.  Per-request
     # SamplingParams (or Request.temperature) always win; this only
     # fills in for requests that specify neither.
@@ -117,6 +123,12 @@ class EngineConfig:
                              f"got {self.n_ept}")
         if self.prefill_bucket < 0:
             raise ValueError("EngineConfig.prefill_bucket must be >= 0")
+        if not isinstance(self.harvest_every, int) \
+                or self.harvest_every < 0:
+            raise ValueError(
+                f"EngineConfig.harvest_every must be an int >= 0 (0 = "
+                f"legacy per-step host harvest), got "
+                f"{self.harvest_every!r}")
         if self.num_blocks is not None and self.num_blocks < 1:
             raise ValueError("EngineConfig.num_blocks must be None or a "
                              "positive int")
@@ -245,7 +257,8 @@ def _build_static(config, strategy, cfg, clock):
     return StaticEngine(strategy, cfg, capacity=config.capacity,
                         batch_size=config.batch_size,
                         temperature=config.temperature, seed=config.seed,
-                        clock=clock)
+                        clock=clock,
+                        harvest_every=config.harvest_every)
 
 
 def _build_continuous(config, strategy, cfg, clock):
@@ -258,7 +271,8 @@ def _build_continuous(config, strategy, cfg, clock):
                             block_size=config.block_size,
                             num_blocks=config.num_blocks,
                             watermark=config.watermark,
-                            sjf_age_rate=config.sjf_age_rate, clock=clock)
+                            sjf_age_rate=config.sjf_age_rate, clock=clock,
+                            harvest_every=config.harvest_every)
 
 
 SCHEDULER_REGISTRY = {

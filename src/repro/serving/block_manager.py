@@ -173,6 +173,15 @@ class BlockManager:
                 self._free.append(bid)
         self._seq_shared.pop(uid, None)
 
+    def free_seqs(self, uids) -> None:
+        """Batched :meth:`free_seq` for a deferred-harvest reap: the
+        continuous scheduler retires every slot that finished inside a
+        harvest interval in one call (the refcount walk is host-side
+        either way; batching keeps the call shape symmetric with the
+        device-side :func:`repro.models.paged_cache.release_slots`)."""
+        for uid in uids:
+            self.free_seq(uid)
+
     # ------------------------------------------------------- fork / CoW
     def fork(self, src_uid: int, dst_uid: int) -> List[int]:
         """Clone ``src``'s table for ``dst``: every block shared, every

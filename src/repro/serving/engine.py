@@ -77,13 +77,21 @@ class TokenEvent:
     ``token=None``) whose ``index`` equals the request's output length.
     ``time_s`` is seconds on the engine clock since the engine started
     stepping — the first token event's ``time_s`` minus the request's
-    ``arrival_s`` is its TTFT."""
+    ``arrival_s`` is its TTFT.
+
+    Under deferred harvest (``harvest_every`` > 1) events flush in
+    bursts, one per harvest interval: ``time_s`` is then the *harvest*
+    time (the host cannot observe a token earlier than the sync that
+    fetches it — TTFT/TPOT read from events inherit that granularity),
+    while ``step`` carries the exact device decode-step index that
+    produced the token, so per-step attribution survives deferral."""
     uid: int
     token: Optional[np.ndarray]
     index: int
     time_s: float
     finished: bool = False
     finish_reason: Optional[str] = None
+    step: Optional[int] = None
 
 
 def tpot_of(decode_span_s: float, n_tokens: int) -> float:
@@ -224,21 +232,36 @@ class _Batch:
     budget: int = 0
     t_start: float = 0.0          # absolute engine-clock times
     t_first: float = 0.0
+    pending: int = 0              # device steps since the last harvest
+    admit_step: int = 0           # strategy.dispatched_steps at admission
+    row_steps: dict = dataclasses.field(default_factory=dict)
 
 
 class StaticEngine:
-    """Pad-and-batch scheduler over one :class:`DecodeStrategy`."""
+    """Pad-and-batch scheduler over one :class:`DecodeStrategy`.
+
+    ``harvest_every`` >= 1 selects the async host loop for strategies
+    with device slot state: decode steps are dispatched back-to-back
+    with stop/limit bookkeeping committed on device, and the host
+    harvests tokens + finish state with one blocking sync every
+    ``harvest_every`` steps (or as soon as every live row has provably
+    hit its budget).  ``harvest_every=0`` forces the legacy per-step
+    host-harvest loop — the parity reference the tests diff against."""
 
     def __init__(self, strategy, cfg: ModelConfig, capacity: int = 1024,
                  batch_size: int = 4, temperature: float = 0.0,
-                 seed: int = 0, clock=None):
+                 seed: int = 0, clock=None, harvest_every: int = 1):
         self.strategy, self.cfg = strategy, cfg
         self.capacity, self.batch_size = capacity, batch_size
         self.temperature = temperature   # deprecated engine-global default
         self.queue: List[Request] = []
         self.total_forward_passes = 0   # prefill + decode, all batches
         self._overshoot = strategy.overshoot
-        strategy.bind(batch_size, capacity)
+        self.harvest_every = harvest_every
+        self._device_loop = (harvest_every >= 1
+                             and strategy.supports_device_state)
+        strategy.bind(batch_size, capacity,
+                      harvest_every=max(harvest_every, 1))
         self._clock = clock if clock is not None else time.perf_counter
         self._base_key = jax.random.PRNGKey(seed)
         self._t0: Optional[float] = None
@@ -320,6 +343,17 @@ class StaticEngine:
         self._cur = st
         for b in range(len(batch)):
             self._harvest(st, b, [first[b]], events, t_first)
+        if self._device_loop:
+            # arm the device bookkeeping rows: the prefill token was
+            # harvested host-side, so the device counters continue from
+            # len(produced); rows already finished stay disarmed
+            st.admit_step = self.strategy.dispatched_steps
+            for b in range(len(batch)):
+                if not st.done[b]:
+                    self.strategy.slot_admit(
+                        b, len(st.produced[b]),
+                        st.reqs[b].max_new_tokens,
+                        st.sampling[b].stop_token_ids)
         self._maybe_finalize(events)
 
     def _harvest(self, st: _Batch, b: int, toks, events, now: float):
@@ -344,18 +378,63 @@ class StaticEngine:
     def _decode_once(self, events: List[TokenEvent]):
         st = self._cur
         keys, temps, tks, tps = self._decode_arrays(st)
-        toks, cost = self.strategy.decode(~st.done, keys, temps, tks, tps)
-        st.steps += 1
-        self.total_forward_passes += cost
-        now = self._clock()
-        for b in range(len(st.reqs)):
-            self._harvest(st, b, toks[b], events, now)
+        if self._device_loop:
+            cost = self.strategy.decode_deferred(~st.done, keys, temps,
+                                                 tks, tps)
+            st.steps += 1
+            st.pending += 1
+            self.total_forward_passes += cost
+            if self._should_harvest(st):
+                self._device_harvest(st, events)
+        else:
+            toks, cost = self.strategy.decode(~st.done, keys, temps, tks,
+                                              tps)
+            st.steps += 1
+            self.total_forward_passes += cost
+            now = self._clock()
+            for b in range(len(st.reqs)):
+                self._harvest(st, b, toks[b], events, now)
         if st.steps > st.budget:        # PPD fallback guard
+            if self._device_loop and st.pending:
+                self._device_harvest(st, events)
             for b in range(len(st.reqs)):
                 if not st.done[b]:
                     st.done[b] = True
                     st.finish[b] = "length"
+                    st.row_steps[b] = st.steps
         self._maybe_finalize(events)
+
+    def _should_harvest(self, st: _Batch) -> bool:
+        """Harvest on the interval — or early, when the interval cannot
+        matter: every strategy commits >= 1 token per live row per step,
+        so after max(limit - produced) further steps every row has
+        provably stopped or hit its budget."""
+        if st.pending >= self.harvest_every:
+            return True
+        remaining = [st.reqs[b].max_new_tokens - len(st.produced[b])
+                     for b in range(len(st.reqs)) if not st.done[b]]
+        return bool(remaining) and st.pending >= max(remaining)
+
+    def _device_harvest(self, st: _Batch, events: List[TokenEvent]):
+        h = self.strategy.harvest()
+        now = self._clock()
+        st.pending = 0
+        for b in range(len(st.reqs)):
+            if st.done[b]:
+                continue
+            uid = st.reqs[b].uid
+            for tok, step in h.slot_tokens(b):
+                tok = np.asarray(tok)
+                st.produced[b].append(tok)
+                if uid >= 0:
+                    events.append(TokenEvent(
+                        uid=uid, token=tok,
+                        index=len(st.produced[b]) - 1,
+                        time_s=now - self._t0, step=step))
+            if h.finished[b]:
+                st.done[b] = True
+                st.finish[b] = h.finish_reason(b)
+                st.row_steps[b] = int(h.finish_step[b]) - st.admit_step + 1
 
     def _maybe_finalize(self, events: List[TokenEvent]):
         st = self._cur
@@ -365,6 +444,15 @@ class StaticEngine:
         wall = now - st.t_start
         offset = st.t_start - self._t0
         t_prefill = st.t_first - st.t_start
+        # under deferred harvest the loop may dispatch a few steps past
+        # the batch's actual finish before the harvest reveals it; report
+        # the steps the *requests* consumed (device finish_step), not the
+        # dispatch overshoot
+        steps = st.steps
+        if self._device_loop:
+            useful = [st.row_steps.get(b, 0) for b, r in
+                      enumerate(st.reqs)] or [0]
+            steps = min(st.steps, max(useful))
         for b, r in enumerate(st.reqs):
             if r.uid < 0:
                 continue
@@ -377,7 +465,7 @@ class StaticEngine:
                 uid=r.uid, token=None, index=n, time_s=now - self._t0,
                 finished=True, finish_reason=st.finish[b] or "length"))
             self._results.append(Result(
-                uid=r.uid, tokens=toks, steps=st.steps, wall_s=latency,
+                uid=r.uid, tokens=toks, steps=steps, wall_s=latency,
                 ttft_s=ttft, tpot_s=tpot_of(wall - t_prefill, n),
                 goodput_tok_s=n / latency,
                 finish_reason=st.finish[b] or "length"))

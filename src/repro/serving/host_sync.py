@@ -1,0 +1,68 @@
+"""The device->host transfer choke point for the serving hot loop.
+
+Every *intentional* device->host transfer in the decode path (legacy
+per-step token reads, deferred-harvest fetches, admission prefill
+forces) routes through :func:`device_get`, for two reasons:
+
+* it makes host synchronization *visible*: the async host loop's whole
+  point is that the only blocking transfer is one harvest per
+  ``harvest_every`` steps, and a stray ``np.asarray`` on a device array
+  silently reintroduces a per-step sync.  Routing through one function
+  turns "how often do we sync?" into a countable event;
+* it is the instrumentation hook the test harness uses:
+  :func:`count_host_syncs` wraps a scope and counts exactly how many
+  blocking transfers the engines performed (``tests/test_host_sync.py``
+  asserts the continuous decode loop performs at most one per harvest
+  interval).
+
+``device_get`` on a pytree is ONE synchronization point (the host blocks
+once; the transfers of the individual leaves are batched), so a deferred
+harvest that fetches tokens + counters + finish state as one tuple costs
+one sync, not seven.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+
+_local = threading.local()
+
+
+@dataclasses.dataclass
+class SyncCounter:
+    """Mutable counter handed out by :func:`count_host_syncs`."""
+    calls: int = 0          # device_get invocations (= blocking syncs)
+    labels: dict = dataclasses.field(default_factory=dict)
+
+    def bump(self, label: str):
+        self.calls += 1
+        self.labels[label] = self.labels.get(label, 0) + 1
+
+
+def device_get(tree, label: str = "get"):
+    """Blocking device->host transfer of a pytree (one sync point).
+
+    ``label`` tags the call site ("harvest", "step", "prefill") so the
+    counting harness can attribute syncs to loop phases."""
+    counter = getattr(_local, "counter", None)
+    if counter is not None:
+        counter.bump(label)
+    return jax.device_get(tree)
+
+
+@contextlib.contextmanager
+def count_host_syncs():
+    """Count every :func:`device_get` issued inside the scope.
+
+    Yields a :class:`SyncCounter`; nesting restores the outer counter on
+    exit.  Thread-local, so parallel test workers do not share counts."""
+    prev = getattr(_local, "counter", None)
+    counter = SyncCounter()
+    _local.counter = counter
+    try:
+        yield counter
+    finally:
+        _local.counter = prev

@@ -80,6 +80,7 @@ from repro.models import (num_seq_blocks, paged_block_bytes,
                           write_prefill_blocks)
 from repro.models.config import ModelConfig
 
+from . import host_sync
 from .block_manager import BlockManager
 from .engine import (Request, Result, TokenEvent, aggregate_metrics,
                      check_cache_fits, decode_arrays, harvest_tokens,
@@ -115,6 +116,8 @@ class _Slot:
     key: Optional[jnp.ndarray] = None
     sampling: Optional[SamplingParams] = None
     finish: Optional[str] = None  # set -> retire at next reap
+    admit_step: int = 0           # strategy.dispatched_steps at admission
+    device_finish_step: Optional[int] = None  # device step of the finish
 
     @property
     def busy(self) -> bool:
@@ -129,7 +132,8 @@ class ContinuousEngine:
                  admission: str = "fcfs", prefill_bucket: int = 0,
                  seed: int = 0, kv: str = "ring", block_size: int = 16,
                  num_blocks: Optional[int] = None, watermark: float = 0.01,
-                 sjf_age_rate: float = 1.0, clock=None):
+                 sjf_age_rate: float = 1.0, clock=None,
+                 harvest_every: int = 1):
         assert admission in ("fcfs", "sjf"), admission
         assert kv in ("ring", "paged"), kv
         self.strategy, self.cfg = strategy, cfg
@@ -139,6 +143,14 @@ class ContinuousEngine:
         self.sjf_age_rate = sjf_age_rate
         self.kv = kv
         self.block_size = block_size
+        # >= 1: async host loop (device slot state, one blocking sync per
+        # `harvest_every` steps); 0: legacy per-step host harvest — the
+        # parity reference.  Strategies without device state (spec-
+        # decode) always take the legacy path.
+        self.harvest_every = harvest_every
+        self._device_loop = (harvest_every >= 1
+                             and strategy.supports_device_state)
+        self._pending = 0          # device steps since the last harvest
         self._clock = clock if clock is not None else time.perf_counter
         # Round prompt prefills up to a multiple of ``prefill_bucket`` to
         # bound recompilation across prompt lengths (0 = exact length).
@@ -152,7 +164,7 @@ class ContinuousEngine:
         self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
                       "retired": 0, "max_concurrency": 0,
                       "active_slot_steps": 0, "idle_slot_steps": 0,
-                      "admission_waits": 0}
+                      "admission_waits": 0, "harvests": 0}
         self.makespan_s = 0.0
         self._base_key = jax.random.PRNGKey(seed)
         self.block_mgr: Optional[BlockManager] = None
@@ -166,7 +178,7 @@ class ContinuousEngine:
         strategy.bind(batch_size, capacity, kv=kv, block_size=block_size,
                       num_blocks=(self.block_mgr.num_blocks
                                   if self.block_mgr is not None else None),
-                      pool=True)
+                      pool=True, harvest_every=max(harvest_every, 1))
         self._t0: Optional[float] = None
         self._started = False    # a step() has run since the last run()
         self._results: List[Result] = []
@@ -311,15 +323,25 @@ class ContinuousEngine:
         slot.decode_steps = 0
         slot.budget = req.max_new_tokens + 8
         slot.arrival_t = req.arrival_s
+        # force the (async-dispatched) prefill to the host BEFORE the
+        # TTFT stamp: stamping first would time Python-side event
+        # construction, not the availability of the first token
+        first = np.asarray(host_sync.device_get(first, label="prefill"))
         slot.first_tok_t = self._clock() - self._t0  # TTFT includes prefill
         slot.sampling = sp
         slot.finish = None
         slot.key = jax.random.fold_in(
             self._base_key,
             (sp.seed if sp.seed is not None else req.uid) & 0xffffffff)
-        # np.asarray forces the prefill to finish before the TTFT stamp
-        self._harvest(slot_idx, [np.asarray(first)], events,
-                      slot.first_tok_t)
+        self._harvest(slot_idx, [first], events, slot.first_tok_t)
+        if self._device_loop and slot.finish is None:
+            # arm the slot's device bookkeeping row: counters continue
+            # from the host-harvested prefill token
+            slot.admit_step = self.strategy.dispatched_steps
+            slot.device_finish_step = None
+            self.strategy.slot_admit(slot_idx, len(slot.produced),
+                                     req.max_new_tokens,
+                                     sp.stop_token_ids)
 
     def _harvest(self, slot_idx: int, toks, events: List[TokenEvent],
                  now: float):
@@ -333,13 +355,21 @@ class ContinuousEngine:
                                   events, now)
 
     def _retire(self, slot_idx: int, now: float) -> Result:
+        """Build the slot's Result and clear it.  Block frees and cache
+        releases happen batched in :meth:`_reap`."""
         slot = self.slots[slot_idx]
         req = slot.req
         n = len(slot.produced)
         toks = (np.stack(slot.produced) if n else np.zeros((0,), np.int32))
         latency = max(now - slot.arrival_t, 1e-9)
+        # under deferred harvest the host keeps dispatching masked steps
+        # until the harvest reveals the finish; charge the request the
+        # steps it consumed on device, not the dispatch overshoot
+        steps = slot.decode_steps + 1
+        if slot.device_finish_step is not None:
+            steps = slot.device_finish_step - slot.admit_step + 2
         res = Result(
-            uid=req.uid, tokens=toks, steps=slot.decode_steps + 1,
+            uid=req.uid, tokens=toks, steps=steps,
             wall_s=latency,
             ttft_s=max(slot.first_tok_t - slot.arrival_t, 0.0),
             tpot_s=tpot_of(now - slot.first_tok_t, n),
@@ -349,25 +379,19 @@ class ContinuousEngine:
         slot.produced = []
         slot.sampling = None
         slot.finish = None
+        slot.device_finish_step = None
         self.stats["retired"] += 1
-        if self.block_mgr is not None:
-            # free the sequence's blocks right away: a freed block may be
-            # re-allocated immediately.
-            self.block_mgr.free_seq(req.uid)
-        # Paged caches also clear the slot's block-table row (the retired
-        # slot keeps stepping, masked, until re-admission — a stale table
-        # row would let its dead writes land in blocks now owned by
-        # another sequence); ring caches need nothing beyond the mask, so
-        # the strategy's release is a no-op there.  Spec-decode drops the
-        # slot's self-managed caches.
-        self.strategy.release(slot_idx)
         return res
 
     def _reap(self, events: List[TokenEvent], now: float):
         """Retire every slot whose finish reason is set, emitting the
         terminal event.  Runs after admission (stop-on-first-token /
         1-token budgets retire before costing a decode step) and after
-        each decode step."""
+        each decode step / harvest.  Frees are batched: one BlockManager
+        sweep and one vectorized block-table clear for the whole retired
+        set, instead of per-slot scatter calls."""
+        retired: List[int] = []
+        uids: List[int] = []
         for i, s in enumerate(self.slots):
             if not s.busy:
                 continue
@@ -377,7 +401,22 @@ class ContinuousEngine:
                 events.append(TokenEvent(
                     uid=s.req.uid, token=None, index=len(s.produced),
                     time_s=now, finished=True, finish_reason=s.finish))
+                uids.append(s.req.uid)
                 self._results.append(self._retire(i, now))
+                retired.append(i)
+        if not retired:
+            return
+        if self.block_mgr is not None:
+            # free the sequences' blocks right away: a freed block may be
+            # re-allocated immediately.
+            self.block_mgr.free_seqs(uids)
+        # Paged caches also clear the slots' block-table rows (a retired
+        # slot keeps stepping, masked, until re-admission — a stale table
+        # row would let its dead writes land in blocks now owned by
+        # another sequence); ring caches need nothing beyond the mask, so
+        # the strategy's release is a no-op there.  Spec-decode drops the
+        # slots' self-managed caches.
+        self.strategy.release_many(retired)
 
     # ------------------------------------------------------------- step
     def _decode_arrays(self):
@@ -432,6 +471,22 @@ class ContinuousEngine:
                 time.sleep(min(max(nxt - now, 0.0), 0.05))
             return events
         keys, temps, tks, tps = self._decode_arrays()
+        if self._device_loop:
+            cost = self.strategy.decode_deferred(active, keys, temps,
+                                                 tks, tps)
+            self.total_forward_passes += cost
+            self.stats["decode_steps"] += 1
+            self.stats["active_slot_steps"] += conc
+            self.stats["idle_slot_steps"] += self.batch_size - conc
+            self._pending += 1
+            now = self._clock() - self._t0
+            for s in self.slots:
+                if s.busy:
+                    s.decode_steps += 1
+            if self._should_harvest():
+                self._device_harvest(events, now)
+            self._reap(events, now)
+            return events
         new_tokens, cost = self.strategy.decode(active, keys, temps, tks,
                                                 tps)
         self.total_forward_passes += cost
@@ -446,6 +501,40 @@ class ContinuousEngine:
             self._harvest(i, new_tokens[i], events, now)
         self._reap(events, now)
         return events
+
+    def _should_harvest(self) -> bool:
+        """Harvest on the interval — or early, as soon as some slot has
+        *provably* finished (every strategy commits >= 1 token per live
+        slot per step, so a slot is certainly done once the steps since
+        its last harvest cover its remaining budget): waiting out the
+        interval would keep a retirable slot occupied and block
+        admission."""
+        if self._pending >= self.harvest_every:
+            return True
+        rem = [s.req.max_new_tokens - len(s.produced)
+               for s in self.slots if s.busy and s.finish is None]
+        return bool(rem) and self._pending >= min(rem)
+
+    def _device_harvest(self, events: List[TokenEvent], now: float):
+        """The one blocking sync of a harvest interval: flush every
+        slot's buffered tokens as step-stamped TokenEvents and latch
+        device-detected finishes for the reap that follows."""
+        h = self.strategy.harvest()
+        self.stats["harvests"] += 1
+        self._pending = 0
+        for i, s in enumerate(self.slots):
+            if not s.busy or s.finish is not None:
+                continue
+            uid = s.req.uid
+            for tok, step in h.slot_tokens(i):
+                tok = np.asarray(tok)
+                s.produced.append(tok)
+                events.append(TokenEvent(
+                    uid=uid, token=tok, index=len(s.produced) - 1,
+                    time_s=now, step=step))
+            if h.finished[i]:
+                s.finish = h.finish_reason(i)
+                s.device_finish_step = int(h.finish_step[i])
 
     def run(self) -> List[Result]:
         # fresh timeline per run — unless resuming a step-driven workload
@@ -489,7 +578,7 @@ def ContinuousPPDEngine(params, ppd_params, cfg: ModelConfig, *, m=3,
                         prefill_bucket=0, seed=0, attn_backend=None,
                         kv="ring", block_size=16, num_blocks=None,
                         watermark=0.01, sjf_age_rate=1.0,
-                        clock=None) -> ContinuousEngine:
+                        clock=None, harvest_every=1) -> ContinuousEngine:
     """continuous scheduler x PPD strategy (old ``ContinuousPPDEngine``)."""
     from .strategies import PPDStrategy
     return ContinuousEngine(
@@ -499,7 +588,8 @@ def ContinuousPPDEngine(params, ppd_params, cfg: ModelConfig, *, m=3,
         temperature=temperature, admission=admission,
         prefill_bucket=prefill_bucket, seed=seed, kv=kv,
         block_size=block_size, num_blocks=num_blocks, watermark=watermark,
-        sjf_age_rate=sjf_age_rate, clock=clock)
+        sjf_age_rate=sjf_age_rate, clock=clock,
+        harvest_every=harvest_every)
 
 
 def ContinuousVanillaEngine(params, cfg: ModelConfig, capacity=1024,
@@ -507,8 +597,8 @@ def ContinuousVanillaEngine(params, cfg: ModelConfig, capacity=1024,
                             admission="fcfs", prefill_bucket=0, seed=0,
                             attn_backend=None, kv="ring", block_size=16,
                             num_blocks=None, watermark=0.01,
-                            sjf_age_rate=1.0,
-                            clock=None) -> ContinuousEngine:
+                            sjf_age_rate=1.0, clock=None,
+                            harvest_every=1) -> ContinuousEngine:
     """continuous scheduler x vanilla strategy (old
     ``ContinuousVanillaEngine``)."""
     from .strategies import VanillaStrategy
@@ -517,4 +607,5 @@ def ContinuousVanillaEngine(params, cfg: ModelConfig, capacity=1024,
         capacity=capacity, batch_size=batch_size, temperature=temperature,
         admission=admission, prefill_bucket=prefill_bucket, seed=seed,
         kv=kv, block_size=block_size, num_blocks=num_blocks,
-        watermark=watermark, sjf_age_rate=sjf_age_rate, clock=clock)
+        watermark=watermark, sjf_age_rate=sjf_age_rate, clock=clock,
+        harvest_every=harvest_every)

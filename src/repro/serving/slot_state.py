@@ -1,0 +1,211 @@
+"""Device-resident per-slot decode bookkeeping (``SlotState``).
+
+The historical engine loop was host-device lockstep: every decode step
+read the fresh tokens back to the host (`np.asarray`), checked stop ids
+and token budgets in Python, and updated per-slot lists — one blocking
+sync per step, with the device idle while the host ran bookkeeping.
+``SlotState`` moves that bookkeeping into the jitted decode step itself:
+
+* ``emitted`` / ``limit`` — tokens emitted so far vs the request's
+  ``max_tokens``; the step stops emitting the moment the limit is hit;
+* ``stop_ids`` [B, MS] + ``n_stops`` — per-slot stop-token sets, padded
+  to a fixed width.  Membership is ``(tok == stop_ids) & (lane <
+  n_stops)``: the explicit count (not a magic pad value) means a stop id
+  may legitimately equal the pad value — the "stop-id == pad-id" edge
+  the property tests exercise;
+* ``finished`` / ``reason`` / ``finish_step`` — set at the exact step a
+  stop fires or the limit is reached.  Finished slots are masked out of
+  the decode math (``active & ~finished``), so no token is ever emitted
+  past a stop even though the host won't learn about it until the next
+  harvest;
+* ``buf`` / ``buf_step`` / ``buf_len`` — accepted tokens since the last
+  harvest, each stamped with the device step index that produced it
+  (streaming events carry exact step indices even though they flush once
+  per harvest interval).
+
+:func:`commit_tokens` replicates the semantics of
+:func:`repro.serving.engine.harvest_tokens` exactly — per candidate
+token, in order: a stop id terminates the slot without emitting; an
+accepted token is appended; hitting ``limit`` terminates with "length".
+The hypothesis property tests pit the two implementations against each
+other step-by-step.
+
+The host reads the state back with ONE blocking transfer per harvest
+interval (:meth:`HostHarvest` via ``host_sync.device_get``) and resets
+the buffers host-side (an async host->device write, not a sync).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import host_sync
+
+REASON_NONE, REASON_STOP, REASON_LENGTH = 0, 1, 2
+REASON_NAMES = {REASON_STOP: "stop", REASON_LENGTH: "length"}
+
+DEFAULT_MAX_STOPS = 4
+
+
+class SlotState(NamedTuple):
+    """Per-slot decode bookkeeping, resident on device (all jnp arrays).
+
+    Idle slots are ``finished=True`` so they can never emit; admission
+    (:func:`admit_row`) arms a slot, harvest-retire leaves it finished
+    until the next admission."""
+    emitted: jnp.ndarray       # [B] i32  tokens emitted since admission
+    limit: jnp.ndarray         # [B] i32  the request's max_tokens
+    stop_ids: jnp.ndarray      # [B, MS] i32 padded stop sets
+    n_stops: jnp.ndarray       # [B] i32  valid lanes of stop_ids
+    finished: jnp.ndarray      # [B] bool
+    reason: jnp.ndarray        # [B] i32  REASON_* code
+    finish_step: jnp.ndarray   # [B] i32  step index of the finish (-1)
+    buf: jnp.ndarray           # [B, C] i32 tokens since last harvest
+    #   (audio models: [B, C, K] codebook rows)
+    buf_step: jnp.ndarray      # [B, C] i32 producing step per token
+    buf_len: jnp.ndarray       # [B] i32
+    step: jnp.ndarray          # []  i32  global decode-step counter
+
+
+@dataclasses.dataclass
+class HostHarvest:
+    """One harvest's host view (numpy): everything a scheduler needs to
+    stream tokens, stamp step-indexed events, and retire finished slots,
+    fetched with a single blocking transfer."""
+    buf: np.ndarray
+    buf_step: np.ndarray
+    buf_len: np.ndarray
+    finished: np.ndarray
+    reason: np.ndarray
+    finish_step: np.ndarray
+    emitted: np.ndarray
+
+    def slot_tokens(self, i: int):
+        """(token, step) pairs buffered for slot ``i``, in emission
+        order."""
+        n = int(self.buf_len[i])
+        return [(self.buf[i, j], int(self.buf_step[i, j]))
+                for j in range(n)]
+
+    def finish_reason(self, i: int) -> Optional[str]:
+        if not self.finished[i]:
+            return None
+        return REASON_NAMES.get(int(self.reason[i]))
+
+
+def init_slot_state(batch_size: int, buf_cap: int,
+                    max_stops: int = DEFAULT_MAX_STOPS,
+                    n_codebooks: int = 0) -> SlotState:
+    """Fresh all-idle state.  ``buf_cap`` must cover the worst interval:
+    ``harvest_every * (1 + strategy.overshoot)`` tokens per slot."""
+    B, C, MS = batch_size, max(buf_cap, 1), max(max_stops, 1)
+    buf_shape = (B, C, n_codebooks) if n_codebooks else (B, C)
+    return SlotState(
+        emitted=jnp.zeros((B,), jnp.int32),
+        limit=jnp.zeros((B,), jnp.int32),
+        stop_ids=jnp.zeros((B, MS), jnp.int32),
+        n_stops=jnp.zeros((B,), jnp.int32),
+        finished=jnp.ones((B,), bool),
+        reason=jnp.zeros((B,), jnp.int32),
+        finish_step=jnp.full((B,), -1, jnp.int32),
+        buf=jnp.zeros(buf_shape, jnp.int32),
+        buf_step=jnp.zeros((B, C), jnp.int32),
+        buf_len=jnp.zeros((B,), jnp.int32),
+        step=jnp.zeros((), jnp.int32))
+
+
+def admit_row(ss: SlotState, slot: int, emitted: int, limit: int,
+              stop_ids: Sequence[int]) -> SlotState:
+    """Arm one slot at admission (host->device row writes, no sync).
+
+    ``emitted`` counts tokens already produced host-side (the prefill's
+    first token), so the device limit check continues exactly where the
+    host left off.  Callers must grow ``stop_ids`` capacity first (see
+    :func:`ensure_stop_capacity`)."""
+    ms = ss.stop_ids.shape[1]
+    assert len(stop_ids) <= ms, (len(stop_ids), ms)
+    padded = np.zeros((ms,), np.int32)
+    padded[:len(stop_ids)] = np.asarray(list(stop_ids), np.int32)
+    return ss._replace(
+        emitted=ss.emitted.at[slot].set(emitted),
+        limit=ss.limit.at[slot].set(limit),
+        stop_ids=ss.stop_ids.at[slot].set(jnp.asarray(padded)),
+        n_stops=ss.n_stops.at[slot].set(len(stop_ids)),
+        finished=ss.finished.at[slot].set(False),
+        reason=ss.reason.at[slot].set(REASON_NONE),
+        finish_step=ss.finish_step.at[slot].set(-1),
+        buf_len=ss.buf_len.at[slot].set(0))
+
+
+def ensure_stop_capacity(ss: SlotState, n: int) -> SlotState:
+    """Grow the padded stop-id width to hold ``n`` ids (rare: a request
+    with more stops than any before; costs one recompile of the step)."""
+    ms = ss.stop_ids.shape[1]
+    if n <= ms:
+        return ss
+    grown = jnp.zeros((ss.stop_ids.shape[0], n), jnp.int32)
+    return ss._replace(stop_ids=grown.at[:, :ms].set(ss.stop_ids))
+
+
+def commit_tokens(ss: SlotState, toks, valid, active) -> SlotState:
+    """Apply one decode step's candidate tokens to the slot state —
+    runs INSIDE the jitted step.
+
+    ``toks`` [B, T] (audio [B, T, K]) are the step's candidates in
+    emission order; ``valid`` [B, T] marks real candidates (speculative
+    strategies pad rejected path slots); ``active`` [B] is the host's
+    busy mask.  Per row, candidates are walked in order with exactly the
+    :func:`repro.serving.engine.harvest_tokens` semantics; the walk is a
+    statically unrolled loop over T (T <= m+1, small).  Audio token rows
+    never match stop ids (stops are scalar-token semantics), mirroring
+    the host implementation's ``np.ndim(t) == 0`` guard."""
+    B, T = toks.shape[0], toks.shape[1]
+    scalar = toks.ndim == 2
+    C = ss.buf_step.shape[1]
+    rows = jnp.arange(B)
+    lanes = jnp.arange(ss.stop_ids.shape[1])[None, :]
+    emitted, buf_len = ss.emitted, ss.buf_len
+    done, reason, fstep = ss.finished, ss.reason, ss.finish_step
+    buf, buf_step = ss.buf, ss.buf_step
+    for t in range(T):
+        tok = toks[:, t]
+        v = valid[:, t] & active & ~done
+        if scalar:
+            is_stop = jnp.any((tok[:, None] == ss.stop_ids)
+                              & (lanes < ss.n_stops[:, None]), axis=1)
+        else:
+            is_stop = jnp.zeros((B,), bool)
+        stop_now = v & is_stop
+        emit = v & ~is_stop & (emitted < ss.limit)
+        # the ring's OOB-drop trick: route non-emitting rows to column C
+        idx = jnp.where(emit, buf_len, C)
+        buf = buf.at[rows, idx].set(tok, mode="drop")
+        buf_step = buf_step.at[rows, idx].set(ss.step, mode="drop")
+        emitted = emitted + emit
+        buf_len = buf_len + emit
+        hit_limit = emit & (emitted >= ss.limit)
+        newly = stop_now | hit_limit
+        reason = jnp.where(newly,
+                           jnp.where(stop_now, REASON_STOP, REASON_LENGTH),
+                           reason)
+        fstep = jnp.where(newly, ss.step, fstep)
+        done = done | newly
+    return ss._replace(emitted=emitted, buf_len=buf_len, finished=done,
+                       reason=reason, finish_step=fstep, buf=buf,
+                       buf_step=buf_step, step=ss.step + 1)
+
+
+def harvest(ss: SlotState):
+    """Read the state back to the host — the ONE blocking sync of a
+    harvest interval — and reset the token buffers.
+
+    Returns ``(HostHarvest, SlotState)``; the returned state has
+    ``buf_len`` zeroed (an async host->device write)."""
+    got = host_sync.device_get(
+        (ss.buf, ss.buf_step, ss.buf_len, ss.finished, ss.reason,
+         ss.finish_step, ss.emitted), label="harvest")
+    view = HostHarvest(*(np.asarray(g) for g in got))
+    return view, ss._replace(buf_len=jnp.zeros_like(ss.buf_len))

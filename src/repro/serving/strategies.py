@@ -24,8 +24,29 @@ strategy through one narrow interface:
   paper's exact-output mode costs what it did before per-request
   sampling existed).  Per-row arrays select the sampled program, which
   computes both verdicts and picks per row;
-* ``release(slot)``                      — drop a retired slot's device
-  state (paged caches: clear the block-table row so dead writes drop).
+* ``release(slot)`` / ``release_many(slots)`` — drop retired slots'
+  device state (paged caches: clear the block-table rows so dead writes
+  drop; the plural form batches the row clears into one update).
+
+Strategies with ``supports_device_state`` additionally expose the async
+host-loop interface (:mod:`repro.serving.slot_state`): the per-slot
+stop/limit bookkeeping lives in a device-resident ``SlotState`` updated
+*inside* the jitted step, so the host can dispatch steps back-to-back
+with no per-step sync:
+
+* ``slot_admit(slot, emitted, limit, stop_ids)`` — arm a slot's device
+  row at admission (host->device writes, no sync);
+* ``decode_deferred(active, keys, temps, top_k, top_p)`` — one decode
+  step whose token emission, stop matching, and limit checks are
+  committed on device; returns only the forward-pass cost (no
+  device->host transfer);
+* ``harvest()`` — the single blocking sync of a harvest interval:
+  buffered tokens (step-stamped), finished flags, and finish reasons as
+  one :class:`repro.serving.slot_state.HostHarvest`.
+
+On non-CPU backends the deferred step donates its state buffers
+(``donate_argnums``), double-buffering dispatch: the host enqueues step
+N+1 while N executes, and XLA reuses the carried buffers in place.
 
 The ``LLMEngine`` facade (:mod:`repro.serving.api`) composes strategy x
 scheduler from registries — there is no per-pair engine subclass.
@@ -42,8 +63,19 @@ from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
                         is_chain_arch, mk_default_tree, ppd_decode_step,
                         vanilla_decode_step)
 from repro.models import (forward, init_cache, is_paged_cache,
-                          release_slot, trim_cache)
+                          release_slot, release_slots, trim_cache)
 from repro.models.config import ModelConfig
+
+from . import host_sync, slot_state
+from .slot_state import DEFAULT_MAX_STOPS
+
+
+def _donate(*argnums):
+    """State-donation argnums for the jitted decode steps — the
+    double-buffering half of the async host loop.  XLA's CPU backend
+    does not implement donation (it would warn on every compile), so
+    donation is enabled off-CPU only; dispatch is async either way."""
+    return argnums if jax.default_backend() != "cpu" else ()
 
 
 def _prefill(params, cfg, tokens, plen, capacity, *, attn_backend=None,
@@ -79,6 +111,14 @@ def _maybe_release(cache, slot):
     return release_slot(cache, slot) if is_paged_cache(cache) else cache
 
 
+def _maybe_release_many(cache, slots):
+    """Batched form of :func:`_maybe_release`: one vectorized
+    block-table row clear per layer for the whole retired set."""
+    if slots and is_paged_cache(cache):
+        return release_slots(cache, slots)
+    return cache
+
+
 class DecodeStrategy:
     """Interface + shared geometry bookkeeping (see module docstring)."""
 
@@ -86,15 +126,46 @@ class DecodeStrategy:
     overshoot = 0            # speculative commit past the budget (m/gamma)
     supports_sampling = True  # per-request temperature / top-k / top-p
     batch1 = False           # host-side batch-1 method (spec-decode)
+    supports_device_state = False  # SlotState + deferred harvest
 
     def bind(self, batch_size: int, capacity: int, *, kv: str = "ring",
              block_size: int = 16, num_blocks: Optional[int] = None,
-             pool: bool = False):
+             pool: bool = False, harvest_every: int = 1,
+             max_stops: int = DEFAULT_MAX_STOPS):
         self.batch_size, self.capacity = batch_size, capacity
         self.kv, self.block_size, self.num_blocks = kv, block_size, \
             num_blocks
+        self.dispatched_steps = 0     # host mirror of SlotState.step
+        if self.supports_device_state:
+            # buffer capacity covers the worst interval: every step may
+            # commit up to (1 + overshoot) tokens per slot
+            cap = max(harvest_every, 1) * (1 + self.overshoot)
+            nk = (self.cfg.n_codebooks
+                  if self.cfg.modality == "audio" else 0)
+            self.dslots = slot_state.init_slot_state(
+                batch_size, cap, max_stops=max_stops, n_codebooks=nk)
         if pool:
             self._init_pool()
+
+    # ------------------------------------------------- device slot state
+    def slot_admit(self, slot: int, emitted: int, limit: int,
+                   stop_ids=()):
+        """Arm a slot's device bookkeeping row at admission."""
+        self.dslots = slot_state.ensure_stop_capacity(self.dslots,
+                                                      len(stop_ids))
+        self.dslots = slot_state.admit_row(self.dslots, slot, emitted,
+                                           limit, stop_ids)
+
+    def harvest(self) -> slot_state.HostHarvest:
+        """The one blocking device->host sync of a harvest interval."""
+        view, self.dslots = slot_state.harvest(self.dslots)
+        return view
+
+    def decode_deferred(self, active, keys, temps, top_k, top_p) -> int:
+        """One decode step committed on device; returns forward-pass
+        cost.  No device->host transfer happens here."""
+        raise NotImplementedError(
+            f"strategy '{self.name}' has no device slot state")
 
     def _pool_kv_cache(self):
         if self.kv == "paged":
@@ -122,6 +193,12 @@ class DecodeStrategy:
     def release(self, slot):
         pass
 
+    def release_many(self, slots):
+        """Batched retire: paged strategies override to clear all the
+        block-table rows in one update instead of one scatter per slot."""
+        for s in slots:
+            self.release(s)
+
     def pool_cache(self):
         return None
 
@@ -130,13 +207,17 @@ class VanillaStrategy(DecodeStrategy):
     """Plain autoregressive decoding (1 token / forward pass)."""
 
     name = "vanilla"
+    supports_device_state = True
 
     def __init__(self, params, cfg: ModelConfig, *, attn_backend=None):
         self.params, self.cfg = params, cfg
         self.attn_backend = attn_backend
         # two compiled programs: greedy-only (argmax, the default and the
         # exact-output mode) and per-row sampled; an all-greedy workload
-        # never traces the sampled one (trace_counts asserts it)
+        # never traces the sampled one (trace_counts asserts it).  The
+        # deferred (device-harvest) variants count under the same keys:
+        # an engine only ever drives one of the two harvest modes, and
+        # either mode compiles exactly one program per sampling class.
         self.trace_counts = {"greedy": 0, "sampled": 0}
 
         def _greedy_impl(cache, tok, active):
@@ -155,6 +236,34 @@ class VanillaStrategy(DecodeStrategy):
 
         self._step_greedy = jax.jit(_greedy_impl)
         self._step = jax.jit(_sampled_impl)
+
+        def _commit(ds, tok, eff):
+            toks = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
+            return slot_state.commit_tokens(
+                ds, toks, jnp.ones((toks.shape[0], 1), bool), eff)
+
+        def _greedy_dev_impl(cache, ds, tok, active):
+            self.trace_counts["greedy"] += 1     # runs at trace time only
+            eff = active & ~ds.finished
+            cache, tok, _ = vanilla_decode_step(
+                self.params, self.cfg, cache, tok, active=eff,
+                attn_backend=self.attn_backend)
+            return cache, _commit(ds, tok, eff), tok
+
+        def _sampled_dev_impl(cache, ds, tok, keys, active, temps, tks,
+                              tps):
+            self.trace_counts["sampled"] += 1
+            eff = active & ~ds.finished
+            cache, tok, _ = vanilla_decode_step(
+                self.params, self.cfg, cache, tok, temperature=temps,
+                key=keys, active=eff, top_k=tks, top_p=tps,
+                attn_backend=self.attn_backend)
+            return cache, _commit(ds, tok, eff), tok
+
+        self._step_greedy_dev = jax.jit(_greedy_dev_impl,
+                                        donate_argnums=_donate(0, 1))
+        self._step_dev = jax.jit(_sampled_dev_impl,
+                                 donate_argnums=_donate(0, 1))
 
     def _first0(self):
         if self.cfg.modality == "audio":
@@ -191,6 +300,9 @@ class VanillaStrategy(DecodeStrategy):
     def release(self, slot):
         self.cache = _maybe_release(self.cache, slot)
 
+    def release_many(self, slots):
+        self.cache = _maybe_release_many(self.cache, list(slots))
+
     def pool_cache(self):
         return self.cache
 
@@ -202,9 +314,21 @@ class VanillaStrategy(DecodeStrategy):
             self.cache, self.tokens, _ = self._step(
                 self.cache, self.tokens, keys, jnp.asarray(active), temps,
                 top_k, top_p)
-        nxt = np.asarray(self.tokens)
+        nxt = np.asarray(host_sync.device_get(self.tokens, label="step"))
         return [[nxt[i]] if active[i] else [] for i in
                 range(len(active))], 1
+
+    def decode_deferred(self, active, keys, temps, top_k, top_p):
+        act = jnp.asarray(active)
+        if temps is None:
+            self.cache, self.dslots, self.tokens = self._step_greedy_dev(
+                self.cache, self.dslots, self.tokens, act)
+        else:
+            self.cache, self.dslots, self.tokens = self._step_dev(
+                self.cache, self.dslots, self.tokens, keys, act, temps,
+                top_k, top_p)
+        self.dispatched_steps += 1
+        return 1
 
 
 class PPDStrategy(DecodeStrategy):
@@ -212,6 +336,7 @@ class PPDStrategy(DecodeStrategy):
     for attention archs, chain mode + commit forward for SSM/RG-LRU)."""
 
     name = "ppd"
+    supports_device_state = True
 
     def __init__(self, params, ppd_params, cfg: ModelConfig, *, m=3,
                  n_ept=1, tree_states=None, attn_backend=None):
@@ -246,6 +371,46 @@ class PPDStrategy(DecodeStrategy):
 
         self._step_greedy = jax.jit(_greedy_impl)
         self._step = jax.jit(_sampled_impl)
+
+        def _commit(ds, st, info, eff):
+            # step output in emission order: accepted path tokens (root
+            # excluded; rejected slots are -1 = invalid) then the bonus
+            # root token, exactly the host-loop harvest order
+            ptok = info["accepted_path_tokens"]
+            path = ptok[:, 1:]
+            root = st.root_token
+            if path.ndim == 3:                                  # audio
+                toks = jnp.concatenate([path, root[:, None, :]], axis=1)
+                pvalid = jnp.all(path >= 0, axis=-1)
+            else:
+                toks = jnp.concatenate([path, root[:, None]], axis=1)
+                pvalid = path >= 0
+            valid = jnp.concatenate(
+                [pvalid, jnp.ones((path.shape[0], 1), bool)], axis=1)
+            return slot_state.commit_tokens(ds, toks, valid, eff)
+
+        def _greedy_dev_impl(st, ds, active):
+            self.trace_counts["greedy"] += 1     # runs at trace time only
+            eff = active & ~ds.finished
+            st, info = ppd_decode_step(
+                self.params, self.ppd, self.cfg, self.bufs, st, m=self.m,
+                n_ept=self.n_ept, active=eff,
+                attn_backend=self.attn_backend)
+            return st, _commit(ds, st, info, eff)
+
+        def _sampled_dev_impl(st, ds, keys, active, temps, tks, tps):
+            self.trace_counts["sampled"] += 1
+            eff = active & ~ds.finished
+            st, info = ppd_decode_step(
+                self.params, self.ppd, self.cfg, self.bufs, st, m=self.m,
+                n_ept=self.n_ept, temperature=temps, key=keys, active=eff,
+                top_k=tks, top_p=tps, attn_backend=self.attn_backend)
+            return st, _commit(ds, st, info, eff)
+
+        self._step_greedy_dev = jax.jit(_greedy_dev_impl,
+                                        donate_argnums=_donate(0, 1))
+        self._step_dev = jax.jit(_sampled_dev_impl,
+                                 donate_argnums=_donate(0, 1))
 
     def _init_state(self, cache, first):
         self.state = init_ppd_state(self.cfg, cache, first, self.m,
@@ -294,6 +459,10 @@ class PPDStrategy(DecodeStrategy):
         self.state = self.state._replace(
             cache=_maybe_release(self.state.cache, slot))
 
+    def release_many(self, slots):
+        self.state = self.state._replace(
+            cache=_maybe_release_many(self.state.cache, list(slots)))
+
     def pool_cache(self):
         return self.state.cache
 
@@ -305,8 +474,10 @@ class PPDStrategy(DecodeStrategy):
             self.state, info = self._step(self.state, keys,
                                           jnp.asarray(active), temps,
                                           top_k, top_p)
-        ptok = np.asarray(info["accepted_path_tokens"])
-        bonus = np.asarray(self.state.root_token)
+        ptok, bonus = host_sync.device_get(
+            (info["accepted_path_tokens"], self.state.root_token),
+            label="step")
+        ptok, bonus = np.asarray(ptok), np.asarray(bonus)
         out = []
         for i, live in enumerate(active):
             if not live:
@@ -318,6 +489,17 @@ class PPDStrategy(DecodeStrategy):
         # chain archs run a second (commit) forward per step
         return out, 2 if is_chain_arch(self.cfg) else 1
 
+    def decode_deferred(self, active, keys, temps, top_k, top_p):
+        act = jnp.asarray(active)
+        if temps is None:
+            self.state, self.dslots = self._step_greedy_dev(
+                self.state, self.dslots, act)
+        else:
+            self.state, self.dslots = self._step_dev(
+                self.state, self.dslots, keys, act, temps, top_k, top_p)
+        self.dispatched_steps += 1
+        return 2 if is_chain_arch(self.cfg) else 1
+
 
 class MedusaStrategy(DecodeStrategy):
     """Decoding-head baseline [Cai et al. 2024]: tree decode with
@@ -326,6 +508,7 @@ class MedusaStrategy(DecodeStrategy):
 
     name = "medusa"
     supports_sampling = False
+    supports_device_state = True
 
     def __init__(self, params, heads, cfg: ModelConfig, *, m=3,
                  tree_states=None, attn_backend=None):
@@ -345,9 +528,36 @@ class MedusaStrategy(DecodeStrategy):
                            for s in tree_states]
         self.bufs = device_buffers(tree_states, m)
         self._fn = medusa_decode_step
-        self._step = jax.jit(lambda st, active: self._fn(
-            self.params, self.heads, self.cfg, self.bufs, st, m=self.m,
-            active=active, attn_backend=self.attn_backend))
+        # greedy-only strategy: "sampled" stays 0 by construction
+        self.trace_counts = {"greedy": 0, "sampled": 0}
+
+        def _greedy_impl(st, active):
+            self.trace_counts["greedy"] += 1     # runs at trace time only
+            return self._fn(self.params, self.heads, self.cfg, self.bufs,
+                            st, m=self.m, active=active,
+                            attn_backend=self.attn_backend)
+
+        self._step = jax.jit(_greedy_impl)
+
+        def _commit(ds, st, info, eff):
+            ptok = info["accepted_path_tokens"]
+            path = ptok[:, 1:]
+            root = st.root_token
+            toks = jnp.concatenate([path, root[:, None]], axis=1)
+            valid = jnp.concatenate(
+                [path >= 0, jnp.ones((path.shape[0], 1), bool)], axis=1)
+            return slot_state.commit_tokens(ds, toks, valid, eff)
+
+        def _greedy_dev_impl(st, ds, active):
+            self.trace_counts["greedy"] += 1     # runs at trace time only
+            eff = active & ~ds.finished
+            st, info = self._fn(self.params, self.heads, self.cfg,
+                                self.bufs, st, m=self.m, active=eff,
+                                attn_backend=self.attn_backend)
+            return st, _commit(ds, st, info, eff)
+
+        self._step_greedy_dev = jax.jit(_greedy_dev_impl,
+                                        donate_argnums=_donate(0, 1))
 
     def _kmax(self):
         return self.bufs.get("_kmax", 10)
@@ -398,13 +608,19 @@ class MedusaStrategy(DecodeStrategy):
         self.state = self.state._replace(
             cache=_maybe_release(self.state.cache, slot))
 
+    def release_many(self, slots):
+        self.state = self.state._replace(
+            cache=_maybe_release_many(self.state.cache, list(slots)))
+
     def pool_cache(self):
         return self.state.cache
 
     def decode(self, active, keys, temps, top_k, top_p):
         self.state, info = self._step(self.state, jnp.asarray(active))
-        ptok = np.asarray(info["accepted_path_tokens"])
-        bonus = np.asarray(self.state.root_token)
+        ptok, bonus = host_sync.device_get(
+            (info["accepted_path_tokens"], self.state.root_token),
+            label="step")
+        ptok, bonus = np.asarray(ptok), np.asarray(bonus)
         out = []
         for i, live in enumerate(active):
             if not live:
@@ -414,6 +630,13 @@ class MedusaStrategy(DecodeStrategy):
             toks.append(bonus[i])
             out.append(toks)
         return out, 1
+
+    def decode_deferred(self, active, keys, temps, top_k, top_p):
+        assert temps is None, "medusa is greedy-only"
+        self.state, self.dslots = self._step_greedy_dev(
+            self.state, self.dslots, jnp.asarray(active))
+        self.dispatched_steps += 1
+        return 1
 
 
 class SpecDecodeStrategy(DecodeStrategy):
@@ -449,13 +672,15 @@ class SpecDecodeStrategy(DecodeStrategy):
         self._slots = {}
 
     def bind(self, batch_size, capacity, *, kv="ring", block_size=16,
-             num_blocks=None, pool=False):
+             num_blocks=None, pool=False, harvest_every=1,
+             max_stops=DEFAULT_MAX_STOPS):
         if kv != "ring":
             raise ValueError("decode='ppd+spec' requires kv='ring': the "
                              "per-slot target/draft caches are "
                              "self-managed rings, not pool blocks")
         super().bind(batch_size, capacity, kv=kv, block_size=block_size,
-                     num_blocks=num_blocks, pool=pool)
+                     num_blocks=num_blocks, pool=pool,
+                     harvest_every=harvest_every, max_stops=max_stops)
         self.sd.capacity = capacity
 
     def _init_pool(self):
