@@ -101,15 +101,62 @@ def bench_backend(name, S, iters):
     return rec
 
 
+def bench_prefill_shape(name, S, Tq, iters):
+    """One chunked-prefill attention call: Tq chunk queries (causal
+    intra-chunk) against an S-slot prior cache — the per-layer hot spot
+    of a ``prefill_chunk=Tq`` scheduler tick.  The ref path materializes
+    a [B, Tq, S+Tq] mask + concat (temp bytes scale with Tq*S); the
+    pallas kernel streams the cache."""
+    be = get_backend(name)
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q = jax.random.normal(ks[0], (B, Tq, H, D))
+    k_cache = jax.random.normal(ks[1], (B, S, HKV, D))
+    v_cache = jax.random.normal(ks[2], (B, S, HKV, D))
+    k_self = jax.random.normal(ks[3], (B, Tq, HKV, D))
+    v_self = jax.random.normal(ks[4], (B, Tq, HKV, D))
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    q_pos = S + jnp.broadcast_to(jnp.arange(Tq), (B, Tq)).astype(jnp.int32)
+    args = (q, k_cache, v_cache, kv_pos, q_pos, k_self, v_self)
+
+    def step(*a):
+        return be.cache_decode(*a)
+
+    fn = jax.jit(step)
+    mem = fn.lower(*args).compile().memory_analysis()
+    fn(*args).block_until_ready()
+    peak0 = device_peak_bytes()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    wall_ms = (time.perf_counter() - t0) / iters * 1e3
+    peak1 = device_peak_bytes()
+    return {
+        "backend": name,
+        "op": "prefill",
+        "S": S,
+        "Tq": Tq,
+        "wall_ms": wall_ms,
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "device_peak_delta_bytes": (peak1 - peak0
+                                    if peak0 is not None else None),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", default="1024,8192,32768",
                     help="comma-separated cache sizes S")
+    ap.add_argument("--prefill-tq", default="128,512",
+                    help="chunk sizes for the prefill-shape sweep")
     ap.add_argument("--fast", action="store_true", help="S=1024 only")
     ap.add_argument("--iters", type=int, default=10)
     args = ap.parse_args()
     sizes = [1024] if args.fast else [int(s) for s in
                                       args.sizes.split(",")]
+    tqs = [int(t) for t in args.prefill_tq.split(",")]
 
     platform = jax.devices()[0].platform
     out = {
@@ -126,6 +173,19 @@ def main():
               f"pallas {pal['wall_ms']:8.2f} ms "
               f"temp {pal['temp_bytes'] / 2**20:7.1f} MiB")
         out["records"].extend(recs)
+
+    # prefill shapes: chunked-prefill ticks at the smallest cache size
+    # (--fast) or every swept size
+    for S in ([sizes[0]] if args.fast else sizes):
+        for Tq in tqs:
+            recs = [bench_prefill_shape(n, S, Tq, args.iters)
+                    for n in ("ref", "pallas")]
+            ref, pal = recs
+            print(f"S={S:6d} Tq={Tq:4d}  ref {ref['wall_ms']:8.2f} ms "
+                  f"temp {ref['temp_bytes'] / 2**20:7.1f} MiB | "
+                  f"pallas {pal['wall_ms']:8.2f} ms "
+                  f"temp {pal['temp_bytes'] / 2**20:7.1f} MiB")
+            out["records"].extend(recs)
 
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "bench_attention.json")

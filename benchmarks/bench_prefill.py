@@ -1,0 +1,252 @@
+"""Chunked prefill vs blocking batch-1 prefill on a mixed trace.
+
+The head-of-line case: a stream of short chat requests with one long
+document prompt dropped in the middle.  With ``prefill_chunk=0`` the
+continuous scheduler prefills the long prompt in one blocking batch-1
+forward — every decode slot stalls for its full wall time and every
+request admitted behind it inherits the stall in its TTFT.  With
+``prefill_chunk=C`` the prompt is split into C-token chunks fused into
+the regular decode ticks (up to ``prefill_parallelism`` chunks per
+tick), so short requests keep decoding and newly admitted ones get
+their first token after a couple of ticks instead of after the whole
+document.
+
+Runs the continuous vanilla engine over the same trace for each
+``--chunks`` entry, checks token-identical outputs, and records
+TTFT/TPOT/goodput — aggregate and *chat-only* (the short interactive
+requests; the long ingestion request is throughput traffic, not a
+latency victim) — to ``benchmarks/results/bench_prefill.json``.
+
+``--check`` exits non-zero unless, for the first non-zero chunk size:
+  * outputs are token-identical to the unchunked run,
+  * chat p99 TTFT improves by >= 2x over prefill_chunk=0,
+  * chat mean TPOT regresses by <= 10%.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_prefill.py --fast --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+class _RandomPrompts:
+    """pipe.val_prompts-compatible source of synthetic token prompts."""
+
+    def __init__(self, vocab, seed=0):
+        self.vocab = vocab
+        self.rng = np.random.default_rng(seed)
+
+    def val_prompts(self, n, plen):
+        return [self.rng.integers(0, self.vocab, size=plen,
+                                  dtype=np.int64) for _ in range(n)]
+
+
+def build_trace(cfg, n_short, short_len, short_news, n_long, long_len,
+                long_new, lead):
+    """The head-of-line arrangement: the first ``lead`` (= batch) shorts
+    fill the slots, the long prompt is queued right behind them, and the
+    remaining shorts queue BEHIND the long — under FCFS they are
+    admitted after it, so with blocking prefill their TTFT inherits the
+    long's full prefill wall, while the slot-filling shorts eat the
+    stall mid-decode (TPOT).  Staggered short budgets keep retires (and
+    hence admissions) spread out."""
+    try:                                   # script: benchmarks/ on path
+        from common import mixed_prompt_trace
+    except ImportError:                    # package: python -m benchmarks...
+        from benchmarks.common import mixed_prompt_trace
+    trace = mixed_prompt_trace(_RandomPrompts(cfg.vocab_size),
+                               n_short=n_short, short_len=short_len,
+                               short_new=0, n_long=n_long,
+                               long_len=long_len, long_new=long_new,
+                               lead=lead)
+    out = []
+    si = 0
+    for prompt, max_new in trace:
+        if max_new == 0:                       # a short: stagger budgets
+            out.append((prompt, short_news[si % len(short_news)], True))
+            si += 1
+        else:
+            out.append((prompt, max_new, False))
+    return out
+
+
+def run_engine(params, cfg, trace, chunk, capacity, batch, parallelism,
+               reps):
+    import jax
+
+    from repro.serving import EngineConfig, LLMEngine, SamplingParams
+
+    llm = LLMEngine(EngineConfig(decode="vanilla", scheduler="continuous",
+                                 kv="ring", capacity=capacity,
+                                 batch_size=batch, prefill_chunk=chunk,
+                                 prefill_parallelism=parallelism),
+                    params=params, cfg=cfg)
+
+    def once():
+        for uid, (prompt, max_new, _) in enumerate(trace):
+            llm.add_request(prompt, SamplingParams(max_tokens=max_new),
+                            request_id=uid)
+        res = llm.engine.run()
+        jax.block_until_ready(llm.strategy.pool_cache())
+        llm.drain_results()
+        return res
+
+    # warmup rep pays every compile; its outputs feed the parity check
+    res = once()
+    toks = {r.uid: np.asarray(r.tokens) for r in res}
+    walls, aggs = [], []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        res = once()
+        walls.append(time.perf_counter() - t0)
+        aggs.append(_metrics(llm, res, trace))
+    # median-wall rep's metrics (timer-noise robust)
+    mid = walls.index(sorted(walls)[len(walls) // 2])
+    rec = dict(chunk=chunk, wall_s=walls[mid], wall_s_reps=walls,
+               **aggs[mid])
+    return rec, toks
+
+
+def _metrics(llm, results, trace):
+    import math
+    agg = llm.metrics(results)
+    chat_uids = {i for i, (_, _, is_short) in enumerate(trace) if is_short}
+    chat = [r for r in results if r.uid in chat_uids]
+    ttfts = [r.ttft_s for r in chat]
+    tpots = [r.tpot_s for r in chat if not math.isnan(r.tpot_s)]
+    return dict(
+        goodput_tok_s=agg["goodput_tok_s"],
+        mean_ttft_s=agg["mean_ttft_s"],
+        p50_ttft_s=agg["p50_ttft_s"],
+        p99_ttft_s=agg["p99_ttft_s"],
+        mean_queue_wait_s=agg["mean_queue_wait_s"],
+        mean_prefill_s=agg["mean_prefill_s"],
+        mean_tpot_s=agg["mean_tpot_s"],
+        chat_p50_ttft_s=float(np.percentile(ttfts, 50)),
+        chat_p99_ttft_s=float(np.percentile(ttfts, 99)),
+        chat_mean_tpot_s=sum(tpots) / max(len(tpots), 1),
+        prefill_chunks=llm.engine.stats.get("prefill_chunks", 0),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--chunks", default="0,128,512",
+                    help="prefill_chunk sweep (0 = blocking batch-1)")
+    ap.add_argument("--prefill-parallelism", type=int, default=2)
+    ap.add_argument("--n-short", type=int, default=7,
+                    help="batch slot-fillers + (n_short - batch) queued "
+                         "behind the long prompt")
+    ap.add_argument("--short-len", type=int, default=16)
+    ap.add_argument("--short-news", default="8,12,16,24",
+                    help="cycled chat max_new_tokens (staggers retires)")
+    ap.add_argument("--n-long", type=int, default=1)
+    ap.add_argument("--long-len", type=int, default=4096)
+    ap.add_argument("--long-new", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--fast", action="store_true",
+                    help="CPU smoke: shorter budgets, 2 reps")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless outputs match, chat p99 TTFT "
+                         "improves >= 2x, and chat TPOT regresses <= 10% "
+                         "for the first non-zero chunk size")
+    args = ap.parse_args()
+    if args.fast:
+        args.short_news = "6,8,10,12"
+        args.reps = 2
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    chunks = [int(x) for x in args.chunks.split(",")]
+    short_news = [int(x) for x in args.short_news.split(",")]
+    capacity = args.long_len + args.long_new + 16
+    trace = build_trace(cfg, args.n_short, args.short_len, short_news,
+                        args.n_long, args.long_len, args.long_new,
+                        lead=args.batch)
+
+    records, toks = {}, {}
+    for chunk in chunks:
+        records[chunk], toks[chunk] = run_engine(
+            params, cfg, trace, chunk, capacity, args.batch,
+            args.prefill_parallelism, args.reps)
+        r = records[chunk]
+        print(f"chunk={chunk:4d}: chat p99 TTFT {r['chat_p99_ttft_s']:.3f}s"
+              f"  chat TPOT {r['chat_mean_tpot_s'] * 1e3:.2f}ms"
+              f"  goodput {r['goodput_tok_s']:.1f} tok/s"
+              f"  (queue {r['mean_queue_wait_s']:.3f}s"
+              f" / prefill {r['mean_prefill_s']:.3f}s)")
+
+    base = chunks[0]
+    identical = all(
+        set(toks[c]) == set(toks[base]) and
+        all(np.array_equal(toks[c][u], toks[base][u]) for u in toks[base])
+        for c in chunks[1:])
+    print(f"outputs identical across chunk sizes: {identical}")
+
+    out = {
+        "arch": cfg.name,
+        "platform": jax.devices()[0].platform,
+        "trace": {"n_short": args.n_short, "short_len": args.short_len,
+                  "short_news": short_news, "n_long": args.n_long,
+                  "long_len": args.long_len, "long_new": args.long_new,
+                  "batch": args.batch, "capacity": capacity,
+                  "prefill_parallelism": args.prefill_parallelism},
+        "records": list(records.values()),
+        "outputs_identical": identical,
+        "reps": args.reps,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "bench_prefill.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+    if args.check:
+        target = next((c for c in chunks if c), None)
+        if target is None or 0 not in records:
+            print("CHECK FAILED: need chunk 0 and one non-zero chunk",
+                  file=sys.stderr)
+            return 1
+        b, c = records[0], records[target]
+        ratio = b["chat_p99_ttft_s"] / max(c["chat_p99_ttft_s"], 1e-9)
+        tpot_gap = (c["chat_mean_tpot_s"] /
+                    max(b["chat_mean_tpot_s"], 1e-9) - 1.0)
+        if not identical:
+            print("CHECK FAILED: chunked outputs differ from unchunked",
+                  file=sys.stderr)
+            return 1
+        if ratio < 2.0:
+            print(f"CHECK FAILED: chunk={target} chat p99 TTFT improved "
+                  f"only {ratio:.2f}x (need >= 2x): "
+                  f"{b['chat_p99_ttft_s']:.3f}s -> "
+                  f"{c['chat_p99_ttft_s']:.3f}s", file=sys.stderr)
+            return 1
+        if tpot_gap > 0.10:
+            print(f"CHECK FAILED: chunk={target} chat TPOT regressed "
+                  f"{tpot_gap:+.1%} (bound +10%): "
+                  f"{b['chat_mean_tpot_s'] * 1e3:.2f}ms -> "
+                  f"{c['chat_mean_tpot_s'] * 1e3:.2f}ms", file=sys.stderr)
+            return 1
+        print(f"check passed: chunk={target} chat p99 TTFT {ratio:.1f}x "
+              f"better, chat TPOT {tpot_gap:+.1%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -175,5 +175,32 @@ def measure_acc_curve(params, guess_fn, cfg, pipe, m=M, n_prompts=8,
     return hits / max(total, 1)
 
 
+def mixed_prompt_trace(pipe, n_short=9, short_len=16, short_new=24,
+                       n_long=3, long_len=256, long_new=8, lead=None):
+    """Mixed serving trace: mostly short chat turns with a few long-prompt
+    requests interleaved among them — the head-of-line pattern where a
+    blocking batch-1 prefill stalls every decode slot (the case chunked
+    prefill exists for).  Returns ``[(prompt, max_new_tokens), ...]`` in
+    arrival order.  ``lead`` shorts precede the first long (default: the
+    ``n_short // n_long`` stride, which also spaces subsequent longs) —
+    set it to the engine's slot count so the first long queues exactly
+    behind the slot-filling shorts and every later short queues behind
+    the long."""
+    shorts = pipe.val_prompts(n_short, short_len)
+    longs = pipe.val_prompts(n_long, long_len)
+    stride = max(n_short // max(n_long, 1), 1)
+    nxt = stride if lead is None else lead
+    out, li = [], 0
+    for i in range(n_short):
+        out.append((shorts[i], short_new))
+        if li < n_long and (i + 1) == nxt:
+            out.append((longs[li], long_new))
+            li += 1
+            nxt += stride
+    for j in range(li, n_long):
+        out.append((longs[j], long_new))
+    return out
+
+
 def csv_line(*fields):
     print(",".join(str(f) for f in fields), flush=True)

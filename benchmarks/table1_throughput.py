@@ -104,10 +104,15 @@ def run_serving(fast: bool = False):
         [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
          for i in range(len(lens))], rate_per_s=8.0, seed=0)
 
+    # (label, scheduler, prefill_chunk): the chunked row shows the
+    # head-of-line fix — same outputs, TTFT split into queue vs prefill
+    modes = (("static", "static", 0), ("continuous", "continuous", 0),
+             ("continuous_chunked", "continuous", 16))
     rows = {}
-    for mode in ("static", "continuous"):
+    for label, mode, chunk in modes:
         llm = LLMEngine(EngineConfig(decode="ppd", scheduler=mode, m=M,
-                                     batch_size=slots, capacity=capacity),
+                                     batch_size=slots, capacity=capacity,
+                                     prefill_chunk=chunk),
                         params=params, cfg=cfg, ppd_params=ppd)
         for r in reqs:
             llm.add_request(r.prompt,
@@ -118,20 +123,29 @@ def run_serving(fast: bool = False):
         makespan = time.perf_counter() - t0
         agg = (llm.metrics(res) if mode == "continuous"
                else aggregate_metrics(res, makespan))
-        rows[mode] = dict(
+        rows[label] = dict(
             forward_passes=llm.total_forward_passes,
             goodput_tok_s=agg["goodput_tok_s"],
             mean_ttft_s=agg["mean_ttft_s"],
+            p50_ttft_s=agg["p50_ttft_s"],
+            p99_ttft_s=agg["p99_ttft_s"],
+            mean_queue_wait_s=agg["mean_queue_wait_s"],
+            mean_prefill_s=agg["mean_prefill_s"],
             mean_tpot_s=agg["mean_tpot_s"],
             total_tokens=agg["total_tokens"],
             outputs={r.uid: r.tokens.tolist() for r in res})
 
-    same = rows["static"]["outputs"] == rows["continuous"]["outputs"]
+    same = all(rows[label]["outputs"] == rows["static"]["outputs"]
+               for label, _, _ in modes)
     csv_line("table1_serving", "scheduler", "fwd_passes", "goodput_tok_s",
-             "mean_ttft_s", "mean_tpot_s", "output_same_as_static")
-    for mode, r in rows.items():
-        csv_line("table1_serving", mode, r["forward_passes"],
+             "mean_ttft_s", "p50_ttft_s", "p99_ttft_s", "queue_wait_s",
+             "prefill_s", "mean_tpot_s", "output_same_as_static")
+    for label, r in rows.items():
+        csv_line("table1_serving", label, r["forward_passes"],
                  f"{r['goodput_tok_s']:.2f}", f"{r['mean_ttft_s']:.3f}",
+                 f"{r['p50_ttft_s']:.3f}", f"{r['p99_ttft_s']:.3f}",
+                 f"{r['mean_queue_wait_s']:.3f}",
+                 f"{r['mean_prefill_s']:.3f}",
                  f"{r['mean_tpot_s']:.4f}", same)
         r.pop("outputs")
         r["same_output"] = bool(same)

@@ -389,12 +389,18 @@ def ppd_decode_step(params, ppd_params, cfg: ModelConfig, bufs, state: PPDState,
 def vanilla_decode_step(params, cfg: ModelConfig, cache, token, *,
                         temperature=0.0, key=None,
                         moe_exact: bool = True, active=None,
-                        attn_backend=None, top_k=None, top_p=None):
+                        attn_backend=None, top_k=None, top_p=None,
+                        mask_writes: bool = False):
     """Plain autoregressive baseline step (1 token).
 
     ``active`` ([B] bool, optional): retired slots keep their cache length
     frozen and echo their input token back (continuous batching).  Chain
     architectures additionally freeze the recurrent state via a dt mask.
+    ``mask_writes`` (static) routes *all* architectures through the
+    commit-masked forward so inactive rows write NO K/V at all — required
+    when an inactive row may be mid-chunked-prefill: its frozen length is
+    exactly the next chunk's write offset, so an unmasked decode write
+    would land a valid-pos garbage entry right where the chunk reads.
     ``temperature`` is a python float (whole batch) or a per-row [B]
     array — rows with temperature 0 take the greedy argmax, sampled rows
     draw through the optional ``top_k`` / ``top_p`` filters.
@@ -404,7 +410,7 @@ def vanilla_decode_step(params, cfg: ModelConfig, cache, token, *,
     old_len = cache["length"]
     pos = old_len[:, None]
     commit_mask = None
-    if active is not None and is_chain_arch(cfg):
+    if active is not None and (mask_writes or is_chain_arch(cfg)):
         commit_mask = active[:, None]
     logits, cache, _, _ = forward(params, cfg, tok, positions=pos,
                                   cache=cache, moe_exact=moe_exact,

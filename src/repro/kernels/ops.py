@@ -82,3 +82,30 @@ def tree_decode_attention(q, k_cache, v_cache, kv_pos, k_tree, v_tree,
                           q_pos, tree_mask, window=window, blk_s=blk,
                           interpret=interp, scale=scale, softcap=softcap,
                           q2=q2, k2_cache=k2_cache, k2_tree=k2_tree)
+
+
+def prefill_attention(q, k_cache, v_cache, kv_pos, k_chunk, v_chunk, q_pos,
+                      *, window: int = 0, blk_s: int = 256,
+                      use_kernel: bool = True, interpret: bool | None = None,
+                      scale=None, softcap: float = 0.0, q2=None,
+                      k2_cache=None, k2_chunk=None, block_tables=None):
+    """Chunked-prefill attention: ``Tq`` chunk queries attend causally over
+    the (optionally paged) prior context *plus each other*.
+
+    A thin shim over :func:`tree_decode_attention` — the chunk's own K/V
+    ride as the tree tail under a causal (+sliding-window) intra-chunk
+    mask built from ``q_pos``, while the kernel's per-query
+    ``kv_pos <= q_pos`` check handles the prior context, so no
+    [B,Tq,S+Tq] mask or cache concat is ever materialized.  Use when the
+    chunk K/V have *not* yet been scattered into the cache; once they are
+    committed, a fully-masked tail (see
+    ``PallasBackend.cache_decode``) covers the same math."""
+    tm = q_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        tm &= q_pos[:, None, :] > (q_pos[:, :, None] - window)
+    return tree_decode_attention(q, k_cache, v_cache, kv_pos, k_chunk,
+                                 v_chunk, q_pos, tm, window=window,
+                                 blk_s=blk_s, use_kernel=use_kernel,
+                                 interpret=interpret, scale=scale,
+                                 softcap=softcap, q2=q2, k2_cache=k2_cache,
+                                 k2_tree=k2_chunk, block_tables=block_tables)

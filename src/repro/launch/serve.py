@@ -105,6 +105,16 @@ def main():
     ap.add_argument("--prefill-bucket", type=int, default=0,
                     help="round per-slot prefills up to a multiple of "
                          "this to bound recompiles (0 = exact length)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill (continuous mode): split each "
+                         "prompt into chunks of this many tokens and "
+                         "interleave them with decode so a long prompt "
+                         "no longer stalls the decode slots (0 = legacy "
+                         "blocking batch-1 prefill)")
+    ap.add_argument("--prefill-parallelism", type=int, default=2,
+                    help="max pending prefill chunks fused into one "
+                         "forward per tick (Sarathi-style token budget = "
+                         "prefill_chunk * prefill_parallelism)")
     ap.add_argument("--harvest-every", type=int, default=1,
                     help="async host loop: sync device-side tokens/stop "
                          "state to the host every K decode steps (>= 1; "

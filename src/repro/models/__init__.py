@@ -3,8 +3,11 @@ from .config import (ATTN, FULL, MLA, RGLRU, SLIDING, SSM, LayerSpec,
                      MLAConfig, ModelConfig, MoEConfig, RGLRUConfig,
                      SSMConfig, layer_specs, param_count)
 from .model import (embed_tokens, forward, init_cache, init_params,
-                    mtp_logits, trim_cache, unembed, write_cache_rows)
-from .paged_cache import (copy_blocks, is_paged_cache, num_seq_blocks,
+                    mtp_logits, reset_cache_rows, slice_cache_rows,
+                    trim_cache, unembed, write_cache_rows)
+from .paged_cache import (begin_prefill_row, copy_blocks, is_paged_cache,
+                          merge_prefill_rows, num_seq_blocks,
                           paged_block_bytes, release_slot, release_slots,
                           ring_cache_bytes, set_block_table_row,
-                          write_prefill_blocks)
+                          slice_prefill_rows, write_prefill_blocks,
+                          write_prefill_chunk)

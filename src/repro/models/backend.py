@@ -21,8 +21,8 @@ Backends:
   accumulator, folding the tree tail in as the final grid step.  No cache
   concat, no [B,T,S+T] mask, no staged copy of the cache — the per-step
   HBM traffic is the cache read itself, which is the bandwidth floor.
-  Non-hot-path shapes (prefill, extra-masked commits) fall back to the
-  ref math unchanged.
+  Prefill (whole-prompt and chunked, T > 1) streams through the same
+  kernel; only extra-masked commits fall back to the ref math.
 
 Selection is per-call — a string (or backend instance) threaded from the
 engine / CLI through ``forward`` — never an import-time global, so one
@@ -196,12 +196,15 @@ class RefBackend(AttentionBackend):
 class PallasBackend(AttentionBackend):
     """Flash tree-decode kernel path (interpret mode off-TPU).
 
-    ``tree_decode`` maps 1:1 onto the kernel.  ``cache_decode`` covers the
-    vanilla single-token step: K/V are already committed to the ring, so
-    the step's own K/V ride along as a fully-masked tree tail (a bit-exact
-    no-op of the online softmax) and the kernel reads the cache in place.
-    Shapes outside the decode hot path (T > 1 commits = prefill, or
-    extra-masked commits) defer to the ref math.
+    ``tree_decode`` maps 1:1 onto the kernel.  ``cache_decode`` covers
+    committed attention at any T: K/V are already scattered into the
+    cache, so each query finds itself (and, causally, the rest of its
+    chunk) there via the kernel's per-query ``kv_pos <= q_pos`` mask,
+    while the call's own K/V ride along as a fully-masked tree tail (a
+    bit-exact no-op of the online softmax).  T == 1 is the vanilla decode
+    step; T > 1 is prefill — whole-prompt or chunked — streamed through
+    the same kernel with no [B,T,S] mask materialized.  Extra-masked
+    commits (arbitrary visibility edits) defer to the ref math.
     """
 
     def tree_decode(self, q, k_cache, v_cache, kv_pos, k_tree, v_tree,
@@ -229,16 +232,18 @@ class PallasBackend(AttentionBackend):
                      q_chunk=0, extra_mask=None, q2=None, k2_cache=None,
                      k2_self=None, bt=None):
         B, T = q.shape[:2]
-        if T != 1 or extra_mask is not None:
-            # prefill / masked commit: not the decode hot path
+        if extra_mask is not None:
+            # masked commit (arbitrary visibility): not expressible as
+            # cache-causal + tree tail — defer to the ref math.
             return get_backend("ref").cache_decode(
                 q, k_cache, v_cache, kv_pos, q_pos, k_self, v_self,
                 window=window, scale=scale, softcap=softcap,
                 q_chunk=q_chunk, extra_mask=extra_mask, q2=q2,
                 k2_cache=k2_cache, k2_self=k2_self, bt=bt)
-        # single-token decode: the token is already in the ring (committed
-        # before this call), so mask the tail off entirely.
-        tm = jnp.zeros((B, 1, 1), bool)
+        # committed decode/prefill: the tokens are already in the cache
+        # (scattered before this call), so mask the tail off entirely and
+        # let the kernel's per-query causal cache mask do the work.
+        tm = jnp.zeros((B, T, T), bool)
         if bt is not None:
             _, kv_pos = gather_view(bt, kv_pos, ())
         _record(backend=self.name, op="cache_decode", paged=bt is not None,

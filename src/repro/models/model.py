@@ -212,6 +212,55 @@ def write_cache_rows(cfg: ModelConfig, cache, rows, index):
     return _map_cache(cfg, put, cache, rows)
 
 
+def slice_cache_rows(cfg: ModelConfig, cache, index, n: int = 1):
+    """Rows ``[index, index+n)`` of a (ring) cache as a batch-``n``
+    cache — the read-side complement of :func:`write_cache_rows`
+    (``index`` may be traced)."""
+    def take(ax, leaf):
+        return jax.lax.dynamic_slice_in_dim(leaf, index, n, axis=ax)
+    return _map_cache(cfg, take, cache)
+
+
+def _reset_rows_impl(cache, slot, start):
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    body = {k: v for k, v in cache.items() if k != "length"}
+
+    def f(path, leaf):
+        last = path[-1]
+        if isinstance(last, DictKey) and last.key == "pos":
+            if leaf.ndim == 3:                     # scan-stacked [rep,B,C]
+                return leaf.at[:, slot].set(-1)
+            return leaf.at[slot].set(-1)
+        return leaf
+
+    out = tree_map_with_path(f, body)
+    out["length"] = cache["length"].at[slot].set(start)
+    return out
+
+
+_reset_rows_jit = jax.jit(_reset_rows_impl)
+
+
+def reset_cache_rows(cfg: ModelConfig, cache, slot, start: int = 0):
+    """Invalidate one ring row in place: ``pos[slot] = -1`` on every
+    attention entry and ``length[slot] = start``.
+
+    This is the chunked-prefill ``prefill_begin`` primitive — a retired
+    slot's ring row keeps stale positions (release is host-side only),
+    and the ring scatter records positions with ``.max``, so a chunk
+    written over a longer previous occupant would otherwise lose its
+    position records to the stale ones.  One jitted dispatch, shape-
+    stable in ``slot``/``start``.  Ring caches only (paged rows are
+    re-armed through the block table instead)."""
+    from .paged_cache import is_paged_cache
+    if is_paged_cache(cache):
+        raise ValueError("reset_cache_rows on a paged cache; arm blocks "
+                         "via paged_cache.begin_prefill_row")
+    del cfg
+    return _reset_rows_jit(cache, jnp.int32(slot), jnp.int32(start))
+
+
 def trim_cache(cfg: ModelConfig, cache, lengths):
     """Invalidate cached tokens at positions >= ``lengths`` (per row) and
     set per-row ``length``.

@@ -244,6 +244,79 @@ def write_prefill_blocks(cfg: ModelConfig, cache, row_cache, slot: int,
                        jnp.asarray(table), np.int32(plen))
 
 
+# ------------------------------------------------------- chunked prefill
+def _begin_impl(cache, slot, table, start):
+    out = dict(cache)
+    out["layers"] = [
+        dict(e, bt=e["bt"].at[slot].set(table)) if is_paged_entry(e) else e
+        for e in cache["layers"]]
+    out["length"] = cache["length"].at[slot].set(start)
+    return out
+
+
+_begin_jit = jax.jit(_begin_impl)
+
+
+def begin_prefill_row(cache, slot: int, shared_ids, start: int):
+    """Start a chunked prefill on ``slot``: point the table row at the
+    prefix-shared blocks (their pool content is already valid — K/V at
+    position p depend only on tokens <= p, so they are NOT recomputed)
+    and set ``length[slot] = start`` (= ``len(shared_ids) * block_size``).
+    The rest of the row is cleared to -1 so no stale table entry from a
+    previous occupant is ever read.  One jitted dispatch, shape-stable."""
+    MB = next(e["bt"].shape[1] for e in cache["layers"]
+              if is_paged_entry(e))
+    table = np.full((MB,), -1, np.int32)
+    table[:len(shared_ids)] = np.asarray(shared_ids, np.int32)
+    return _begin_jit(cache, np.int32(slot), jnp.asarray(table),
+                      np.int32(start))
+
+
+def _arm_impl(cache, slot, idxs, bids, clear_ids):
+    out = dict(cache)
+    new_layers = []
+    for entry in cache["layers"]:
+        if not is_paged_entry(entry):
+            new_layers.append(entry)
+            continue
+        e = dict(entry)
+        e["pos"] = entry["pos"].at[clear_ids].set(-1, mode="drop")
+        e["bt"] = entry["bt"].at[slot, idxs].set(bids, mode="drop")
+        new_layers.append(e)
+    out["layers"] = new_layers
+    return out
+
+
+_arm_jit = jax.jit(_arm_impl)
+
+
+def write_prefill_chunk(cache, slot: int, entries, clear_bids):
+    """Arm one prefill chunk's target blocks so the fused chunk forward
+    scatters its K/V *directly into the pool* (offset-aware: the chunk's
+    positions route through the freshly installed table entries) — the
+    dense ``row_cache`` splice is off the chunked serving hot path.
+
+    ``entries`` is ``[(table_idx, block_id), ...]`` for the blocks this
+    chunk's token span touches; ``clear_bids`` are the freshly-popped
+    pool blocks whose stale ``pos`` records (from previous owners) must
+    be invalidated before the chunk's causal read.  Both vectors are
+    padded to the table span MB with out-of-range indices, so every call
+    hits one compiled program regardless of chunk/entry counts."""
+    MB = next(e["bt"].shape[1] for e in cache["layers"]
+              if is_paged_entry(e))
+    NB = next(e["pos"].shape[0] for e in cache["layers"]
+              if is_paged_entry(e))
+    idxs = np.full((MB,), MB, np.int32)          # MB = OOB -> mode="drop"
+    bids = np.zeros((MB,), np.int32)
+    for i, (ti, bid) in enumerate(entries):
+        idxs[i] = ti
+        bids[i] = bid
+    clear = np.full((MB,), NB, np.int32)         # NB = OOB -> mode="drop"
+    clear[:len(clear_bids)] = np.asarray(list(clear_bids), np.int32)
+    return _arm_jit(cache, np.int32(slot), jnp.asarray(idxs),
+                    jnp.asarray(bids), jnp.asarray(clear))
+
+
 def release_slot(cache, slot: int):
     """Clear a retired slot's block-table row (every paged layer).
 
@@ -325,6 +398,44 @@ def set_block_table_row(cache, slot: int, block_ids):
                                    jnp.asarray(table))))
     out["layers"] = new_layers
     return out
+
+
+def slice_prefill_rows(cache, rows):
+    """P-row view of a paged cache for a fused chunk forward.
+
+    Pool leaves (K/V/pos) pass through by reference — the view's block
+    tables index the same shared pool, so chunk scatters land in place
+    and shared-prefix blocks are readable at zero copy cost.  Per-row
+    leaves (``bt``, ``length``, and any non-paged layer's recurrent
+    state) are gathered at ``rows`` ([P] int32, pre-clipped in range)."""
+    layers = []
+    for entry in cache["layers"]:
+        if is_paged_entry(entry):
+            layers.append({k: (v[rows] if k == "bt" else v)
+                           for k, v in entry.items()})
+        else:
+            layers.append(jax.tree.map(lambda x: x[rows], entry))
+    return {"layers": layers, "length": cache["length"][rows]}
+
+
+def merge_prefill_rows(cache, sub, slots):
+    """Fold a chunk forward's updated P-row view back into the full
+    cache.  Pool leaves replace wholesale (the forward already scattered
+    into them through the sliced tables); per-row leaves scatter to
+    ``slots`` — out-of-range entries drop, so padding lanes (``slots``
+    set past the batch) write nowhere."""
+    layers = []
+    for entry, s in zip(cache["layers"], sub["layers"]):
+        if is_paged_entry(entry):
+            layers.append({k: (entry[k].at[slots].set(s[k], mode="drop")
+                               if k == "bt" else s[k])
+                           for k in entry})
+        else:
+            layers.append(jax.tree.map(
+                lambda x, y: x.at[slots].set(y, mode="drop"), entry, s))
+    return {"layers": layers,
+            "length": cache["length"].at[slots].set(sub["length"],
+                                                    mode="drop")}
 
 
 # ------------------------------------------------------------- accounting

@@ -91,6 +91,14 @@ class EngineConfig:
     admission: str = "fcfs"        # fcfs | sjf
     sjf_age_rate: float = 1.0
     prefill_bucket: int = 0
+    # Chunked prefill (continuous scheduler): split each prompt into
+    # prefill_chunk-token chunks and fuse up to prefill_parallelism
+    # pending chunks into one forward per tick, so a long prompt no
+    # longer stalls the decode slots (Sarathi-style token budget).
+    # 0 = legacy blocking batch-1 prefill.  Ignored (forced to 0) for
+    # strategies without device slot state (ppd+spec) and chain archs.
+    prefill_chunk: int = 0
+    prefill_parallelism: int = 2
     # Async host loop: harvest device-side tokens / stop flags every K
     # decode steps (>= 1; one blocking device->host sync per interval).
     # 0 selects the legacy per-step host-harvest loop — the parity
@@ -123,6 +131,15 @@ class EngineConfig:
                              f"got {self.n_ept}")
         if self.prefill_bucket < 0:
             raise ValueError("EngineConfig.prefill_bucket must be >= 0")
+        if not isinstance(self.prefill_chunk, int) or self.prefill_chunk < 0:
+            raise ValueError("EngineConfig.prefill_chunk must be an int "
+                             ">= 0 (0 = legacy blocking prefill), got "
+                             f"{self.prefill_chunk!r}")
+        if not isinstance(self.prefill_parallelism, int) \
+                or self.prefill_parallelism < 1:
+            raise ValueError("EngineConfig.prefill_parallelism must be a "
+                             "positive int, got "
+                             f"{self.prefill_parallelism!r}")
         if not isinstance(self.harvest_every, int) \
                 or self.harvest_every < 0:
             raise ValueError(
@@ -272,7 +289,9 @@ def _build_continuous(config, strategy, cfg, clock):
                             num_blocks=config.num_blocks,
                             watermark=config.watermark,
                             sjf_age_rate=config.sjf_age_rate, clock=clock,
-                            harvest_every=config.harvest_every)
+                            harvest_every=config.harvest_every,
+                            prefill_chunk=config.prefill_chunk,
+                            prefill_parallelism=config.prefill_parallelism)
 
 
 SCHEDULER_REGISTRY = {

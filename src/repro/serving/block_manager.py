@@ -71,17 +71,25 @@ class BlockManager:
         self._block_key: Dict[int, bytes] = {}      # inverse (for free)
         self._seq: Dict[int, List[int]] = {}        # uid -> block ids
         self._seq_shared: Dict[int, int] = {}       # uid -> n prefix-shared
+        self._pending: Dict[int, int] = {}          # uid -> reserved, unpopped
+        self._reserved_keys: Dict[int, List[bytes]] = {}
         self.peak_used_blocks = 0
         self.shared_block_hits = 0                  # blocks NOT re-stored
 
     # ---------------------------------------------------------- queries
     @property
     def used_blocks(self) -> int:
+        """Blocks actually materialized (chunked-prefill reservations
+        that haven't been popped yet don't count — that deferral IS the
+        chunking memory win ``peak_used_blocks`` measures)."""
         return self.num_blocks - len(self._free)
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Blocks available to NEW admissions: physically free minus
+        outstanding chunked-prefill reservations, so admission math stays
+        deadlock-free while blocks are popped lazily per chunk."""
+        return len(self._free) - sum(self._pending.values())
 
     def seq_blocks(self, uid: int) -> List[int]:
         return list(self._seq[uid])
@@ -114,11 +122,17 @@ class BlockManager:
             return (f"needs {need} blocks, pool holds {self.num_blocks}")
         return None
 
-    def can_admit(self, prompt, budget: int) -> bool:
-        """Would :meth:`allocate` succeed right now, respecting the
+    def can_admit(self, prompt, budget: int,
+                  cap_prefix: bool = False) -> bool:
+        """Would :meth:`allocate` (or :meth:`reserve`, with
+        ``cap_prefix=True``) succeed right now, respecting the
         watermark?  Prefix-shared blocks cost nothing."""
-        need = self.blocks_needed(len(np.asarray(prompt)), budget)
-        need -= self.match_prefix(prompt)
+        p = np.asarray(prompt)
+        need = self.blocks_needed(len(p), budget)
+        m = self.match_prefix(p)
+        if cap_prefix:
+            m = min(m, self._prefix_cap(len(p)))
+        need -= m
         return need <= max(self.free_blocks - self.watermark_blocks, 0)
 
     # ------------------------------------------------------- alloc/free
@@ -160,9 +174,92 @@ class BlockManager:
         self._seq_shared[uid] = n_shared
         return list(ids), n_shared
 
+    # -------------------------------------------- chunked-prefill alloc
+    def _prefix_cap(self, prompt_len: int) -> int:
+        """Max prefix blocks a chunked prefill may share: at least the
+        LAST prompt position must be recomputed (its logits are the
+        request's first token), so a block-aligned fully-shared prompt
+        keeps its final block private."""
+        return (prompt_len - 1) // self.block_size
+
+    def reserve(self, uid: int, prompt, budget: int
+                ) -> Tuple[List[int], int]:
+        """Chunked-prefill admission: claim the sequence's full span
+        *logically* (``free_blocks`` drops by the fresh-block count so
+        admission stays deadlock-free) but pop fresh blocks lazily —
+        :meth:`materialize` pops them chunk by chunk, so a queued long
+        prompt no longer holds its whole span before its first chunk
+        runs.  Prefix-shared blocks are referenced immediately (their
+        content is valid and the first chunk reads through them).
+        Returns ``(shared_ids, n_shared)``."""
+        assert uid not in self._seq, f"uid {uid} already allocated"
+        prompt = np.asarray(prompt)
+        keys = _prefix_keys(prompt, self.block_size)
+        n_shared = min(self.match_prefix(prompt),
+                       self._prefix_cap(len(prompt)))
+        shared = [self._registry[k] for k in keys[:n_shared]]
+        for bid in shared:
+            self._ref[bid] += 1
+        self.shared_block_hits += n_shared
+        need = self.blocks_needed(len(prompt), budget) - n_shared
+        assert need >= 0
+        self._pending[uid] = need
+        self._reserved_keys[uid] = keys
+        self._seq[uid] = list(shared)
+        self._seq_shared[uid] = n_shared
+        return list(shared), n_shared
+
+    def _materialize_n(self, uid: int, n: int) -> List[Tuple[int, int]]:
+        ids = self._seq[uid]
+        have = len(ids)
+        fresh = self._pop_free(n)
+        keys = self._reserved_keys.get(uid, ())
+        out = []
+        for j, bid in enumerate(fresh):
+            self._ref[bid] = 1
+            ti = have + j
+            # register this sequence's own full prompt blocks for future
+            # sharers — unless a concurrent prefill of the same prefix
+            # registered its copy first (both stay correct; one is shared
+            # by later arrivals, the other is private)
+            if ti < len(keys) and keys[ti] not in self._registry:
+                self._registry[keys[ti]] = bid
+                self._block_key[bid] = keys[ti]
+            out.append((ti, bid))
+        ids.extend(fresh)
+        return out
+
+    def materialize(self, uid: int, upto_tokens: int
+                    ) -> List[Tuple[int, int]]:
+        """Pop the reserved blocks covering positions < ``upto_tokens``
+        that aren't materialized yet.  Returns ``[(table_idx, block_id)]``
+        for the device-side block-table arm
+        (:func:`repro.models.paged_cache.write_prefill_chunk`)."""
+        have = len(self._seq[uid])
+        want = blocks_for(upto_tokens, self.block_size)
+        n = min(max(want - have, 0), self._pending.get(uid, 0))
+        if n == 0:
+            return []
+        self._pending[uid] -= n
+        return self._materialize_n(uid, n)
+
+    def finish(self, uid: int) -> List[Tuple[int, int]]:
+        """Materialize the rest of the reservation (the decode-budget
+        span) and close out the pending entry."""
+        n = self._pending.pop(uid, 0)
+        self._reserved_keys.pop(uid, None)
+        if n == 0:
+            return []
+        return self._materialize_n(uid, n)
+
     def free_seq(self, uid: int) -> None:
         """Drop the sequence's references; blocks whose refcount hits 0
-        return to the free list (and leave the prefix registry)."""
+        return to the free list (and leave the prefix registry).  An
+        unfinished chunked-prefill reservation (mid-prefill abort) is
+        simply forgotten — its unpopped blocks were never removed from
+        the free list."""
+        self._pending.pop(uid, None)
+        self._reserved_keys.pop(uid, None)
         for bid in self._seq.pop(uid):
             self._ref[bid] -= 1
             assert self._ref[bid] >= 0

@@ -65,6 +65,11 @@ class Result:
     #   (NaN when undefined: a 1-token request has no inter-token gaps)
     goodput_tok_s: float = 0.0    # tokens / (finish - arrival)
     finish_reason: str = "length"  # "length" | "stop"
+    # TTFT split (continuous scheduler only; static engines leave 0.0):
+    # arrival -> admission (slot/queue wait) and admission -> first
+    # token (prefill compute).  queue_wait_s + prefill_s ~= ttft_s.
+    queue_wait_s: float = 0.0
+    prefill_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,12 +120,20 @@ def aggregate_metrics(results: List["Result"], makespan_s: float) -> dict:
     total = sum(len(r.tokens) for r in results)
     n = max(len(results), 1)
     tpots = [r.tpot_s for r in results if not math.isnan(r.tpot_s)]
+    ttfts = [r.ttft_s for r in results]
     return {
         "requests": len(results),
         "total_tokens": total,
         "makespan_s": makespan_s,
         "goodput_tok_s": total / makespan_s if makespan_s > 0 else 0.0,
-        "mean_ttft_s": sum(r.ttft_s for r in results) / n,
+        "mean_ttft_s": sum(ttfts) / n,
+        # Tail latency: the mean hides head-of-line stalls (one long
+        # prefill inflates a handful of victims' TTFT enormously).
+        "p50_ttft_s": float(np.percentile(ttfts, 50)) if ttfts else 0.0,
+        "p99_ttft_s": float(np.percentile(ttfts, 99)) if ttfts else 0.0,
+        # Where TTFT went: waiting for a slot vs computing the prefill.
+        "mean_queue_wait_s": sum(r.queue_wait_s for r in results) / n,
+        "mean_prefill_s": sum(r.prefill_s for r in results) / n,
         "mean_tpot_s": sum(tpots) / len(tpots) if tpots else 0.0,
         "tpot_defined_requests": len(tpots),
     }

@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import List, Optional
 
 import jax
@@ -112,16 +113,32 @@ class _Slot:
     decode_steps: int = 0
     budget: int = 0               # decode-step budget (PPD fallback guard)
     arrival_t: float = 0.0        # absolute times (engine clock)
+    admit_t: float = 0.0          # when the slot was claimed (queue exit)
     first_tok_t: float = 0.0
     key: Optional[jnp.ndarray] = None
     sampling: Optional[SamplingParams] = None
     finish: Optional[str] = None  # set -> retire at next reap
     admit_step: int = 0           # strategy.dispatched_steps at admission
     device_finish_step: Optional[int] = None  # device step of the finish
+    prefilling: bool = False      # chunked prefill in flight (no decode)
 
     @property
     def busy(self) -> bool:
         return self.req is not None
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """One request's chunked prefill in flight: ``offset`` is the next
+    prompt position to compute (starts past the prefix-shared span);
+    ``prow`` is the prefill lane it occupies in the [P, C] chunk
+    forward (ring: its staging-cache row)."""
+    slot: int
+    prow: int
+    req: Request
+    prompt: np.ndarray
+    plen: int
+    offset: int
 
 
 class ContinuousEngine:
@@ -133,7 +150,8 @@ class ContinuousEngine:
                  seed: int = 0, kv: str = "ring", block_size: int = 16,
                  num_blocks: Optional[int] = None, watermark: float = 0.01,
                  sjf_age_rate: float = 1.0, clock=None,
-                 harvest_every: int = 1):
+                 harvest_every: int = 1, prefill_chunk: int = 0,
+                 prefill_parallelism: int = 2):
         assert admission in ("fcfs", "sjf"), admission
         assert kv in ("ring", "paged"), kv
         self.strategy, self.cfg = strategy, cfg
@@ -152,10 +170,29 @@ class ContinuousEngine:
                              and strategy.supports_device_state)
         self._pending = 0          # device steps since the last harvest
         self._clock = clock if clock is not None else time.perf_counter
+        # Chunked prefill (tokens per chunk; 0 = legacy whole-prompt
+        # prefill at admission).  Chain archs hold untrimmable recurrent
+        # state across commit-masked padding and batch-1 strategies
+        # (spec-decode) manage their own caches — both fall back to the
+        # legacy path.
+        self.prefill_chunk = (0 if is_chain_arch(cfg) or strategy.batch1
+                              or not strategy.supports_device_state
+                              else prefill_chunk)
+        self.prefill_parallelism = max(prefill_parallelism, 1)
+        self._prefills: List[_PrefillJob] = []
+        # prefill lanes: chunked admission claims one, finish returns it;
+        # an empty pool defers further admissions to the next tick
+        self._free_prows = (list(range(self.prefill_parallelism))
+                            if self.prefill_chunk else [])
+        self._warned_recompile = False
         # Round prompt prefills up to a multiple of ``prefill_bucket`` to
-        # bound recompilation across prompt lengths (0 = exact length).
-        # Padded tail entries are killed with trim_cache; chain archs hold
-        # untrimmable recurrent state and always prefill exactly.
+        # bound recompilation across prompt lengths (0 = exact length;
+        # defaults to the chunk size so a chunked engine's legacy
+        # fallback stays bounded too).  Padded tail entries are killed
+        # with trim_cache; chain archs hold untrimmable recurrent state
+        # and always prefill exactly.
+        if prefill_bucket == 0 and self.prefill_chunk:
+            prefill_bucket = self.prefill_chunk
         self.prefill_bucket = 0 if is_chain_arch(cfg) else prefill_bucket
         self.queue: List[Request] = []
         self._overshoot = strategy.overshoot
@@ -164,7 +201,8 @@ class ContinuousEngine:
         self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
                       "retired": 0, "max_concurrency": 0,
                       "active_slot_steps": 0, "idle_slot_steps": 0,
-                      "admission_waits": 0, "harvests": 0}
+                      "admission_waits": 0, "harvests": 0,
+                      "prefill_chunks": 0}
         self.makespan_s = 0.0
         self._base_key = jax.random.PRNGKey(seed)
         self.block_mgr: Optional[BlockManager] = None
@@ -178,7 +216,9 @@ class ContinuousEngine:
         strategy.bind(batch_size, capacity, kv=kv, block_size=block_size,
                       num_blocks=(self.block_mgr.num_blocks
                                   if self.block_mgr is not None else None),
-                      pool=True, harvest_every=max(harvest_every, 1))
+                      pool=True, harvest_every=max(harvest_every, 1),
+                      chunked_prefill=self.prefill_chunk > 0,
+                      prefill_rows=self.prefill_parallelism)
         self._t0: Optional[float] = None
         self._started = False    # a step() has run since the last run()
         self._results: List[Result] = []
@@ -187,8 +227,10 @@ class ContinuousEngine:
     def add_request(self, req: Request):
         # bucket-rounded prefills forward the PADDED prompt into the ring
         # before the tail is trimmed — the padded length must fit too.
+        # (Chunked prefill pads each chunk, never the cache row, so the
+        # padded-capacity check is legacy-path-only.)
         plen = len(req.prompt)
-        if self.prefill_bucket:
+        if self.prefill_bucket and not self.prefill_chunk:
             padded = plen + (-plen) % self.prefill_bucket
             if padded > self.capacity:
                 raise ValueError(
@@ -232,13 +274,16 @@ class ContinuousEngine:
         return bool(self.queue) or any(s.busy for s in self.slots)
 
     def _active_mask(self) -> np.ndarray:
-        return np.asarray([s.busy for s in self.slots], bool)
+        """Decode-eligible slots: busy and not mid-chunked-prefill."""
+        return np.asarray([s.busy and not s.prefilling
+                           for s in self.slots], bool)
 
     def _can_admit_now(self, req: Request) -> bool:
         if self.block_mgr is None:
             return True
         if self.block_mgr.can_admit(req.prompt,
-                                    req.max_new_tokens + self._overshoot):
+                                    req.max_new_tokens + self._overshoot,
+                                    cap_prefix=self.prefill_chunk > 0):
             return True
         # the watermark is back-pressure, not a deadlock: an otherwise
         # idle pool admits anything that fits at all
@@ -292,8 +337,29 @@ class ContinuousEngine:
                             ((0, 0),) * (prompt.ndim - 1))
         return jnp.asarray(prompt)[None], plen
 
+    def _claim_slot(self, slot_idx: int, req: Request, now: float):
+        """Shared slot bookkeeping for both admission paths."""
+        slot = self.slots[slot_idx]
+        sp = resolve_sampling(req, self.temperature)
+        slot.req = req
+        slot.produced = []
+        slot.decode_steps = 0
+        slot.budget = req.max_new_tokens + 8
+        slot.arrival_t = req.arrival_s
+        slot.admit_t = now
+        slot.sampling = sp
+        slot.finish = None
+        slot.key = jax.random.fold_in(
+            self._base_key,
+            (sp.seed if sp.seed is not None else req.uid) & 0xffffffff)
+        return slot
+
     def _admit(self, slot_idx: int, req: Request,
                events: List[TokenEvent]):
+        now0 = self._clock() - self._t0
+        if self.prefill_chunk:
+            self._admit_chunked(slot_idx, req, now0)
+            return
         alloc = None
         if self.block_mgr is not None:
             alloc = self.block_mgr.allocate(
@@ -303,6 +369,15 @@ class ContinuousEngine:
         self.total_forward_passes += cost
         self.stats["prefills"] += 1
         self.stats["admitted"] += 1
+        if (self.prefill_bucket == 0 and not self._warned_recompile
+                and getattr(self.strategy, "trace_counts",
+                            {}).get("prefill", 0) > 1):
+            self._warned_recompile = True
+            warnings.warn(
+                "unbucketed prefill (prefill_bucket=0) recompiles the "
+                "prefill program once per distinct prompt length; set "
+                "prefill_bucket (or prefill_chunk) to bound compiles",
+                RuntimeWarning, stacklevel=3)
         if alloc is not None:
             ids, n_shared = alloc
 
@@ -316,23 +391,12 @@ class ContinuousEngine:
                 return write_cache_rows(self.cfg, cache, row_cache,
                                         slot_idx)
         self.strategy.admit(slot_idx, row, write_row)
-        slot = self.slots[slot_idx]
-        sp = resolve_sampling(req, self.temperature)
-        slot.req = req
-        slot.produced = []
-        slot.decode_steps = 0
-        slot.budget = req.max_new_tokens + 8
-        slot.arrival_t = req.arrival_s
+        slot = self._claim_slot(slot_idx, req, now0)
         # force the (async-dispatched) prefill to the host BEFORE the
         # TTFT stamp: stamping first would time Python-side event
         # construction, not the availability of the first token
         first = np.asarray(host_sync.device_get(first, label="prefill"))
         slot.first_tok_t = self._clock() - self._t0  # TTFT includes prefill
-        slot.sampling = sp
-        slot.finish = None
-        slot.key = jax.random.fold_in(
-            self._base_key,
-            (sp.seed if sp.seed is not None else req.uid) & 0xffffffff)
         self._harvest(slot_idx, [first], events, slot.first_tok_t)
         if self._device_loop and slot.finish is None:
             # arm the slot's device bookkeeping row: counters continue
@@ -341,7 +405,115 @@ class ContinuousEngine:
             slot.device_finish_step = None
             self.strategy.slot_admit(slot_idx, len(slot.produced),
                                      req.max_new_tokens,
-                                     sp.stop_token_ids)
+                                     slot.sampling.stop_token_ids)
+
+    # ------------------------------------------------- chunked prefill
+    def _admit_chunked(self, slot_idx: int, req: Request, now: float):
+        """Claim the slot and enqueue a prefill job; no forward runs
+        here — chunks are processed inside :meth:`step` ticks, batched
+        with other in-flight prefills, while decode slots keep stepping."""
+        prompt = np.asarray(req.prompt)
+        plen = len(prompt)
+        # lowest free lane first: keeps the live-lane span (and so the
+        # chunk dispatch width) minimal — a lone prefill runs [1, C]
+        prow = min(self._free_prows)
+        self._free_prows.remove(prow)
+        offset0 = 0
+        if self.block_mgr is not None:
+            shared_ids, n_shared = self.block_mgr.reserve(
+                req.uid, prompt, req.max_new_tokens + self._overshoot)
+            offset0 = n_shared * self.block_size
+            self.strategy.prefill_begin(prow, slot_idx, offset0,
+                                        shared_ids)
+        else:
+            self.strategy.prefill_begin(prow, slot_idx, 0)
+        slot = self._claim_slot(slot_idx, req, now)
+        slot.prefilling = True
+        self.stats["admitted"] += 1
+        self.stats["prefills"] += 1
+        self._prefills.append(_PrefillJob(slot=slot_idx, prow=prow,
+                                          req=req, prompt=prompt,
+                                          plen=plen, offset=offset0))
+
+    def _prefill_tick(self, events: List[TokenEvent]):
+        """Advance every in-flight prefill job (at most
+        ``prefill_parallelism`` — the prow-pool bound) by one chunk with
+        ONE fused [W, C] forward, W the power-of-two cover of the live
+        lanes: compute per tick scales with the number of concurrent
+        prefills, not the pool width.  Jobs whose
+        prompt completes are finished: row installed, decode state
+        armed, TTFT stamped at this — the last — chunk's first token."""
+        if not self._prefills:
+            return
+        jobs = self._prefills
+        C = self.prefill_chunk
+        # dispatch width: the smallest power-of-two cover of the highest
+        # live lane (compiles are bounded — one program per width — and
+        # the common lone-prefill case runs a [1, C] forward, not [P, C])
+        span = max(j.prow for j in jobs) + 1
+        W = 1
+        while W < span:
+            W *= 2
+        W = min(W, self.prefill_parallelism)
+        if self.cfg.modality == "audio":
+            tokens = np.zeros((W, C, self.cfg.n_codebooks), np.int32)
+        else:
+            tokens = np.zeros((W, C), np.int32)
+        offsets = np.zeros((W,), np.int32)
+        valid = np.zeros((W,), np.int32)
+        # idle lanes point past the pool: they commit nothing in the
+        # forward and their scatter-back drops (merge mode="drop")
+        slots = np.full((W,), self.batch_size, np.int32)
+        for job in jobs:
+            n = min(C, job.plen - job.offset)
+            tokens[job.prow, :n] = job.prompt[job.offset:job.offset + n]
+            offsets[job.prow] = job.offset
+            valid[job.prow] = n
+            slots[job.prow] = job.slot
+            if self.block_mgr is not None:
+                # pop + arm the blocks this chunk's span touches (fresh
+                # blocks carry stale positions from previous owners)
+                entries = self.block_mgr.materialize(job.req.uid,
+                                                     job.offset + n)
+                if entries:
+                    self.strategy.prefill_arm(
+                        job.slot, entries, [bid for _, bid in entries])
+            job.offset += n
+        self.strategy.prefill_chunk(jnp.asarray(tokens),
+                                    jnp.asarray(offsets),
+                                    jnp.asarray(valid),
+                                    jnp.asarray(slots))
+        self.total_forward_passes += 1
+        self.stats["prefill_chunks"] += 1
+        for job in [j for j in jobs if j.offset >= j.plen]:
+            self._prefills.remove(job)
+            self._finish_prefill(job, events)
+
+    def _finish_prefill(self, job: _PrefillJob, events: List[TokenEvent]):
+        slot = self.slots[job.slot]
+        first = self.strategy.prefill_finish(job.prow, job.slot)
+        self._free_prows.append(job.prow)
+        # the one blocking sync per admitted request (same budget as the
+        # legacy path); TTFT is stamped at the LAST chunk's first token
+        first = np.asarray(host_sync.device_get(first, label="prefill"))
+        now = self._clock() - self._t0
+        slot.first_tok_t = now
+        slot.prefilling = False
+        self._harvest(job.slot, [first], events, now)
+        if slot.finish is not None:
+            return    # stop/limit on the first token: reap frees blocks
+        if self.block_mgr is not None:
+            # materialize + arm the decode-budget span in one go
+            entries = self.block_mgr.finish(job.req.uid)
+            if entries:
+                self.strategy.prefill_arm(
+                    job.slot, entries, [bid for _, bid in entries])
+        if self._device_loop:
+            slot.admit_step = self.strategy.dispatched_steps
+            slot.device_finish_step = None
+            self.strategy.slot_admit(job.slot, len(slot.produced),
+                                     job.req.max_new_tokens,
+                                     slot.sampling.stop_token_ids)
 
     def _harvest(self, slot_idx: int, toks, events: List[TokenEvent],
                  now: float):
@@ -374,12 +546,15 @@ class ContinuousEngine:
             ttft_s=max(slot.first_tok_t - slot.arrival_t, 0.0),
             tpot_s=tpot_of(now - slot.first_tok_t, n),
             goodput_tok_s=n / latency,
-            finish_reason=slot.finish or "length")
+            finish_reason=slot.finish or "length",
+            queue_wait_s=max(slot.admit_t - slot.arrival_t, 0.0),
+            prefill_s=max(slot.first_tok_t - slot.admit_t, 0.0))
         slot.req = None
         slot.produced = []
         slot.sampling = None
         slot.finish = None
         slot.device_finish_step = None
+        slot.prefilling = False
         self.stats["retired"] += 1
         return res
 
@@ -421,7 +596,8 @@ class ContinuousEngine:
     # ------------------------------------------------------------- step
     def _decode_arrays(self):
         temps, tks, tps = decode_arrays(
-            [s.sampling if s.busy else None for s in self.slots])
+            [s.sampling if s.busy and not s.prefilling else None
+             for s in self.slots])
         return self._slot_keys(temps is not None), temps, tks, tps
 
     def _slot_keys(self, any_sampled: bool):
@@ -432,7 +608,7 @@ class ContinuousEngine:
             return jnp.zeros((self.batch_size, 2), jnp.uint32)
         keys = []
         for s in self.slots:
-            if not s.busy:
+            if not s.busy or s.prefilling:
                 keys.append(jnp.zeros((2,), jnp.uint32))
                 continue
             keys.append(_raw_key(jax.random.fold_in(s.key,
@@ -449,15 +625,20 @@ class ContinuousEngine:
         self._started = True
         events: List[TokenEvent] = []
         now = self._clock() - self._t0
-        # fill free slots with every admissible request
+        # fill free slots with every admissible request (chunked: one
+        # per free prefill lane — the rest wait a tick, not a prompt)
         for i, s in enumerate(self.slots):
             if s.busy:
                 continue
+            if self.prefill_chunk and not self._free_prows:
+                break
             pick = self._pick_next(now)
             if pick is None:
                 break
             self._admit(i, self.queue.pop(pick), events)
             now = self._clock() - self._t0
+        # advance in-flight chunked prefills by one fused chunk forward
+        self._prefill_tick(events)
         # stop-on-first-token / 1-token budgets retire without a step
         self._reap(events, now)
         active = self._active_mask()
@@ -465,7 +646,7 @@ class ContinuousEngine:
         self.stats["max_concurrency"] = max(
             self.stats["max_concurrency"], conc)
         if conc == 0:
-            if self.queue:
+            if self.queue and not self._prefills:
                 # idle: wait for the next arrival
                 nxt = min(r.arrival_s for r in self.queue)
                 time.sleep(min(max(nxt - now, 0.0), 0.05))
@@ -481,7 +662,9 @@ class ContinuousEngine:
             self._pending += 1
             now = self._clock() - self._t0
             for s in self.slots:
-                if s.busy:
+                # a prefilling slot's decode budget must not tick: a long
+                # prompt's chunk count can exceed max_new + 8
+                if s.busy and not s.prefilling:
                     s.decode_steps += 1
             if self._should_harvest():
                 self._device_harvest(events, now)
@@ -495,7 +678,7 @@ class ContinuousEngine:
         self.stats["idle_slot_steps"] += self.batch_size - conc
         now = self._clock() - self._t0
         for i, s in enumerate(self.slots):
-            if not s.busy:
+            if not s.busy or s.prefilling:
                 continue
             s.decode_steps += 1
             self._harvest(i, new_tokens[i], events, now)
@@ -512,7 +695,8 @@ class ContinuousEngine:
         if self._pending >= self.harvest_every:
             return True
         rem = [s.req.max_new_tokens - len(s.produced)
-               for s in self.slots if s.busy and s.finish is None]
+               for s in self.slots
+               if s.busy and not s.prefilling and s.finish is None]
         return bool(rem) and self._pending >= min(rem)
 
     def _device_harvest(self, events: List[TokenEvent], now: float):
@@ -523,7 +707,9 @@ class ContinuousEngine:
         self.stats["harvests"] += 1
         self._pending = 0
         for i, s in enumerate(self.slots):
-            if not s.busy or s.finish is not None:
+            # prefilling slots' device rows are stale (slot_admit arms
+            # them only at prefill finish) — never read them
+            if not s.busy or s.prefilling or s.finish is not None:
                 continue
             uid = s.req.uid
             for tok, step in h.slot_tokens(i):
@@ -578,7 +764,8 @@ def ContinuousPPDEngine(params, ppd_params, cfg: ModelConfig, *, m=3,
                         prefill_bucket=0, seed=0, attn_backend=None,
                         kv="ring", block_size=16, num_blocks=None,
                         watermark=0.01, sjf_age_rate=1.0,
-                        clock=None, harvest_every=1) -> ContinuousEngine:
+                        clock=None, harvest_every=1, prefill_chunk=0,
+                        prefill_parallelism=2) -> ContinuousEngine:
     """continuous scheduler x PPD strategy (old ``ContinuousPPDEngine``)."""
     from .strategies import PPDStrategy
     return ContinuousEngine(
@@ -589,7 +776,8 @@ def ContinuousPPDEngine(params, ppd_params, cfg: ModelConfig, *, m=3,
         prefill_bucket=prefill_bucket, seed=seed, kv=kv,
         block_size=block_size, num_blocks=num_blocks, watermark=watermark,
         sjf_age_rate=sjf_age_rate, clock=clock,
-        harvest_every=harvest_every)
+        harvest_every=harvest_every, prefill_chunk=prefill_chunk,
+        prefill_parallelism=prefill_parallelism)
 
 
 def ContinuousVanillaEngine(params, cfg: ModelConfig, capacity=1024,
@@ -598,7 +786,8 @@ def ContinuousVanillaEngine(params, cfg: ModelConfig, capacity=1024,
                             attn_backend=None, kv="ring", block_size=16,
                             num_blocks=None, watermark=0.01,
                             sjf_age_rate=1.0, clock=None,
-                            harvest_every=1) -> ContinuousEngine:
+                            harvest_every=1, prefill_chunk=0,
+                            prefill_parallelism=2) -> ContinuousEngine:
     """continuous scheduler x vanilla strategy (old
     ``ContinuousVanillaEngine``)."""
     from .strategies import VanillaStrategy
@@ -608,4 +797,5 @@ def ContinuousVanillaEngine(params, cfg: ModelConfig, capacity=1024,
         admission=admission, prefill_bucket=prefill_bucket, seed=seed,
         kv=kv, block_size=block_size, num_blocks=num_blocks,
         watermark=watermark, sjf_age_rate=sjf_age_rate, clock=clock,
-        harvest_every=harvest_every)
+        harvest_every=harvest_every, prefill_chunk=prefill_chunk,
+        prefill_parallelism=prefill_parallelism)

@@ -62,8 +62,11 @@ import numpy as np
 from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
                         is_chain_arch, mk_default_tree, ppd_decode_step,
                         vanilla_decode_step)
-from repro.models import (forward, init_cache, is_paged_cache,
-                          release_slot, release_slots, trim_cache)
+from repro.models import (begin_prefill_row, forward, init_cache,
+                          is_paged_cache, merge_prefill_rows, release_slot,
+                          release_slots, reset_cache_rows, slice_cache_rows,
+                          slice_prefill_rows, trim_cache, write_cache_rows,
+                          write_prefill_chunk)
 from repro.models.config import ModelConfig
 
 from . import host_sync, slot_state
@@ -94,9 +97,10 @@ def _prefill(params, cfg, tokens, plen, capacity, *, attn_backend=None,
                   return_hidden=return_hidden, attn_backend=attn_backend)
     logits, row_cache = out[0], out[1]
     first = jnp.argmax(logits[0, plen - 1], axis=-1)
-    if tokens.shape[1] != plen:
-        row_cache = trim_cache(cfg, row_cache,
-                               jnp.full((1,), plen, jnp.int32))
+    # always trim: with a *traced* plen (the jitted per-strategy prefill)
+    # the padded-vs-exact branch is untakeable, and at exact length the
+    # trim is a semantic no-op (every live pos is already < plen)
+    row_cache = trim_cache(cfg, row_cache, jnp.full((1,), plen, jnp.int32))
     if return_hidden:
         return row_cache, first, out[4]
     return row_cache, first, None
@@ -127,15 +131,31 @@ class DecodeStrategy:
     supports_sampling = True  # per-request temperature / top-k / top-p
     batch1 = False           # host-side batch-1 method (spec-decode)
     supports_device_state = False  # SlotState + deferred harvest
+    _pf_needs_hidden = False  # chunk carry wants last hidden (medusa)
+    _prefill_jit = None       # lazily-jitted legacy batch-1 prefill
+    _pf_chunk_jit = None      # lazily-jitted batched chunk forward
+    _pf_merge_jit = None      # lazily-jitted ring staging-row install
+    _pf_carry = None          # device carry across prefill chunks
+    _pf_cache = None          # ring: P-row staging cache for prefills
+    _pf_rows = 1              # P = max concurrent chunked prefills
+    _mask_writes = False      # chunked engines: masked decode K/V writes
 
     def bind(self, batch_size: int, capacity: int, *, kv: str = "ring",
              block_size: int = 16, num_blocks: Optional[int] = None,
              pool: bool = False, harvest_every: int = 1,
-             max_stops: int = DEFAULT_MAX_STOPS):
+             max_stops: int = DEFAULT_MAX_STOPS,
+             chunked_prefill: bool = False, prefill_rows: int = 2):
         self.batch_size, self.capacity = batch_size, capacity
         self.kv, self.block_size, self.num_blocks = kv, block_size, \
             num_blocks
         self.dispatched_steps = 0     # host mirror of SlotState.step
+        self._pf_rows = max(int(prefill_rows), 1)
+        # read at trace time by the decode-step impls: a chunked paged
+        # engine's inactive rows may be mid-prefill, where an unmasked
+        # decode K/V write through the slot's already-armed block table
+        # would land a valid-pos garbage entry exactly at the next
+        # chunk's offset (frozen length == committed prefix)
+        self._mask_writes = chunked_prefill
         if self.supports_device_state:
             # buffer capacity covers the worst interval: every step may
             # commit up to (1 + overshoot) tokens per slot
@@ -146,6 +166,15 @@ class DecodeStrategy:
                 batch_size, cap, max_stops=max_stops, n_codebooks=nk)
         if pool:
             self._init_pool()
+            if chunked_prefill and self.supports_device_state:
+                self._pf_carry = self._pf_carry_init()
+                if kv != "paged":
+                    # ring prefills run on a separate P-row staging
+                    # cache; the finished row is spliced into the main
+                    # pool at prefill_finish (one row of K/V traffic —
+                    # the same volume legacy admission pays)
+                    self._pf_cache = init_cache(self.cfg, self._pf_rows,
+                                                capacity)
 
     # ------------------------------------------------- device slot state
     def slot_admit(self, slot: int, emitted: int, limit: int,
@@ -173,6 +202,167 @@ class DecodeStrategy:
                               paged=True, block_size=self.block_size,
                               num_blocks=self.num_blocks)
         return init_cache(self.cfg, self.batch_size, self.capacity)
+
+    # --------------------------------------------------- chunked prefill
+    # Resumable prefill over P = ``prefill_rows`` lanes ("prows"): the
+    # chunk forward is shaped [W, C] with W the smallest power-of-two
+    # cover of the live lanes (<= P), NOT [B, C] — compute per tick
+    # scales with concurrent prefills, not pool width.  ``prefill_begin``
+    # claims a prow (ring: a staging-cache row; paged: arms the slot's
+    # block table in the main pool), ``prefill_chunk`` runs ONE fused
+    # commit-masked forward over every in-flight chunk (idle lanes carry
+    # valid_len 0 and commit nothing), ``prefill_finish`` installs the
+    # row (ring) and arms the slot's decode state from the device carry,
+    # returning the first token as a device scalar — the scheduler's
+    # single prefill device_get per request.
+    def _set_pool_cache(self, cache):
+        raise NotImplementedError
+
+    def _pf_carry_init(self):
+        """Fresh chunk carry: the last-committed position's greedy token
+        per slot (strategies append what their decode state needs)."""
+        if self.cfg.modality == "audio":
+            last = jnp.zeros((self.batch_size, self.cfg.n_codebooks),
+                             jnp.int32)
+        else:
+            last = jnp.zeros((self.batch_size,), jnp.int32)
+        return {"last": last}
+
+    def _pf_update_carry(self, carry, last_logits, last_hidden, tgt):
+        """Fold one chunk's result into the carry.  ``tgt`` [W] is each
+        lane's destination slot, pre-sentineled out of range for lanes
+        that advanced nothing this chunk — their scatter drops, so an
+        idle lane's garbage never clobbers a mid-prefill slot's state."""
+        del last_hidden
+        new_last = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        return dict(carry, last=carry["last"].at[tgt].set(new_last,
+                                                          mode="drop"))
+
+    def _make_pf_chunk(self):
+        needs_hidden = self._pf_needs_hidden
+        paged = self.kv == "paged"
+
+        def impl(cache, carry, tokens, offsets, valid_len, slots):
+            self.trace_counts["prefill_chunk"] += 1   # trace time only
+            W, C = tokens.shape[0], tokens.shape[1]
+            if paged:
+                # forward on a W-row view of the pool: per-row leaves
+                # (block table, length) gathered at ``slots``, pool
+                # leaves shared — chunk K/V lands in the pool directly.
+                # Idle lanes (valid_len 0) view a clipped in-range row
+                # but commit nothing and are dropped at merge.
+                rows = jnp.clip(slots, 0, self.batch_size - 1)
+                fc = slice_prefill_rows(cache, rows)
+            elif W < self._pf_rows:
+                # leading W rows of the staging cache (lane allocation
+                # is lowest-free-first, so live lanes are always < W)
+                fc = slice_cache_rows(self.cfg, cache, 0, n=W)
+            else:
+                fc = cache                    # full-width staging cache
+            pos = offsets[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+            cm = (jnp.arange(C, dtype=jnp.int32)[None, :]
+                  < valid_len[:, None])
+            out = forward(self.params, self.cfg, tokens, positions=pos,
+                          cache=fc, commit_mask=cm, moe_exact=True,
+                          return_hidden=needs_hidden,
+                          attn_backend=self.attn_backend)
+            logits, fc = out[0], out[1]
+            # idle lanes scatter to an out-of-range index and drop
+            tgt = jnp.where(valid_len > 0, slots, self.batch_size)
+            if paged:
+                cache = merge_prefill_rows(cache, fc, tgt)
+            elif W < self._pf_rows:
+                cache = write_cache_rows(self.cfg, cache, fc, 0)
+            else:
+                cache = fc
+            lanes = jnp.arange(W)
+            li = jnp.clip(valid_len - 1, 0, C - 1)
+            hid = out[4][lanes, li] if needs_hidden else None
+            carry = self._pf_update_carry(carry, logits[lanes, li], hid,
+                                          tgt)
+            return cache, carry
+
+        return jax.jit(impl, donate_argnums=_donate(0, 1))
+
+    def prefill_begin(self, prow: int, slot: int, start: int = 0,
+                      shared_ids=()):
+        """Claim prow/slot for a chunked prefill starting at position
+        ``start`` (= prefix-shared tokens, paged only): ring staging
+        rows get their stale positions invalidated; paged slots get
+        their table pointed at the shared blocks and ``length[slot] =
+        start`` so chunk commits advance from the right offset."""
+        if self.kv == "paged":
+            self._set_pool_cache(begin_prefill_row(self.pool_cache(),
+                                                   slot, shared_ids,
+                                                   start))
+        else:
+            self._pf_cache = reset_cache_rows(self.cfg, self._pf_cache,
+                                              prow, start)
+
+    def prefill_arm(self, slot: int, entries, clear_bids):
+        """Paged only: install one chunk's block-table entries and clear
+        the freshly-popped blocks' stale positions before the chunk
+        forward reads/writes them."""
+        self._set_pool_cache(write_prefill_chunk(self.pool_cache(), slot,
+                                                 entries, clear_bids))
+
+    def prefill_chunk(self, tokens, offsets, valid_len, slots):
+        """One fused commit-masked forward over every in-flight chunk.
+        tokens [W,C] (audio [W,C,K]), offsets/valid_len [W], slots [W]
+        (pool row per lane; idle lanes carry valid_len 0, commit
+        nothing, and keep their carry).  W is the scheduler's dispatch
+        width — any power-of-two cover of the live lanes up to
+        ``prefill_rows``; each distinct W traces its own program."""
+        if self._pf_chunk_jit is None:
+            self._pf_chunk_jit = self._make_pf_chunk()
+        if self.kv == "paged":
+            cache, self._pf_carry = self._pf_chunk_jit(
+                self.pool_cache(), self._pf_carry, tokens, offsets,
+                valid_len, slots)
+            self._set_pool_cache(cache)
+        else:
+            self._pf_cache, self._pf_carry = self._pf_chunk_jit(
+                self._pf_cache, self._pf_carry, tokens, offsets,
+                valid_len, slots)
+
+    def _pf_install_row(self, prow: int, slot: int):
+        """Ring: splice the finished staging row into the slot's row of
+        the main pool (one jitted slice+write, traced indices — no
+        per-(prow,slot) recompiles).  Paged: no-op, the chunks already
+        wrote the pool through the slot's block table."""
+        if self.kv == "paged":
+            return
+        if self._pf_merge_jit is None:
+            def impl(cache, staging, prow, slot):
+                row = slice_cache_rows(self.cfg, staging, prow)
+                return write_cache_rows(self.cfg, cache, row, slot)
+            self._pf_merge_jit = jax.jit(impl,
+                                         donate_argnums=_donate(0))
+        self._set_pool_cache(self._pf_merge_jit(
+            self.pool_cache(), self._pf_cache, jnp.int32(prow),
+            jnp.int32(slot)))
+
+    def prefill_finish(self, prow: int, slot: int):
+        """Install the row and arm the slot's decode state from the
+        carry; returns the first generated token as a device scalar (no
+        sync here)."""
+        raise NotImplementedError
+
+    def _prefill_row(self, tokens, plen):
+        """Legacy batch-1 prefill as ONE jitted program with a *traced*
+        prompt length: distinct prompt lengths under the same padded
+        shape share a compile (prefill_bucket bounds the shapes;
+        trace_counts["prefill"] counts the compiles)."""
+        if self._prefill_jit is None:
+            def impl(tokens, plen):
+                self.trace_counts["prefill"] += 1     # trace time only
+                return _prefill(self.params, self.cfg, tokens, plen,
+                                self.capacity,
+                                attn_backend=self.attn_backend,
+                                paged=self.kv == "paged",
+                                return_hidden=self._pf_needs_hidden)
+            self._prefill_jit = jax.jit(impl)
+        return self._prefill_jit(tokens, jnp.int32(plen))
 
     # hooks ------------------------------------------------------------
     def _init_pool(self):
@@ -218,13 +408,15 @@ class VanillaStrategy(DecodeStrategy):
         # deferred (device-harvest) variants count under the same keys:
         # an engine only ever drives one of the two harvest modes, and
         # either mode compiles exactly one program per sampling class.
-        self.trace_counts = {"greedy": 0, "sampled": 0}
+        self.trace_counts = {"greedy": 0, "sampled": 0, "prefill": 0,
+                             "prefill_chunk": 0}
 
         def _greedy_impl(cache, tok, active):
             self.trace_counts["greedy"] += 1     # runs at trace time only
             return vanilla_decode_step(self.params, self.cfg, cache, tok,
                                        active=active,
-                                       attn_backend=self.attn_backend)
+                                       attn_backend=self.attn_backend,
+                                       mask_writes=self._mask_writes)
 
         def _sampled_impl(cache, tok, keys, active, temps, tks, tps):
             self.trace_counts["sampled"] += 1
@@ -232,7 +424,8 @@ class VanillaStrategy(DecodeStrategy):
                                        temperature=temps, key=keys,
                                        active=active, top_k=tks,
                                        top_p=tps,
-                                       attn_backend=self.attn_backend)
+                                       attn_backend=self.attn_backend,
+                                       mask_writes=self._mask_writes)
 
         self._step_greedy = jax.jit(_greedy_impl)
         self._step = jax.jit(_sampled_impl)
@@ -247,7 +440,8 @@ class VanillaStrategy(DecodeStrategy):
             eff = active & ~ds.finished
             cache, tok, _ = vanilla_decode_step(
                 self.params, self.cfg, cache, tok, active=eff,
-                attn_backend=self.attn_backend)
+                attn_backend=self.attn_backend,
+                mask_writes=self._mask_writes)
             return cache, _commit(ds, tok, eff), tok
 
         def _sampled_dev_impl(cache, ds, tok, keys, active, temps, tks,
@@ -257,7 +451,8 @@ class VanillaStrategy(DecodeStrategy):
             cache, tok, _ = vanilla_decode_step(
                 self.params, self.cfg, cache, tok, temperature=temps,
                 key=keys, active=eff, top_k=tks, top_p=tps,
-                attn_backend=self.attn_backend)
+                attn_backend=self.attn_backend,
+                mask_writes=self._mask_writes)
             return cache, _commit(ds, tok, eff), tok
 
         self._step_greedy_dev = jax.jit(_greedy_dev_impl,
@@ -286,10 +481,7 @@ class VanillaStrategy(DecodeStrategy):
         return np.asarray(self.tokens), 1
 
     def prefill_request(self, tokens, plen):
-        row_cache, first, _ = _prefill(self.params, self.cfg, tokens, plen,
-                                       self.capacity,
-                                       attn_backend=self.attn_backend,
-                                       paged=self.kv == "paged")
+        row_cache, first, _ = self._prefill_row(tokens, plen)
         return (row_cache, first), first, 1
 
     def admit(self, slot, row, write_row):
@@ -297,11 +489,20 @@ class VanillaStrategy(DecodeStrategy):
         self.cache = write_row(self.cache, row_cache)
         self.tokens = self.tokens.at[slot].set(first)
 
+    def prefill_finish(self, prow, slot):
+        self._pf_install_row(prow, slot)
+        first = self._pf_carry["last"][slot]
+        self.tokens = self.tokens.at[slot].set(first)
+        return first
+
     def release(self, slot):
         self.cache = _maybe_release(self.cache, slot)
 
     def release_many(self, slots):
         self.cache = _maybe_release_many(self.cache, list(slots))
+
+    def _set_pool_cache(self, cache):
+        self.cache = cache
 
     def pool_cache(self):
         return self.cache
@@ -352,7 +553,8 @@ class PPDStrategy(DecodeStrategy):
         # greedy-only vs per-row-sampled compiled steps (see module doc);
         # trace_counts asserts all-greedy workloads never pay for the
         # sampled program (double verify + top-k/top-p filters)
-        self.trace_counts = {"greedy": 0, "sampled": 0}
+        self.trace_counts = {"greedy": 0, "sampled": 0, "prefill": 0,
+                             "prefill_chunk": 0}
 
         def _greedy_impl(st, active):
             self.trace_counts["greedy"] += 1     # runs at trace time only
@@ -436,10 +638,7 @@ class PPDStrategy(DecodeStrategy):
         return np.asarray(first), 1
 
     def prefill_request(self, tokens, plen):
-        row_cache, first, _ = _prefill(self.params, self.cfg, tokens, plen,
-                                       self.capacity,
-                                       attn_backend=self.attn_backend,
-                                       paged=self.kv == "paged")
+        row_cache, first, _ = self._prefill_row(tokens, plen)
         return (row_cache, first), first, 1
 
     def admit(self, slot, row, write_row):
@@ -454,6 +653,20 @@ class PPDStrategy(DecodeStrategy):
             guess_vals=st.guess_vals.at[slot].set(0.0),
             guess_idx=st.guess_idx.at[slot].set(0),
             tree_state=st.tree_state.at[slot].set(0))
+
+    def prefill_finish(self, prow, slot):
+        self._pf_install_row(prow, slot)
+        st = self.state
+        first = self._pf_carry["last"][slot]
+        self.state = st._replace(
+            root_token=st.root_token.at[slot].set(first),
+            guess_vals=st.guess_vals.at[slot].set(0.0),
+            guess_idx=st.guess_idx.at[slot].set(0),
+            tree_state=st.tree_state.at[slot].set(0))
+        return first
+
+    def _set_pool_cache(self, cache):
+        self.state = self.state._replace(cache=cache)
 
     def release(self, slot):
         self.state = self.state._replace(
@@ -509,6 +722,7 @@ class MedusaStrategy(DecodeStrategy):
     name = "medusa"
     supports_sampling = False
     supports_device_state = True
+    _pf_needs_hidden = True   # chunk carry holds head guesses too
 
     def __init__(self, params, heads, cfg: ModelConfig, *, m=3,
                  tree_states=None, attn_backend=None):
@@ -529,7 +743,8 @@ class MedusaStrategy(DecodeStrategy):
         self.bufs = device_buffers(tree_states, m)
         self._fn = medusa_decode_step
         # greedy-only strategy: "sampled" stays 0 by construction
-        self.trace_counts = {"greedy": 0, "sampled": 0}
+        self.trace_counts = {"greedy": 0, "sampled": 0, "prefill": 0,
+                             "prefill_chunk": 0}
 
         def _greedy_impl(st, active):
             self.trace_counts["greedy"] += 1     # runs at trace time only
@@ -587,10 +802,7 @@ class MedusaStrategy(DecodeStrategy):
         return np.asarray(first), 1
 
     def prefill_request(self, tokens, plen):
-        row_cache, first, hidden = _prefill(
-            self.params, self.cfg, tokens, plen, self.capacity,
-            attn_backend=self.attn_backend, paged=self.kv == "paged",
-            return_hidden=True)
+        row_cache, first, hidden = self._prefill_row(tokens, plen)
         gv, gi = self._guesses(hidden[:1, plen - 1])      # [1,m,kmax]
         return (row_cache, first, gv[0], gi[0]), first, 1
 
@@ -603,6 +815,36 @@ class MedusaStrategy(DecodeStrategy):
             guess_vals=st.guess_vals.at[slot].set(gv),
             guess_idx=st.guess_idx.at[slot].set(gi),
             tree_state=st.tree_state.at[slot].set(0))
+
+    def _pf_carry_init(self):
+        carry = super()._pf_carry_init()
+        carry["gv"] = jnp.zeros((self.batch_size, self.m, self._kmax()),
+                                jnp.float32)
+        carry["gi"] = jnp.zeros((self.batch_size, self.m, self._kmax()),
+                                jnp.int32)
+        return carry
+
+    def _pf_update_carry(self, carry, last_logits, last_hidden, tgt):
+        carry = super()._pf_update_carry(carry, last_logits, None, tgt)
+        gv, gi = self._guesses(last_hidden)              # [W,m,kmax]
+        return dict(carry,
+                    gv=carry["gv"].at[tgt].set(gv, mode="drop"),
+                    gi=carry["gi"].at[tgt].set(gi, mode="drop"))
+
+    def prefill_finish(self, prow, slot):
+        self._pf_install_row(prow, slot)
+        st = self.state
+        c = self._pf_carry
+        first = c["last"][slot]
+        self.state = st._replace(
+            root_token=st.root_token.at[slot].set(first),
+            guess_vals=st.guess_vals.at[slot].set(c["gv"][slot]),
+            guess_idx=st.guess_idx.at[slot].set(c["gi"][slot]),
+            tree_state=st.tree_state.at[slot].set(0))
+        return first
+
+    def _set_pool_cache(self, cache):
+        self.state = self.state._replace(cache=cache)
 
     def release(self, slot):
         self.state = self.state._replace(
@@ -673,14 +915,22 @@ class SpecDecodeStrategy(DecodeStrategy):
 
     def bind(self, batch_size, capacity, *, kv="ring", block_size=16,
              num_blocks=None, pool=False, harvest_every=1,
-             max_stops=DEFAULT_MAX_STOPS):
+             max_stops=DEFAULT_MAX_STOPS, chunked_prefill=False,
+             prefill_rows=2):
         if kv != "ring":
             raise ValueError("decode='ppd+spec' requires kv='ring': the "
                              "per-slot target/draft caches are "
                              "self-managed rings, not pool blocks")
+        if chunked_prefill:
+            raise ValueError("decode='ppd+spec' is batch-1 host-side; "
+                             "chunked prefill is not supported (the "
+                             "scheduler falls back to the legacy "
+                             "prefill for batch1 strategies)")
         super().bind(batch_size, capacity, kv=kv, block_size=block_size,
                      num_blocks=num_blocks, pool=pool,
-                     harvest_every=harvest_every, max_stops=max_stops)
+                     harvest_every=harvest_every, max_stops=max_stops,
+                     chunked_prefill=chunked_prefill,
+                     prefill_rows=prefill_rows)
         self.sd.capacity = capacity
 
     def _init_pool(self):

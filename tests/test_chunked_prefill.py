@@ -1,0 +1,192 @@
+"""Chunked prefill parity + budget tests.
+
+The tentpole invariant: ``prefill_chunk=C`` splits each prompt into
+C-token chunks fused into the regular scheduler ticks (up to
+``prefill_parallelism`` concurrent prefills per fused [W, C] forward) —
+and is an OPTIMIZATION ONLY.  Greedy outputs must be token-identical to
+the blocking whole-prompt prefill across every decode strategy,
+scheduler, KV layout, and attention backend; strategies that cannot
+chunk (batch-1 spec-decode) silently fall back to the legacy path.
+
+Also pinned here: the compile budget (one chunk program per distinct
+power-of-two dispatch width, nothing per prompt length), the
+``prefill_bucket`` default, and the one-time unbucketed-recompile
+warning.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.serving as serving
+from repro.configs import get_smoke_config
+from repro.core import init_prompt_params
+from repro.models import init_params
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
+
+CFG = get_smoke_config("granite-3-2b")
+CHUNK = 16                               # == block_size: the paged edge
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    return params, ppd
+
+
+@pytest.fixture(scope="module")
+def extras(model):
+    params, _ = model
+    from repro.models.medusa import init_medusa
+    heads = init_medusa(CFG, jax.random.PRNGKey(2), m=3)
+    dcfg = CFG.replace(name="draft", n_layers=1, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128)
+    dparams = init_params(dcfg, jax.random.PRNGKey(5))
+    return heads, dparams, dcfg
+
+
+def _prompts():
+    """Mixed lengths hitting the chunking edges: shorter than a chunk,
+    exactly one chunk (== block_size), and spanning several chunks with
+    a ragged tail."""
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, CFG.vocab_size, size=n) for n in (7, 16, 37)]
+
+
+def _llm(model, extras, **cfg_kw):
+    params, ppd = model
+    heads, dparams, dcfg = extras
+    cfg_kw.setdefault("capacity", 128)
+    cfg_kw.setdefault("batch_size", 2)
+    cfg_kw.setdefault("block_size", 16)
+    return LLMEngine(EngineConfig(**cfg_kw), params=params, cfg=CFG,
+                     ppd_params=ppd, medusa_heads=heads,
+                     draft_params=dparams, draft_cfg=dcfg, draft_ppd=None)
+
+
+def _run(model, extras, **cfg_kw):
+    llm = _llm(model, extras, **cfg_kw)
+    outs = llm.generate(_prompts(), SamplingParams(max_tokens=6))
+    return llm, [(o.token_ids.tolist(), o.finish_reason) for o in outs]
+
+
+# ------------------------------------------------------- parity grid
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("kv", ["ring", "paged"])
+@pytest.mark.parametrize("decode", sorted(serving.DECODE_STRATEGIES))
+@pytest.mark.parametrize("scheduler", sorted(serving.SCHEDULERS))
+def test_chunked_matches_unchunked(model, extras, decode, scheduler, kv,
+                                   backend):
+    """Every decode x scheduler x kv x backend combo is token-identical
+    (and finish-reason-identical) with prefill_chunk on vs off.  Combos
+    that cannot chunk — the static scheduler and batch-1 spec-decode —
+    must run the legacy path unchanged rather than fail."""
+    if decode == "ppd+spec" and (kv == "paged" or backend == "pallas"):
+        pytest.skip("spec-decode requires kv='ring' + the ref backend")
+    if scheduler == "static" and kv == "paged":
+        pytest.skip("kv='paged' requires scheduler='continuous'")
+    kw = dict(decode=decode, scheduler=scheduler, kv=kv,
+              attn_backend=backend)
+    _, ref = _run(model, extras, **kw)
+    llm, got = _run(model, extras, prefill_chunk=CHUNK,
+                    prefill_parallelism=2, **kw)
+    assert got == ref
+    if scheduler == "continuous":
+        chunked = llm.engine.prefill_chunk > 0
+        assert chunked == (decode != "ppd+spec")   # spec: legacy fallback
+        if chunked:
+            assert llm.engine.stats["prefill_chunks"] > 0
+
+
+@pytest.mark.parametrize("harvest", [0, 4])
+def test_chunked_matches_unchunked_deferred_harvest(model, extras,
+                                                    harvest):
+    """Chunked prefill composes with both host loops: the K=0 legacy
+    per-step harvest and the deferred harvest_every=K async loop."""
+    _, ref = _run(model, extras, decode="vanilla", scheduler="continuous",
+                  kv="paged", harvest_every=1)
+    _, got = _run(model, extras, decode="vanilla", scheduler="continuous",
+                  kv="paged", harvest_every=harvest, prefill_chunk=CHUNK)
+    assert got == ref
+
+
+def test_chunk_larger_than_every_prompt(model, extras):
+    """prompt < chunk for every request: each prefill is a single
+    partially-valid chunk (the degenerate one-tick case)."""
+    kw = dict(decode="vanilla", scheduler="continuous", kv="paged")
+    _, ref = _run(model, extras, **kw)
+    llm, got = _run(model, extras, prefill_chunk=64, **kw)
+    assert got == ref
+    # one chunk per request: never more ticks than admissions
+    assert llm.engine.stats["prefill_chunks"] <= llm.engine.stats["admitted"]
+
+
+def test_stop_token_mid_prefill(model, extras):
+    """A decode slot's stop token fires while another slot is mid-way
+    through a multi-chunk prefill: the stopping request must cut at the
+    legacy position and the prefilling request must be unaffected."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab_size, size=8),
+               rng.integers(0, CFG.vocab_size, size=80)]  # 10 chunks @ 8
+
+    def run(chunk, stop=()):
+        llm = _llm(model, extras, decode="vanilla", scheduler="continuous",
+                   kv="paged", prefill_chunk=chunk, capacity=128)
+        sps = [SamplingParams(max_tokens=12, stop_token_ids=stop),
+               SamplingParams(max_tokens=6)]
+        outs = llm.generate(prompts, sps)
+        return [(o.token_ids.tolist(), o.finish_reason) for o in outs]
+
+    full = run(0)
+    cut = 2                      # fires on the short slot's 3rd token,
+    stop = (full[0][0][cut],)    # while the 80-token prefill is in flight
+    ref = run(0, stop)
+    got = run(8, stop)
+    assert got == ref
+    assert got[0] == (full[0][0][:cut], "stop")
+    assert got[1] == full[1]     # the prefilling request is unaffected
+
+
+# -------------------------------------------------- compile budget
+def test_prefill_chunk_trace_budget(model, extras):
+    """The chunk program compiles once per distinct power-of-two
+    dispatch width (<= log2(P)+1 programs), independent of prompt
+    lengths — and a second generation re-traces nothing."""
+    llm = _llm(model, extras, decode="vanilla", scheduler="continuous",
+               kv="paged", prefill_chunk=8, prefill_parallelism=2)
+    prompts = _prompts()
+    llm.generate(prompts, SamplingParams(max_tokens=4))
+    counts = dict(llm.strategy.trace_counts)
+    assert 1 <= counts["prefill_chunk"] <= 2      # widths {1, 2} only
+    llm.generate(prompts, SamplingParams(max_tokens=4))
+    assert dict(llm.strategy.trace_counts) == counts
+
+
+def test_prefill_bucket_defaults_to_chunk(model, extras):
+    """An unset prefill_bucket inherits the chunk size so the legacy
+    fallback path stays compile-bounded too."""
+    llm = _llm(model, extras, decode="vanilla", scheduler="continuous",
+               prefill_chunk=CHUNK)
+    assert llm.engine.prefill_bucket == CHUNK
+    llm2 = _llm(model, extras, decode="vanilla", scheduler="continuous",
+                prefill_chunk=CHUNK, prefill_bucket=32)
+    assert llm2.engine.prefill_bucket == 32       # explicit wins
+
+
+def test_unbucketed_prefill_warns_once(model, extras):
+    """prefill_bucket=0 + distinct prompt lengths recompiles the legacy
+    prefill per length; the scheduler warns exactly once."""
+    llm = _llm(model, extras, decode="vanilla", scheduler="continuous")
+    assert llm.engine.prefill_bucket == 0
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        llm.generate(_prompts(), SamplingParams(max_tokens=4))
+    hits = [x for x in w if "unbucketed prefill" in str(x.message)]
+    assert len(hits) == 1
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        llm.generate(_prompts(), SamplingParams(max_tokens=4))
+    assert not [x for x in w if "unbucketed prefill" in str(x.message)]

@@ -100,6 +100,30 @@ def test_decode_loop_sync_budget(model, extras, decode, kv):
     assert c.calls <= stats["admitted"] + bound
 
 
+@pytest.mark.parametrize("kv", ["ring", "paged"])
+def test_chunked_prefill_sync_budget(model, kv):
+    """Chunked prefill keeps the sync budget of the legacy path: chunk
+    dispatches are fire-and-forget device work, so the ONLY prefill sync
+    is still the one first-token read per admitted request (at the last
+    chunk), plus the usual per-interval harvests."""
+    K = 4
+    llm = _llm(model, decode="vanilla", scheduler="continuous", kv=kv,
+               block_size=8, harvest_every=K, prefill_chunk=8)
+    with host_sync.count_host_syncs() as c:
+        outs = llm.generate(_prompts(3, plen=20), SamplingParams(
+            max_tokens=N))
+    assert all(len(o.token_ids) == N for o in outs)
+    stats = llm.engine.stats
+    # 20-token prompts at chunk=8 are 3 chunks each; fused ticks advance
+    # both in-flight jobs at once, so 3 requests need >= 6 chunk ticks
+    assert stats["prefill_chunks"] >= 6
+    assert set(c.labels) <= {"prefill", "harvest"}, c.labels
+    assert c.labels["prefill"] == stats["admitted"] == 3
+    assert c.labels["harvest"] == stats["harvests"]
+    bound = math.ceil(stats["decode_steps"] / K) + stats["retired"]
+    assert c.calls <= stats["admitted"] + bound
+
+
 def test_legacy_loop_syncs_every_step(model):
     """harvest_every=0 is the per-step reference loop: one blocking
     "step" read per decode step — the cost the async loop removes."""
