@@ -84,12 +84,17 @@ def generate_vanilla(params, cfg, prompt, n_new, capacity=512):
     t0 = time.perf_counter()
     logits, cache, _, _ = forward(params, cfg, prompt, cache=cache)
     tok = jnp.argmax(logits[:, -1], -1)
-    out = [int(tok[0])]
     step = jax.jit(lambda c, t: vanilla_decode_step(params, cfg, c, t))
-    while len(out) < n_new:
+    # keep the timed loop sync-free: one token per step means the host
+    # never needs the values to keep going; harvest once after the stamp
+    toks = [tok]
+    while len(toks) < n_new:
         cache, tok, _ = step(cache, tok)
-        out.append(int(tok[0]))
-    return out, len(out), time.perf_counter() - t0
+        toks.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    out = [int(t[0]) for t in jax.device_get(toks)]
+    return out, len(out), dt
 
 
 def generate_ppd(params, ppd, cfg, prompt, n_new, bufs=None, n_ept=1,
@@ -102,7 +107,7 @@ def generate_ppd(params, ppd, cfg, prompt, n_new, bufs=None, n_ept=1,
     first = jnp.argmax(logits[:, -1], -1)
     st = init_ppd_state(cfg, cache, first, M, n_ept,
                         kmax=bufs.get("_kmax", 10))
-    out, steps = [int(first[0])], 1
+    out, steps = [int(jax.device_get(first)[0])], 1
     key = jax.random.PRNGKey(0)
     step = jax.jit(lambda s, k: ppd_decode_step(
         params, ppd, cfg, bufs, s, m=M, n_ept=n_ept,
@@ -111,10 +116,14 @@ def generate_ppd(params, ppd, cfg, prompt, n_new, bufs=None, n_ept=1,
         key, sub = jax.random.split(key)
         st, info = step(st, sub)
         steps += 1
-        for t in np.asarray(info["accepted_path_tokens"])[0][1:]:
+        # acceptance count decides loop exit, so one sync per step is
+        # inherent — but make it exactly one transfer, not three
+        path, root = jax.device_get(
+            (info["accepted_path_tokens"], st.root_token))
+        for t in path[0][1:]:
             if t >= 0:
                 out.append(int(t))
-        out.append(int(np.asarray(st.root_token)[0]))
+        out.append(int(root[0]))
     return out[:n_new], steps, time.perf_counter() - t0
 
 
@@ -131,16 +140,18 @@ def generate_medusa(params, heads, cfg, prompt, n_new, capacity=512):
     g0 = medusa_heads(heads, hidden[:, -1])
     gv, gi = jax.lax.top_k(g0, bufs.get("_kmax", 10))
     st = st._replace(guess_vals=gv.astype(jnp.float32), guess_idx=gi)
-    out, steps = [int(first[0])], 1
+    out, steps = [int(jax.device_get(first)[0])], 1
     step = jax.jit(lambda s: medusa_decode_step(params, heads, cfg, bufs, s,
                                                 m=M))
     while len(out) < n_new:
         st, info = step(st)
         steps += 1
-        for t in np.asarray(info["accepted_path_tokens"])[0][1:]:
+        path, root = jax.device_get(
+            (info["accepted_path_tokens"], st.root_token))
+        for t in path[0][1:]:
             if t >= 0:
                 out.append(int(t))
-        out.append(int(np.asarray(st.root_token)[0]))
+        out.append(int(root[0]))
     return out[:n_new], steps, time.perf_counter() - t0
 
 
@@ -161,7 +172,8 @@ def measure_acc_curve(params, guess_fn, cfg, pipe, m=M, n_prompts=8,
         sv = jax.jit(lambda c, t: vanilla_decode_step(params, cfg, c, t))
         for _ in range(steps + m + 1):
             c2, t2, _ = sv(c2, t2)
-            ref.append(int(t2[0]))
+            ref.append(t2)
+        ref = [int(t[0]) for t in jax.device_get(ref)]
         for ptr, g in guess_fn(cache, tok, steps, ref):
             if ptr + m >= len(ref):
                 break

@@ -35,10 +35,11 @@ def _eval_sequences(params, cfg, pipe, n_prompts, plen, glen):
         cache = init_cache(cfg, 1, plen + glen + 8)
         logits, cache, _, _ = forward(params, cfg, p, cache=cache)
         tok = jnp.argmax(logits[:, -1], -1)
-        seq = list(prompts[i]) + [int(tok[0])]
-        while len(seq) < plen + glen:
+        toks = [tok]
+        while len(toks) < glen:
             cache, tok, _ = step(cache, tok)
-            seq.append(int(tok[0]))
+            toks.append(tok)
+        seq = list(prompts[i]) + [int(t[0]) for t in jax.device_get(toks)]
         seqs.append(seq)
     return np.asarray(seqs, np.int32)
 

@@ -1,0 +1,18 @@
+"""jaxlint: JAX/Pallas-aware static analysis for the serving hot loop.
+
+Pure-stdlib ``ast`` analysis — importable (and runnable via
+``python -m repro.analysis``) without jax/numpy installed, so the CI gate
+stays cheap.  See docs/static_analysis.md for the rule catalogue and the
+pragma/baseline workflow.
+"""
+
+from .core import (  # noqa: F401
+    Finding,
+    ModuleInfo,
+    Rule,
+    all_rules,
+    load_baseline,
+    run,
+)
+
+__all__ = ["Finding", "ModuleInfo", "Rule", "all_rules", "load_baseline", "run"]

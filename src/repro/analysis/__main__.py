@@ -1,0 +1,104 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit status: 0 when no new findings (after pragma + baseline filtering),
+1 when new findings or parse failures exist, unless ``--warn-only``.
+Stdlib-only on purpose — the CI gate runs without installing jax.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .core import all_rules, apply_baseline, load_baseline, run
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxlint: JAX/Pallas-aware static analysis "
+        "(see docs/static_analysis.md)",
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        default=["src"],
+        help="files or directories to analyze (default: src)",
+    )
+    parser.add_argument(
+        "--baseline",
+        default="jaxlint_baseline.json",
+        help="baseline file of grandfathered findings "
+        "(default: ./jaxlint_baseline.json; missing file = empty baseline)",
+    )
+    parser.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore the baseline file; report every finding",
+    )
+    parser.add_argument(
+        "--warn-only",
+        action="store_true",
+        help="print findings but always exit 0 (CI benchmarks mode)",
+    )
+    parser.add_argument(
+        "--rules",
+        default=None,
+        help="comma-separated rule names to run (default: all)",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="list rules and exit"
+    )
+    args = parser.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.name}: {r.doc}")
+        return 0
+    if args.rules:
+        wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = wanted - {r.name for r in rules}
+        if unknown:
+            print(f"jaxlint: unknown rule(s): {', '.join(sorted(unknown))}")
+            return 2
+        rules = [r for r in rules if r.name in wanted]
+
+    findings, errors = run([Path(p) for p in args.paths], rules=rules)
+
+    entries = []
+    baseline_path = Path(args.baseline)
+    if not args.no_baseline and baseline_path.is_file():
+        entries = load_baseline(baseline_path)
+    new, baselined, unused = apply_baseline(findings, entries)
+
+    for f in new:
+        print(f.render())
+    for err in errors:
+        print(f"error: {err}")
+    # a baseline entry is only stale if the path it covers was scanned
+    prefixes = [p.rstrip("/") for p in args.paths]
+    for e in unused:
+        covered = any(
+            e.path == p or e.path.startswith(p + "/") for p in prefixes
+        )
+        if covered:
+            print(
+                f"warning: stale baseline entry ({e.rule} @ {e.path} "
+                f"~ {e.contains!r}) matched nothing — remove it"
+            )
+
+    status = "warn" if args.warn_only else "fail"
+    print(
+        f"jaxlint: {len(new)} new finding(s), {len(baselined)} baselined, "
+        f"{len(errors)} parse error(s)"
+        + (f" [{status}-mode]" if args.warn_only else "")
+    )
+    if args.warn_only:
+        return 0
+    return 1 if (new or errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,226 @@
+"""Core machinery for jaxlint: findings, pragmas, baseline, rule registry.
+
+Everything here is stdlib-only.  A rule is a named check over one parsed
+module; the runner walks the requested paths, parses each ``.py`` file once,
+hands the shared :class:`ModuleInfo` to every rule, then filters the raw
+findings through per-line ``# jaxlint: allow[rule]`` pragmas and the
+committed baseline file.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+PRAGMA_RE = re.compile(r"#\s*jaxlint:\s*allow\[([A-Za-z0-9_\-*,\s]+)\]")
+
+# Directories never worth scanning.
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", "results"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: rule name, location, message, and a fix-it hint."""
+
+    rule: str
+    path: str  # repo-relative (or as-given) posix path
+    line: int
+    col: int
+    message: str
+    hint: str
+    snippet: str  # stripped source line, used for baseline matching
+
+    def render(self) -> str:
+        return (
+            f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}\n"
+            f"    {self.snippet}\n"
+            f"    hint: {self.hint}"
+        )
+
+
+class ModuleInfo:
+    """A parsed module plus the bits every rule needs (lines, pragmas)."""
+
+    def __init__(self, path: Path, relpath: str, source: str) -> None:
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source)
+        # line number -> set of allowed rule names ("*" allows all rules)
+        self.pragmas: Dict[int, set] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = PRAGMA_RE.search(text)
+            if m:
+                names = {p.strip() for p in m.group(1).split(",") if p.strip()}
+                self.pragmas[i] = names
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def allowed(self, rule: str, lineno: int) -> bool:
+        names = self.pragmas.get(lineno, set())
+        return "*" in names or rule in names
+
+    def finding(
+        self, rule: str, node: ast.AST, message: str, hint: str
+    ) -> Finding:
+        lineno = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(
+            rule=rule,
+            path=self.relpath,
+            line=lineno,
+            col=col,
+            message=message,
+            hint=hint,
+            snippet=self.line_text(lineno),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A pluggable check: ``check(module) -> list[Finding]``."""
+
+    name: str
+    doc: str
+    check: Callable[[ModuleInfo], List[Finding]]
+
+
+def all_rules() -> List[Rule]:
+    """The shipped rule set, imported lazily to keep cycles impossible."""
+    from .rules import donation, pallas, recompile, side_effect, sync_escape
+
+    return [
+        sync_escape.RULE,
+        recompile.RULE,
+        donation.RULE,
+        pallas.RULE,
+        side_effect.RULE,
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    contains: str
+    justification: str
+
+    def matches(self, f: Finding) -> bool:
+        return (
+            f.rule == self.rule
+            and f.path == self.path
+            and self.contains in f.snippet
+        )
+
+
+def load_baseline(path: Path) -> List[BaselineEntry]:
+    data = json.loads(path.read_text())
+    entries = []
+    for raw in data.get("entries", []):
+        entries.append(
+            BaselineEntry(
+                rule=raw["rule"],
+                path=raw["path"],
+                contains=raw["contains"],
+                justification=raw.get("justification", ""),
+            )
+        )
+    return entries
+
+
+def apply_baseline(
+    findings: Sequence[Finding], entries: Sequence[BaselineEntry]
+) -> Tuple[List[Finding], List[Finding], List[BaselineEntry]]:
+    """Split findings into (new, baselined); also return unused entries."""
+    new: List[Finding] = []
+    baselined: List[Finding] = []
+    used = [False] * len(entries)
+    for f in findings:
+        hit = None
+        for i, e in enumerate(entries):
+            if e.matches(f):
+                hit = i
+                break
+        if hit is None:
+            new.append(f)
+        else:
+            used[hit] = True
+            baselined.append(f)
+    unused = [e for e, u in zip(entries, used) if not u]
+    return new, baselined, unused
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def iter_python_files(paths: Iterable[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+        elif p.is_dir():
+            for sub in sorted(p.rglob("*.py")):
+                if any(part in _SKIP_DIRS for part in sub.parts):
+                    continue
+                out.append(sub)
+    return out
+
+
+def _relpath(path: Path, root: Optional[Path]) -> str:
+    try:
+        base = root if root is not None else Path.cwd()
+        return path.resolve().relative_to(base.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def run(
+    paths: Sequence[Path],
+    rules: Optional[Sequence[Rule]] = None,
+    root: Optional[Path] = None,
+) -> Tuple[List[Finding], List[str]]:
+    """Analyze ``paths``; return (findings, parse-error strings).
+
+    Pragma suppression happens here; baseline filtering is the caller's
+    job (the CLI), so library users see the full picture.
+    """
+    rules = list(rules) if rules is not None else all_rules()
+    findings: List[Finding] = []
+    errors: List[str] = []
+    for path in iter_python_files(paths):
+        rel = _relpath(path, root)
+        try:
+            source = path.read_text()
+            mod = ModuleInfo(path, rel, source)
+        except (SyntaxError, UnicodeDecodeError) as exc:
+            errors.append(f"{rel}: failed to parse: {exc}")
+            continue
+        for rule in rules:
+            for f in rule.check(mod):
+                if not mod.allowed(f.rule, f.line):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    # de-duplicate identical (rule, path, line) hits from one expression
+    seen = set()
+    unique: List[Finding] = []
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            unique.append(f)
+    return unique, errors

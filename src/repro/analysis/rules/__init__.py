@@ -1,0 +1,1 @@
+"""jaxlint rule modules.  Each exports ``RULE: core.Rule``."""

@@ -1,0 +1,112 @@
+"""Rule 3 — donation-safety.
+
+An argument passed at a ``donate_argnums`` position hands its buffer to XLA;
+reading the same name afterwards aliases freed (or reused) memory.  The repo
+declares donation on every deferred-step program (``_donate(0, 1)``), so a
+use-after-donate compiles fine on CPU (where ``_donate`` disables itself)
+and corrupts state only on accelerators — exactly the bug class a static
+check must catch.
+
+A read is safe when the name is rebound first — the canonical double-buffer
+pattern rebinds in the same statement as the call:
+
+    self.cache, tok = self._step_dev(self.cache, tok)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from ..core import Finding, ModuleInfo, Rule
+from ..taint import ModuleModel, dotted_name
+
+_HINT = (
+    "rebind the donated name from the call's result (double-buffer: "
+    "`x, ... = jitted(x, ...)`) or drop donation for this argument"
+)
+
+
+def _name_of(node: ast.expr) -> Optional[str]:
+    """Donatable operand spelling: bare or dotted name."""
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return dotted_name(node)
+    return None
+
+
+def _reads_and_stores(
+    scope: ast.AST,
+) -> Tuple[List[Tuple[int, str]], List[Tuple[int, str]]]:
+    reads: List[Tuple[int, str]] = []
+    stores: List[Tuple[int, str]] = []
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            name = dotted_name(node)
+            if name is None:
+                continue
+            ctx = node.ctx
+            if isinstance(ctx, ast.Load):
+                reads.append((node.lineno, name))
+            elif isinstance(ctx, (ast.Store, ast.Del)):
+                stores.append((node.lineno, name))
+    return reads, stores
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    model = ModuleModel(mod.tree)
+    findings: List[Finding] = []
+    scopes = [
+        n
+        for n in ast.walk(mod.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+    for scope in scopes:
+        reads, stores = _reads_and_stores(scope)
+        store_lines: Dict[str, List[int]] = {}
+        for line, name in stores:
+            store_lines.setdefault(name, []).append(line)
+        for call in ast.walk(scope):
+            if not isinstance(call, ast.Call):
+                continue
+            info = model.jit_info_for_call(call, scope)
+            if info is None or not info.donate_argnums:
+                continue
+            for pos in info.donate_argnums:
+                if pos >= len(call.args):
+                    continue
+                name = _name_of(call.args[pos])
+                if name is None:
+                    continue
+                # the name is rebound at the first store at/after the call
+                # line (same-statement rebinding is the safe idiom)
+                rebinds = [
+                    ln for ln in store_lines.get(name, []) if ln >= call.lineno
+                ]
+                horizon = min(rebinds) if rebinds else None
+                call_end = getattr(call, "end_lineno", None) or call.lineno
+                for rline, rname in reads:
+                    if rname != name and not rname.startswith(name + "."):
+                        continue
+                    if rline <= call_end:
+                        continue
+                    if horizon is not None and rline > horizon:
+                        continue
+                    findings.append(
+                        mod.finding(
+                            "donation-safety",
+                            call.args[pos],
+                            f"`{name}` is donated (donate_argnums position "
+                            f"{pos}) but read again at line {rline} before "
+                            "being rebound",
+                            _HINT,
+                        )
+                    )
+                    break
+    return findings
+
+
+RULE = Rule(
+    name="donation-safety",
+    doc="names read after being passed at a donate_argnums position",
+    check=check,
+)

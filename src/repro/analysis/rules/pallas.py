@@ -1,0 +1,242 @@
+"""Rule 4 — pallas-contract.
+
+Structural contracts of ``pl.pallas_call`` that fail at runtime (or worse,
+silently read garbage on TPU) but are checkable from the call site:
+
+* every ``BlockSpec`` index map must take exactly ``len(grid)`` parameters,
+  plus ``num_scalar_prefetch`` trailing scalar refs under a
+  ``PrefetchScalarGridSpec``;
+* literal block shapes in ``out_specs`` must divide the literal dims they
+  tile in ``out_shape`` (TPU pads ragged edges; reductions over padding are
+  wrong, and the repo's kernels assume exact tiling);
+* scalar-prefetch operands are read-only SMEM refs — the kernel body must
+  not store through them.
+
+Resolution is deliberately conservative: names are followed only to a unique
+literal assignment in the same file; anything dynamic is skipped, so this
+rule never guesses.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from ..core import Finding, ModuleInfo, Rule
+from ..taint import dotted_name
+
+_ARITY_HINT = (
+    "index_map must take one parameter per grid axis (plus "
+    "num_scalar_prefetch trailing scalar refs under PrefetchScalarGridSpec)"
+)
+_DIV_HINT = (
+    "pick a block shape that divides the array dim exactly, or pad the "
+    "array up front — TPU tiles do not mask ragged edges"
+)
+_PREFETCH_HINT = (
+    "scalar-prefetch refs are read-only SMEM; compute into a VMEM scratch "
+    "or an output ref instead"
+)
+
+
+def _collect_assignments(tree: ast.AST) -> Dict[str, List[ast.expr]]:
+    out: Dict[str, List[ast.expr]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.setdefault(t.id, []).append(node.value)
+    return out
+
+
+def _collect_defs(tree: ast.AST) -> Dict[str, List[ast.FunctionDef]]:
+    out: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            out.setdefault(node.name, []).append(node)
+    return out
+
+
+class _Resolver:
+    """Follow a Name to its unique literal assignment, else give up."""
+
+    def __init__(self, tree: ast.AST) -> None:
+        self.assigns = _collect_assignments(tree)
+        self.defs = _collect_defs(tree)
+
+    def value(self, node: Optional[ast.expr]) -> Optional[ast.expr]:
+        if node is None:
+            return None
+        if isinstance(node, ast.Name):
+            cands = self.assigns.get(node.id, [])
+            if len(cands) == 1:
+                return cands[0]
+            return None
+        return node
+
+    def arity(self, index_map: ast.expr) -> Optional[int]:
+        """Parameter count of an index map, when statically resolvable."""
+        if isinstance(index_map, ast.Lambda):
+            return len(index_map.args.args)
+        if isinstance(index_map, ast.Name):
+            cands = self.defs.get(index_map.id, [])
+            arities = {len(d.args.args) for d in cands}
+            if len(arities) == 1:
+                return arities.pop()
+        return None  # wrapped/partial index maps are skipped, not guessed
+
+
+def _int_tuple(node: Optional[ast.expr]) -> Optional[List[Optional[int]]]:
+    """Tuple literal -> per-dim int (None for non-literal dims)."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    dims: List[Optional[int]] = []
+    for e in node.elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+            dims.append(e.value)
+        else:
+            dims.append(None)
+    return dims
+
+
+def _block_specs(container: Optional[ast.expr]) -> List[ast.Call]:
+    if container is None:
+        return []
+    out = []
+    for node in ast.walk(container):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func) or ""
+            if name.endswith("BlockSpec"):
+                out.append(node)
+    return out
+
+
+def _spec_parts(spec: ast.Call):
+    """(block_shape_expr, index_map_expr) from a BlockSpec call."""
+    shape = spec.args[0] if spec.args else None
+    index_map = spec.args[1] if len(spec.args) > 1 else None
+    for kw in spec.keywords:
+        if kw.arg == "block_shape":
+            shape = kw.value
+        elif kw.arg == "index_map":
+            index_map = kw.value
+    return shape, index_map
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    findings: List[Finding] = []
+    resolver = _Resolver(mod.tree)
+    for call in ast.walk(mod.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = dotted_name(call.func) or ""
+        if not name.endswith("pallas_call"):
+            continue
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        kernel_expr = call.args[0] if call.args else None
+        grid_expr = resolver.value(kw.get("grid"))
+        in_specs = resolver.value(kw.get("in_specs"))
+        out_specs = resolver.value(kw.get("out_specs"))
+        num_prefetch = 0
+        grid_spec = kw.get("grid_spec")
+        if isinstance(grid_spec, ast.Call):
+            gkw = {k.arg: k.value for k in grid_spec.keywords if k.arg}
+            grid_expr = resolver.value(gkw.get("grid"))
+            in_specs = resolver.value(gkw.get("in_specs"))
+            out_specs = resolver.value(gkw.get("out_specs"))
+            npf = gkw.get("num_scalar_prefetch")
+            if isinstance(npf, ast.Constant) and isinstance(npf.value, int):
+                num_prefetch = npf.value
+
+        # (a) grid / index-map arity
+        grid_dims = _int_tuple(grid_expr)
+        grid_len = (
+            len(grid_expr.elts)
+            if isinstance(grid_expr, (ast.Tuple, ast.List))
+            else None
+        )
+        if grid_len is not None:
+            expected = grid_len + num_prefetch
+            for spec in _block_specs(in_specs) + _block_specs(out_specs):
+                _, index_map = _spec_parts(spec)
+                if index_map is None:
+                    continue
+                arity = resolver.arity(index_map)
+                if arity is not None and arity != expected:
+                    findings.append(
+                        mod.finding(
+                            "pallas-contract",
+                            spec,
+                            f"index map takes {arity} params but the grid "
+                            f"has {grid_len} axes"
+                            + (
+                                f" + {num_prefetch} scalar-prefetch refs"
+                                if num_prefetch
+                                else ""
+                            ),
+                            _ARITY_HINT,
+                        )
+                    )
+
+        # (b) literal block shape must divide literal out_shape dims
+        out_shape = resolver.value(kw.get("out_shape"))
+        shape_dims = None
+        if isinstance(out_shape, ast.Call):
+            oname = dotted_name(out_shape.func) or ""
+            if oname.endswith("ShapeDtypeStruct") and out_shape.args:
+                shape_dims = _int_tuple(out_shape.args[0])
+        for spec in _block_specs(out_specs):
+            block, _ = _spec_parts(spec)
+            block_dims = _int_tuple(block)
+            if block_dims is None or shape_dims is None:
+                continue
+            if len(block_dims) != len(shape_dims):
+                continue
+            for bd, sd in zip(block_dims, shape_dims):
+                if bd is None or sd is None or bd == 0:
+                    continue
+                if sd % bd != 0:
+                    findings.append(
+                        mod.finding(
+                            "pallas-contract",
+                            spec,
+                            f"block dim {bd} does not divide array dim {sd}",
+                            _DIV_HINT,
+                        )
+                    )
+
+        # (c) scalar-prefetch refs must not be stored through
+        if num_prefetch > 0 and isinstance(kernel_expr, ast.Name):
+            cands = resolver.defs.get(kernel_expr.id, [])
+            if len(cands) == 1:
+                kernel = cands[0]
+                sref_names = {
+                    a.arg for a in kernel.args.args[:num_prefetch]
+                }
+                for node in ast.walk(kernel):
+                    if not isinstance(node, ast.Subscript):
+                        continue
+                    if not isinstance(node.ctx, ast.Store):
+                        continue
+                    base = node.value
+                    if (
+                        isinstance(base, ast.Name)
+                        and base.id in sref_names
+                    ):
+                        findings.append(
+                            mod.finding(
+                                "pallas-contract",
+                                node,
+                                f"kernel stores through scalar-prefetch ref "
+                                f"`{base.id}`",
+                                _PREFETCH_HINT,
+                            )
+                        )
+    return findings
+
+
+RULE = Rule(
+    name="pallas-contract",
+    doc="BlockSpec/grid/scalar-prefetch structural contracts",
+    check=check,
+)

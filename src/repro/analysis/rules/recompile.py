@@ -1,0 +1,139 @@
+"""Rule 2 — recompile-hazard.
+
+Two hazards that silently multiply compiles of the hot-loop programs:
+
+(a) calling a jitted program with bare Python scalar literals (or ``len(...)``)
+    at positions not declared ``static_argnums``/``static_argnames`` — weak
+    typing makes each distinct value risk a fresh trace, and a deliberate
+    static should be *declared*, not smuggled.  Device-width operands must be
+    wrapped (``jnp.int32(x)``) so every value shares one compiled program.
+
+(b) Python ``if``/``while`` on traced values inside a jitted body — this
+    either crashes at trace time or, with shape-dependent branches, bakes a
+    different program per branch taken.  Branch on host state or use
+    ``jnp.where``/``lax.cond``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..core import Finding, ModuleInfo, Rule
+from ..taint import ModuleModel, TaintEnv
+
+_LITERAL_HINT = (
+    "wrap device-width operands as jnp.int32(x)/jnp.asarray(x) so one "
+    "compiled program serves every value, or declare the argument in "
+    "static_argnums/static_argnames if a per-value trace is intended"
+)
+_BRANCH_HINT = (
+    "branch on host state instead, or use jnp.where/lax.cond; if the "
+    "operand is genuinely compile-time, declare it static"
+)
+
+
+def _is_py_scalar(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(
+        node.value, (bool, int, float)
+    ):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id == "len"
+    return False
+
+
+def _check_call_sites(
+    mod: ModuleInfo, model: ModuleModel, findings: List[Finding]
+) -> None:
+    def visit(node: ast.AST, scope) -> None:
+        for child in ast.iter_child_nodes(node):
+            child_scope = (
+                child
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef))
+                else scope
+            )
+            if isinstance(child, ast.Call):
+                handle(child, child_scope)
+            visit(child, child_scope)
+
+    def handle(call: ast.Call, scope) -> None:
+        info = model.jit_info_for_call(call, scope)
+        if info is None:
+            return
+        for i, arg in enumerate(call.args):
+            if i in info.static_argnums or not _is_py_scalar(arg):
+                continue
+            findings.append(
+                mod.finding(
+                    "recompile-hazard",
+                    arg,
+                    f"Python scalar passed positionally (arg {i}) to "
+                    "a jitted callable without a static declaration",
+                    _LITERAL_HINT,
+                )
+            )
+        for kw in call.keywords:
+            if kw.arg is None or kw.arg in info.static_argnames:
+                continue
+            if _is_py_scalar(kw.value):
+                findings.append(
+                    mod.finding(
+                        "recompile-hazard",
+                        kw.value,
+                        f"Python scalar passed as {kw.arg}= to a "
+                        "jitted callable without a static declaration",
+                        _LITERAL_HINT,
+                    )
+                )
+
+    visit(mod.tree, None)
+
+
+def _check_traced_branches(
+    mod: ModuleInfo, model: ModuleModel, findings: List[Finding]
+) -> None:
+    seen = set()
+    for fn, info in model.jitted_bodies:
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        env = TaintEnv(
+            model,
+            fn,
+            seed_params_traced=True,
+            static_names=info.static_argnames,
+            static_nums=info.static_argnums,
+        )
+
+        def on_stmt(stmt, e) -> None:
+            if isinstance(stmt, (ast.If, ast.While)) and e.is_device(
+                stmt.test
+            ):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                findings.append(
+                    mod.finding(
+                        "recompile-hazard",
+                        stmt,
+                        f"Python `{kind}` on a traced value inside jitted "
+                        f"body `{fn.name}`",
+                        _BRANCH_HINT,
+                    )
+                )
+
+        env.scan(fn.body, on_stmt=on_stmt)
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    model = ModuleModel(mod.tree)
+    findings: List[Finding] = []
+    _check_call_sites(mod, model, findings)
+    _check_traced_branches(mod, model, findings)
+    return findings
+
+
+RULE = Rule(
+    name="recompile-hazard",
+    doc="undeclared-static scalars to jitted calls; traced Python branches",
+    check=check,
+)

@@ -1,0 +1,220 @@
+"""Rule 5 — trace-side-effect.
+
+A jitted body runs as *Python* only while tracing; mutations of external
+Python state (``self.foo = ...``, ``cache["k"] = ...``, ``acc.append(...)``)
+execute once per compile, not once per call — state silently goes stale the
+moment the compiled program is reused.  The single sanctioned exception is
+the repo's ``trace_counts`` bookkeeping, which exists precisely to count
+compiles and is bumped inside every deferred-step impl.
+
+Nested function definitions (Pallas kernels defined inside a jitted wrapper)
+are skipped — their ref stores are the kernel's job, not trace-time state.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..core import Finding, ModuleInfo, Rule
+from ..taint import ModuleModel, dotted_name
+
+_HINT = (
+    "return the value from the jitted function and commit it on the host, "
+    "or rename the counter under trace_counts if it intentionally counts "
+    "compiles"
+)
+
+_MUTATORS = {
+    "append",
+    "extend",
+    "insert",
+    "add",
+    "update",
+    "setdefault",
+    "remove",
+    "discard",
+    "clear",
+    "pop",
+    "popitem",
+}
+
+
+def _local_names(fn: ast.AST) -> Set[str]:
+    """Names bound inside ``fn`` (shallow: nested defs excluded)."""
+    names: Set[str] = set()
+    args = fn.args
+    for a in (
+        list(args.posonlyargs)
+        + list(args.args)
+        + list(args.kwonlyargs)
+        + ([args.vararg] if args.vararg else [])
+        + ([args.kwarg] if args.kwarg else [])
+    ):
+        names.add(a.arg)
+
+    def walk(body) -> None:
+        for stmt in body:
+            if isinstance(
+                stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ):
+                names.add(stmt.name)
+                continue
+            for node in ast.iter_child_nodes(stmt):
+                _collect_targets(node, names)
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, "body", None) if attr == "body" else getattr(
+                    stmt, attr, None
+                )
+                if isinstance(sub, list):
+                    walk([s for s in sub if isinstance(s, ast.stmt)])
+            for h in getattr(stmt, "handlers", []) or []:
+                if h.name:
+                    names.add(h.name)
+                walk(h.body)
+
+    def _collect_targets(node, names) -> None:
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+            ):
+                continue
+            _collect_targets(child, names)
+
+    walk(fn.body)
+    return names
+
+
+def _iter_shallow_stmts(body):
+    """All statements in a body, recursively, skipping nested defs."""
+    for stmt in body:
+        if isinstance(
+            stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            continue
+        yield stmt
+        for attr in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, attr, None)
+            if isinstance(sub, list):
+                yield from _iter_shallow_stmts(
+                    [s for s in sub if isinstance(s, ast.stmt)]
+                )
+        for h in getattr(stmt, "handlers", []) or []:
+            yield from _iter_shallow_stmts(h.body)
+
+
+def _is_trace_counts(node: ast.expr) -> bool:
+    cur = node
+    while isinstance(cur, (ast.Subscript, ast.Attribute)):
+        name = dotted_name(cur)
+        if name is not None and "trace_counts" in name:
+            return True
+        cur = cur.value
+    name = dotted_name(cur) if isinstance(cur, (ast.Name, ast.Attribute)) else None
+    return name is not None and "trace_counts" in name
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    model = ModuleModel(mod.tree)
+    findings: List[Finding] = []
+    seen = set()
+    for fn, _info in model.jitted_bodies:
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        locals_ = _local_names(fn)
+        for stmt in _iter_shallow_stmts(fn.body):
+            targets: List[ast.expr] = []
+            if isinstance(stmt, ast.Assign):
+                targets = list(stmt.targets)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                targets = [stmt.target]
+            for target in targets:
+                for t in ast.walk(target):
+                    if isinstance(t, ast.Attribute) and isinstance(
+                        t.ctx, ast.Store
+                    ):
+                        if _is_trace_counts(t):
+                            continue
+                        findings.append(
+                            mod.finding(
+                                "trace-side-effect",
+                                t,
+                                f"jitted body `{fn.name}` assigns attribute "
+                                f"`{dotted_name(t) or t.attr}` — runs at "
+                                "trace time only",
+                                _HINT,
+                            )
+                        )
+                    elif isinstance(t, ast.Subscript) and isinstance(
+                        t.ctx, ast.Store
+                    ):
+                        base = t.value
+                        if _is_trace_counts(t):
+                            continue
+                        if isinstance(base, ast.Name) and base.id in locals_:
+                            continue
+                        if isinstance(base, ast.Name):
+                            findings.append(
+                                mod.finding(
+                                    "trace-side-effect",
+                                    t,
+                                    f"jitted body `{fn.name}` stores into "
+                                    f"non-local `{base.id}[...]` — runs at "
+                                    "trace time only",
+                                    _HINT,
+                                )
+                            )
+                        elif isinstance(base, ast.Attribute):
+                            findings.append(
+                                mod.finding(
+                                    "trace-side-effect",
+                                    t,
+                                    f"jitted body `{fn.name}` stores into "
+                                    f"`{dotted_name(base) or '...'}[...]` — "
+                                    "runs at trace time only",
+                                    _HINT,
+                                )
+                            )
+            if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+                call = stmt.value
+                if (
+                    isinstance(call.func, ast.Attribute)
+                    and call.func.attr in _MUTATORS
+                ):
+                    base = call.func.value
+                    if _is_trace_counts(base):
+                        continue
+                    if isinstance(base, ast.Name) and base.id not in locals_:
+                        findings.append(
+                            mod.finding(
+                                "trace-side-effect",
+                                call,
+                                f"jitted body `{fn.name}` calls "
+                                f"`{base.id}.{call.func.attr}(...)` on "
+                                "non-local state — runs at trace time only",
+                                _HINT,
+                            )
+                        )
+                    elif isinstance(base, ast.Attribute):
+                        findings.append(
+                            mod.finding(
+                                "trace-side-effect",
+                                call,
+                                f"jitted body `{fn.name}` calls "
+                                f"`{dotted_name(base) or '...'}."
+                                f"{call.func.attr}(...)` on external state "
+                                "— runs at trace time only",
+                                _HINT,
+                            )
+                        )
+    return findings
+
+
+RULE = Rule(
+    name="trace-side-effect",
+    doc="mutation of non-trace_counts Python state inside jitted bodies",
+    check=check,
+)

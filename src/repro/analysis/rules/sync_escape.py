@@ -1,0 +1,201 @@
+"""Rule 1 — sync-escape.
+
+Device→host materialization that bypasses ``host_sync.device_get`` forces a
+blocking synchronization the sync-budget harness cannot see.  Inside the
+hot-loop modules (``serving/``, ``models/``, ``core/decode.py``) any direct
+``jax.device_get`` or ``.block_until_ready()`` is flagged; everywhere
+scanned, ``np.asarray``/``np.array``, ``float()``/``int()``/``bool()``, and
+``.item()``/``.tolist()`` are flagged when applied to a *provably*
+device-resident value.  Values routed through ``host_sync.device_get`` are
+host-side and never flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..core import Finding, ModuleInfo, Rule
+from ..taint import ModuleModel, TaintEnv, dotted_name
+
+_SCALAR_SINKS = {"float", "int", "bool"}
+_NP_SINKS = {
+    "np.asarray",
+    "np.array",
+    "np.ascontiguousarray",
+    "numpy.asarray",
+    "numpy.array",
+}
+_METHOD_SINKS = {"item", "tolist"}
+
+_HINT = (
+    "route through host_sync.device_get(value, label=<phase>) so the sync "
+    "is counted and batched with the phase's single transfer"
+)
+
+
+def _is_hot(relpath: str) -> bool:
+    if relpath.endswith("host_sync.py") or "analysis/" in relpath:
+        return False
+    return (
+        "serving/" in relpath
+        or "models/" in relpath
+        or relpath.endswith("core/decode.py")
+    )
+
+
+def _in_scope(relpath: str) -> bool:
+    # taint-proven sinks are checked everywhere except the analyzer itself,
+    # the choke point module, and the test tree (tests sync on purpose)
+    if relpath.endswith("host_sync.py") or "analysis/" in relpath:
+        return False
+    parts = relpath.split("/")
+    return "tests" not in parts
+
+
+def _own_exprs(stmt: ast.stmt) -> List[ast.expr]:
+    """Expressions attached directly to a statement (not nested blocks)."""
+    out: List[ast.expr] = []
+    for field in (
+        "value",
+        "test",
+        "iter",
+        "exc",
+        "msg",
+        "targets",
+        "target",
+    ):
+        v = getattr(stmt, field, None)
+        if isinstance(v, ast.expr):
+            out.append(v)
+        elif isinstance(v, list):
+            out.extend(x for x in v if isinstance(x, ast.expr))
+    for item in getattr(stmt, "items", []) or []:
+        out.append(item.context_expr)
+    return out
+
+
+def _bind_comprehensions(expr: ast.expr, env: TaintEnv) -> None:
+    for node in ast.walk(expr):
+        if isinstance(
+            node, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)
+        ):
+            for gen in node.generators:
+                dev = env.is_device(gen.iter)
+                if isinstance(gen.target, ast.Name):
+                    env.env[gen.target.id] = dev
+                elif isinstance(gen.target, ast.Tuple):
+                    for t in gen.target.elts:
+                        if isinstance(t, ast.Name):
+                            env.env[t.id] = dev
+
+
+def _check_expr(
+    expr: ast.expr,
+    env: TaintEnv,
+    mod: ModuleInfo,
+    hot: bool,
+    findings: List[Finding],
+) -> None:
+    _bind_comprehensions(expr, env)
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if hot and name == "jax.device_get":
+            findings.append(
+                mod.finding(
+                    "sync-escape",
+                    node,
+                    "direct jax.device_get in a hot-loop module bypasses the "
+                    "counted host_sync choke point",
+                    _HINT,
+                )
+            )
+            continue
+        if hot and (
+            name == "jax.block_until_ready"
+            or (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "block_until_ready"
+            )
+        ):
+            findings.append(
+                mod.finding(
+                    "sync-escape",
+                    node,
+                    "block_until_ready in a hot-loop module forces an "
+                    "uncounted device sync",
+                    _HINT,
+                )
+            )
+            continue
+        if name in _SCALAR_SINKS and len(node.args) == 1:
+            if env.is_device(node.args[0]):
+                findings.append(
+                    mod.finding(
+                        "sync-escape",
+                        node,
+                        f"{name}() on a device array blocks until the value "
+                        "is ready (hidden per-call sync)",
+                        _HINT,
+                    )
+                )
+            continue
+        if name in _NP_SINKS and node.args:
+            if env.is_device(node.args[0]):
+                findings.append(
+                    mod.finding(
+                        "sync-escape",
+                        node,
+                        f"{name}() on a device array performs an uncounted "
+                        "device->host transfer",
+                        _HINT,
+                    )
+                )
+            continue
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in _METHOD_SINKS
+            and not node.args
+        ):
+            if env.is_device(node.func.value):
+                findings.append(
+                    mod.finding(
+                        "sync-escape",
+                        node,
+                        f".{node.func.attr}() on a device array blocks until "
+                        "the value is ready (hidden per-call sync)",
+                        _HINT,
+                    )
+                )
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    if not _in_scope(mod.relpath):
+        return []
+    hot = _is_hot(mod.relpath)
+    model = ModuleModel(mod.tree)
+    findings: List[Finding] = []
+
+    def run_scope(scope, body) -> None:
+        env = TaintEnv(model, scope)
+
+        def on_stmt(stmt, e) -> None:
+            for expr in _own_exprs(stmt):
+                _check_expr(expr, e, mod, hot, findings)
+
+        env.scan(body, on_stmt=on_stmt)
+
+    run_scope(None, mod.tree.body)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            run_scope(node, node.body)
+    return findings
+
+
+RULE = Rule(
+    name="sync-escape",
+    doc="device->host sync bypassing host_sync.device_get",
+    check=check,
+)

@@ -1,0 +1,510 @@
+"""Shared jit registry and device-taint evaluation for jaxlint rules.
+
+The rules need two module-wide facts:
+
+1. **Which callables are jitted** (and with what ``static_argnums`` /
+   ``static_argnames`` / ``donate_argnums``) — covering the idioms this repo
+   actually uses: ``f = jax.jit(impl, ...)``, ``self._step_dev = jax.jit(...)``
+   inside ``__init__``/lazy builders, ``@jax.jit`` /
+   ``@functools.partial(jax.jit, ...)`` decorators, and factory methods whose
+   ``return jax.jit(impl, ...)`` result is stored on ``self``.
+
+2. **Which expressions provably hold device arrays** — seeded by ``jnp.*`` /
+   ``jax.*`` calls and calls to jitted callables, propagated through
+   attribute/subscript/arithmetic/method chains and through ``self.<attr>``
+   assignments (fixed-point over the class body).  ``host_sync.device_get``
+   results, ``.shape``/``.dtype`` reads, and ``is None`` checks are host
+   values.  Everything unknown defaults to *not* device — rules only fire on
+   provable taint, so misses are possible but noise is not.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+
+# Attribute reads that yield host metadata, never device arrays.
+UNTAINT_ATTRS = {"shape", "dtype", "ndim", "size", "nbytes", "sharding"}
+
+# jax.* entry points that do NOT return device arrays.
+_JAX_NON_ARRAY = {
+    "jax.jit",
+    "jax.device_get",
+    "jax.devices",
+    "jax.local_devices",
+    "jax.device_count",
+    "jax.local_device_count",
+    "jax.default_backend",
+    "jax.make_jaxpr",
+}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jnp.argmax' for Attribute chains, 'x' for Names, else None."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class JitInfo:
+    """Jit wrapping metadata for one callable."""
+
+    origin: str  # human-readable registration site, for hints
+    static_argnums: Set[int] = dataclasses.field(default_factory=set)
+    static_argnames: Set[str] = dataclasses.field(default_factory=set)
+    donate_argnums: Tuple[int, ...] = ()
+    func: Optional[FuncNode] = None  # resolved traced body, when local
+
+
+def _int_literals(node: ast.AST) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[int] = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+        return out
+    if isinstance(node, ast.Call):
+        # the repo's `_donate(0, 1)` helper (donation disabled on CPU but
+        # positions still declared) — take the int-literal positional args
+        name = dotted_name(node.func) or ""
+        if "donate" in name:
+            out = []
+            for e in node.args:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    out.append(e.value)
+            return out
+    return []
+
+
+def _str_literals(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+        ]
+    return []
+
+
+def parse_jit_call(call: ast.Call) -> Optional[Tuple[Optional[ast.AST], JitInfo]]:
+    """If ``call`` is ``jax.jit(...)`` (or ``partial(jax.jit, ...)``),
+    return (wrapped-function-expr-or-None, JitInfo)."""
+    name = dotted_name(call.func)
+    inner_args: List[ast.AST] = []
+    kwargs: List[ast.keyword] = []
+    if name == "jax.jit":
+        inner_args = list(call.args)
+        kwargs = list(call.keywords)
+    elif name in ("functools.partial", "partial") and call.args:
+        first = dotted_name(call.args[0])
+        if first != "jax.jit":
+            return None
+        inner_args = list(call.args[1:])
+        kwargs = list(call.keywords)
+    else:
+        return None
+    info = JitInfo(origin=f"line {call.lineno}")
+    for kw in kwargs:
+        if kw.arg == "static_argnums":
+            info.static_argnums = set(_int_literals(kw.value))
+        elif kw.arg == "static_argnames":
+            info.static_argnames = set(_str_literals(kw.value))
+        elif kw.arg == "donate_argnums":
+            info.donate_argnums = tuple(_int_literals(kw.value))
+    func_expr = inner_args[0] if inner_args else None
+    return func_expr, info
+
+
+class ClassModel:
+    def __init__(self, node: ast.ClassDef) -> None:
+        self.node = node
+        self.methods: Dict[str, FuncNode] = {}
+        self.jit_attrs: Dict[str, JitInfo] = {}
+        self.device_attrs: Set[str] = set()
+
+
+class ModuleModel:
+    """Module-wide jit registry + class device-attr sets for one file."""
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.tree = tree
+        self.functions: Dict[str, FuncNode] = {}
+        self.classes: List[ClassModel] = []
+        self.class_of: Dict[FuncNode, ClassModel] = {}
+        self.jit_globals: Dict[str, JitInfo] = {}
+        # every traced body found, with the JitInfo that traces it
+        self.jitted_bodies: List[Tuple[FuncNode, JitInfo]] = []
+        self._build()
+
+    # -- construction -------------------------------------------------------
+
+    def _build(self) -> None:
+        for node in self.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                cm = ClassModel(node)
+                self.classes.append(cm)
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        cm.methods[sub.name] = sub
+                        self.class_of[sub] = cm
+        self._register_decorated()
+        self._register_assignments()
+        self._register_factories()
+        for cm in self.classes:
+            self._class_device_fixpoint(cm)
+
+    def _register_decorated(self) -> None:
+        for fn in ast.walk(self.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in fn.decorator_list:
+                info: Optional[JitInfo] = None
+                if dotted_name(dec) == "jax.jit":
+                    info = JitInfo(origin=f"@jax.jit on {fn.name}")
+                elif isinstance(dec, ast.Call):
+                    parsed = parse_jit_call(dec)
+                    if parsed is not None:
+                        info = parsed[1]
+                        info.origin = f"decorator on {fn.name}"
+                if info is None:
+                    continue
+                info.func = fn
+                self.jitted_bodies.append((fn, info))
+                cm = self.class_of.get(fn)
+                if cm is not None:
+                    cm.jit_attrs[fn.name] = info
+                else:
+                    self.jit_globals[fn.name] = info
+
+    def _resolve_func_expr(
+        self, expr: Optional[ast.AST], scope: Optional[FuncNode]
+    ) -> Optional[FuncNode]:
+        """Resolve jax.jit's first argument to a local FunctionDef."""
+        if expr is None:
+            return None
+        if isinstance(expr, ast.Name):
+            if scope is not None:
+                local = _local_defs(scope).get(expr.id)
+                if local is not None:
+                    return local
+            return self.functions.get(expr.id)
+        if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name):
+            if expr.value.id == "self" and scope is not None:
+                cm = self.class_of.get(scope)
+                if cm is not None:
+                    return cm.methods.get(expr.attr)
+        return None
+
+    def _register_assignments(self) -> None:
+        """``x = jax.jit(...)`` and ``self.x = jax.jit(...)`` anywhere."""
+        for scope in self._all_scopes():
+            body_iter = ast.walk(scope) if scope is not None else ast.walk(self.tree)
+            for node in body_iter:
+                if not isinstance(node, ast.Assign):
+                    continue
+                if not isinstance(node.value, ast.Call):
+                    continue
+                parsed = parse_jit_call(node.value)
+                if parsed is None:
+                    continue
+                func_expr, info = parsed
+                info.func = self._resolve_func_expr(func_expr, scope)
+                if info.func is not None:
+                    self.jitted_bodies.append((info.func, info))
+                for target in node.targets:
+                    self._register_target(target, info, scope)
+
+    def _register_target(
+        self, target: ast.AST, info: JitInfo, scope: Optional[FuncNode]
+    ) -> None:
+        if isinstance(target, ast.Name):
+            self.jit_globals[target.id] = info
+        elif isinstance(target, ast.Attribute) and isinstance(
+            target.value, ast.Name
+        ):
+            if target.value.id == "self" and scope is not None:
+                cm = self.class_of.get(scope)
+                if cm is not None:
+                    cm.jit_attrs[target.attr] = info
+
+    def _register_factories(self) -> None:
+        """Methods whose ``return jax.jit(...)`` result lands on ``self``."""
+        factory_info: Dict[Tuple[int, str], JitInfo] = {}
+        for cm in self.classes:
+            for name, fn in cm.methods.items():
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Return) and isinstance(
+                        node.value, ast.Call
+                    ):
+                        parsed = parse_jit_call(node.value)
+                        if parsed is None:
+                            continue
+                        func_expr, info = parsed
+                        info.func = self._resolve_func_expr(func_expr, fn)
+                        if info.func is not None:
+                            self.jitted_bodies.append((info.func, info))
+                        factory_info[(id(cm), name)] = info
+        if not factory_info:
+            return
+        for cm in self.classes:
+            for fn in cm.methods.values():
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Assign):
+                        continue
+                    v = node.value
+                    if not (
+                        isinstance(v, ast.Call)
+                        and isinstance(v.func, ast.Attribute)
+                        and isinstance(v.func.value, ast.Name)
+                        and v.func.value.id == "self"
+                    ):
+                        continue
+                    info = factory_info.get((id(cm), v.func.attr))
+                    if info is None:
+                        continue
+                    for target in node.targets:
+                        self._register_target(target, info, fn)
+
+    def _all_scopes(self) -> List[Optional[FuncNode]]:
+        scopes: List[Optional[FuncNode]] = [None]
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append(node)
+        return scopes
+
+    def _class_device_fixpoint(self, cm: ClassModel) -> None:
+        """Find ``self.<attr>`` names ever assigned device values."""
+        for _ in range(4):  # attrs feed each other; small bound suffices
+            before = len(cm.device_attrs)
+            for fn in cm.methods.values():
+                env = TaintEnv(self, fn, seed_params_traced=False)
+                env.scan(fn.body, record_self_attrs=cm)
+            if len(cm.device_attrs) == before:
+                break
+
+    # -- lookup -------------------------------------------------------------
+
+    def jit_info_for_call(
+        self, call: ast.Call, scope: Optional[FuncNode]
+    ) -> Optional[JitInfo]:
+        """JitInfo if the callee is a registered jitted callable."""
+        f = call.func
+        if isinstance(f, ast.Name):
+            if scope is not None:
+                local = self._local_jits(scope).get(f.id)
+                if local is not None:
+                    return local
+            return self.jit_globals.get(f.id)
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+            if f.value.id == "self" and scope is not None:
+                cm = self.class_of.get(scope)
+                if cm is not None:
+                    return cm.jit_attrs.get(f.attr)
+        return None
+
+    def _local_jits(self, scope: FuncNode) -> Dict[str, JitInfo]:
+        out: Dict[str, JitInfo] = {}
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                parsed = parse_jit_call(node.value)
+                if parsed is None:
+                    continue
+                _, info = parsed
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out[t.id] = info
+        return out
+
+
+def _local_defs(scope: FuncNode) -> Dict[str, FuncNode]:
+    out: Dict[str, FuncNode] = {}
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node is not scope:
+                out[node.name] = node
+    return out
+
+
+class TaintEnv:
+    """Forward device-taint evaluation over one function body."""
+
+    def __init__(
+        self,
+        model: ModuleModel,
+        scope: Optional[FuncNode],
+        seed_params_traced: bool = False,
+        static_names: Optional[Set[str]] = None,
+        static_nums: Optional[Set[int]] = None,
+    ) -> None:
+        self.model = model
+        self.scope = scope
+        self.cls = model.class_of.get(scope) if scope is not None else None
+        self.env: Dict[str, bool] = {}
+        if scope is not None and seed_params_traced:
+            static_names = static_names or set()
+            static_nums = static_nums or set()
+            params = [a.arg for a in scope.args.args]
+            for i, p in enumerate(params):
+                if p == "self":
+                    continue
+                self.env[p] = i not in static_nums and p not in static_names
+            for a in scope.args.kwonlyargs:
+                self.env[a.arg] = a.arg not in static_names
+
+    # -- statement scan ------------------------------------------------------
+
+    def scan(
+        self,
+        body: List[ast.stmt],
+        record_self_attrs: Optional[ClassModel] = None,
+        on_stmt=None,
+    ) -> None:
+        """Walk statements in order, updating the name->device map.
+
+        When ``record_self_attrs`` is given, device assignments to
+        ``self.<attr>`` are added to that class's ``device_attrs``.
+        ``on_stmt(stmt, env)`` is invoked for every statement *before* its
+        assignment effects apply — rules use it to evaluate the statement's
+        own expressions against the taint state at that program point.
+        Nested function bodies are never entered; they get their own scan.
+        """
+        for stmt in body:
+            if on_stmt is not None:
+                on_stmt(stmt, self)
+            if isinstance(stmt, ast.Assign):
+                val_dev = self.is_device(stmt.value)
+                for target in stmt.targets:
+                    self._assign(target, stmt.value, val_dev, record_self_attrs)
+            elif isinstance(stmt, ast.AugAssign):
+                val_dev = self.is_device(stmt.value) or self.is_device(
+                    stmt.target
+                )
+                self._assign(stmt.target, stmt.value, val_dev, record_self_attrs)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                val_dev = self.is_device(stmt.value)
+                self._assign(stmt.target, stmt.value, val_dev, record_self_attrs)
+            elif isinstance(stmt, ast.For):
+                it_dev = self.is_device(stmt.iter)
+                self._assign(stmt.target, stmt.iter, it_dev, record_self_attrs)
+                self.scan(stmt.body, record_self_attrs, on_stmt)
+                self.scan(stmt.orelse, record_self_attrs, on_stmt)
+            elif isinstance(stmt, ast.While):
+                self.scan(stmt.body, record_self_attrs, on_stmt)
+                self.scan(stmt.orelse, record_self_attrs, on_stmt)
+            elif isinstance(stmt, ast.If):
+                self.scan(stmt.body, record_self_attrs, on_stmt)
+                self.scan(stmt.orelse, record_self_attrs, on_stmt)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                self.scan(stmt.body, record_self_attrs, on_stmt)
+            elif isinstance(stmt, ast.Try):
+                self.scan(stmt.body, record_self_attrs, on_stmt)
+                for h in stmt.handlers:
+                    self.scan(h.body, record_self_attrs, on_stmt)
+                self.scan(stmt.orelse, record_self_attrs, on_stmt)
+                self.scan(stmt.finalbody, record_self_attrs, on_stmt)
+
+    def _assign(
+        self,
+        target: ast.AST,
+        value: ast.AST,
+        val_dev: bool,
+        record: Optional[ClassModel],
+    ) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = val_dev
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            if isinstance(value, (ast.Tuple, ast.List)) and len(
+                value.elts
+            ) == len(target.elts):
+                for t, v in zip(target.elts, value.elts):
+                    self._assign(t, v, self.is_device(v), record)
+            else:
+                # unpacking a jitted/device result taints every target
+                for t in target.elts:
+                    inner = t.value if isinstance(t, ast.Starred) else t
+                    self._assign(inner, value, val_dev, record)
+        elif isinstance(target, ast.Attribute) and isinstance(
+            target.value, ast.Name
+        ):
+            if target.value.id == "self" and record is not None and val_dev:
+                record.device_attrs.add(target.attr)
+
+    # -- expression taint ----------------------------------------------------
+
+    def is_device(self, node: Optional[ast.AST]) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, False)
+        if isinstance(node, ast.Attribute):
+            if node.attr in UNTAINT_ATTRS:
+                return False
+            if isinstance(node.value, ast.Name) and node.value.id == "self":
+                if self.cls is not None and node.attr in self.cls.device_attrs:
+                    return True
+                return False
+            return self.is_device(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_device(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_device(node)
+        if isinstance(node, ast.BinOp):
+            return self.is_device(node.left) or self.is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_device(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_device(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return self.is_device(node.left) or any(
+                self.is_device(c) for c in node.comparators
+            )
+        if isinstance(node, ast.IfExp):
+            return self.is_device(node.body) or self.is_device(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_device(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_device(node.value)
+        if isinstance(node, ast.NamedExpr):
+            return self.is_device(node.value)
+        return False
+
+    def _call_device(self, call: ast.Call) -> bool:
+        name = dotted_name(call.func)
+        if name is not None:
+            root = name.split(".", 1)[0]
+            if name.endswith("device_get") or root == "host_sync":
+                return False
+            if root in ("jnp", "lax"):
+                return True
+            if root == "jax":
+                return name not in _JAX_NON_ARRAY
+            if root in ("np", "numpy", "int", "float", "bool", "len", "str"):
+                return False
+        info = self.model.jit_info_for_call(call, self.scope)
+        if info is not None:
+            return True
+        # method call: propagate taint from the receiver object, so
+        # x.astype(...), x.at[i].set(...), x.reshape(...) stay tainted
+        if isinstance(call.func, ast.Attribute):
+            if call.func.attr in ("item", "tolist"):
+                return False
+            return self.is_device(call.func.value)
+        return False

@@ -18,6 +18,8 @@ from repro.core.decode import commit_staged
 from repro.models import forward, init_cache
 from repro.models.config import ModelConfig
 
+from . import host_sync
+
 
 class PromptLookupDecoder:
     def __init__(self, params, cfg: ModelConfig, *, gamma: int = 4,
@@ -65,15 +67,19 @@ class PromptLookupDecoder:
         logits, cache, _, _ = forward(self.params, self.cfg, pj,
                                       cache=cache, moe_exact=True)
         root = jnp.argmax(logits[:, -1], -1)
-        produced = [int(root[0])]
+        produced = [int(host_sync.device_get(root, label="prefill")[0])]
         steps = 1
         while len(produced) < max_new_tokens:
-            chain = jnp.asarray(self._lookup(prompt_l + produced),
-                                jnp.int32)[None]
+            props = self._lookup(prompt_l + produced)
+            chain = jnp.asarray(props, jnp.int32)[None]
             cache, n_acc, bonus = self._verify(cache, root, chain)
             steps += 1
-            n = int(n_acc[0])
-            produced.extend(int(x) for x in np.asarray(chain[0])[:n])
-            produced.append(int(bonus[0]))
+            # one counted sync per verify step; accepted proposals are
+            # already host ints, so no second device round-trip is needed
+            n_acc_h, bonus_h = host_sync.device_get((n_acc, bonus),
+                                                    label="step")
+            n = int(n_acc_h[0])
+            produced.extend(props[:n])
+            produced.append(int(bonus_h[0]))
             root = bonus
         return np.asarray(produced[:max_new_tokens]), steps

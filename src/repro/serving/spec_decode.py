@@ -30,6 +30,8 @@ from repro.core.decode import commit_staged
 from repro.models import forward, init_cache
 from repro.models.config import ModelConfig
 
+from . import host_sync
+
 
 @dataclasses.dataclass
 class SpecStats:
@@ -153,9 +155,10 @@ class SpeculativeDecoder:
         while len(out) < self.gamma:
             st, info = self._ppd_step(st)
             stats.draft_steps += 1
-            ptok = np.asarray(info["accepted_path_tokens"])[0]
-            out.extend(int(x) for x in ptok[1:] if x >= 0)
-            out.append(int(np.asarray(st.root_token)[0]))
+            ptok, rtok = host_sync.device_get(
+                (info["accepted_path_tokens"], st.root_token), label="step")
+            out.extend(int(x) for x in ptok[0][1:] if x >= 0)
+            out.append(int(rtok[0]))
         return jnp.asarray(out[:self.gamma])[None]
 
     # ------------------------------------------------------- incremental
@@ -186,8 +189,9 @@ class SpeculativeDecoder:
         tcache, n_acc, out, bonus = self._verify(state["tcache"],
                                                  state["root"], chain)
         stats.target_steps += 1
-        accepted = [int(x) for x in np.asarray(out[0]) if x >= 0]
-        stats.accepted_draft_tokens += int(n_acc[0])  # = len(accepted) - 1
+        n_acc_h, out_h = host_sync.device_get((n_acc, out), label="step")
+        accepted = [int(x) for x in out_h[0] if x >= 0]
+        stats.accepted_draft_tokens += int(n_acc_h[0])  # = len(accepted) - 1
         stats.bonus_tokens += 1
         # draft catch-up: commit accepted chain prefix + bonus from the
         # pre-speculation snapshot (correct cache, no stale entries) at

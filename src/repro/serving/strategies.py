@@ -478,7 +478,8 @@ class VanillaStrategy(DecodeStrategy):
                                       attn_backend=self.attn_backend)
         self.cache = cache
         self.tokens = jnp.argmax(logits[:, -1], axis=-1)
-        return np.asarray(self.tokens), 1
+        return np.asarray(host_sync.device_get(self.tokens,
+                                               label="prefill")), 1
 
     def prefill_request(self, tokens, plen):
         row_cache, first, _ = self._prefill_row(tokens, plen)
@@ -635,7 +636,7 @@ class PPDStrategy(DecodeStrategy):
                                       attn_backend=self.attn_backend)
         first = jnp.argmax(logits[:, -1], axis=-1)
         self._init_state(cache, first)
-        return np.asarray(first), 1
+        return np.asarray(host_sync.device_get(first, label="prefill")), 1
 
     def prefill_request(self, tokens, plen):
         row_cache, first, _ = self._prefill_row(tokens, plen)
@@ -799,7 +800,7 @@ class MedusaStrategy(DecodeStrategy):
                             kmax=self._kmax())
         gv, gi = self._guesses(hidden[:, -1])
         self.state = st._replace(guess_vals=gv, guess_idx=gi)
-        return np.asarray(first), 1
+        return np.asarray(host_sync.device_get(first, label="prefill")), 1
 
     def prefill_request(self, tokens, plen):
         row_cache, first, hidden = self._prefill_row(tokens, plen)

@@ -1,0 +1,74 @@
+"""Shared pytest fixtures.
+
+``trace_budget`` is the runtime twin of jaxlint's ``recompile-hazard``
+rule (docs/static_analysis.md): the static pass catches undeclared-static
+scalars and traced branches at review time; this fixture catches the same
+failure class — a step program compiling more often than its budget — at
+test time, by enforcing ceilings on the ``trace_counts`` bookkeeping every
+deferred-step impl bumps during ``jax.jit`` lowering.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+
+class TraceBudgetExceeded(AssertionError):
+    """A registered jitted program traced past its declared budget."""
+
+
+class BudgetedTraceCounts(dict):
+    """Drop-in for a strategy's ``trace_counts`` dict that fails the test
+    the moment a key is bumped past its ceiling.  The bump happens inside
+    jit lowering, so the failure points at the exact extra compile — not
+    at an end-of-test snapshot diff."""
+
+    def __init__(self, base, budgets, owner):
+        super().__init__(base)
+        self._budgets = dict(budgets)
+        self._owner = owner
+
+    def __setitem__(self, key, value):
+        limit = self._budgets.get(key)
+        if limit is not None and value > limit:
+            raise TraceBudgetExceeded(
+                f"{self._owner}: program {key!r} traced {value} time(s), "
+                f"budget is {limit} — an input shape or undeclared static "
+                "changed where one compiled program should serve every "
+                "step")
+        super().__setitem__(key, value)
+
+
+@pytest.fixture
+def trace_budget():
+    """Register per-program compile budgets on a strategy.
+
+        trace_budget(llm.strategy, greedy=2, sampled=0)  # explicit caps
+        trace_budget.freeze(llm.strategy)                # no NEW traces
+
+    Keys not named stay unlimited; exceeding a budget raises
+    :class:`TraceBudgetExceeded` at trace time.  Plain dicts are restored
+    at teardown so strategies outlive the test unharmed.
+    """
+    guarded = []
+
+    def register(strategy, **budgets):
+        counts = strategy.trace_counts
+        if isinstance(counts, BudgetedTraceCounts):
+            counts._budgets.update(budgets)
+        else:
+            strategy.trace_counts = BudgetedTraceCounts(
+                counts, budgets, type(strategy).__name__)
+            guarded.append(strategy)
+        return strategy
+
+    def freeze(strategy):
+        """Cap every program at its current count: any further trace of
+        a tracked program fails the test."""
+        budgets = {k: v for k, v in strategy.trace_counts.items()}
+        return register(strategy, **budgets)
+
+    register.freeze = freeze
+    yield register
+    for s in guarded:
+        s.trace_counts = dict(s.trace_counts)

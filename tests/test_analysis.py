@@ -1,0 +1,457 @@
+"""jaxlint analyzer suite: per-rule positive/negative fixtures, pragma and
+baseline round-trips, and CLI gate behavior (self-check on the shipped
+tree, nonzero exit on a seeded violation).
+
+Pure stdlib — the analyzer must work without jax installed, so these
+tests import no jax either.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import core
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _write(root: Path, rel: str, src: str) -> Path:
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(src))
+    return path
+
+
+def _findings(root: Path, rel: str, src: str, rule=None):
+    path = _write(root, rel, src)
+    findings, errors = core.run([path], root=root)
+    assert not errors, errors
+    if rule is not None:
+        findings = [f for f in findings if f.rule == rule]
+    return findings
+
+
+# ------------------------------------------------------------ sync-escape
+def test_sync_escape_flags_device_coercions(tmp_path):
+    found = _findings(tmp_path, "serving/hot.py", """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        def harvest(cache):
+            tok = jnp.argmax(cache, axis=-1)
+            a = np.asarray(tok)
+            b = int(tok[0])
+            c = tok.item()
+            d = jax.device_get(tok)
+            tok.block_until_ready()
+            return a, b, c, d
+    """, rule="sync-escape")
+    assert len(found) == 5
+    assert all("host_sync.device_get" in f.hint for f in found)
+
+
+def test_sync_escape_device_get_routed_not_flagged(tmp_path):
+    found = _findings(tmp_path, "serving/clean.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.serving import host_sync
+
+        def harvest(cache, reqs):
+            tok = jnp.argmax(cache, axis=-1)
+            good = np.asarray(host_sync.device_get(tok, label="harvest"))
+            hosty = np.asarray([r.id for r in reqs])   # host list is fine
+            meta = int(tok.shape[0])                   # shapes are host
+            return good, hosty, meta
+    """, rule="sync-escape")
+    assert found == []
+
+
+def test_sync_escape_outside_hot_modules_needs_taint(tmp_path):
+    # direct device_get is only banned in hot-loop modules; elsewhere the
+    # rule fires solely on provable device taint
+    found = _findings(tmp_path, "tools/timing.py", """
+        import jax
+        import jax.numpy as jnp
+
+        def grab(x):
+            y = jnp.square(x)
+            jax.block_until_ready(y)       # legit timing bracket here
+            return int(y[0])               # but this is a device coercion
+    """, rule="sync-escape")
+    assert len(found) == 1
+    assert "int()" in found[0].message
+
+
+def test_sync_escape_tracks_self_attributes(tmp_path):
+    found = _findings(tmp_path, "serving/strat.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        class Strategy:
+            def begin(self, logits):
+                self.tokens = jnp.argmax(logits[:, -1], axis=-1)
+                return np.asarray(self.tokens)
+    """, rule="sync-escape")
+    assert len(found) == 1
+
+
+# ------------------------------------------------------ recompile-hazard
+def test_recompile_flags_bare_scalar_to_jitted(tmp_path):
+    found = _findings(tmp_path, "mod.py", """
+        import jax
+
+        def impl(x, n):
+            return x * n
+
+        step = jax.jit(impl)
+
+        def drive(x, xs):
+            step(x, 3)
+            step(x, len(xs))
+            step(x, n=7)
+    """, rule="recompile-hazard")
+    assert len(found) == 3
+
+
+def test_recompile_static_declared_scalar_ok(tmp_path):
+    found = _findings(tmp_path, "mod.py", """
+        import jax
+        import jax.numpy as jnp
+
+        def impl(x, n, w=4):
+            return x * n
+
+        step = jax.jit(impl, static_argnums=(1,), static_argnames=("w",))
+
+        def drive(x):
+            step(x, 3, w=8)                 # declared static: fine
+            step(x, jnp.int32(3))           # device-width operand: fine
+    """, rule="recompile-hazard")
+    assert found == []
+
+
+def test_recompile_flags_traced_branch(tmp_path):
+    found = _findings(tmp_path, "mod.py", """
+        import jax
+
+        @jax.jit
+        def body(x):
+            if x > 0:
+                return x
+            return -x
+    """, rule="recompile-hazard")
+    assert len(found) == 1
+    assert "traced value" in found[0].message
+
+
+def test_recompile_static_branches_ok(tmp_path):
+    found = _findings(tmp_path, "mod.py", """
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("k", "mask"))
+        def body(x, k, mask=None):
+            if k > 2:                        # declared static
+                x = x * 2
+            if mask is not None:             # is-None checks are host
+                x = x + mask
+            if x.shape[0] > 1:               # shapes are host
+                x = x[:1]
+            return x
+    """, rule="recompile-hazard")
+    assert found == []
+
+
+# ------------------------------------------------------- donation-safety
+def test_donation_flags_read_after_donate(tmp_path):
+    found = _findings(tmp_path, "mod.py", """
+        import jax
+
+        def impl(buf, tok):
+            return buf + tok
+
+        step = jax.jit(impl, donate_argnums=(0,))
+
+        def drive(buf, tok):
+            out = step(buf, tok)
+            return buf + out                 # use-after-donate
+    """, rule="donation-safety")
+    assert len(found) == 1
+    assert "`buf`" in found[0].message
+
+
+def test_donation_same_statement_rebind_ok(tmp_path):
+    found = _findings(tmp_path, "mod.py", """
+        import jax
+
+        def _donate(*nums):
+            return nums
+
+        def impl(cache, tok):
+            return cache, tok
+
+        class S:
+            def __init__(self):
+                self._step = jax.jit(impl, donate_argnums=_donate(0, 1))
+
+            def drive(self, tok):
+                self.cache, tok = self._step(self.cache, tok)
+                return self.cache, tok       # rebound first: fine
+    """, rule="donation-safety")
+    assert found == []
+
+
+# -------------------------------------------------------- pallas-contract
+def test_pallas_flags_arity_and_divisibility(tmp_path):
+    found = _findings(tmp_path, "kern.py", """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((3, 128), lambda i, j: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            )(x)
+    """, rule="pallas-contract")
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 2
+    assert "takes 1 params" in msgs
+    assert "does not divide" in msgs
+
+
+def test_pallas_scalar_prefetch_contract(tmp_path):
+    found = _findings(tmp_path, "kern.py", """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kernel(tbl_ref, x_ref, o_ref):
+            tbl_ref[0] = 1                  # scalar-prefetch is read-only
+            o_ref[...] = x_ref[...]
+
+        def run(tbl, x):
+            return pl.pallas_call(
+                kernel,
+                grid_spec=pltpu.PrefetchScalarGridSpec(
+                    num_scalar_prefetch=1,
+                    grid=(4,),
+                    in_specs=[pl.BlockSpec((8, 128), lambda i, tbl: (i, 0))],
+                    out_specs=pl.BlockSpec((8, 128), lambda i, tbl: (i, 0)),
+                ),
+                out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+            )(tbl, x)
+    """, rule="pallas-contract")
+    assert len(found) == 1
+    assert "scalar-prefetch" in found[0].message
+
+
+def test_pallas_clean_call_ok(tmp_path):
+    found = _findings(tmp_path, "kern.py", """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2
+
+        def run(x):
+            grid = (4, 2)
+            return pl.pallas_call(
+                kernel,
+                grid=grid,
+                in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((32, 256), jnp.float32),
+            )(x)
+    """, rule="pallas-contract")
+    assert found == []
+
+
+# ----------------------------------------------------- trace-side-effect
+def test_side_effect_flags_external_mutation(tmp_path):
+    found = _findings(tmp_path, "mod.py", """
+        import jax
+
+        seen = []
+
+        class S:
+            def __init__(self):
+                def impl(x):
+                    seen.append(x)           # trace-time only
+                    self.last = x            # trace-time only
+                    return x * 2
+                self._step = jax.jit(impl)
+    """, rule="trace-side-effect")
+    assert len(found) == 2
+
+
+def test_side_effect_trace_counts_allowed(tmp_path):
+    found = _findings(tmp_path, "mod.py", """
+        import jax
+
+        class S:
+            def __init__(self):
+                self.trace_counts = {"greedy": 0}
+
+                def impl(x):
+                    self.trace_counts["greedy"] += 1
+                    local = {}
+                    local["tmp"] = x         # locals are fine
+                    return x * 2
+                self._step = jax.jit(impl)
+    """, rule="trace-side-effect")
+    assert found == []
+
+
+# ----------------------------------------------------- pragma + baseline
+def test_pragma_suppresses_finding(tmp_path):
+    found = _findings(tmp_path, "serving/hot.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def harvest(cache):
+            tok = jnp.argmax(cache)
+            return np.asarray(tok)  # jaxlint: allow[sync-escape]
+    """)
+    assert found == []
+
+
+def test_pragma_is_rule_specific(tmp_path):
+    found = _findings(tmp_path, "serving/hot.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def harvest(cache):
+            tok = jnp.argmax(cache)
+            return np.asarray(tok)  # jaxlint: allow[donation-safety]
+    """)
+    assert len(found) == 1          # wrong rule name: still reported
+
+
+def test_baseline_round_trip(tmp_path):
+    path = _write(tmp_path, "serving/hot.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def harvest(cache):
+            tok = jnp.argmax(cache)
+            return np.asarray(tok)
+    """)
+    findings, _ = core.run([path], root=tmp_path)
+    assert len(findings) == 1
+    entries = [core.BaselineEntry(
+        rule="sync-escape", path="serving/hot.py",
+        contains="np.asarray(tok)", justification="test")]
+    new, baselined, unused = core.apply_baseline(findings, entries)
+    assert new == [] and len(baselined) == 1 and unused == []
+    stale = [core.BaselineEntry(
+        rule="sync-escape", path="serving/other.py",
+        contains="nope", justification="stale")]
+    new, baselined, unused = core.apply_baseline(findings, stale)
+    assert len(new) == 1 and baselined == [] and unused == stale
+
+
+# ------------------------------------------------------------------- CLI
+def _run_cli(args, cwd):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=300)
+
+
+def test_cli_self_check_shipped_tree_is_clean():
+    """The committed tree + baseline must pass the exact CI gate."""
+    res = _run_cli(["src"], cwd=REPO)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "0 new finding(s)" in res.stdout
+
+
+def test_cli_seeded_violation_fails(tmp_path):
+    _write(tmp_path, "serving/bad.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def loop(cache):
+            tok = jnp.argmax(cache)
+            return np.asarray(tok)
+    """)
+    res = _run_cli(["serving"], cwd=tmp_path)
+    assert res.returncode == 1
+    assert "sync-escape" in res.stdout
+    # warn-only mode reports but does not gate (CI benchmarks job)
+    res = _run_cli(["serving", "--warn-only"], cwd=tmp_path)
+    assert res.returncode == 0
+    assert "1 new finding(s)" in res.stdout
+
+
+def test_cli_baseline_file_round_trip(tmp_path):
+    _write(tmp_path, "serving/bad.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def loop(cache):
+            tok = jnp.argmax(cache)
+            return np.asarray(tok)
+    """)
+    baseline = {
+        "entries": [{
+            "rule": "sync-escape",
+            "path": "serving/bad.py",
+            "contains": "np.asarray(tok)",
+            "justification": "fixture",
+        }]
+    }
+    (tmp_path / "jaxlint_baseline.json").write_text(json.dumps(baseline))
+    res = _run_cli(["serving"], cwd=tmp_path)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "1 baselined" in res.stdout
+    # --no-baseline rechecks everything
+    res = _run_cli(["serving", "--no-baseline"], cwd=tmp_path)
+    assert res.returncode == 1
+
+
+def test_cli_lists_all_five_rules():
+    res = _run_cli(["--list-rules"], cwd=REPO)
+    assert res.returncode == 0
+    for rule in ("sync-escape", "recompile-hazard", "donation-safety",
+                 "pallas-contract", "trace-side-effect"):
+        assert rule in res.stdout
+
+
+# -------------------------------------------- trace_budget runtime twin
+def test_trace_budget_fixture_raises_on_excess(trace_budget):
+    from conftest import TraceBudgetExceeded
+
+    class Dummy:
+        def __init__(self):
+            self.trace_counts = {"greedy": 0}
+
+    s = Dummy()
+    trace_budget(s, greedy=1)
+    s.trace_counts["greedy"] += 1            # within budget
+    with pytest.raises(TraceBudgetExceeded):
+        s.trace_counts["greedy"] += 1        # past it
+
+    s2 = Dummy()
+    s2.trace_counts["greedy"] = 3
+    trace_budget.freeze(s2)
+    with pytest.raises(TraceBudgetExceeded):
+        s2.trace_counts["greedy"] += 1
