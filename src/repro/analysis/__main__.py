@@ -11,7 +11,8 @@ import argparse
 import sys
 from pathlib import Path
 
-from .core import all_rules, apply_baseline, load_baseline, run
+from .core import (BaselineEntry, all_rules, apply_baseline, load_baseline,
+                   run, save_baseline)
 
 
 def main(argv=None) -> int:
@@ -50,6 +51,13 @@ def main(argv=None) -> int:
     parser.add_argument(
         "--list-rules", action="store_true", help="list rules and exit"
     )
+    parser.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline file from current findings on the "
+        "scanned paths (stale entries dropped, existing justifications "
+        "kept, new findings get a TODO justification) and exit 0",
+    )
     args = parser.parse_args(argv)
 
     rules = all_rules()
@@ -73,31 +81,62 @@ def main(argv=None) -> int:
         entries = load_baseline(baseline_path)
     new, baselined, unused = apply_baseline(findings, entries)
 
+    # a baseline entry is only stale if the path it covers was scanned
+    prefixes = [p.rstrip("/") for p in args.paths]
+    stale = [
+        e
+        for e in unused
+        if any(e.path == p or e.path.startswith(p + "/") for p in prefixes)
+    ]
+
+    if args.update_baseline:
+        # keep: entries that still match (with their justification) and
+        # entries whose path was not scanned (can't judge them here);
+        # drop: stale covered entries; add: current new findings
+        kept = [e for e in entries if e not in stale]
+        fresh = []
+        seen = {(e.rule, e.path, e.contains) for e in kept}
+        for f in new:
+            key = (f.rule, f.path, f.snippet.strip())
+            if key in seen:
+                continue
+            seen.add(key)
+            fresh.append(
+                BaselineEntry(
+                    rule=f.rule,
+                    path=f.path,
+                    contains=f.snippet.strip(),
+                    justification="TODO: justify",
+                )
+            )
+        save_baseline(baseline_path, kept + fresh)
+        print(
+            f"jaxlint: baseline updated — {len(kept)} kept, "
+            f"{len(fresh)} added, {len(stale)} stale removed"
+        )
+        return 0
+
     for f in new:
         print(f.render())
     for err in errors:
         print(f"error: {err}")
-    # a baseline entry is only stale if the path it covers was scanned
-    prefixes = [p.rstrip("/") for p in args.paths]
-    for e in unused:
-        covered = any(
-            e.path == p or e.path.startswith(p + "/") for p in prefixes
+    for e in stale:
+        print(
+            f"error: stale baseline entry ({e.rule} @ {e.path} "
+            f"~ {e.contains!r}) matched nothing — remove it or run "
+            f"--update-baseline"
         )
-        if covered:
-            print(
-                f"warning: stale baseline entry ({e.rule} @ {e.path} "
-                f"~ {e.contains!r}) matched nothing — remove it"
-            )
 
     status = "warn" if args.warn_only else "fail"
     print(
         f"jaxlint: {len(new)} new finding(s), {len(baselined)} baselined, "
-        f"{len(errors)} parse error(s)"
+        f"{len(errors)} parse error(s), {len(stale)} stale baseline "
+        f"entr{'y' if len(stale) == 1 else 'ies'}"
         + (f" [{status}-mode]" if args.warn_only else "")
     )
     if args.warn_only:
         return 0
-    return 1 if (new or errors) else 0
+    return 1 if (new or errors or stale) else 0
 
 
 if __name__ == "__main__":

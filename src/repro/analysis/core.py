@@ -95,7 +95,8 @@ class Rule:
 
 def all_rules() -> List[Rule]:
     """The shipped rule set, imported lazily to keep cycles impossible."""
-    from .rules import donation, pallas, recompile, side_effect, sync_escape
+    from .rules import (bt_lifetime, cow_write, donation, pallas, recompile,
+                        side_effect, sync_escape)
 
     return [
         sync_escape.RULE,
@@ -103,6 +104,8 @@ def all_rules() -> List[Rule]:
         donation.RULE,
         pallas.RULE,
         side_effect.RULE,
+        cow_write.RULE,
+        bt_lifetime.RULE,
     ]
 
 
@@ -139,6 +142,18 @@ def load_baseline(path: Path) -> List[BaselineEntry]:
             )
         )
     return entries
+
+
+def save_baseline(path: Path, entries: Sequence[BaselineEntry]) -> None:
+    """Write the baseline file (sorted for diff stability)."""
+    data = {
+        "entries": [
+            dataclasses.asdict(e)
+            for e in sorted(entries, key=lambda e: (e.path, e.rule,
+                                                    e.contains))
+        ]
+    }
+    path.write_text(json.dumps(data, indent=2) + "\n")
 
 
 def apply_baseline(

@@ -1,0 +1,635 @@
+"""kvsan: runtime KV-cache race detector + engine-state sanitizer.
+
+The paged cache's correctness rests on aliasing/lifetime invariants that
+no single module can check locally: blocks are refcounted and
+prefix-shared (`serving/block_manager.py`), written through per-slot
+block tables by traced scatters (`models/paged_cache.py`), armed and
+released across chunked prefills and deferred harvests
+(`serving/scheduler.py` / `strategies.py`), and double-buffered by
+donation.  kvsan maintains a *host-side shadow model* of the pool — one
+:class:`Block` per pool block (owner set, refcount, epoch, written
+watermark, free state) plus per-slot binding/prefill/release state — and
+validates every intercepted event against it, raising a
+:class:`KVSanError` with a readable report (uid, slot, block id, epoch,
+last writer) at the faulting call.
+
+Error classes (the numbers are used in reports and tests):
+
+1. ``shared-write``       — write into a refcount>1 block without CoW
+2. ``decode-into-prefill``— decode scatter into a slot whose chunked
+                            prefill is still in flight
+3. ``use-after-free`` / ``double-free`` of pool blocks
+4. ``stale-row``          — a block-table row written through after
+                            ``release_slots`` / after its uid was freed
+5. ``refcount-conservation`` — shadow vs ``BlockManager`` refcount /
+                            free-list drift across admit→fork→retire
+6. ``donated-read``       — host read (``host_sync.device_get``) of a
+                            buffer donated by a ``decode_deferred``
+                            dispatch
+
+Enablement: ``PPD_SANITIZE=1`` in the environment, or
+``EngineConfig(sanitize=True)`` / ``--sanitize`` (which call
+:func:`enable`).  When off, every hook is a single predicate check and
+the traced intercepts emit **nothing** into the compiled programs —
+zero overhead on the hot path.  When on, traced writes carry a
+``jax.debug.callback`` whose exception surfaces at the faulting
+dispatch, and sanitized programs serialize against the host shadow, so
+expect roughly 2-5x wall overhead (see docs/static_analysis.md).
+
+Host-vs-device timing: traced callbacks execute when the program runs,
+which the engines' existing sync points order *before* every shadow
+mutation that could race with them (harvest forces pending steps before
+the reap frees blocks; prefill-finish forces the chunk program before
+the prefilling flag clears), so callback-time shadow state is the state
+the write was dispatched under.
+
+This module is importable without jax or numpy (the ``repro.analysis``
+CI gate installs nothing): jax is imported lazily inside the traced
+emit helpers, and the CLI self-check (``python -m repro.analysis.kvsan``
+[``--seed-violation``]) replays a pure-host toy trace.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import os
+import weakref
+from typing import Dict, List, Optional, Set, Tuple
+
+__all__ = [
+    "KVSanError", "enable", "disable", "active", "last_report",
+    "clear_report", "clear_donated", "ShadowPool", "register_pool",
+    "manager_pool",
+    "set_current", "current_pool", "use_pool", "phase", "current_phase",
+    "emit_scatter_check", "emit_merge_check", "note_donated",
+    "check_host_read",
+]
+
+
+class KVSanError(RuntimeError):
+    """A sanitizer violation.  ``.report`` carries the full text."""
+
+    def __init__(self, report: str):
+        super().__init__(report)
+        self.report = report
+
+
+_enabled = os.environ.get("PPD_SANITIZE", "") not in ("", "0")
+_last_report: Optional[str] = None
+_current_pool: Optional["ShadowPool"] = None
+_phase = "decode"
+# id(array) -> weakref(array) of buffers donated by an in-flight
+# deferred dispatch; the weakref finalizer evicts the id before CPython
+# can reuse it, so membership never false-positives on address reuse.
+_donated: Dict[int, weakref.ref] = {}
+
+
+def enable() -> None:
+    global _enabled
+    _enabled = True
+
+
+def disable() -> None:
+    """Turn the sanitizer off and drop all shadow state."""
+    global _enabled, _current_pool, _last_report
+    _enabled = False
+    _current_pool = None
+    _last_report = None
+    _donated.clear()
+
+
+def active() -> bool:
+    return _enabled
+
+
+def last_report() -> Optional[str]:
+    """The most recent violation's full report text (None if clean)."""
+    return _last_report
+
+
+def clear_report() -> None:
+    global _last_report
+    _last_report = None
+
+
+def clear_donated() -> None:
+    """Forget every donated-buffer record (test isolation)."""
+    _donated.clear()
+
+
+def _violate(kind: str, msg: str) -> None:
+    global _last_report
+    report = f"kvsan: [{kind}] {msg}"
+    _last_report = report
+    raise KVSanError(report)
+
+
+# --------------------------------------------------------------- shadow
+@dataclasses.dataclass
+class Block:
+    """Shadow state of one pool block."""
+    ref: int = 0
+    free: bool = True
+    epoch: int = 0        # bumped each time the block leaves the free set
+    written: int = 0      # watermark: offsets [0, written) hold live data
+    last_writer: str = "-"
+    owners: Set[int] = dataclasses.field(default_factory=set)
+
+    def brief(self, bid: int) -> str:
+        own = sorted(self.owners) if self.owners else "-"
+        return (f"block {bid} (ref={self.ref} free={self.free} "
+                f"epoch={self.epoch} written={self.written} "
+                f"owners={own} last_writer={self.last_writer})")
+
+
+class ShadowPool:
+    """Host-side mirror of one paged pool + its block manager.
+
+    Fed by the intercept hooks; every mutation validates the event
+    against the shadow first, so a violation is reported at the call
+    that introduced it, not at the read that trips over it later."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.blocks = [Block() for _ in range(num_blocks)]
+        self.uid_blocks: Dict[int, List[int]] = {}
+        self.uid_shared: Dict[int, int] = {}    # uid -> n prefix-shared
+        self.slot_uid: Dict[int, int] = {}      # device row -> bound uid
+        self.slot_last_uid: Dict[int, int] = {} # survives release, for
+        self.prefilling: Set[int] = set()       # readable stale-row msgs
+        self.released: Set[int] = set()         # rows cleared on device
+        self.freed_uids: Set[int] = set()
+
+    # -- helpers ---------------------------------------------------------
+    def _blk(self, bid: int) -> Block:
+        if not 0 <= bid < self.num_blocks:
+            _violate("use-after-free",
+                     f"block id {bid} outside pool [0, {self.num_blocks})")
+        return self.blocks[bid]
+
+    def _claim(self, uid: int, bid: int, event: str) -> None:
+        b = self._blk(bid)
+        if not b.free:
+            _violate("double-free",
+                     f"{event} for uid {uid} handed out a block that is "
+                     f"not free: {b.brief(bid)} — the free list and the "
+                     f"refcounts disagree")
+        b.free = False
+        b.ref = 1
+        b.epoch += 1
+        b.written = 0
+        b.owners = {uid}
+        b.last_writer = f"alloc(uid={uid})"
+
+    def _share(self, uid: int, bid: int, event: str) -> None:
+        b = self._blk(bid)
+        if b.free:
+            _violate("use-after-free",
+                     f"{event} for uid {uid} shares a FREED block: "
+                     f"{b.brief(bid)}")
+        b.ref += 1
+        b.owners.add(uid)
+
+    # -- BlockManager events ---------------------------------------------
+    def on_alloc(self, uid: int, ids: List[int], n_shared: int) -> None:
+        for bid in ids[:n_shared]:
+            self._share(uid, bid, "allocate()")
+        for bid in ids[n_shared:]:
+            self._claim(uid, bid, "allocate()")
+        self.uid_blocks[uid] = list(ids)
+        self.uid_shared[uid] = n_shared
+        self.freed_uids.discard(uid)
+
+    def on_reserve(self, uid: int, shared_ids: List[int],
+                   n_shared: int) -> None:
+        self.on_alloc(uid, list(shared_ids), n_shared)
+
+    def on_materialize(self, uid: int,
+                       entries: List[Tuple[int, int]]) -> None:
+        ids = self.uid_blocks.setdefault(uid, [])
+        for _ti, bid in entries:
+            self._claim(uid, bid, "materialize()")
+            ids.append(bid)
+
+    def on_fork(self, src_uid: int, dst_uid: int,
+                ids: List[int]) -> None:
+        for bid in ids:
+            self._share(dst_uid, bid, f"fork({src_uid}->{dst_uid})")
+        self.uid_blocks[dst_uid] = list(ids)
+        self.uid_shared[dst_uid] = len(ids)
+        self.freed_uids.discard(dst_uid)
+
+    def on_cow(self, uid: int, table_index: int, src: int,
+               dst: int) -> None:
+        sb = self._blk(src)
+        if sb.free:
+            _violate("use-after-free",
+                     f"cow(uid={uid}) copies from a freed source: "
+                     f"{sb.brief(src)}")
+        self._claim(uid, dst, "cow()")
+        # the device copy will carry the content over
+        self.blocks[dst].written = sb.written
+        self.blocks[dst].last_writer = f"cow(uid={uid}, src={src})"
+        sb.ref -= 1
+        sb.owners.discard(uid)
+        ids = self.uid_blocks.get(uid)
+        if ids is not None and 0 <= table_index < len(ids):
+            ids[table_index] = dst
+
+    def on_free(self, uid: int, ids: List[int]) -> None:
+        known = self.uid_blocks.pop(uid, None)
+        if known is None:
+            was = " (previously freed)" if uid in self.freed_uids else ""
+            _violate("double-free",
+                     f"free_seq(uid={uid}) for a uid the shadow does not "
+                     f"know{was} — blocks {list(ids)} would be "
+                     f"double-freed")
+        for bid in ids:
+            b = self._blk(bid)
+            if b.free:
+                _violate("double-free",
+                         f"free_seq(uid={uid}) frees an already-free "
+                         f"block: {b.brief(bid)}")
+            if b.ref <= 0:
+                _violate("refcount-conservation",
+                         f"free_seq(uid={uid}) drops {b.brief(bid)} "
+                         f"below zero references")
+            b.ref -= 1
+            b.owners.discard(uid)
+            if b.ref == 0:
+                b.free = True
+        self.uid_shared.pop(uid, None)
+        self.freed_uids.add(uid)
+        # the device rows still pointing at this uid are now stale until
+        # release_slots clears them; a write through one is a violation
+        for slot, u in list(self.slot_uid.items()):
+            if u == uid:
+                del self.slot_uid[slot]
+                self.prefilling.discard(slot)
+
+    def check_manager(self, mgr) -> None:
+        """Class-5 conservation cross-check against the live
+        ``BlockManager``: per-block refcounts and the free list must
+        agree with the event-derived shadow."""
+        free = set(mgr._free)
+        for bid, b in enumerate(self.blocks):
+            mref = int(mgr._ref[bid])
+            if mref != b.ref:
+                _violate("refcount-conservation",
+                         f"BlockManager ref[{bid}]={mref} but the event "
+                         f"history implies {b.ref}: {b.brief(bid)} — a "
+                         f"reference was gained or lost outside "
+                         f"alloc/fork/cow/free")
+            if b.free != (bid in free):
+                where = "on" if bid in free else "missing from"
+                _violate("refcount-conservation",
+                         f"{b.brief(bid)} is {where} the BlockManager "
+                         f"free list but the event history disagrees")
+
+    # -- device-row events -----------------------------------------------
+    def bind_slot(self, slot: int, uid: int) -> None:
+        self.slot_uid[slot] = uid
+        self.slot_last_uid[slot] = uid
+        self.released.discard(slot)
+
+    def prefill_begin(self, slot: int) -> None:
+        self.prefilling.add(slot)
+
+    def prefill_finish(self, slot: int) -> None:
+        self.prefilling.discard(slot)
+
+    def on_set_row(self, slot: int, ids: List[int]) -> None:
+        self.released.discard(slot)
+        for bid in ids:
+            b = self._blk(bid)
+            if b.free:
+                _violate("use-after-free",
+                         f"block-table row {slot} pointed at a freed "
+                         f"block: {b.brief(bid)}")
+
+    def on_release_rows(self, slots: List[int]) -> None:
+        for slot in slots:
+            self.released.add(slot)
+            self.prefilling.discard(slot)
+            self.slot_uid.pop(slot, None)
+
+    # -- writes ----------------------------------------------------------
+    def _writer(self, slot: int, phase_: str) -> str:
+        uid = self.slot_uid.get(slot, self.slot_last_uid.get(slot, "?"))
+        return f"uid={uid} slot={slot} phase={phase_}"
+
+    def on_write(self, slot: int, bid: int, off: int,
+                 phase_: str) -> None:
+        """One valid scattered token write: (pool block, offset) through
+        ``slot``'s table row during ``phase_`` ('decode'|'prefill')."""
+        b = self._blk(bid)
+        writer = self._writer(slot, phase_)
+        if b.free:
+            _violate("use-after-free",
+                     f"write ({writer}, offset {off}) into a freed "
+                     f"block: {b.brief(bid)}")
+        if slot in self.released:
+            uid = self.slot_last_uid.get(slot, "?")
+            _violate("stale-row",
+                     f"write (slot={slot} phase={phase_}, offset {off}) "
+                     f"through a block-table row that was released (last "
+                     f"uid={uid}) — the row must be re-armed via "
+                     f"set_block_table_row before any write: "
+                     f"{b.brief(bid)}")
+        # an unbound slot (raw cache-level use, no scheduler) is checked
+        # against block state only — uid-scoped exemptions stay strict
+        uid = self.slot_uid.get(slot)
+        if phase_ == "decode" and slot in self.prefilling:
+            _violate("decode-into-prefill",
+                     f"decode scatter ({writer}, offset {off}) into a "
+                     f"slot whose chunked prefill is still in flight: "
+                     f"{b.brief(bid)} — decode writes must be masked "
+                     f"while length[slot] is frozen mid-prefill")
+        if b.ref > 1:
+            # a prefill-phase rewrite of the uid's own shared-prefix
+            # blocks is the idempotent splice the sharing invariant
+            # licenses; everything else needs CoW first
+            n_shared = self.uid_shared.get(uid, 0)
+            ids = self.uid_blocks.get(uid, [])
+            if not (phase_ == "prefill" and bid in ids[:n_shared]):
+                _violate("shared-write",
+                         f"write ({writer}, offset {off}) into a SHARED "
+                         f"block without copy-on-write: {b.brief(bid)} — "
+                         f"call cow_targets()/cow() and copy_blocks() "
+                         f"before diverging")
+        b.written = max(b.written, off + 1)
+        b.last_writer = writer
+
+    def on_splice(self, slot: int, ids: List[int], plen: int,
+                  uid: Optional[int] = None) -> None:
+        """Host-level full-span prompt splice (write_prefill_blocks).
+        ``uid`` defaults to the slot's binding (set at admission)."""
+        if uid is None:
+            uid = self.slot_uid.get(slot)
+        if uid is None:
+            _violate("stale-row",
+                     f"prompt splice into slot {slot} with no bound uid "
+                     f"— admission must bind the slot before the splice")
+        n_shared = self.uid_shared.get(uid, 0)
+        for j, bid in enumerate(ids):
+            b = self._blk(bid)
+            if b.free:
+                _violate("use-after-free",
+                         f"prompt splice (uid={uid} slot={slot}) into a "
+                         f"freed block: {b.brief(bid)}")
+            if b.ref > 1 and j >= n_shared:
+                _violate("shared-write",
+                         f"prompt splice (uid={uid} slot={slot}) "
+                         f"rewrites a shared block OUTSIDE the uid's "
+                         f"prefix span: {b.brief(bid)}")
+            lo, hi = j * self.block_size, (j + 1) * self.block_size
+            if plen > lo:
+                b.written = max(b.written, min(plen, hi) - lo)
+                b.last_writer = f"uid={uid} slot={slot} phase=splice"
+        self.bind_slot(slot, uid)
+
+    def on_copy(self, pairs: List[Tuple[int, int]]) -> None:
+        for src, dst in pairs:
+            sb, db = self._blk(src), self._blk(dst)
+            if sb.free:
+                _violate("use-after-free",
+                         f"copy_blocks reads a freed source: "
+                         f"{sb.brief(src)}")
+            if db.free:
+                _violate("use-after-free",
+                         f"copy_blocks writes a freed destination: "
+                         f"{db.brief(dst)}")
+            if db.ref > 1:
+                _violate("shared-write",
+                         f"copy_blocks overwrites a SHARED destination "
+                         f"without copy-on-write: {db.brief(dst)}")
+            db.written = max(db.written, sb.written)
+            db.last_writer = f"copy(src={src})"
+
+
+# ----------------------------------------------------- pool registration
+def register_pool(num_blocks: int, block_size: int) -> ShadowPool:
+    """Create a shadow pool and make it current (tests / engines)."""
+    pool = ShadowPool(num_blocks, block_size)
+    set_current(pool)
+    return pool
+
+
+def manager_pool(mgr) -> ShadowPool:
+    """The shadow pool mirroring a ``BlockManager`` (created on first
+    ask, stored on the manager, made current)."""
+    pool = getattr(mgr, "_kvsan_pool", None)
+    if pool is None:
+        pool = register_pool(mgr.num_blocks, mgr.block_size)
+        mgr._kvsan_pool = pool
+    return pool
+
+
+def set_current(pool: Optional[ShadowPool]) -> None:
+    global _current_pool
+    _current_pool = pool
+
+
+def current_pool() -> Optional[ShadowPool]:
+    return _current_pool
+
+
+def pool_if_active() -> Optional[ShadowPool]:
+    """The current shadow pool when sanitizing, else None — the one-line
+    guard every host-level intercept point uses."""
+    return _current_pool if _enabled else None
+
+
+@contextlib.contextmanager
+def use_pool(pool: ShadowPool):
+    prev = _current_pool
+    set_current(pool)
+    try:
+        yield pool
+    finally:
+        set_current(prev)
+
+
+# ------------------------------------------------------------ phase tags
+@contextlib.contextmanager
+def phase(name: str):
+    """Tag the program being traced/dispatched ('decode'|'prefill').
+    Read at TRACE time by the emit helpers — each strategy instance
+    traces its decode and chunk programs separately, so the tag bakes
+    into the right compiled program."""
+    global _phase
+    prev = _phase
+    _phase = name
+    try:
+        yield
+    finally:
+        _phase = prev
+
+
+def current_phase() -> str:
+    return _phase
+
+
+# ------------------------------------------------------ traced intercepts
+#
+# The callbacks resolve the shadow pool at CALL time, never at trace
+# time: jitted programs are cached by shape, so a program traced under
+# one engine's pool is re-executed under the next engine's (or under no
+# pool at all, when a unit test drives the cache functions raw).  A
+# baked-in pool reference would cross-check traffic between engines.
+# The phase tag, by contrast, IS a trace-time property (each strategy
+# traces its decode and prefill-chunk programs separately) and is baked.
+def _scatter_cb(phase_, bid, off, valid):
+    pool = _current_pool if _enabled else None
+    if pool is None:
+        return
+    v = valid.tolist()
+    bids, offs = bid.tolist(), off.tolist()
+    for row in range(len(v)):
+        for t in range(len(v[row])):
+            if v[row][t]:
+                pool.on_write(row, bids[row][t], offs[row][t], phase_)
+
+
+def emit_scatter_check(entry, bid, off) -> None:
+    """Called from ``scatter_paged`` at TRACE time: when the sanitizer
+    is enabled, attach a host callback validating every non-dropped
+    (block, offset) write of this dispatch against the shadow pool that
+    is current when the write executes.  Emits nothing (and costs
+    nothing) when the sanitizer is off."""
+    if not _enabled:
+        return
+    import jax
+    NB = entry["pos"].shape[0]
+    jax.debug.callback(
+        functools.partial(_scatter_cb, _phase), bid, off, bid < NB)
+
+
+def _merge_cb(slots):
+    pool = _current_pool if _enabled else None
+    if pool is None:
+        return
+    for slot in slots.tolist():
+        if slot < 0 or slot not in pool.slot_uid:
+            continue
+        if slot not in pool.prefilling:
+            _violate("stale-row",
+                     f"merge_prefill_rows writes block-table row {slot} "
+                     f"(uid={pool.slot_uid[slot]}) but no chunked "
+                     f"prefill is in flight on that slot")
+
+
+def emit_merge_check(cache, slots) -> None:
+    """Called from ``merge_prefill_rows`` at trace time: each in-range
+    target row must have a prefill in flight (padding lanes point past
+    the batch and are ignored)."""
+    if not _enabled:
+        return
+    import jax
+    import jax.numpy as jnp
+    B = next(e["bt"].shape[0] for e in cache["layers"]
+             if isinstance(e, dict) and "bt" in e)
+    jax.debug.callback(_merge_cb, jnp.where(slots < B, slots, -1))
+
+
+# ---------------------------------------------------- donated-buffer reads
+def note_donated(tree) -> None:
+    """Record the leaves of a pytree about to be passed at donated
+    positions of a deferred dispatch.  Recorded regardless of backend:
+    on CPU ``_donate`` disables real donation, so a host read would
+    *work* there and corrupt state only on accelerators — exactly the
+    class a sanitizer must keep loud on CPU test rigs."""
+    if not _enabled:
+        return
+    import jax
+    for leaf in jax.tree_util.tree_leaves(tree):
+        key = id(leaf)
+
+        def _evict(_wr, _key=key):
+            # weakref death callbacks receive the dead ref itself
+            _donated.pop(_key, None)
+
+        try:
+            ref = weakref.ref(leaf, _evict)
+        except TypeError:
+            continue          # non-weakrefable leaf (python scalar etc.)
+        _donated[key] = ref
+
+
+def check_host_read(tree, label: str = "get") -> None:
+    """Class-6 check at the ``host_sync.device_get`` choke point: none
+    of the fetched leaves may be a buffer donated by an earlier
+    deferred dispatch."""
+    if not _enabled or not _donated:
+        return
+    import jax
+    for leaf in jax.tree_util.tree_leaves(tree):
+        ref = _donated.get(id(leaf))
+        if ref is not None and ref() is leaf:
+            _violate("donated-read",
+                     f"host read (device_get label={label!r}) of a "
+                     f"buffer donated to a decode_deferred dispatch — "
+                     f"on accelerators this aliases freed/reused device "
+                     f"memory; re-read the rebound output instead")
+
+
+def sync(tree) -> None:
+    """Force a dispatched program when sanitizing, so its callbacks run
+    against the shadow state it was dispatched under (no-op when off)."""
+    if not _enabled:
+        return
+    import jax
+    jax.block_until_ready(tree)
+
+
+# -------------------------------------------------------- CLI self-check
+def _toy_trace(seed_violation: bool) -> None:
+    """A scripted admit→fork→(cow)→write→retire lifecycle over the pure
+    host shadow (no jax): the CI self-check that the detector detects.
+    With ``seed_violation`` the fork's divergent decode write skips its
+    copy-on-write — the canonical class-1 corruption."""
+    pool = ShadowPool(num_blocks=8, block_size=4)
+    pool.on_alloc(0, [0, 1, 2], 0)
+    pool.bind_slot(0, 0)
+    pool.on_splice(0, [0, 1, 2], plen=6)
+    pool.on_fork(0, 1, [0, 1, 2])
+    pool.bind_slot(1, 1)
+    if not seed_violation:
+        pool.on_cow(1, 2, 2, 3)      # copy block 2 -> private block 3
+        pool.on_copy([(2, 3)])
+        pool.on_set_row(1, [0, 1, 3])
+    pool.on_write(1, pool.uid_blocks[1][2], 2, "decode")
+    pool.on_free(0, [0, 1, 2])
+    pool.on_free(1, list(pool.uid_blocks[1]))
+    pool.on_release_rows([0, 1])
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.kvsan",
+        description="kvsan shadow-model self-check (pure host, no jax): "
+        "replays a toy block lifecycle; --seed-violation corrupts it "
+        "and must exit nonzero")
+    ap.add_argument("--seed-violation", action="store_true",
+                    help="skip the copy-on-write before a divergent "
+                    "write; the detector must catch it")
+    args = ap.parse_args(argv)
+    global _enabled
+    _enabled = True
+    try:
+        _toy_trace(args.seed_violation)
+    except KVSanError as e:
+        print(e.report)
+        print("kvsan: self-check trace caught a violation"
+              + (" (as seeded)" if args.seed_violation else ""))
+        return 1
+    print("kvsan: self-check trace clean")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

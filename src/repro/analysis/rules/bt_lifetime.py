@@ -1,0 +1,90 @@
+"""Rule 7 — bt-row-lifetime.
+
+Block-table rows have a lifecycle (armed by ``set_block_table_row`` /
+``begin_prefill_row`` / ``write_prefill_chunk``, torn down by
+``release_slots``) that the runtime sanitizer shadows and the block
+manager's refcounts depend on.  A raw row mutation — ``e["bt"][slot] =
+...`` or ``e["bt"].at[slot].set(...)`` outside the sanctioned API —
+bypasses both: the sanitizer cannot see the write, and a stale row left
+behind lets a retired slot's masked decode writes land in blocks now
+owned by another sequence (the exact corruption ``release_slots``
+exists to prevent).
+
+Reads of ``e["bt"]`` are fine anywhere; only *mutations* are flagged,
+and only outside ``models/paged_cache.py`` — the one module that owns
+the table representation.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..core import Finding, ModuleInfo, Rule
+
+_HINT = (
+    "route the mutation through repro.models.paged_cache "
+    "(`set_block_table_row` / `release_slots`) so the row lifecycle "
+    "stays visible to the block manager and the kvsan shadow"
+)
+
+_OWNER_SUFFIX = "models/paged_cache.py"
+
+
+def _is_bt_expr(node: ast.expr) -> bool:
+    """Does the expression select a block-table leaf: any `x["bt"]` (or
+    attribute `.bt`) anywhere in its subscript/attribute spine?"""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        if isinstance(node, ast.Subscript):
+            sl = node.slice
+            if isinstance(sl, ast.Constant) and sl.value == "bt":
+                return True
+            node = node.value
+        else:
+            if node.attr == "bt":
+                return True
+            node = node.value
+    return False
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    if mod.relpath.replace("\\", "/").endswith(_OWNER_SUFFIX):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        # in-place store: e["bt"][slot] = ..., e["bt"] = ..., del e["bt"]
+        if isinstance(node, ast.Subscript) and isinstance(
+            node.ctx, (ast.Store, ast.Del)
+        ):
+            if _is_bt_expr(node):
+                findings.append(
+                    mod.finding(
+                        "bt-row-lifetime",
+                        node,
+                        "raw block-table row store bypasses the "
+                        "sanctioned set_block_table_row/release_slots "
+                        "API",
+                        _HINT,
+                    )
+                )
+        # functional update: e["bt"].at[slot].set(...)
+        elif isinstance(node, ast.Attribute) and node.attr == "at":
+            if _is_bt_expr(node.value):
+                findings.append(
+                    mod.finding(
+                        "bt-row-lifetime",
+                        node,
+                        "raw block-table `.at[...]` update bypasses the "
+                        "sanctioned set_block_table_row/release_slots "
+                        "API",
+                        _HINT,
+                    )
+                )
+    return findings
+
+
+RULE = Rule(
+    name="bt-row-lifetime",
+    doc="block-table row mutations outside the sanctioned paged_cache API",
+    check=check,
+)

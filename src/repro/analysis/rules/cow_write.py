@@ -1,0 +1,132 @@
+"""Rule 6 — cow-before-write.
+
+``fork`` gives two sequences the same refcounted blocks; the first
+*divergent* write afterwards must be redirected to a private copy via
+``cow_targets()``/``cow()`` (+ ``copy_blocks``) or it lands in memory the
+source sequence is still reading.  The runtime sanitizer
+(:mod:`repro.analysis.kvsan`) catches the overwrite as it executes; this
+rule catches the *shape* of the bug at review time: a scope that forks
+and then reaches a pool scatter with no copy-on-write call in between.
+
+The dataflow is lexical (line order inside one scope) plus one level of
+module-local call graph: a helper defined in the same module that itself
+calls ``scatter_paged`` counts as a scatter at its call site.  Scopes
+that never fork are left alone — plain decode paths write exclusively
+owned blocks and need no CoW.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from ..core import Finding, ModuleInfo, Rule
+
+_HINT = (
+    "resolve copy targets first (`bm.cow_targets(...)` / `bm.cow(...)` "
+    "+ `copy_blocks`) so the forked sequence diverges into private "
+    "blocks"
+)
+
+_COW_NAMES = {"cow", "cow_targets"}
+_SCATTER = "scatter_paged"
+
+
+def _call_attr(call: ast.Call) -> Optional[str]:
+    """Trailing name of the called expression (`bm.fork` -> 'fork')."""
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _scatter_callers(tree: ast.Module) -> Set[str]:
+    """Module-local functions that (transitively, one hop) call
+    ``scatter_paged`` — a scatter reached through a helper is still a
+    scatter at the helper's call site."""
+    direct: Set[str] = set()
+    defs = [
+        n
+        for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+    for fn in defs:
+        for call in ast.walk(fn):
+            if isinstance(call, ast.Call) and _call_attr(call) == _SCATTER:
+                direct.add(fn.name)
+                break
+    # one propagation pass: callers of direct scatter-callers
+    out = set(direct)
+    for fn in defs:
+        if fn.name in out:
+            continue
+        for call in ast.walk(fn):
+            if isinstance(call, ast.Call) and _call_attr(call) in direct:
+                out.add(fn.name)
+                break
+    return out
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    findings: List[Finding] = []
+    scatterers = _scatter_callers(mod.tree)
+    scopes = [
+        n
+        for n in ast.walk(mod.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+    for scope in scopes:
+        forks: List[int] = []
+        cows: List[int] = []
+        writes: List[ast.Call] = []
+        # direct statements only — a nested def is its own scope
+        nested = {
+            id(x)
+            for n in ast.iter_child_nodes(scope)
+            for d in ast.walk(n)
+            if isinstance(d, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and d is not scope
+            for x in ast.walk(d)
+        }
+        for call in ast.walk(scope):
+            if not isinstance(call, ast.Call) or id(call) in nested:
+                continue
+            attr = _call_attr(call)
+            if attr == "fork":
+                forks.append(call.lineno)
+            elif attr in _COW_NAMES:
+                cows.append(call.lineno)
+            elif attr == _SCATTER or (
+                attr in scatterers and attr != scope.name
+            ):
+                writes.append(call)
+        if not forks:
+            continue
+        first_fork = min(forks)
+        for call in writes:
+            if call.lineno <= first_fork:
+                continue
+            # dominated: some CoW call between the fork and the write
+            if any(first_fork <= ln <= call.lineno for ln in cows):
+                continue
+            findings.append(
+                mod.finding(
+                    "cow-before-write",
+                    call,
+                    f"pool scatter reached at line {call.lineno} after "
+                    f"`fork` (line {first_fork}) with no intervening "
+                    "`cow`/`cow_targets` — the write can land in blocks "
+                    "the source sequence still shares",
+                    _HINT,
+                )
+            )
+    return findings
+
+
+RULE = Rule(
+    name="cow-before-write",
+    doc="fork-then-scatter paths with no copy-on-write in between",
+    check=check,
+)

@@ -121,6 +121,11 @@ def main():
                          "larger K = fewer blocking syncs, coarser "
                          "streaming granularity; 0 = legacy per-step "
                          "host harvest)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="enable the runtime KV-cache sanitizer (kvsan): "
+                         "shadow-model block ownership/lifetime and fail "
+                         "at the faulting write (same as PPD_SANITIZE=1; "
+                         "see docs/static_analysis.md)")
     ap.add_argument("--mixed-lens", action="store_true",
                     help="cycle max_new_tokens through {1,2,4}x --max-new "
                          "to show the continuous-batching win")

@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import kvsan
+
 from .config import ATTN, MLA, ModelConfig, layer_specs
 
 DEFAULT_BLOCK_SIZE = 16
@@ -156,6 +158,9 @@ def scatter_paged(entry, new_leaves: dict, positions, accept_mask=None):
     ``new_leaves`` maps pool-leaf names ("k"/"v" or "ckv"/"krope") to
     [B, T, ...] arrays.  Returns the updated entry (bt unchanged)."""
     bid, off, pos = _write_slots(entry, positions, accept_mask)
+    # trace-time sanitizer emit: attaches a host callback validating the
+    # non-dropped writes when kvsan is active, emits nothing when off
+    kvsan.emit_scatter_check(entry, bid, off)
     out = dict(entry)
     for key, val in new_leaves.items():
         out[key] = entry[key].at[bid, off].set(val, mode="drop")
@@ -240,6 +245,9 @@ def write_prefill_blocks(cfg: ModelConfig, cache, row_cache, slot: int,
               if is_paged_entry(e))
     table = np.full((MB,), -1, np.int32)
     table[:len(block_ids)] = np.asarray(block_ids, np.int32)
+    pool = kvsan.pool_if_active()
+    if pool is not None:
+        pool.on_splice(slot, [int(b) for b in block_ids], plen)
     return _splice_jit(cache, row_cache, np.int32(slot),
                        jnp.asarray(table), np.int32(plen))
 
@@ -268,6 +276,9 @@ def begin_prefill_row(cache, slot: int, shared_ids, start: int):
               if is_paged_entry(e))
     table = np.full((MB,), -1, np.int32)
     table[:len(shared_ids)] = np.asarray(shared_ids, np.int32)
+    pool = kvsan.pool_if_active()
+    if pool is not None:
+        pool.on_set_row(slot, [int(b) for b in shared_ids])
     return _begin_jit(cache, np.int32(slot), jnp.asarray(table),
                       np.int32(start))
 
@@ -313,6 +324,9 @@ def write_prefill_chunk(cache, slot: int, entries, clear_bids):
         bids[i] = bid
     clear = np.full((MB,), NB, np.int32)         # NB = OOB -> mode="drop"
     clear[:len(clear_bids)] = np.asarray(list(clear_bids), np.int32)
+    pool = kvsan.pool_if_active()
+    if pool is not None:
+        pool.on_set_row(slot, [int(bid) for _, bid in entries])
     return _arm_jit(cache, np.int32(slot), jnp.asarray(idxs),
                     jnp.asarray(bids), jnp.asarray(clear))
 
@@ -323,6 +337,9 @@ def release_slot(cache, slot: int):
     The pool bytes themselves are reclaimed host-side by the block
     manager; clearing the table keeps the device state from ever reading
     freed blocks through a stale row."""
+    pool = kvsan.pool_if_active()
+    if pool is not None:
+        pool.on_release_rows([slot])
     out = dict(cache)
     out["layers"] = [
         dict(e, bt=e["bt"].at[slot].set(-1)) if is_paged_entry(e) else e
@@ -355,6 +372,9 @@ def release_slots(cache, slots):
              if is_paged_entry(e))
     rows = np.full((B,), B, np.int32)        # B = OOB -> mode="drop"
     rows[:len(slots)] = np.asarray(list(slots), np.int32)
+    pool = kvsan.pool_if_active()
+    if pool is not None:
+        pool.on_release_rows([int(s) for s in slots])
     return _release_jit(cache, jnp.asarray(rows))
 
 
@@ -365,6 +385,9 @@ def copy_blocks(cache, pairs):
     in the block manager).  Copies K/V *and* pos."""
     if not pairs:
         return cache
+    pool = kvsan.pool_if_active()
+    if pool is not None:
+        pool.on_copy([(int(s), int(d)) for s, d in pairs])
     src = jnp.asarray([p[0] for p in pairs], jnp.int32)
     dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
     out = dict(cache)
@@ -384,6 +407,9 @@ def copy_blocks(cache, pairs):
 
 def set_block_table_row(cache, slot: int, block_ids):
     """Point ``slot``'s table row at ``block_ids`` (pad with -1)."""
+    pool = kvsan.pool_if_active()
+    if pool is not None:
+        pool.on_set_row(slot, [int(b) for b in block_ids])
     out = dict(cache)
     new_layers = []
     for entry in cache["layers"]:
@@ -424,6 +450,7 @@ def merge_prefill_rows(cache, sub, slots):
     into them through the sliced tables); per-row leaves scatter to
     ``slots`` — out-of-range entries drop, so padding lanes (``slots``
     set past the batch) write nowhere."""
+    kvsan.emit_merge_check(cache, slots)
     layers = []
     for entry, s in zip(cache["layers"], sub["layers"]):
         if is_paged_entry(entry):

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.analysis import kvsan
 from repro.models.config import ModelConfig
 
 from .engine import Request, Result, StaticEngine, TokenEvent
@@ -105,6 +106,11 @@ class EngineConfig:
     # reference the tests diff the device path against.  Strategies
     # without device slot state (ppd+spec) always use the legacy loop.
     harvest_every: int = 1
+    # Runtime KV-cache sanitizer (repro.analysis.kvsan): shadow-model
+    # every block's ownership/lifetime and fail loudly at the faulting
+    # write.  Also enabled process-wide by PPD_SANITIZE=1.  Zero
+    # overhead when off (the intercepts emit nothing at trace time).
+    sanitize: bool = False
     # DEPRECATED: engine-global sampling default.  Per-request
     # SamplingParams (or Request.temperature) always win; this only
     # fills in for requests that specify neither.
@@ -152,6 +158,9 @@ class EngineConfig:
         if not 0.0 <= self.watermark < 1.0:
             raise ValueError(f"EngineConfig.watermark must be in [0, 1), "
                              f"got {self.watermark}")
+        if not isinstance(self.sanitize, bool):
+            raise ValueError(f"EngineConfig.sanitize must be a bool, "
+                             f"got {self.sanitize!r}")
         if self.temperature < 0.0:
             raise ValueError("EngineConfig.temperature must be >= 0")
         if not (self.tree in ("default", "auto")
@@ -326,6 +335,11 @@ class LLMEngine:
                  draft_params=None, draft_cfg=None, draft_ppd=None,
                  tree_states=None, clock=None):
         config.validate()
+        if config.sanitize:
+            # process-wide switch: the intercept points in paged_cache /
+            # block_manager consult kvsan.active() (PPD_SANITIZE=1 sets
+            # it without touching the config)
+            kvsan.enable()
         self.config = config
         self.model_cfg = cfg
         self.tree_report: Optional[dict] = None

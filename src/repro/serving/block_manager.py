@@ -35,6 +35,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis import kvsan
+
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
     return -(-n_tokens // block_size)
@@ -75,6 +77,9 @@ class BlockManager:
         self._reserved_keys: Dict[int, List[bytes]] = {}
         self.peak_used_blocks = 0
         self.shared_block_hits = 0                  # blocks NOT re-stored
+        # runtime sanitizer shadow (None when kvsan is off: every hook
+        # below is then a single attribute check, nothing else)
+        self._kvsan = kvsan.manager_pool(self) if kvsan.active() else None
 
     # ---------------------------------------------------------- queries
     @property
@@ -137,7 +142,15 @@ class BlockManager:
 
     # ------------------------------------------------------- alloc/free
     def _pop_free(self, n: int) -> List[int]:
-        assert n <= len(self._free), (n, len(self._free))
+        # explicit raise, not assert: the free-list invariant must hold
+        # under `python -O` too — silently popping an empty list here
+        # would hand out negative block ids
+        if n > len(self._free):
+            raise RuntimeError(
+                f"block pool exhausted: need {n} free blocks but only "
+                f"{len(self._free)} of {self.num_blocks} are free — the "
+                f"caller skipped can_admit()/can_never_fit(), or "
+                f"refcounting leaked blocks")
         out = [self._free.pop() for _ in range(n)]
         self.peak_used_blocks = max(self.peak_used_blocks,
                                     self.used_blocks)
@@ -151,12 +164,19 @@ class BlockManager:
         ``n_shared`` ids are prefix-shared, already-populated blocks.
         Registers the sequence's own full prompt blocks for future
         sharers.  Call :meth:`can_admit` first."""
-        assert uid not in self._seq, f"uid {uid} already allocated"
+        if uid in self._seq:
+            raise RuntimeError(
+                f"allocate: uid {uid} already holds blocks "
+                f"{self._seq[uid]} — free_seq it before re-admitting")
         prompt = np.asarray(prompt)
         keys = _prefix_keys(prompt, self.block_size)
         n_shared = self.match_prefix(prompt)
         need = self.blocks_needed(len(prompt), budget) - n_shared
-        assert need >= 0
+        if need < 0:
+            raise RuntimeError(
+                f"allocate: uid {uid} matched {n_shared} prefix blocks "
+                f"but only needs {need + n_shared} — prefix registry "
+                f"is inconsistent with the prompt length")
         shared = [self._registry[k] for k in keys[:n_shared]]
         for bid in shared:
             self._ref[bid] += 1
@@ -172,6 +192,8 @@ class BlockManager:
         ids = shared + fresh
         self._seq[uid] = ids
         self._seq_shared[uid] = n_shared
+        if self._kvsan is not None:
+            self._kvsan.on_alloc(uid, list(ids), n_shared)
         return list(ids), n_shared
 
     # -------------------------------------------- chunked-prefill alloc
@@ -192,7 +214,10 @@ class BlockManager:
         runs.  Prefix-shared blocks are referenced immediately (their
         content is valid and the first chunk reads through them).
         Returns ``(shared_ids, n_shared)``."""
-        assert uid not in self._seq, f"uid {uid} already allocated"
+        if uid in self._seq:
+            raise RuntimeError(
+                f"reserve: uid {uid} already holds blocks "
+                f"{self._seq[uid]} — free_seq it before re-admitting")
         prompt = np.asarray(prompt)
         keys = _prefix_keys(prompt, self.block_size)
         n_shared = min(self.match_prefix(prompt),
@@ -202,11 +227,17 @@ class BlockManager:
             self._ref[bid] += 1
         self.shared_block_hits += n_shared
         need = self.blocks_needed(len(prompt), budget) - n_shared
-        assert need >= 0
+        if need < 0:
+            raise RuntimeError(
+                f"reserve: uid {uid} matched {n_shared} prefix blocks "
+                f"but only needs {need + n_shared} — prefix registry "
+                f"is inconsistent with the prompt length")
         self._pending[uid] = need
         self._reserved_keys[uid] = keys
         self._seq[uid] = list(shared)
         self._seq_shared[uid] = n_shared
+        if self._kvsan is not None:
+            self._kvsan.on_reserve(uid, list(shared), n_shared)
         return list(shared), n_shared
 
     def _materialize_n(self, uid: int, n: int) -> List[Tuple[int, int]]:
@@ -227,6 +258,8 @@ class BlockManager:
                 self._block_key[bid] = keys[ti]
             out.append((ti, bid))
         ids.extend(fresh)
+        if self._kvsan is not None:
+            self._kvsan.on_materialize(uid, out)
         return out
 
     def materialize(self, uid: int, upto_tokens: int
@@ -258,17 +291,33 @@ class BlockManager:
         unfinished chunked-prefill reservation (mid-prefill abort) is
         simply forgotten — its unpopped blocks were never removed from
         the free list."""
+        if uid not in self._seq:
+            raise RuntimeError(
+                f"free_seq: uid {uid} holds no blocks — double free, or "
+                f"the uid was never admitted")
+        if self._kvsan is not None:
+            # shadow first: a double-free / UAF is reported against the
+            # event history before the refcounts are touched
+            self._kvsan.on_free(uid, list(self._seq[uid]))
         self._pending.pop(uid, None)
         self._reserved_keys.pop(uid, None)
         for bid in self._seq.pop(uid):
             self._ref[bid] -= 1
-            assert self._ref[bid] >= 0
+            if self._ref[bid] < 0:
+                # explicit raise (not assert): holds under `python -O`
+                raise RuntimeError(
+                    f"free_seq: block {bid} refcount fell to "
+                    f"{int(self._ref[bid])} freeing uid {uid} — a "
+                    f"reference was dropped twice")
             if self._ref[bid] == 0:
                 key = self._block_key.pop(bid, None)
                 if key is not None and self._registry.get(key) == bid:
                     del self._registry[key]
                 self._free.append(bid)
         self._seq_shared.pop(uid, None)
+        if self._kvsan is not None:
+            # class-5 conservation: shadow vs live refcounts/free list
+            self._kvsan.check_manager(self)
 
     def free_seqs(self, uids) -> None:
         """Batched :meth:`free_seq` for a deferred-harvest reap: the
@@ -283,12 +332,21 @@ class BlockManager:
     def fork(self, src_uid: int, dst_uid: int) -> List[int]:
         """Clone ``src``'s table for ``dst``: every block shared, every
         refcount bumped.  Writes must go through :meth:`cow_targets`."""
-        assert dst_uid not in self._seq
+        if dst_uid in self._seq:
+            raise RuntimeError(
+                f"fork: dst uid {dst_uid} already holds blocks "
+                f"{self._seq[dst_uid]}")
+        if src_uid not in self._seq:
+            raise RuntimeError(
+                f"fork: src uid {src_uid} holds no blocks (freed, or "
+                f"never admitted)")
         ids = list(self._seq[src_uid])
         for bid in ids:
             self._ref[bid] += 1
         self._seq[dst_uid] = ids
         self._seq_shared[dst_uid] = len(ids)
+        if self._kvsan is not None:
+            self._kvsan.on_fork(src_uid, dst_uid, list(ids))
         return list(ids)
 
     def cow_targets(self, uid: int, pos_lo: int, pos_hi: int
@@ -308,11 +366,18 @@ class BlockManager:
         copy (:func:`repro.models.paged_cache.copy_blocks`)."""
         ids = self._seq[uid]
         src = ids[table_index]
-        assert self._ref[src] > 1, "cow on an exclusive block"
+        if self._ref[src] <= 1:
+            raise RuntimeError(
+                f"cow: block {src} (uid {uid} table index {table_index}) "
+                f"has refcount {int(self._ref[src])} — copy-on-write of "
+                f"an exclusive block wastes a block and hides a sharing "
+                f"bookkeeping bug")
         (dst,) = self._pop_free(1)
         self._ref[dst] = 1
         self._ref[src] -= 1
         ids[table_index] = dst
+        if self._kvsan is not None:
+            self._kvsan.on_cow(uid, table_index, src, dst)
         return src, dst
 
     # ---------------------------------------------------------- metrics

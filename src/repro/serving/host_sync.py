@@ -28,6 +28,8 @@ import threading
 
 import jax
 
+from repro.analysis import kvsan
+
 _local = threading.local()
 
 
@@ -50,6 +52,10 @@ def device_get(tree, label: str = "get"):
     counter = getattr(_local, "counter", None)
     if counter is not None:
         counter.bump(label)
+    if kvsan.active():
+        # class-6 check: reading a buffer that was donated to an
+        # in-flight deferred step is a use-after-donation
+        kvsan.check_host_read(tree, label)
     return jax.device_get(tree)
 
 

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import kvsan
 from repro.core import is_chain_arch
 from repro.models import (num_seq_blocks, paged_block_bytes,
                           ring_cache_bytes, write_cache_rows,
@@ -364,6 +365,11 @@ class ContinuousEngine:
         if self.block_mgr is not None:
             alloc = self.block_mgr.allocate(
                 req.uid, req.prompt, req.max_new_tokens + self._overshoot)
+            pool = kvsan.pool_if_active()
+            if pool is not None:
+                # bind before the splice: write_prefill_blocks resolves
+                # its uid from this slot binding
+                pool.bind_slot(slot_idx, req.uid)
         tokens, plen = self._padded_prompt(req.prompt)
         row, first, cost = self.strategy.prefill_request(tokens, plen)
         self.total_forward_passes += cost
@@ -422,6 +428,10 @@ class ContinuousEngine:
         if self.block_mgr is not None:
             shared_ids, n_shared = self.block_mgr.reserve(
                 req.uid, prompt, req.max_new_tokens + self._overshoot)
+            pool = kvsan.pool_if_active()
+            if pool is not None:
+                pool.bind_slot(slot_idx, req.uid)
+                pool.prefill_begin(slot_idx)
             offset0 = n_shared * self.block_size
             self.strategy.prefill_begin(prow, slot_idx, offset0,
                                         shared_ids)
@@ -499,6 +509,11 @@ class ContinuousEngine:
         now = self._clock() - self._t0
         slot.first_tok_t = now
         slot.prefilling = False
+        pool = kvsan.pool_if_active()
+        if pool is not None:
+            # the device_get above forced every dispatched chunk, so the
+            # shadow's in-flight mark can clear with the live flag
+            pool.prefill_finish(job.slot)
         self._harvest(job.slot, [first], events, now)
         if slot.finish is not None:
             return    # stop/limit on the first token: reap frees blocks
@@ -555,6 +570,9 @@ class ContinuousEngine:
         slot.finish = None
         slot.device_finish_step = None
         slot.prefilling = False
+        pool = kvsan.pool_if_active()
+        if pool is not None:
+            pool.prefill_finish(slot_idx)
         self.stats["retired"] += 1
         return res
 

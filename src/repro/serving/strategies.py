@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import kvsan
 from repro.core import (default_chain_spec, device_buffers, init_ppd_state,
                         is_chain_arch, mk_default_tree, ppd_decode_step,
                         vanilla_decode_step)
@@ -315,15 +316,18 @@ class DecodeStrategy:
         ``prefill_rows``; each distinct W traces its own program."""
         if self._pf_chunk_jit is None:
             self._pf_chunk_jit = self._make_pf_chunk()
-        if self.kv == "paged":
-            cache, self._pf_carry = self._pf_chunk_jit(
-                self.pool_cache(), self._pf_carry, tokens, offsets,
-                valid_len, slots)
-            self._set_pool_cache(cache)
-        else:
-            self._pf_cache, self._pf_carry = self._pf_chunk_jit(
-                self._pf_cache, self._pf_carry, tokens, offsets,
-                valid_len, slots)
+        # the chunk forward's pool scatters are prompt writes: tag the
+        # trace so kvsan exempts shared-prefix splices from the CoW check
+        with kvsan.phase("prefill"):
+            if self.kv == "paged":
+                cache, self._pf_carry = self._pf_chunk_jit(
+                    self.pool_cache(), self._pf_carry, tokens, offsets,
+                    valid_len, slots)
+                self._set_pool_cache(cache)
+            else:
+                self._pf_cache, self._pf_carry = self._pf_chunk_jit(
+                    self._pf_cache, self._pf_carry, tokens, offsets,
+                    valid_len, slots)
 
     def _pf_install_row(self, prow: int, slot: int):
         """Ring: splice the finished staging row into the slot's row of
@@ -521,6 +525,10 @@ class VanillaStrategy(DecodeStrategy):
                 range(len(active))], 1
 
     def decode_deferred(self, active, keys, temps, top_k, top_p):
+        if kvsan.active():
+            # these buffers are donated to the step (off-CPU); a host
+            # read of the pre-dispatch objects is a use-after-donation
+            kvsan.note_donated((self.cache, self.dslots))
         act = jnp.asarray(active)
         if temps is None:
             self.cache, self.dslots, self.tokens = self._step_greedy_dev(
@@ -704,6 +712,8 @@ class PPDStrategy(DecodeStrategy):
         return out, 2 if is_chain_arch(self.cfg) else 1
 
     def decode_deferred(self, active, keys, temps, top_k, top_p):
+        if kvsan.active():
+            kvsan.note_donated((self.state, self.dslots))
         act = jnp.asarray(active)
         if temps is None:
             self.state, self.dslots = self._step_greedy_dev(
@@ -876,6 +886,8 @@ class MedusaStrategy(DecodeStrategy):
 
     def decode_deferred(self, active, keys, temps, top_k, top_p):
         assert temps is None, "medusa is greedy-only"
+        if kvsan.active():
+            kvsan.note_donated((self.state, self.dslots))
         self.state, self.dslots = self._step_greedy_dev(
             self.state, self.dslots, jnp.asarray(active))
         self.dispatched_steps += 1

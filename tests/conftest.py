@@ -12,6 +12,24 @@ from __future__ import annotations
 
 import pytest
 
+from repro.analysis import kvsan
+
+
+@pytest.fixture(autouse=True)
+def _kvsan_isolation():
+    """Detach the kvsan shadow pool between tests.
+
+    The current-pool pointer is process-global (the traced callbacks
+    resolve it at call time); without this reset a pool registered by
+    one test's engine would keep checking the raw cache traffic of the
+    next test against a dead engine's shadow state.  The enabled flag
+    (PPD_SANITIZE) is left alone — only the pool binding and the
+    per-dispatch bookkeeping are cleared."""
+    yield
+    kvsan.set_current(None)
+    kvsan.clear_report()
+    kvsan.clear_donated()
+
 
 class TraceBudgetExceeded(AssertionError):
     """A registered jitted program traced past its declared budget."""

@@ -321,6 +321,81 @@ def test_side_effect_trace_counts_allowed(tmp_path):
     assert found == []
 
 
+# ------------------------------------------------------- cow-before-write
+def test_cow_flags_fork_then_scatter_without_cow(tmp_path):
+    found = _findings(tmp_path, "serving/sched.py", """
+        from repro.models.paged_cache import scatter_paged
+
+        def diverge(bm, entry, kv, pos):
+            bm.fork(1, 2)
+            return scatter_paged(entry, kv, pos)     # no CoW first
+    """, rule="cow-before-write")
+    assert len(found) == 1
+    assert "fork" in found[0].message
+    assert "cow" in found[0].hint
+
+
+def test_cow_dominating_cow_call_ok(tmp_path):
+    found = _findings(tmp_path, "serving/sched.py", """
+        from repro.models.paged_cache import copy_blocks, scatter_paged
+
+        def diverge(bm, cache, entry, kv, pos):
+            bm.fork(1, 2)
+            src, dst = bm.cow(2, 0)
+            cache = copy_blocks(cache, [(src, dst)])
+            return scatter_paged(entry, kv, pos)     # dominated: fine
+
+        def decode_only(entry, kv, pos):
+            return scatter_paged(entry, kv, pos)     # no fork: fine
+    """, rule="cow-before-write")
+    assert found == []
+
+
+def test_cow_sees_scatter_through_local_helper(tmp_path):
+    found = _findings(tmp_path, "serving/sched.py", """
+        from repro.models.paged_cache import scatter_paged
+
+        def _commit(entry, kv, pos):
+            return scatter_paged(entry, kv, pos)
+
+        def diverge(bm, entry, kv, pos):
+            bm.fork(1, 2)
+            return _commit(entry, kv, pos)           # scatter, one hop
+    """, rule="cow-before-write")
+    assert len(found) == 1
+
+
+# -------------------------------------------------------- bt-row-lifetime
+def test_bt_lifetime_flags_raw_row_mutations(tmp_path):
+    found = _findings(tmp_path, "serving/sched.py", """
+        def resurrect(entry, slot, ids, table):
+            entry["bt"] = table                      # raw rebind
+            entry["bt"][slot] = ids                  # raw row store
+            new = entry["bt"].at[slot].set(ids)      # raw functional row
+            return new
+    """, rule="bt-row-lifetime")
+    assert len(found) == 3
+    assert all("set_block_table_row" in f.hint for f in found)
+
+
+def test_bt_lifetime_reads_and_owner_module_ok(tmp_path):
+    found = _findings(tmp_path, "serving/sched.py", """
+        def lookup(entry, slot):
+            row = entry["bt"][slot]                  # reads are fine
+            width = entry["bt"].shape[1]
+            return row, width
+    """, rule="bt-row-lifetime")
+    assert found == []
+    # the owning module implements the sanctioned API: exempt
+    found = _findings(tmp_path, "models/paged_cache.py", """
+        def set_block_table_row(cache, slot, ids):
+            e = cache["layers"][0]
+            e["bt"] = e["bt"].at[slot].set(ids)
+            return cache
+    """, rule="bt-row-lifetime")
+    assert found == []
+
+
 # ----------------------------------------------------- pragma + baseline
 def test_pragma_suppresses_finding(tmp_path):
     found = _findings(tmp_path, "serving/hot.py", """
@@ -428,12 +503,89 @@ def test_cli_baseline_file_round_trip(tmp_path):
     assert res.returncode == 1
 
 
-def test_cli_lists_all_five_rules():
+def test_cli_lists_all_seven_rules():
     res = _run_cli(["--list-rules"], cwd=REPO)
     assert res.returncode == 0
     for rule in ("sync-escape", "recompile-hazard", "donation-safety",
-                 "pallas-contract", "trace-side-effect"):
+                 "pallas-contract", "trace-side-effect",
+                 "cow-before-write", "bt-row-lifetime"):
         assert rule in res.stdout
+
+
+# -------------------------------------------------------- baseline hygiene
+_CLEAN_SRC = """
+    import jax.numpy as jnp
+
+    def harvest(cache):
+        return jnp.argmax(cache)
+"""
+
+
+def test_cli_stale_baseline_entry_fails_gate(tmp_path):
+    """An entry whose path+contains matches nothing on a SCANNED path is
+    an error (exit 1), not a warning — dead grandfathering rots."""
+    _write(tmp_path, "serving/hot.py", _CLEAN_SRC)
+    baseline = {"entries": [{
+        "rule": "sync-escape", "path": "serving/hot.py",
+        "contains": "np.asarray(tok)", "justification": "gone"}]}
+    (tmp_path / "jaxlint_baseline.json").write_text(json.dumps(baseline))
+    res = _run_cli(["serving"], cwd=tmp_path)
+    assert res.returncode == 1
+    assert "stale baseline entry" in res.stdout
+    # --warn-only still reports but does not gate
+    res = _run_cli(["serving", "--warn-only"], cwd=tmp_path)
+    assert res.returncode == 0
+
+
+def test_cli_stale_entry_on_unscanned_path_is_ignored(tmp_path):
+    """Entries covering paths OUTSIDE the scanned set can't be judged
+    stale from this invocation and must not fail it."""
+    _write(tmp_path, "serving/hot.py", _CLEAN_SRC)
+    baseline = {"entries": [{
+        "rule": "sync-escape", "path": "training/loop.py",
+        "contains": "float(loss)", "justification": "elsewhere"}]}
+    (tmp_path / "jaxlint_baseline.json").write_text(json.dumps(baseline))
+    res = _run_cli(["serving"], cwd=tmp_path)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_update_baseline_regenerates(tmp_path):
+    """--update-baseline drops stale entries, keeps still-matching ones
+    (justification intact), records current findings with a TODO, and
+    leaves the tree passing the gate afterwards."""
+    _write(tmp_path, "serving/bad.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def loop(cache):
+            tok = jnp.argmax(cache)
+            return np.asarray(tok)
+    """)
+    _write(tmp_path, "serving/ok.py", """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def peek(cache):
+            t = jnp.argmax(cache)
+            return np.asarray(t)
+    """)
+    baseline = {"entries": [
+        {"rule": "sync-escape", "path": "serving/ok.py",
+         "contains": "np.asarray(t)", "justification": "reviewed: fine"},
+        {"rule": "sync-escape", "path": "serving/gone.py",
+         "contains": "nothing", "justification": "stale"},
+    ]}
+    (tmp_path / "jaxlint_baseline.json").write_text(json.dumps(baseline))
+    res = _run_cli(["serving", "--update-baseline"], cwd=tmp_path)
+    assert res.returncode == 0, res.stdout + res.stderr
+    data = json.loads((tmp_path / "jaxlint_baseline.json").read_text())
+    by_path = {e["path"]: e for e in data["entries"]}
+    assert "serving/gone.py" not in by_path           # stale dropped
+    assert by_path["serving/ok.py"]["justification"] == "reviewed: fine"
+    assert by_path["serving/bad.py"]["justification"] == "TODO: justify"
+    # the regenerated baseline passes the gate
+    res = _run_cli(["serving"], cwd=tmp_path)
+    assert res.returncode == 0, res.stdout + res.stderr
 
 
 # -------------------------------------------- trace_budget runtime twin

@@ -1,0 +1,295 @@
+"""Runtime KV-cache sanitizer (repro.analysis.kvsan).
+
+One trigger test per runtime error class — each asserts the violation
+fires AT the faulting call and that the report names the faulting
+block/uid — plus clean-path checks (the sanitizer stays silent on legal
+traffic), the CLI self-check round-trip, and the satellite matrix:
+fork/CoW exercised while the source uid has a chunked prefill in
+flight, across {ref, pallas} x harvest_every {0, 4}.
+
+The traced-intercept tests use deliberately odd cache geometries so the
+scatter programs trace fresh INSIDE the enabling fixture — a program
+traced earlier with the sanitizer off carries no callback.
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import kvsan
+from repro.configs import get_smoke_config
+from repro.core import init_prompt_params
+from repro.models import init_cache, init_params
+from repro.models.paged_cache import (copy_blocks, gather_kv,
+                                      release_slots, scatter_paged,
+                                      set_block_table_row)
+from repro.serving import (BlockManager, EngineConfig, LLMEngine,
+                           SamplingParams)
+from repro.serving import host_sync
+
+CFG = get_smoke_config("granite-3-2b")
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    return params, ppd
+
+
+@pytest.fixture
+def san():
+    """Enable the sanitizer for one test; restore the ambient state
+    (PPD_SANITIZE runs keep it on) afterwards."""
+    was = kvsan.active()
+    kvsan.enable()
+    kvsan.clear_report()
+    yield kvsan
+    if not was:
+        kvsan.disable()
+    kvsan.set_current(None)
+    kvsan.clear_report()
+    kvsan.clear_donated()
+
+
+def _prompt(seed, n, prefix=None):
+    rng = np.random.default_rng(seed)
+    p = rng.integers(0, CFG.vocab_size, size=n)
+    if prefix is not None:
+        p = np.concatenate([prefix, p])
+    return p
+
+
+def _paged(batch, num_blocks, block_size):
+    cache = init_cache(CFG, batch=batch, capacity=num_blocks * block_size,
+                       paged=True, block_size=block_size,
+                       num_blocks=num_blocks)
+    return cache
+
+
+def _kv_rows(n):
+    Hkv, Dh = CFG.n_kv_heads, CFG.head_dim
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, n, Hkv, Dh)),
+                    jnp.float32)
+    return {"k": x, "v": x}
+
+
+def _expect_violation(kind, fn):
+    """Run ``fn``; the violation may surface as KVSanError (host path)
+    or wrapped in XlaRuntimeError (jax.debug.callback under jit).
+    Returns the report text."""
+    kvsan.clear_report()
+    with pytest.raises(Exception) as exc:
+        fn()
+        # traced callbacks fire at execution: force any async dispatch
+        jax.effects_barrier()
+    report = kvsan.last_report()
+    assert report is not None, f"no violation recorded ({exc.value!r})"
+    assert f"[{kind}]" in report
+    assert kind in str(exc.value) or "CpuCallback" in str(exc.value) \
+        or "callback" in str(exc.value).lower()
+    return report
+
+
+# ------------------------------------------------- class 1: shared-write
+def test_shared_write_without_cow_fires(san):
+    bm = BlockManager(num_blocks=11, block_size=4, watermark=0.0)
+    shared = _prompt(0, 8)                       # 2 full shared blocks
+    ids1, _ = bm.allocate(1, _prompt(1, 10, prefix=shared), budget=2)
+    ids2, sh2 = bm.allocate(2, _prompt(2, 10, prefix=shared), budget=2)
+    assert sh2 == 2 and bm.ref_count(ids2[0]) == 2
+    cache = _paged(batch=3, num_blocks=11, block_size=4)
+    cache = set_block_table_row(cache, 0, ids2)
+    entry = cache["layers"][0]
+    # decode-phase write at position 1: inside the SHARED prefix block
+    report = _expect_violation(
+        "shared-write",
+        lambda: jax.block_until_ready(scatter_paged(
+            entry, _kv_rows(1), jnp.asarray([[1]], jnp.int32))))
+    assert f"block {ids2[0]}" in report
+
+
+def test_write_after_cow_is_clean(san):
+    bm = BlockManager(num_blocks=11, block_size=4, watermark=0.0)
+    ids, _ = bm.allocate(1, _prompt(0, 10), budget=2)
+    bm.fork(1, 2)
+    src, dst = bm.cow(2, 0)
+    cache = _paged(batch=3, num_blocks=11, block_size=4)
+    cache = copy_blocks(cache, [(src, dst)])
+    cache = set_block_table_row(cache, 0, bm.seq_blocks(2))
+    out = scatter_paged(cache["layers"][0], _kv_rows(1),
+                        jnp.asarray([[1]], jnp.int32))
+    jax.block_until_ready(out["k"])
+    assert kvsan.last_report() is None
+
+
+# ----------------------------------------- class 2: decode-into-prefill
+def test_decode_scatter_into_inflight_prefill_fires(san):
+    bm = BlockManager(num_blocks=13, block_size=4, watermark=0.0)
+    ids, _ = bm.allocate(5, _prompt(0, 6), budget=2)
+    pool = kvsan.manager_pool(bm)
+    pool.bind_slot(0, 5)
+    pool.prefill_begin(0)                        # chunked prefill armed
+    cache = _paged(batch=3, num_blocks=13, block_size=4)
+    cache = set_block_table_row(cache, 0, ids)
+    report = _expect_violation(
+        "decode-into-prefill",
+        lambda: jax.block_until_ready(scatter_paged(
+            cache["layers"][0], _kv_rows(1),
+            jnp.asarray([[0]], jnp.int32))))
+    assert "uid=5" in report and "slot=0" in report
+
+
+# -------------------------------- class 3: use-after-free / double-free
+def test_copy_from_freed_block_fires(san):
+    bm = BlockManager(num_blocks=11, block_size=4, watermark=0.0)
+    ids, _ = bm.allocate(1, _prompt(0, 6), budget=2)
+    keep, _ = bm.allocate(2, _prompt(1, 6), budget=2)
+    bm.free_seq(1)
+    cache = _paged(batch=3, num_blocks=11, block_size=4)
+    with pytest.raises(kvsan.KVSanError) as exc:
+        copy_blocks(cache, [(ids[0], keep[0])])
+    assert "[use-after-free]" in exc.value.report
+    assert f"block {ids[0]}" in exc.value.report \
+        or str(ids[0]) in exc.value.report
+
+
+def test_double_free_fires(san):
+    bm = BlockManager(num_blocks=8, block_size=4, watermark=0.0)
+    ids, _ = bm.allocate(3, _prompt(0, 6), budget=2)
+    pool = kvsan.manager_pool(bm)
+    bm.free_seq(3)
+    # second free of the same blocks, straight at the shadow (the
+    # manager's own bookkeeping raises RuntimeError before reaching it)
+    with pytest.raises(kvsan.KVSanError) as exc:
+        pool.on_free(3, ids)
+    assert "[double-free]" in exc.value.report
+    assert "uid=3" in exc.value.report or "uid 3" in exc.value.report
+
+
+def test_manager_double_free_raises_without_sanitizer():
+    """Satellite: the manager's own invariants are RuntimeError raises
+    (assert would vanish under python -O), with uid context."""
+    bm = BlockManager(num_blocks=8, block_size=4, watermark=0.0)
+    bm.allocate(3, _prompt(0, 6), budget=2)
+    bm.free_seq(3)
+    with pytest.raises(RuntimeError, match="uid 3"):
+        bm.free_seq(3)
+
+
+# ----------------------------------------------------- class 4: stale row
+def test_stale_row_after_release_fires(san):
+    bm = BlockManager(num_blocks=17, block_size=4, watermark=0.0)
+    ids, _ = bm.allocate(9, _prompt(0, 6), budget=2)
+    cache = _paged(batch=3, num_blocks=17, block_size=4)
+    cache = set_block_table_row(cache, 0, ids)
+    jax.block_until_ready(scatter_paged(
+        cache["layers"][0], _kv_rows(1),
+        jnp.asarray([[0]], jnp.int32))["k"])
+    cache = release_slots(cache, [0])
+    # resurrect the row RAW (the bypass bt-row-lifetime flags statically)
+    entry = dict(cache["layers"][0])
+    bt = entry["bt"].at[0, :len(ids)].set(          # noqa: jaxlint
+        jnp.asarray(ids, jnp.int32))
+    entry["bt"] = bt
+    report = _expect_violation(
+        "stale-row",
+        lambda: jax.block_until_ready(scatter_paged(
+            entry, _kv_rows(1), jnp.asarray([[1]], jnp.int32))))
+    assert "slot=0" in report
+
+
+# -------------------------------------- class 5: refcount conservation
+def test_refcount_conservation_violation_fires(san):
+    bm = BlockManager(num_blocks=8, block_size=4, watermark=0.0)
+    kvsan.manager_pool(bm)
+    ids, _ = bm.allocate(4, _prompt(0, 6), budget=2)
+    bm._ref[ids[0]] += 1                    # simulate a leaked reference
+    with pytest.raises(kvsan.KVSanError) as exc:
+        bm.free_seq(4)
+    assert "[refcount-conservation]" in exc.value.report
+    assert f"block {ids[0]}" in exc.value.report
+
+
+# ------------------------------------------------ class 6: donated read
+def test_host_read_of_donated_buffer_fires(san):
+    x = jnp.arange(8, dtype=jnp.float32)
+    kvsan.note_donated({"cache": x})
+    with pytest.raises(kvsan.KVSanError) as exc:
+        host_sync.device_get(x, label="harvest")
+    assert "[donated-read]" in exc.value.report
+    # the rebound output of the dispatch is NOT donated: reading it is
+    # the sanctioned pattern
+    y = x + 1
+    host_sync.device_get(y, label="harvest")
+    del x
+    # the donated record dies with the buffer; no stale id matches
+    host_sync.device_get(jnp.arange(8, dtype=jnp.float32), label="ok")
+
+
+# --------------------------------------------------------- CLI round-trip
+def test_cli_self_check_clean_and_seeded():
+    env_ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.kvsan"],
+        capture_output=True, text=True)
+    assert env_ok.returncode == 0, env_ok.stdout + env_ok.stderr
+    seeded = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.kvsan", "--seed-violation"],
+        capture_output=True, text=True)
+    assert seeded.returncode == 1
+    assert "shared-write" in seeded.stdout + seeded.stderr
+
+
+# ------------------------------- satellite: fork/CoW mid chunked prefill
+def _engine(model, **cfg_kw):
+    params, ppd = model
+    cfg_kw.setdefault("capacity", 128)
+    cfg_kw.setdefault("batch_size", 2)
+    cfg_kw.setdefault("block_size", 16)
+    return LLMEngine(EngineConfig(decode="vanilla", scheduler="continuous",
+                                  kv="paged", **cfg_kw),
+                     params=params, cfg=CFG, ppd_params=ppd)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("harvest", [0, 4])
+def test_fork_cow_while_source_prefill_in_flight(model, backend, harvest):
+    """fork + CoW of a uid whose chunked prefill is still in flight: the
+    manager/shadow bookkeeping must stay conserved and the source's
+    output must be byte-identical to an unforked run (the CoW redirects
+    the fork's divergence into a private block; the source never sees
+    it).  PR 7 interleaved prefill with decode but never drove the
+    sharing machinery mid-prefill."""
+    prompts = [_prompt(0, 37), _prompt(1, 7)]
+
+    def run(tamper):
+        llm = _engine(model, attn_backend=backend, harvest_every=harvest,
+                      prefill_chunk=16)
+        for p in prompts:
+            llm.add_request(p, SamplingParams(max_tokens=6))
+        eng = llm.engine
+        forked = False
+        for _ in range(200):
+            llm.step()
+            pre = [s for s in eng.slots if s.busy and s.prefilling]
+            if tamper and not forked and pre:
+                src_uid = pre[0].req.uid
+                bm = eng.block_mgr
+                ids = bm.fork(src_uid, 777)
+                assert all(bm.ref_count(b) == 2 for b in ids)
+                # CoW before the fork's divergent write, then retire it
+                src, dst = bm.cow(777, len(ids) - 1)
+                assert bm.seq_blocks(src_uid)[-1] == src
+                bm.free_seq(777)
+                assert bm.ref_count(src) == 1
+                forked = True
+            if not llm.has_unfinished:
+                break
+        outs = sorted(llm.drain_results(), key=lambda r: r.uid)
+        return [(r.tokens.tolist(), r.finish_reason) for r in outs]
+
+    assert run(tamper=True) == run(tamper=False)
