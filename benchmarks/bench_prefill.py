@@ -131,6 +131,9 @@ def _metrics(llm, results, trace):
         mean_queue_wait_s=agg["mean_queue_wait_s"],
         mean_prefill_s=agg["mean_prefill_s"],
         mean_tpot_s=agg["mean_tpot_s"],
+        p50_tpot_s=agg["p50_tpot_s"],
+        p99_tpot_s=agg["p99_tpot_s"],
+        max_concurrency_observed=agg["max_concurrency_observed"],
         chat_p50_ttft_s=float(np.percentile(ttfts, 50)),
         chat_p99_ttft_s=float(np.percentile(ttfts, 99)),
         chat_mean_tpot_s=sum(tpots) / max(len(tpots), 1),
@@ -188,7 +191,9 @@ def main():
         r = records[chunk]
         print(f"chunk={chunk:4d}: chat p99 TTFT {r['chat_p99_ttft_s']:.3f}s"
               f"  chat TPOT {r['chat_mean_tpot_s'] * 1e3:.2f}ms"
+              f"  p99 TPOT {r['p99_tpot_s'] * 1e3:.2f}ms"
               f"  goodput {r['goodput_tok_s']:.1f} tok/s"
+              f"  max-conc {r['max_concurrency_observed']}"
               f"  (queue {r['mean_queue_wait_s']:.3f}s"
               f" / prefill {r['mean_prefill_s']:.3f}s)")
 

@@ -1,0 +1,279 @@
+"""End-to-end HTTP serving benchmark: SLO-attainment goodput under an
+open-loop bursty trace, over the wire.
+
+Boots the OpenAI-compatible server in-process on an ephemeral port over
+the CPU smoke model, replays a 100+-request on-off (bursty) arrival
+trace through ``repro.serving.loadgen`` — hundreds of concurrent
+streaming connections against a handful of decode slots — and reports
+SLO goodput with p50/p99 TTFT and TPOT, plus the server's own
+aggregate (observed max concurrency, abort/reject counters).
+
+Then the cancellation sub-test: with the kvsan shadow audit enabled
+(paged KV), a set of concurrent streamed requests runs once
+undisturbed and once alongside a victim that hangs up mid-stream.
+``--check`` exits non-zero unless
+
+  * the main trace finishes with zero engine-side errors and every
+    request classified (completed + rejected + disconnected == n),
+  * the open-request depth drains to zero and the paged pool ends with
+    ``used_blocks == 0`` (abort reclaimed everything), and
+  * the survivors' token ids are identical with and without the
+    mid-stream disconnect.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_serving.py --fast --check
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import sys
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def build_llm(arch, *, kv="paged", batch=4, capacity=256,
+              harvest_every=2, sanitize=False):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import init_prompt_params
+    from repro.models import init_params
+    from repro.serving import EngineConfig, LLMEngine
+
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    llm = LLMEngine(EngineConfig(decode="ppd", scheduler="continuous",
+                                 kv=kv, capacity=capacity,
+                                 batch_size=batch,
+                                 harvest_every=harvest_every,
+                                 sanitize=sanitize),
+                    params=params, cfg=cfg, ppd_params=ppd)
+    return llm, cfg
+
+
+async def _drain(server, timeout_s=30.0):
+    """Wait until no request is open server-side."""
+    loop = asyncio.get_running_loop()
+    deadline = loop.time() + timeout_s
+    while loop.time() < deadline and server.bridge._depth > 0:
+        await asyncio.sleep(0.05)
+    return server.bridge._depth == 0
+
+
+async def _completion_ids(port, prompt, max_tokens):
+    """One non-streaming completion; returns (status, token_ids)."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps({"prompt": [int(t) for t in prompt],
+                       "max_tokens": int(max_tokens)}).encode()
+    writer.write(b"POST /v1/completions HTTP/1.1\r\n"
+                 b"Content-Length: %d\r\nConnection: close\r\n\r\n"
+                 % len(body) + body)
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    status = int(head.split(b"\r\n")[0].split()[1])
+    ids = (json.loads(rest)["choices"][0]["token_ids"]
+           if status == 200 else None)
+    return status, ids
+
+
+async def _disconnecting_stream(port, prompt, max_tokens, after):
+    """Stream a completion and hang up after ``after`` tokens."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps({"prompt": [int(t) for t in prompt],
+                       "max_tokens": int(max_tokens),
+                       "stream": True}).encode()
+    writer.write(b"POST /v1/completions HTTP/1.1\r\n"
+                 b"Content-Length: %d\r\n\r\n" % len(body) + body)
+    await writer.drain()
+    await reader.readuntil(b"\r\n\r\n")
+    got = 0
+    while got < after:
+        line = await reader.readline()
+        if not line:
+            return
+        if line.startswith(b"data: ") and b"token_ids" in line:
+            got += 1
+    writer.transport.abort()
+
+
+async def main_trace(args):
+    """The headline number: bursty open-loop trace, SLO goodput."""
+    from repro.serving.loadgen import SLO, make_arrivals, run_load
+    from repro.serving.server import make_server
+
+    llm, cfg = build_llm(args.arch, batch=args.batch)
+    server = make_server(llm, port=0, max_queue_depth=args.queue_depth)
+    await server.start()
+    try:
+        # warmup pays the compiles outside the measured trace
+        await _completion_ids(server.port, [1, 2, 3, 4], 4)
+
+        arrivals = make_arrivals(args.trace, args.requests, args.rate,
+                                 seed=args.seed)
+        rng = np.random.default_rng(args.seed)
+        prompts = rng.integers(0, cfg.vocab_size,
+                               size=(args.requests, args.prompt_len))
+        report = await run_load(
+            "127.0.0.1", server.port, arrivals, prompts,
+            max_tokens=args.max_tokens,
+            slo=SLO(ttft_s=args.slo_ttft, tpot_s=args.slo_tpot))
+        report.pop("records")
+        drained = await _drain(server)
+        report["server"] = server.bridge.metrics()
+        report["drained"] = drained
+        bm = llm.engine.block_mgr
+        report["used_blocks_after"] = (bm.used_blocks
+                                       if bm is not None else 0)
+        return report
+    finally:
+        await server.stop()
+
+
+async def disconnect_subtest(args):
+    """Cancellation-reclaim: survivors token-identical with and without
+    a victim that hangs up mid-stream; pool empty afterwards."""
+    from repro.analysis import kvsan
+    from repro.serving.server import make_server
+
+    llm, cfg = build_llm(args.arch, kv="paged", batch=args.batch,
+                         sanitize=True)
+    kvsan.enable()
+    try:
+        server = make_server(llm, port=0)
+        await server.start()
+        try:
+            rng = np.random.default_rng(args.seed + 1)
+            survivors = rng.integers(0, cfg.vocab_size, size=(6, 8))
+            victim = rng.integers(0, cfg.vocab_size, size=16)
+
+            async def run_survivors():
+                outs = await asyncio.gather(*[
+                    _completion_ids(server.port, p, args.max_tokens)
+                    for p in survivors])
+                assert all(s == 200 for s, _ in outs)
+                return [ids for _, ids in outs]
+
+            ref = await run_survivors()            # undisturbed pass
+            victim_task = asyncio.create_task(
+                _disconnecting_stream(server.port, victim, 64, after=2))
+            got = await run_survivors()            # concurrent with abort
+            await victim_task
+
+            drained = await _drain(server)
+            bm = llm.engine.block_mgr
+            return {
+                "survivors_identical": got == ref,
+                "aborted": server.bridge.counters["aborted"],
+                "engine_errors": server.bridge.counters["engine_errors"],
+                "drained": drained,
+                "used_blocks_after": bm.used_blocks,
+            }
+        finally:
+            await server.stop()
+    finally:
+        kvsan.disable()
+        kvsan.set_current(None)
+        kvsan.clear_report()
+        kvsan.clear_donated()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=120)
+    ap.add_argument("--rate", type=float, default=40.0)
+    ap.add_argument("--trace", choices=["poisson", "onoff", "gamma"],
+                    default="onoff")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="admission backpressure threshold (lower it to "
+                         "exercise 429s; the default admits everything)")
+    ap.add_argument("--slo-ttft", type=float, default=5.0)
+    ap.add_argument("--slo-tpot", type=float, default=1.0)
+    ap.add_argument("--fast", action="store_true",
+                    help="CPU smoke: 100 requests, 6 new tokens each")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on engine errors, unclassified or "
+                         "undrained requests, leaked blocks, or "
+                         "disconnect-perturbed survivor outputs")
+    args = ap.parse_args()
+    if args.fast:
+        args.requests = min(args.requests, 100)
+        args.max_tokens = 6
+
+    report = asyncio.run(main_trace(args))
+    n = args.requests
+    classified = (report["completed"] + report["rejected"]
+                  + report["disconnects"] + report["errors"])
+    print(f"trace={args.trace} n={n} rate={args.rate}/s: "
+          f"completed {report['completed']}  rejected "
+          f"{report['rejected']}  errors {report['errors']}")
+    print(f"  SLO goodput {report['slo_goodput_tok_s']:.1f} tok/s "
+          f"(attainment {report['slo_attainment']:.1%}, raw "
+          f"{report['throughput_tok_s']:.1f} tok/s)")
+    print(f"  TTFT p50/p99 {report['p50_ttft_s']:.3f}/"
+          f"{report['p99_ttft_s']:.3f}s  TPOT p50/p99 "
+          f"{report['p50_tpot_s'] * 1e3:.1f}/"
+          f"{report['p99_tpot_s'] * 1e3:.1f}ms")
+    agg = report["server"]["aggregate"]
+    print(f"  server: max concurrency {agg['max_concurrency_observed']} "
+          f"(offered peak {report['max_concurrency_target']}), "
+          f"drained={report['drained']}, "
+          f"used_blocks={report['used_blocks_after']}")
+
+    disc = asyncio.run(disconnect_subtest(args))
+    print(f"disconnect subtest: survivors_identical="
+          f"{disc['survivors_identical']} aborted={disc['aborted']} "
+          f"used_blocks={disc['used_blocks_after']} "
+          f"(kvsan audit on)")
+
+    out = {"args": vars(args), "trace_report": report,
+           "disconnect_subtest": disc}
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "bench_serving.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"wrote {path}")
+
+    if args.check:
+        failures = []
+        eng_err = report["server"]["server"]["engine_errors"]
+        if report["errors"] or eng_err:
+            failures.append(f"errors: client={report['errors']} "
+                            f"engine={eng_err}")
+        if classified != n:
+            failures.append(f"unclassified requests: {classified}/{n}")
+        if not report["drained"] or report["used_blocks_after"]:
+            failures.append(
+                f"leak: drained={report['drained']} "
+                f"used_blocks={report['used_blocks_after']}")
+        if report["completed"] == 0:
+            failures.append("nothing completed")
+        if not disc["survivors_identical"]:
+            failures.append("disconnect perturbed survivor outputs")
+        if disc["engine_errors"] or disc["used_blocks_after"] \
+                or not disc["drained"] or disc["aborted"] < 1:
+            failures.append(f"disconnect subtest: {disc}")
+        if failures:
+            for f_ in failures:
+                print(f"CHECK FAILED: {f_}", file=sys.stderr)
+            return 1
+        print("check passed: zero engine errors, capacity reclaimed, "
+              "survivors token-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -91,7 +91,7 @@ def run_serving(fast: bool = False):
     from repro.serving import (EngineConfig, LLMEngine, SamplingParams,
                                aggregate_metrics)
     from repro.serving.engine import Request
-    from repro.serving.scheduler import poisson_trace
+    from repro.serving.scheduler import onoff_trace, poisson_trace
 
     params, ppd, _, cfg = get_trained(fast)
     pipe = pipeline()
@@ -100,21 +100,31 @@ def run_serving(fast: bool = False):
     prompt_len = 32
     prompts = pipe.val_prompts(len(lens), prompt_len)
     capacity = prompt_len + max(lens) + 16
-    reqs = poisson_trace(
-        [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
-         for i in range(len(lens))], rate_per_s=8.0, seed=0)
 
-    # (label, scheduler, prefill_chunk): the chunked row shows the
-    # head-of-line fix — same outputs, TTFT split into queue vs prefill
-    modes = (("static", "static", 0), ("continuous", "continuous", 0),
-             ("continuous_chunked", "continuous", 16))
+    def requests():
+        return [Request(uid=i, prompt=prompts[i], max_new_tokens=lens[i])
+                for i in range(len(lens))]
+
+    reqs = poisson_trace(requests(), rate_per_s=8.0, seed=0)
+    # same workload, bursty arrivals: the on-off trace stresses the
+    # admission queue (greedy outputs stay identical per request)
+    reqs_bursty = onoff_trace(requests(), rate_per_s=8.0, seed=0)
+
+    # (label, scheduler, prefill_chunk, trace): the chunked row shows
+    # the head-of-line fix — same outputs, TTFT split into queue vs
+    # prefill; the bursty row shows queue absorption (compare observed
+    # max concurrency against the slot count)
+    modes = (("static", "static", 0, reqs),
+             ("continuous", "continuous", 0, reqs),
+             ("continuous_chunked", "continuous", 16, reqs),
+             ("continuous_bursty", "continuous", 0, reqs_bursty))
     rows = {}
-    for label, mode, chunk in modes:
+    for label, mode, chunk, trace_reqs in modes:
         llm = LLMEngine(EngineConfig(decode="ppd", scheduler=mode, m=M,
                                      batch_size=slots, capacity=capacity,
                                      prefill_chunk=chunk),
                         params=params, cfg=cfg, ppd_params=ppd)
-        for r in reqs:
+        for r in trace_reqs:
             llm.add_request(r.prompt,
                             SamplingParams(max_tokens=r.max_new_tokens),
                             request_id=r.uid, arrival_s=r.arrival_s)
@@ -132,21 +142,26 @@ def run_serving(fast: bool = False):
             mean_queue_wait_s=agg["mean_queue_wait_s"],
             mean_prefill_s=agg["mean_prefill_s"],
             mean_tpot_s=agg["mean_tpot_s"],
+            p50_tpot_s=agg["p50_tpot_s"],
+            p99_tpot_s=agg["p99_tpot_s"],
+            max_concurrency=agg["max_concurrency_observed"],
             total_tokens=agg["total_tokens"],
             outputs={r.uid: r.tokens.tolist() for r in res})
 
     same = all(rows[label]["outputs"] == rows["static"]["outputs"]
-               for label, _, _ in modes)
+               for label, _, _, _ in modes)
     csv_line("table1_serving", "scheduler", "fwd_passes", "goodput_tok_s",
              "mean_ttft_s", "p50_ttft_s", "p99_ttft_s", "queue_wait_s",
-             "prefill_s", "mean_tpot_s", "output_same_as_static")
+             "prefill_s", "mean_tpot_s", "p50_tpot_s", "p99_tpot_s",
+             "max_concurrency", "output_same_as_static")
     for label, r in rows.items():
         csv_line("table1_serving", label, r["forward_passes"],
                  f"{r['goodput_tok_s']:.2f}", f"{r['mean_ttft_s']:.3f}",
                  f"{r['p50_ttft_s']:.3f}", f"{r['p99_ttft_s']:.3f}",
                  f"{r['mean_queue_wait_s']:.3f}",
                  f"{r['mean_prefill_s']:.3f}",
-                 f"{r['mean_tpot_s']:.4f}", same)
+                 f"{r['mean_tpot_s']:.4f}", f"{r['p50_tpot_s']:.4f}",
+                 f"{r['p99_tpot_s']:.4f}", r["max_concurrency"], same)
         r.pop("outputs")
         r["same_output"] = bool(same)
     os.makedirs(RESULTS, exist_ok=True)

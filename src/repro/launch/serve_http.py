@@ -1,0 +1,114 @@
+"""HTTP serving driver: the OpenAI-compatible front end over one
+:class:`repro.serving.LLMEngine`.
+
+Builds the engine exactly like ``repro.launch.serve`` (every engine
+flag funnels through :meth:`EngineConfig.from_cli_args`), then mounts
+it behind :class:`repro.serving.server.HTTPServer` — a background
+engine thread owns the step loop, asyncio owns the sockets.
+
+Usage:
+  python -m repro.launch.serve_http --arch ppd-demo --smoke --port 8000
+  curl -s localhost:8000/v1/completions -d \\
+      '{"prompt": [1, 2, 3], "max_tokens": 8}'
+  curl -sN localhost:8000/v1/completions -d \\
+      '{"prompt": [1, 2, 3], "max_tokens": 8, "stream": true}'
+
+SIGINT / SIGTERM trigger a graceful shutdown: the listener closes, in-
+flight requests drain, the engine thread joins.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import contextlib
+import signal
+
+
+def build_engine(args):
+    """The ``launch.serve`` model-building path, shared by the HTTP
+    driver and the in-process server benchmarks."""
+    import jax
+
+    from repro.core import init_prompt_params
+    from repro.models import init_params
+    from repro.serving import EngineConfig, LLMEngine
+
+    if args.arch == "ppd-demo":
+        from repro.configs.demo import CONFIG as cfg, SMOKE
+        if args.smoke:
+            cfg = SMOKE
+    else:
+        from repro.configs import get_config, get_smoke_config
+        cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ppd = None
+    if args.decode == "ppd":
+        ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=args.m,
+                                 base_embed=params["embed"])
+    config = EngineConfig.from_cli_args(args)
+    llm = LLMEngine(config, params=params, cfg=cfg, ppd_params=ppd)
+    return llm, cfg, config
+
+
+def add_engine_flags(ap: argparse.ArgumentParser):
+    ap.add_argument("--arch", default="ppd-demo")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--decode", choices=["vanilla", "ppd"],
+                    default="ppd")
+    ap.add_argument("--scheduler", choices=["static", "continuous"],
+                    default="continuous")
+    ap.add_argument("--m", type=int, default=3)
+    ap.add_argument("--capacity", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--kv", choices=["ring", "paged"], default="ring")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0)
+    ap.add_argument("--admission", choices=["fcfs", "sjf"],
+                    default="fcfs")
+    ap.add_argument("--prefill-chunk", type=int, default=0)
+    ap.add_argument("--prefill-parallelism", type=int, default=2)
+    ap.add_argument("--harvest-every", type=int, default=1)
+    ap.add_argument("--sanitize", action="store_true")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="OpenAI-compatible HTTP serving front end")
+    add_engine_flags(ap)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--max-queue-depth", type=int, default=64,
+                    help="open requests beyond this get HTTP 429 with "
+                         "Retry-After (admission backpressure)")
+    ap.add_argument("--min-free-block-frac", type=float, default=0.0,
+                    help="paged mode: also 429 while the block pool's "
+                         "free fraction is below this (0 = depth-only)")
+    args = ap.parse_args(argv)
+
+    llm, cfg, config = build_engine(args)
+    from repro.serving.server import make_server
+    server = make_server(llm, host=args.host, port=args.port,
+                         model_name=f"{args.decode}-{args.arch}",
+                         max_queue_depth=args.max_queue_depth,
+                         min_free_block_frac=args.min_free_block_frac)
+
+    async def serve():
+        await server.start()
+        print(f"engine config: {config.to_json()}")
+        print(f"serving on http://{server.host}:{server.port} "
+              f"(POST /v1/completions, GET /healthz, GET /metrics)")
+        loop = asyncio.get_running_loop()
+        stop = asyncio.Event()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            with contextlib.suppress(NotImplementedError):
+                loop.add_signal_handler(sig, stop.set)
+        await stop.wait()
+        print("shutting down: draining in-flight requests")
+        await server.stop()
+
+    asyncio.run(serve())
+
+
+if __name__ == "__main__":
+    main()

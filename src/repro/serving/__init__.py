@@ -9,8 +9,13 @@ Public surface (see docs/api.md):
   :class:`RequestOutput` — request/response types.
 * :class:`StaticEngine` / :class:`ContinuousEngine` — the two schedulers
   (strategy-composed; importable for direct use).
-* :class:`BlockManager`, :func:`poisson_trace`,
-  :func:`aggregate_metrics`, :func:`tpot_of` — serving utilities.
+* :class:`BlockManager`, :func:`poisson_trace` / :func:`gamma_trace` /
+  :func:`onoff_trace`, :func:`aggregate_metrics`, :func:`tpot_of` —
+  serving utilities.
+* :class:`EngineBridge` / :class:`HTTPServer` (``serving.server``) and
+  the ``serving.loadgen`` harness — the OpenAI-compatible HTTP front
+  end and its open-loop SLO load generator (imported lazily; plain
+  ``import repro.serving`` stays asyncio-free).
 
 The historical engine class names (``PPDEngine``, ``VanillaEngine``,
 ``MedusaEngine``, ``SpeculativeDecoder``, ``ContinuousPPDEngine``,
@@ -24,9 +29,12 @@ from .api import (DECODE_STRATEGIES, SCHEDULERS, EngineConfig, LLMEngine,
                   RequestOutput, STRATEGY_REGISTRY, SCHEDULER_REGISTRY)
 from .block_manager import BlockManager
 from .engine import (Request, Result, StaticEngine, TokenEvent,
-                     aggregate_metrics, tpot_of)
+                     aggregate_metrics, max_concurrency_observed,
+                     tpot_of)
 from .sampling import SamplingParams
-from .scheduler import ContinuousEngine, poisson_trace
+from .scheduler import (ContinuousEngine, gamma_arrivals, gamma_trace,
+                        onoff_arrivals, onoff_trace, poisson_arrivals,
+                        poisson_trace)
 
 from . import engine as _engine_mod
 from . import scheduler as _scheduler_mod

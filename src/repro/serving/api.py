@@ -426,6 +426,17 @@ class LLMEngine:
         (TTFT observed live); its last is a ``finished`` marker."""
         return self.engine.step()
 
+    def abort_request(self, uid: int) -> bool:
+        """Cancel a queued or in-flight request (client disconnect,
+        deadline blown).  Frees the request's slot, paged KV blocks, and
+        any in-flight chunked-prefill reservation; its Result arrives
+        via :meth:`drain_results` with ``finish_reason="abort"``.
+        Idempotent: aborting an unknown or already-finished uid is a
+        no-op returning False.  Must be called from the thread driving
+        :meth:`step` — engine state is not thread-safe (the HTTP
+        server's bridge serializes aborts through the engine thread)."""
+        return self.engine.abort_request(uid)
+
     @property
     def has_unfinished(self) -> bool:
         return self.engine.has_unfinished

@@ -70,6 +70,10 @@ class Result:
     # token (prefill compute).  queue_wait_s + prefill_s ~= ttft_s.
     queue_wait_s: float = 0.0
     prefill_s: float = 0.0
+    # Echo of the request's arrival offset (engine clock), so fleet
+    # metrics can reconstruct each request's in-service interval
+    # [arrival + queue_wait, arrival + wall] without the Request object.
+    arrival_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +115,29 @@ def tpot_of(decode_span_s: float, n_tokens: int) -> float:
     return max(decode_span_s, 0.0) / (n_tokens - 1)
 
 
+def max_concurrency_observed(results: List["Result"]) -> int:
+    """Peak number of simultaneously *in-service* requests, from each
+    result's [arrival + queue_wait, arrival + wall] interval.
+
+    An interval sweep over the finished set: computable post hoc from
+    Results alone (the loadgen and ``/metrics`` snapshots have no live
+    engine to ask), unlike the continuous scheduler's live
+    ``stats["max_concurrency"]`` slot counter.  Back-to-back requests
+    (one ends exactly where the next starts) do not overlap: departures
+    sort before arrivals at equal timestamps."""
+    marks = []
+    for r in results:
+        start = r.arrival_s + r.queue_wait_s
+        marks.append((start, 1))
+        marks.append((r.arrival_s + max(r.wall_s, 0.0), -1))
+    marks.sort(key=lambda m: (m[0], m[1]))
+    cur = peak = 0
+    for _, delta in marks:
+        cur += delta
+        peak = max(peak, cur)
+    return peak
+
+
 def aggregate_metrics(results: List["Result"], makespan_s: float) -> dict:
     """Fleet-level serving metrics over a finished request set.
 
@@ -135,7 +162,12 @@ def aggregate_metrics(results: List["Result"], makespan_s: float) -> dict:
         "mean_queue_wait_s": sum(r.queue_wait_s for r in results) / n,
         "mean_prefill_s": sum(r.prefill_s for r in results) / n,
         "mean_tpot_s": sum(tpots) / len(tpots) if tpots else 0.0,
+        # TPOT tail: SLO gates bound the per-token stall a client sees,
+        # not just the first token (same rationale as the TTFT tail).
+        "p50_tpot_s": float(np.percentile(tpots, 50)) if tpots else 0.0,
+        "p99_tpot_s": float(np.percentile(tpots, 99)) if tpots else 0.0,
         "tpot_defined_requests": len(tpots),
+        "max_concurrency_observed": max_concurrency_observed(results),
     }
 
 
@@ -298,6 +330,35 @@ class StaticEngine:
     @property
     def has_unfinished(self) -> bool:
         return bool(self.queue) or self._cur is not None
+
+    def abort_request(self, uid: int) -> bool:
+        """Cancel a queued or in-flight request; idempotent.
+
+        A queued request is removed and a zero-token ``abort`` Result is
+        emitted immediately.  An in-flight row is marked done with
+        finish reason "abort": it stops harvesting tokens and is masked
+        out of further decode steps, but — static batching — its Result
+        (and terminal TokenEvent) is emitted only when the whole batch
+        finalizes.  Unknown / already-finished uids return False (the
+        post-finish abort is a no-op).  Must be called from the thread
+        driving ``step()`` — engine state is not thread-safe."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                self.queue.pop(i)
+                self._results.append(Result(
+                    uid=uid, tokens=np.zeros((0,), np.int32), steps=0,
+                    wall_s=1e-9, finish_reason="abort",
+                    arrival_s=r.arrival_s))
+                return True
+        st = self._cur
+        if st is not None:
+            for b, r in enumerate(st.reqs):
+                if r.uid == uid and not st.done[b]:
+                    st.done[b] = True
+                    st.finish[b] = "abort"
+                    st.row_steps[b] = st.steps
+                    return True
+        return False
 
     # ------------------------------------------------------------- step
     def step(self) -> List[TokenEvent]:
@@ -481,7 +542,8 @@ class StaticEngine:
                 uid=r.uid, tokens=toks, steps=steps, wall_s=latency,
                 ttft_s=ttft, tpot_s=tpot_of(wall - t_prefill, n),
                 goodput_tok_s=n / latency,
-                finish_reason=st.finish[b] or "length"))
+                finish_reason=st.finish[b] or "length",
+                arrival_s=r.arrival_s))
         self._cur = None
 
 

@@ -59,6 +59,25 @@ def device_get(tree, label: str = "get"):
     return jax.device_get(tree)
 
 
+def wait_ready(tree, label: str = "wait"):
+    """Block until every dispatched computation producing ``tree`` has
+    executed, WITHOUT transferring it to the host.
+
+    The abort path needs this under the sanitizer: freeing an aborted
+    sequence's shadow blocks while dispatched chunk/decode writes are
+    still in flight would fire their validation callbacks against an
+    already-freed shadow entry (a false use-after-free — on device the
+    dataflow through the pool cache orders the writes before any
+    reallocation's arm/clear).  Counts as one sync in
+    :func:`count_host_syncs` under its own label, so the sync-budget
+    tests see abort-time waits explicitly."""
+    counter = getattr(_local, "counter", None)
+    if counter is not None:
+        counter.bump(label)
+    jax.block_until_ready(tree)
+    return tree
+
+
 @contextlib.contextmanager
 def count_host_syncs():
     """Count every :func:`device_get` issued inside the scope.

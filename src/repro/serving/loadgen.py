@@ -1,0 +1,309 @@
+"""Open-loop SLO-goodput load harness for the HTTP serving front end.
+
+Drives hundreds of concurrent connections against a running
+:class:`repro.serving.server.HTTPServer` through an *open-loop* arrival
+trace: each request fires at its scheduled arrival time regardless of
+whether earlier ones have finished (closed-loop clients hide queueing
+collapse — an overloaded server slows the offered load down; an
+open-loop one keeps arriving and exposes it).  Traces come from the
+same generators the schedulers replay
+(:func:`repro.serving.scheduler.poisson_arrivals` /
+``onoff_arrivals`` / ``gamma_arrivals``), so a benchmark's in-process
+sweep and its over-the-wire run see identical arrival statistics.
+
+Reported the way production measures it (SNIPPETS Snippet 1's framing):
+
+* per-request **TTFT** is measured from the *scheduled arrival*, not
+  from when the socket connected — client-side queueing delay counts;
+* **TPOT** is the mean inter-token gap after the first token;
+* a request **attains its SLO** iff it completed (no 429, no error, no
+  disconnect) AND TTFT <= ``slo.ttft_s`` AND TPOT <= ``slo.tpot_s``
+  (single-token responses have no TPOT and pass on TTFT alone);
+* **SLO goodput** = total tokens of SLO-attaining requests / makespan —
+  tokens a client would have to consider late count for nothing.
+
+Every request streams (``stream: true``): SSE is the only shape that
+makes TTFT observable at the client.  ``disconnect_after`` optionally
+drops each Nth connection after a few tokens mid-stream — the
+cancellation-reclaim scenario the server's abort path exists for.
+
+Stdlib-only (asyncio + json): usable as a module
+(:func:`run_load` / :func:`run_load_sync`) or a CLI
+(``python -m repro.serving.loadgen --port ...``).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import math
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request latency targets."""
+    ttft_s: float = 2.0
+    tpot_s: float = 0.5
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's client-side observation."""
+    idx: int
+    scheduled_s: float             # arrival offset on the trace clock
+    status: str = "pending"        # ok | rejected | error | disconnect
+    http_status: int = 0
+    ttft_s: float = math.nan       # scheduled arrival -> first token
+    tpot_s: float = math.nan       # mean inter-token gap
+    tokens: int = 0
+    finish_reason: str = ""
+    error: str = ""
+
+    @property
+    def completed(self) -> bool:
+        return self.status == "ok"
+
+    def slo_met(self, slo: SLO) -> bool:
+        if not self.completed:
+            return False
+        if not (self.ttft_s <= slo.ttft_s):
+            return False
+        return math.isnan(self.tpot_s) or self.tpot_s <= slo.tpot_s
+
+
+def make_arrivals(kind: str, n: int, rate_per_s: float,
+                  seed: int = 0, **kw) -> np.ndarray:
+    """Arrival offsets for one of the named trace shapes
+    ({poisson, onoff, gamma}; see ``serving.scheduler``)."""
+    from .scheduler import (gamma_arrivals, onoff_arrivals,
+                            poisson_arrivals)
+    gens = {"poisson": poisson_arrivals, "onoff": onoff_arrivals,
+            "gamma": gamma_arrivals}
+    if kind not in gens:
+        raise ValueError(f"unknown trace kind {kind!r}; "
+                         f"expected one of {sorted(gens)}")
+    return gens[kind](n, rate_per_s, seed=seed, **kw)
+
+
+async def _read_headers(reader) -> tuple:
+    line = await reader.readline()
+    status = int(line.split()[1])
+    headers = {}
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode("latin-1").partition(":")
+        headers[k.strip().lower()] = v.strip()
+    return status, headers
+
+
+async def _one_request(host: str, port: int, rec: RequestRecord,
+                       payload: dict, t0: float,
+                       disconnect_after: int = 0) -> RequestRecord:
+    """Fire one streaming completion at its scheduled arrival time."""
+    loop = asyncio.get_running_loop()
+    await asyncio.sleep(max(t0 + rec.scheduled_s - loop.time(), 0.0))
+    body = json.dumps({**payload, "stream": True}).encode()
+    try:
+        reader, writer = await asyncio.open_connection(host, port)
+    except OSError as e:
+        rec.status, rec.error = "error", f"connect: {e}"
+        return rec
+    try:
+        writer.write(
+            b"POST /v1/completions HTTP/1.1\r\n"
+            + f"Host: {host}\r\nContent-Type: application/json\r\n"
+              f"Content-Length: {len(body)}\r\n"
+              f"Connection: close\r\n\r\n".encode() + body)
+        await writer.drain()
+        status, _headers = await _read_headers(reader)
+        rec.http_status = status
+        if status != 200:
+            rec.status = "rejected" if status == 429 else "error"
+            rec.error = (await reader.read(4096)).decode("utf-8",
+                                                         "replace")
+            return rec
+        t_first = t_last = None
+        n = 0
+        while True:
+            line = await reader.readline()
+            if not line:
+                rec.status, rec.error = "error", "stream ended early"
+                return rec
+            line = line.strip()
+            if not line.startswith(b"data: "):
+                continue
+            data = line[len(b"data: "):]
+            if data == b"[DONE]":
+                break
+            evt = json.loads(data)
+            if "error" in evt:
+                rec.status = "error"
+                rec.error = evt["error"].get("message", "")
+                return rec
+            choice = evt["choices"][0]
+            if choice.get("token_ids"):
+                now = loop.time()
+                if t_first is None:
+                    t_first = now
+                t_last = now
+                n += len(choice["token_ids"])
+                if disconnect_after and n >= disconnect_after:
+                    # mid-stream hangup: the server must abort the
+                    # request and reclaim its slot/blocks
+                    rec.status = "disconnect"
+                    rec.tokens = n
+                    return rec
+            if choice.get("finish_reason"):
+                rec.finish_reason = choice["finish_reason"]
+        rec.status = "ok"
+        rec.tokens = n
+        if t_first is not None:
+            rec.ttft_s = t_first - (t0 + rec.scheduled_s)
+            rec.tpot_s = ((t_last - t_first) / (n - 1) if n > 1
+                          else math.nan)
+        return rec
+    except (ConnectionResetError, BrokenPipeError,
+            asyncio.IncompleteReadError) as e:
+        rec.status, rec.error = "error", f"transport: {e}"
+        return rec
+    finally:
+        try:
+            writer.close()
+            await writer.wait_closed()
+        except Exception:
+            pass
+
+
+def summarize(records: List[RequestRecord], makespan_s: float,
+              slo: SLO) -> dict:
+    """The SLO-attainment goodput report."""
+    completed = [r for r in records if r.completed]
+    met = [r for r in records if r.slo_met(slo)]
+    ttfts = [r.ttft_s for r in completed if not math.isnan(r.ttft_s)]
+    tpots = [r.tpot_s for r in completed if not math.isnan(r.tpot_s)]
+
+    def pct(vals, q):
+        return float(np.percentile(vals, q)) if vals else 0.0
+
+    total_tokens = sum(r.tokens for r in completed)
+    return {
+        "requests": len(records),
+        "completed": len(completed),
+        "rejected": sum(r.status == "rejected" for r in records),
+        "errors": sum(r.status == "error" for r in records),
+        "disconnects": sum(r.status == "disconnect" for r in records),
+        "makespan_s": makespan_s,
+        "total_tokens": total_tokens,
+        "throughput_tok_s": (total_tokens / makespan_s
+                             if makespan_s > 0 else 0.0),
+        "slo": dataclasses.asdict(slo),
+        "slo_attained": len(met),
+        "slo_attainment": len(met) / max(len(records), 1),
+        # the headline number: only tokens from SLO-attaining requests
+        # count (SNIPPETS Snippet 1: goodput removes failed/late work)
+        "slo_goodput_tok_s": (sum(r.tokens for r in met) / makespan_s
+                              if makespan_s > 0 else 0.0),
+        "p50_ttft_s": pct(ttfts, 50), "p99_ttft_s": pct(ttfts, 99),
+        "p50_tpot_s": pct(tpots, 50), "p99_tpot_s": pct(tpots, 99),
+        "max_concurrency_target": _peak_offered(records),
+    }
+
+
+def _peak_offered(records: List[RequestRecord]) -> int:
+    """Peak offered concurrency of the trace itself (arrival overlap),
+    a property of the workload — compare with the server's observed
+    max concurrency to see how much the admission queue absorbed."""
+    if not records:
+        return 0
+    arr = sorted(r.scheduled_s for r in records)
+    # approximate service span per request: until the next 1s window
+    marks = [(t, 1) for t in arr] + [(t + 1.0, -1) for t in arr]
+    marks.sort(key=lambda m: (m[0], m[1]))
+    cur = peak = 0
+    for _, d in marks:
+        cur += d
+        peak = max(peak, cur)
+    return peak
+
+
+async def run_load(host: str, port: int, arrivals: Sequence[float],
+                   prompts: Sequence[Sequence[int]], *,
+                   max_tokens: int = 16, slo: Optional[SLO] = None,
+                   disconnect_every: int = 0,
+                   disconnect_after: int = 2) -> dict:
+    """Replay one open-loop trace; returns the summary dict (with the
+    per-request records under ``"records"``).
+
+    ``disconnect_every=k`` hangs up every k-th connection after
+    ``disconnect_after`` streamed tokens (0 = never)."""
+    slo = slo or SLO()
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    tasks = []
+    for i, (t_arr, prompt) in enumerate(zip(arrivals, prompts)):
+        rec = RequestRecord(idx=i, scheduled_s=float(t_arr))
+        dca = (disconnect_after
+               if disconnect_every and (i % disconnect_every) == 0
+               else 0)
+        payload = {"prompt": [int(t) for t in prompt],
+                   "max_tokens": int(max_tokens)}
+        tasks.append(_one_request(host, port, rec, payload, t0,
+                                  disconnect_after=dca))
+    records = list(await asyncio.gather(*tasks))
+    makespan = loop.time() - t0
+    out = summarize(records, makespan, slo)
+    out["records"] = [dataclasses.asdict(r) for r in records]
+    return out
+
+
+def run_load_sync(*args, **kwargs) -> dict:
+    """:func:`run_load` for synchronous callers (spawns a fresh loop —
+    do not call from inside a running event loop)."""
+    return asyncio.run(run_load(*args, **kwargs))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="open-loop SLO-goodput load generator for the PPD "
+                    "HTTP serving front end")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean arrival rate (req/s)")
+    ap.add_argument("--trace", choices=["poisson", "onoff", "gamma"],
+                    default="onoff")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--vocab", type=int, default=256,
+                    help="synthetic prompt token-id range")
+    ap.add_argument("--slo-ttft", type=float, default=2.0)
+    ap.add_argument("--slo-tpot", type=float, default=0.5)
+    ap.add_argument("--disconnect-every", type=int, default=0,
+                    help="hang up every k-th connection mid-stream")
+    args = ap.parse_args(argv)
+
+    arrivals = make_arrivals(args.trace, args.requests, args.rate,
+                             seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, args.vocab,
+                           size=(args.requests, args.prompt_len))
+    report = run_load_sync(
+        args.host, args.port, arrivals, prompts,
+        max_tokens=args.max_tokens,
+        slo=SLO(ttft_s=args.slo_ttft, tpot_s=args.slo_tpot),
+        disconnect_every=args.disconnect_every)
+    report.pop("records")
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

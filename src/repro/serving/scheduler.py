@@ -90,6 +90,75 @@ from .engine import (Request, Result, TokenEvent, aggregate_metrics,
 from .sampling import SamplingParams, resolve_sampling
 
 
+# ------------------------------------------------------- arrival traces
+# Three open-loop arrival processes, all with the same mean rate but
+# increasingly bursty inter-arrival statistics (CV = std/mean of the
+# inter-arrival gaps): Poisson (CV = 1, the memoryless baseline), gamma
+# (CV > 1, heavy-tailed — production traces cluster), and Markov-
+# modulated on/off (exponential burst/idle phases — the worst case for
+# admission backpressure).  The ``*_arrivals`` functions return the raw
+# cumulative arrival times; the ``*_trace`` wrappers stamp them onto a
+# request list, matching the historical ``poisson_trace`` shape.
+
+def poisson_arrivals(n: int, rate_per_s: float,
+                     seed: int = 0) -> np.ndarray:
+    """[n] cumulative arrival times with exponential inter-arrivals."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_per_s, size=n))
+
+
+def gamma_arrivals(n: int, rate_per_s: float, cv: float = 2.0,
+                   seed: int = 0) -> np.ndarray:
+    """[n] arrival times with gamma inter-arrivals of mean ``1/rate``
+    and coefficient of variation ``cv`` (shape k = 1/cv², scale =
+    cv²/rate).  ``cv > 1`` is heavy-tailed: most gaps are tiny (bursts)
+    and a few are huge (lulls); ``cv = 1`` degenerates to Poisson."""
+    if cv <= 0:
+        raise ValueError(f"gamma_arrivals: cv must be > 0, got {cv}")
+    rng = np.random.default_rng(seed)
+    k = 1.0 / (cv * cv)
+    theta = cv * cv / rate_per_s
+    return np.cumsum(rng.gamma(k, theta, size=n))
+
+
+def onoff_arrivals(n: int, rate_per_s: float, seed: int = 0, *,
+                   duty: float = 0.25,
+                   mean_on_s: float = 0.5) -> np.ndarray:
+    """[n] arrival times from a Markov-modulated on/off process.
+
+    Exponentially distributed ON phases (mean ``mean_on_s``) alternate
+    with OFF phases (mean ``mean_on_s * (1 - duty) / duty``); arrivals
+    are Poisson at ``rate_per_s / duty`` during ON and absent during
+    OFF, so the long-run mean rate is ``rate_per_s`` while instantaneous
+    load swings between ``1/duty`` times the mean and zero — the classic
+    interrupted-Poisson burst model."""
+    if not 0.0 < duty <= 1.0:
+        raise ValueError(f"onoff_arrivals: duty must be in (0, 1], "
+                         f"got {duty}")
+    rng = np.random.default_rng(seed)
+    rate_on = rate_per_s / duty
+    mean_off_s = mean_on_s * (1.0 - duty) / max(duty, 1e-12)
+    times: List[float] = []
+    t = 0.0
+    on = bool(rng.random() < duty)   # steady-state starting phase
+    while len(times) < n:
+        dur = float(rng.exponential(mean_on_s if on else mean_off_s))
+        if on:
+            tt = t + float(rng.exponential(1.0 / rate_on))
+            while tt < t + dur and len(times) < n:
+                times.append(tt)
+                tt += float(rng.exponential(1.0 / rate_on))
+        t += dur
+        on = not on
+    return np.asarray(times)
+
+
+def _stamp_arrivals(requests: List[Request],
+                    arrivals: np.ndarray) -> List[Request]:
+    return [dataclasses.replace(r, arrival_s=float(t))
+            for r, t in zip(requests, arrivals)]
+
+
 def poisson_trace(requests: List[Request], rate_per_s: float,
                   seed: int = 0) -> List[Request]:
     """Stamp ``arrival_s`` with a Poisson arrival process (rate = req/s).
@@ -97,13 +166,30 @@ def poisson_trace(requests: List[Request], rate_per_s: float,
     ``rate_per_s <= 0`` leaves all arrivals at t=0 (offline batch)."""
     if rate_per_s <= 0:
         return requests
-    rng = np.random.default_rng(seed)
-    t = 0.0
-    out = []
-    for r in requests:
-        t += float(rng.exponential(1.0 / rate_per_s))
-        out.append(dataclasses.replace(r, arrival_s=t))
-    return out
+    return _stamp_arrivals(requests, poisson_arrivals(
+        len(requests), rate_per_s, seed))
+
+
+def gamma_trace(requests: List[Request], rate_per_s: float,
+                seed: int = 0, *, cv: float = 2.0) -> List[Request]:
+    """Stamp ``arrival_s`` with heavy-tailed gamma inter-arrivals
+    (see :func:`gamma_arrivals`)."""
+    if rate_per_s <= 0:
+        return requests
+    return _stamp_arrivals(requests, gamma_arrivals(
+        len(requests), rate_per_s, cv=cv, seed=seed))
+
+
+def onoff_trace(requests: List[Request], rate_per_s: float,
+                seed: int = 0, *, duty: float = 0.25,
+                mean_on_s: float = 0.5) -> List[Request]:
+    """Stamp ``arrival_s`` with Markov-modulated burst/idle arrivals
+    (see :func:`onoff_arrivals`)."""
+    if rate_per_s <= 0:
+        return requests
+    return _stamp_arrivals(requests, onoff_arrivals(
+        len(requests), rate_per_s, seed, duty=duty,
+        mean_on_s=mean_on_s))
 
 
 @dataclasses.dataclass
@@ -273,6 +359,60 @@ class ContinuousEngine:
     @property
     def has_unfinished(self) -> bool:
         return bool(self.queue) or any(s.busy for s in self.slots)
+
+    def abort_request(self, uid: int) -> bool:
+        """Cancel a queued or in-flight request; idempotent.
+
+        * queued — removed immediately; a zero-token ``abort`` Result is
+          emitted (no blocks or slot were held).
+        * mid-prefill (chunked) — the prefill job is cancelled and its
+          lane returned; the reservation's unpopped blocks were never
+          removed from the free list, and ``free_seq`` forgets the
+          reservation (the mid-prefill abort case its docstring
+          documents).  Already-materialized blocks are freed by the
+          reap.
+        * mid-decode — the slot is marked finished with reason "abort";
+          the next ``step()``'s first reap frees its paged blocks and
+          block-table row and emits the terminal TokenEvent + Result, so
+          a dropped client's capacity is reclaimed within one scheduling
+          tick (well inside one harvest interval).  Device-buffered
+          tokens of the aborted request are dropped unharvested.
+        * post-finish / unknown uid — no-op, returns False.
+
+        Must be called from the thread driving ``step()`` — engine
+        state is not thread-safe (the HTTP bridge routes aborts through
+        the engine thread's command inbox)."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                self.queue.pop(i)
+                self._results.append(Result(
+                    uid=uid, tokens=np.zeros((0,), np.int32), steps=0,
+                    wall_s=1e-9, finish_reason="abort",
+                    arrival_s=r.arrival_s))
+                return True
+        for i, s in enumerate(self.slots):
+            if not (s.busy and s.req.uid == uid):
+                continue
+            if s.finish is not None:
+                return False    # already finishing; the reap owns it
+            if kvsan.active():
+                # dispatched-but-unexecuted chunk/decode writes against
+                # this uid's blocks carry shadow-validation callbacks;
+                # force them before the reap frees the shadow entries,
+                # or they would fire against a freed block (a false
+                # use-after-free — device dataflow orders the real
+                # writes correctly, the host-side shadow does not wait)
+                pool = self.strategy.pool_cache()
+                if pool is not None:
+                    host_sync.wait_ready(pool, label="abort")
+            if s.prefilling:
+                for job in list(self._prefills):
+                    if job.slot == i:
+                        self._prefills.remove(job)
+                        self._free_prows.append(job.prow)
+            s.finish = "abort"
+            return True
+        return False
 
     def _active_mask(self) -> np.ndarray:
         """Decode-eligible slots: busy and not mid-chunked-prefill."""
@@ -563,7 +703,8 @@ class ContinuousEngine:
             goodput_tok_s=n / latency,
             finish_reason=slot.finish or "length",
             queue_wait_s=max(slot.admit_t - slot.arrival_t, 0.0),
-            prefill_s=max(slot.first_tok_t - slot.admit_t, 0.0))
+            prefill_s=max(slot.first_tok_t - slot.admit_t, 0.0),
+            arrival_s=slot.arrival_t)
         slot.req = None
         slot.produced = []
         slot.sampling = None

@@ -1,0 +1,597 @@
+"""Async OpenAI-compatible HTTP front end over a background engine
+thread.
+
+Two halves, one thread boundary:
+
+* :class:`EngineBridge` — owns the engine thread.  ALL JAX work
+  (``LLMEngine.step`` / ``add_request`` / ``abort_request``) happens on
+  that one thread; the asyncio side talks to it through a thread-safe
+  command inbox (submit / abort) and receives tokens back through
+  per-request :class:`asyncio.Queue` fan-out endpoints
+  (``loop.call_soon_threadsafe`` — the only asyncio API that is legal
+  from a foreign thread).  Request ids are allocated by the bridge
+  *before* the submit command is enqueued, so a stream's queue is
+  registered before the first token can possibly flow.
+* :class:`HTTPServer` — a hand-rolled HTTP/1.1 layer on
+  ``asyncio.start_server`` (stdlib only — tier-1 stays
+  dependency-clean; aiohttp users can mount the same bridge behind
+  their own handlers).  One request per connection
+  (``Connection: close``), which is also what the open-loop load
+  harness does: every arrival is an independent connection.
+
+Endpoints:
+
+* ``POST /v1/completions`` — OpenAI completions shape.  ``prompt`` is a
+  token-id array (natively valid OpenAI) or a string (deterministic
+  byte-level fallback encoding — this repo ships no tokenizer);
+  ``stream: true`` selects SSE (``data: {...}\\n\\n`` chunks terminated
+  by ``data: [DONE]``), otherwise one JSON body.
+* ``GET /healthz`` — liveness (503 once the engine thread has died or
+  shutdown began).
+* ``GET /metrics`` — JSON snapshot: server counters, the engine
+  thread's load snapshot, and :func:`aggregate_metrics` over the
+  bounded result history.
+
+Backpressure: admission is bounded by open-request depth
+(``max_queue_depth``) and optionally by the paged block pool's free
+fraction; a rejected submit maps to HTTP 429 with a ``Retry-After``
+header — the open-loop load generator counts those against SLO
+attainment rather than retrying.
+
+Cancellation: both handlers watch the client socket (reader EOF for
+idle connections, write failure for streams) and route a disconnect to
+``LLMEngine.abort_request`` via the bridge, so a dropped connection's
+slot, paged blocks, and any in-flight chunked-prefill reservation are
+reclaimed within one scheduling tick of the engine thread.
+
+This module intentionally imports no JAX: by the time a token reaches
+the bridge it is host-side numpy (the engines' harvest paths already
+forced the sync through ``host_sync.device_get``), so the jaxlint
+sync-escape rule has nothing to flag here.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import queue as _queue
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .engine import Result, aggregate_metrics
+from .sampling import SamplingParams
+
+
+class Backpressure(Exception):
+    """Admission rejected; the HTTP layer maps this to 429."""
+
+    def __init__(self, reason: str, retry_after_s: float):
+        super().__init__(reason)
+        self.reason = reason
+        self.retry_after_s = retry_after_s
+
+
+class _Stream:
+    """Per-request fan-out endpoint: the engine thread pushes, the
+    owning asyncio handler awaits.  Items are tuples:
+    ``("token", id, index, time_s)``, ``("finish", reason, n_tokens)``,
+    ``("error", message)``."""
+
+    __slots__ = ("uid", "queue", "loop")
+
+    def __init__(self, uid: int, loop: asyncio.AbstractEventLoop):
+        self.uid = uid
+        self.loop = loop
+        self.queue: asyncio.Queue = asyncio.Queue()
+
+    def push(self, item: tuple):    # engine thread only
+        self.loop.call_soon_threadsafe(self.queue.put_nowait, item)
+
+
+def _host_token(tok) -> object:
+    """TokenEvent.token (host-side numpy after harvest) -> JSON value."""
+    arr = np.asarray(tok)
+    return int(arr) if arr.ndim == 0 else arr.tolist()
+
+
+class EngineBridge:
+    """The asyncio <-> engine-thread seam.
+
+    ``submit``/``abort``/``metrics`` are called from the event loop
+    thread; everything touching the :class:`LLMEngine` runs on the
+    bridge's own thread.  The engine thread publishes a load snapshot
+    (open depth, scheduler queue length, free-block fraction) each loop
+    iteration by atomically swapping a dict reference, so admission
+    decisions never block on the engine."""
+
+    def __init__(self, llm, *, max_queue_depth: int = 64,
+                 min_free_block_frac: float = 0.0,
+                 retry_after_s: float = 0.5, history: int = 4096,
+                 idle_poll_s: float = 0.02):
+        self._llm = llm
+        self.max_queue_depth = max_queue_depth
+        self.min_free_block_frac = min_free_block_frac
+        self.retry_after_s = retry_after_s
+        self._history_cap = history
+        self._idle_poll_s = idle_poll_s
+        self._inbox: _queue.Queue = _queue.Queue()
+        self._lock = threading.Lock()
+        self._streams: Dict[int, _Stream] = {}
+        self._next_uid = 0
+        self._depth = 0                 # submitted and not yet finished
+        self._history: List[Result] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._t_start = time.perf_counter()
+        self.healthy = True
+        self.counters = {"submitted": 0, "completed": 0, "aborted": 0,
+                         "rejected": 0, "client_disconnects": 0,
+                         "engine_errors": 0}
+        self._snapshot: dict = {"depth": 0}
+
+    # ---------------------------------------------------- asyncio side
+    def start(self):
+        if self._thread is not None:
+            return
+        self._t_start = time.perf_counter()
+        self._thread = threading.Thread(target=self._run,
+                                        name="ppd-engine", daemon=True)
+        self._thread.start()
+
+    def submit(self, prompt: np.ndarray, sp: SamplingParams,
+               loop: asyncio.AbstractEventLoop) -> _Stream:
+        """Admit one request or raise :class:`Backpressure`.  Returns
+        the stream the engine thread will push into."""
+        with self._lock:
+            if self._stop.is_set() or not self.healthy:
+                raise Backpressure("server shutting down",
+                                   self.retry_after_s)
+            if self._depth >= self.max_queue_depth:
+                self.counters["rejected"] += 1
+                raise Backpressure(
+                    f"open-request depth {self._depth} >= "
+                    f"max_queue_depth {self.max_queue_depth}",
+                    self.retry_after_s)
+            frac = self._snapshot.get("free_block_frac")
+            if (self.min_free_block_frac > 0.0 and frac is not None
+                    and frac < self.min_free_block_frac
+                    and self._depth > 0):
+                self.counters["rejected"] += 1
+                raise Backpressure(
+                    f"block pool below watermark "
+                    f"({frac:.3f} < {self.min_free_block_frac})",
+                    self.retry_after_s)
+            uid = self._next_uid
+            self._next_uid += 1
+            stream = _Stream(uid, loop)
+            self._streams[uid] = stream
+            self._depth += 1
+            self.counters["submitted"] += 1
+        self._inbox.put(("submit", uid, prompt, sp))
+        return stream
+
+    def abort(self, uid: int):
+        """Route a cancellation to the engine thread (client
+        disconnect); safe for unknown / already-finished uids."""
+        self.counters["client_disconnects"] += 1
+        self._inbox.put(("abort", uid))
+
+    def shutdown(self, timeout: float = 30.0):
+        """Stop admitting, drain in-flight requests, join the thread."""
+        self._stop.set()
+        self._inbox.put(("noop",))
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    @property
+    def accepting(self) -> bool:
+        return self.healthy and not self._stop.is_set()
+
+    def metrics(self) -> dict:
+        with self._lock:
+            hist = list(self._history)
+            counters = dict(self.counters)
+        makespan = time.perf_counter() - self._t_start
+        return {
+            "server": counters,
+            "load": dict(self._snapshot),
+            "aggregate": aggregate_metrics(hist, makespan),
+        }
+
+    @property
+    def vocab_size(self) -> Optional[int]:
+        cfg = getattr(self._llm, "model_cfg", None)
+        return getattr(cfg, "vocab_size", None)
+
+    # ----------------------------------------------------- engine side
+    def _run(self):
+        llm = self._llm
+        try:
+            while True:
+                while True:
+                    try:
+                        self._handle_cmd(self._inbox.get_nowait())
+                    except _queue.Empty:
+                        break
+                if llm.has_unfinished:
+                    for ev in llm.step():
+                        if ev.finished or ev.token is None:
+                            continue    # finish is signaled by the Result
+                        st = self._streams.get(ev.uid)
+                        if st is not None:
+                            st.push(("token", _host_token(ev.token),
+                                     ev.index, ev.time_s))
+                for r in llm.drain_results():
+                    self._finish(r)
+                self._publish()
+                if llm.has_unfinished:
+                    continue
+                if self._stop.is_set():
+                    return
+                # idle: block on the inbox instead of spinning
+                try:
+                    self._handle_cmd(self._inbox.get(
+                        timeout=self._idle_poll_s))
+                except _queue.Empty:
+                    pass
+        except Exception as e:      # engine-side failure: fail open work
+            self.counters["engine_errors"] += 1
+            self.healthy = False
+            self._fail_all(f"engine thread died: {e!r}")
+
+    def _handle_cmd(self, cmd: tuple):
+        kind = cmd[0]
+        if kind == "submit":
+            _, uid, prompt, sp = cmd
+            try:
+                # stamp the arrival on the ENGINE clock (offset from its
+                # first step): per-request TTFT / queue-wait metrics in
+                # the /metrics aggregate measure from true arrival, not
+                # from engine start
+                eng = self._llm.engine
+                t0 = getattr(eng, "_t0", None)
+                arrival = (max(eng._clock() - t0, 0.0)
+                           if t0 is not None else 0.0)
+                self._llm.add_request(prompt, sp, request_id=uid,
+                                      arrival_s=arrival)
+            except Exception as e:
+                # per-request rejection (capacity, greedy-only strategy)
+                # is not an engine error: report it on the one stream
+                with self._lock:
+                    st = self._streams.pop(uid, None)
+                    self._depth -= 1
+                if st is not None:
+                    st.push(("error", str(e)))
+        elif kind == "abort":
+            self._llm.abort_request(cmd[1])
+
+    def _finish(self, r: Result):
+        with self._lock:
+            st = self._streams.pop(r.uid, None)
+            # every Result the engine emits is a bridge-submitted
+            # request still counted in the open depth
+            self._depth = max(self._depth - 1, 0)
+            self._history.append(r)
+            if len(self._history) > self._history_cap:
+                del self._history[:len(self._history) - self._history_cap]
+            if r.finish_reason == "abort":
+                self.counters["aborted"] += 1
+            else:
+                self.counters["completed"] += 1
+        if st is not None:
+            st.push(("finish", r.finish_reason, len(r.tokens)))
+
+    def _fail_all(self, msg: str):
+        with self._lock:
+            streams = list(self._streams.values())
+            self._streams.clear()
+            self._depth = 0
+        for st in streams:
+            st.push(("error", msg))
+
+    def _publish(self):
+        eng = getattr(self._llm, "engine", None)
+        snap = {
+            "depth": self._depth,
+            "scheduler_queue": len(getattr(eng, "queue", ())),
+            "uptime_s": time.perf_counter() - self._t_start,
+        }
+        bm = getattr(eng, "block_mgr", None)
+        if bm is not None:
+            snap["free_blocks"] = bm.free_blocks
+            snap["num_blocks"] = bm.num_blocks
+            snap["free_block_frac"] = (bm.free_blocks /
+                                       max(bm.num_blocks, 1))
+        self._snapshot = snap       # atomic reference swap
+
+
+# ----------------------------------------------------------- HTTP layer
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            405: "Method Not Allowed", 429: "Too Many Requests",
+            500: "Internal Server Error", 503: "Service Unavailable"}
+
+
+def _response(status: int, body: bytes,
+              content_type: str = "application/json",
+              extra: Tuple[Tuple[str, str], ...] = ()) -> bytes:
+    head = [f"HTTP/1.1 {status} {_REASONS.get(status, '')}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(body)}",
+            "Connection: close"]
+    head += [f"{k}: {v}" for k, v in extra]
+    return ("\r\n".join(head) + "\r\n\r\n").encode() + body
+
+
+def _error_body(status: int, message: str, err_type: str) -> bytes:
+    return json.dumps({"error": {"message": message, "type": err_type,
+                                 "code": status}}).encode()
+
+
+class HTTPServer:
+    """The hand-rolled asyncio HTTP/1.1 server over one
+    :class:`EngineBridge`.  ``port=0`` binds an ephemeral port
+    (re-read ``self.port`` after :meth:`start`)."""
+
+    def __init__(self, bridge: EngineBridge, *, host: str = "127.0.0.1",
+                 port: int = 8000, model_name: str = "ppd"):
+        self.bridge = bridge
+        self.host, self.port = host, port
+        self.model_name = model_name
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._conns: set = set()
+
+    # ------------------------------------------------------- lifecycle
+    async def start(self):
+        self.bridge.start()
+        self._server = await asyncio.start_server(
+            self._client, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    async def stop(self):
+        """Graceful shutdown: stop accepting, let in-flight handlers
+        finish, drain the engine, join its thread."""
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        if self._conns:
+            await asyncio.wait(list(self._conns), timeout=30.0)
+        await asyncio.get_running_loop().run_in_executor(
+            None, self.bridge.shutdown)
+
+    async def serve_forever(self):
+        await self.start()
+        async with self._server:
+            await self._server.serve_forever()
+
+    # ------------------------------------------------------ connection
+    async def _client(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter):
+        task = asyncio.current_task()
+        self._conns.add(task)
+        try:
+            req = await self._read_request(reader)
+            if req is None:
+                return
+            method, path, headers, body = req
+            if path == "/healthz":
+                ok = self.bridge.accepting
+                status = 200 if ok else 503
+                writer.write(_response(status, json.dumps(
+                    {"status": "ok" if ok else "unavailable"}).encode()))
+            elif path == "/metrics":
+                writer.write(_response(200, json.dumps(
+                    self.bridge.metrics()).encode()))
+            elif path == "/v1/completions":
+                if method != "POST":
+                    writer.write(_response(405, _error_body(
+                        405, "use POST", "invalid_request_error")))
+                else:
+                    await self._completions(reader, writer, body)
+            else:
+                writer.write(_response(404, _error_body(
+                    404, f"no route for {path}", "invalid_request_error")))
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError,
+                asyncio.IncompleteReadError):
+            pass
+        finally:
+            self._conns.discard(task)
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    @staticmethod
+    async def _read_request(reader):
+        line = await reader.readline()
+        if not line:
+            return None
+        parts = line.decode("latin-1").split()
+        if len(parts) < 2:
+            return None
+        method, path = parts[0], parts[1]
+        headers = {}
+        while True:
+            h = await reader.readline()
+            if h in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = h.decode("latin-1").partition(":")
+            headers[k.strip().lower()] = v.strip()
+        n = int(headers.get("content-length", "0") or 0)
+        body = await reader.readexactly(n) if n else b""
+        return method, path, headers, body
+
+    # ------------------------------------------------------ completion
+    def _encode_prompt(self, prompt) -> np.ndarray:
+        if isinstance(prompt, str):
+            # no tokenizer in this repo: deterministic byte-level
+            # fallback, folded into the model's vocab
+            vocab = self.bridge.vocab_size or 256
+            ids = np.frombuffer(prompt.encode("utf-8"), np.uint8)
+            return (ids.astype(np.int32) % vocab)
+        if isinstance(prompt, list) and prompt \
+                and all(isinstance(t, int) for t in prompt):
+            return np.asarray(prompt, np.int32)
+        raise ValueError(
+            "prompt must be a non-empty token-id array or a string "
+            "(batched prompt lists are not supported)")
+
+    @staticmethod
+    def _sampling(payload: dict) -> SamplingParams:
+        stop = payload.get("stop_token_ids", payload.get("stop", ()))
+        if stop and not all(isinstance(t, int) for t in stop):
+            raise ValueError("stop / stop_token_ids must be token ids "
+                             "(no tokenizer is mounted)")
+        return SamplingParams(
+            temperature=float(payload.get("temperature", 0.0)),
+            top_k=int(payload.get("top_k", 0)),
+            top_p=float(payload.get("top_p", 1.0)),
+            max_tokens=int(payload.get("max_tokens", 16)),
+            stop_token_ids=tuple(stop or ()),
+            seed=payload.get("seed"))
+
+    async def _completions(self, reader, writer, body: bytes):
+        try:
+            payload = json.loads(body or b"{}")
+            if not isinstance(payload, dict):
+                raise ValueError("request body must be a JSON object")
+            prompt = self._encode_prompt(payload.get("prompt"))
+            sp = self._sampling(payload)
+            stream_mode = bool(payload.get("stream", False))
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            writer.write(_response(400, _error_body(
+                400, str(e), "invalid_request_error")))
+            return
+        try:
+            st = self.bridge.submit(prompt, sp,
+                                    asyncio.get_running_loop())
+        except Backpressure as e:
+            writer.write(_response(
+                429, _error_body(429, e.reason, "rate_limit_error"),
+                extra=(("Retry-After",
+                        f"{max(e.retry_after_s, 0.0):.3f}"),)))
+            return
+        if stream_mode:
+            await self._stream_response(reader, writer, st)
+        else:
+            await self._json_response(reader, writer, st, len(prompt))
+
+    def _completion_body(self, uid: int, ids: list, reason: str,
+                         n_prompt: int) -> bytes:
+        return json.dumps({
+            "id": f"cmpl-{uid}",
+            "object": "text_completion",
+            "created": int(time.time()),
+            "model": self.model_name,
+            "choices": [{
+                "index": 0,
+                # no detokenizer: text is the space-joined token ids
+                "text": " ".join(str(t) for t in ids),
+                "token_ids": ids,
+                "finish_reason": reason,
+            }],
+            "usage": {"prompt_tokens": n_prompt,
+                      "completion_tokens": len(ids),
+                      "total_tokens": n_prompt + len(ids)},
+        }).encode()
+
+    @staticmethod
+    async def _wait_eof(reader):
+        """Resolve when the client half-closes; stray pipelined bytes
+        are drained, only EOF counts as a disconnect."""
+        while True:
+            data = await reader.read(256)
+            if not data:
+                return
+
+    async def _next_item(self, st: _Stream, disconnect: asyncio.Task):
+        """One stream item, or None the moment the client hangs up."""
+        get = asyncio.ensure_future(st.queue.get())
+        done, _ = await asyncio.wait(
+            {get, disconnect}, return_when=asyncio.FIRST_COMPLETED)
+        if get in done:
+            return get.result()
+        get.cancel()
+        return None
+
+    async def _json_response(self, reader, writer, st: _Stream,
+                             n_prompt: int):
+        # EOF on the reader = the client dropped the connection while
+        # waiting; reclaim its capacity instead of decoding into the void
+        disconnect = asyncio.ensure_future(self._wait_eof(reader))
+        ids: list = []
+        try:
+            while True:
+                item = await self._next_item(st, disconnect)
+                if item is None:
+                    self.bridge.abort(st.uid)
+                    return
+                if item[0] == "token":
+                    ids.append(item[1])
+                elif item[0] == "finish":
+                    writer.write(_response(200, self._completion_body(
+                        st.uid, ids, item[1], n_prompt)))
+                    return
+                else:           # ("error", msg)
+                    writer.write(_response(400, _error_body(
+                        400, item[1], "invalid_request_error")))
+                    return
+        finally:
+            disconnect.cancel()
+
+    async def _stream_response(self, reader, writer, st: _Stream):
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: text/event-stream\r\n"
+                     b"Cache-Control: no-cache\r\n"
+                     b"Connection: close\r\n\r\n")
+
+        def sse(obj) -> bytes:
+            return b"data: " + json.dumps(obj).encode() + b"\n\n"
+
+        def chunk(tid, reason):
+            return sse({
+                "id": f"cmpl-{st.uid}", "object": "text_completion",
+                "model": self.model_name,
+                "choices": [{"index": 0,
+                             "text": "" if tid is None else f"{tid} ",
+                             "token_ids": [] if tid is None else [tid],
+                             "finish_reason": reason}]})
+
+        disconnect = asyncio.ensure_future(self._wait_eof(reader))
+        try:
+            while True:
+                item = await self._next_item(st, disconnect)
+                if item is None:
+                    self.bridge.abort(st.uid)
+                    return
+                if item[0] == "token":
+                    writer.write(chunk(item[1], None))
+                    await writer.drain()
+                elif item[0] == "finish":
+                    writer.write(chunk(None, item[1]))
+                    writer.write(b"data: [DONE]\n\n")
+                    await writer.drain()
+                    return
+                else:
+                    writer.write(sse({"error": {"message": item[1]}}))
+                    await writer.drain()
+                    return
+        except (ConnectionResetError, BrokenPipeError):
+            # mid-stream drop surfaces as a write failure
+            self.bridge.abort(st.uid)
+        finally:
+            disconnect.cancel()
+
+
+def make_server(llm, *, host: str = "127.0.0.1", port: int = 8000,
+                model_name: str = "ppd", max_queue_depth: int = 64,
+                min_free_block_frac: float = 0.0,
+                retry_after_s: float = 0.5) -> HTTPServer:
+    """Convenience: bridge + server over one :class:`LLMEngine`."""
+    bridge = EngineBridge(llm, max_queue_depth=max_queue_depth,
+                          min_free_block_frac=min_free_block_frac,
+                          retry_after_s=retry_after_s)
+    return HTTPServer(bridge, host=host, port=port, model_name=model_name)

@@ -1,0 +1,229 @@
+"""Request-cancellation tests (``abort_request``).
+
+The cancellation matrix from the ISSUE: abort mid-prefill, mid-decode,
+and post-finish (idempotent no-op) across {ring, paged} x harvest_every
+{0, 4}, asserting BlockManager free-list conservation (the kvsan shadow
+audit's class-5 check runs inside every ``free_seq`` when the sanitizer
+is on) and that surviving requests' outputs stay token-identical to a
+run that never saw the aborted request.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import kvsan
+from repro.configs import get_smoke_config
+from repro.core import init_prompt_params
+from repro.models import init_params
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
+
+CFG = get_smoke_config("granite-3-2b")
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    return params, ppd
+
+
+@pytest.fixture
+def san():
+    """Sanitizer on for one test; ambient state restored after."""
+    was = kvsan.active()
+    kvsan.enable()
+    kvsan.clear_report()
+    yield kvsan
+    if not was:
+        kvsan.disable()
+    kvsan.set_current(None)
+    kvsan.clear_report()
+    kvsan.clear_donated()
+
+
+def _build(model, **overrides):
+    params, ppd = model
+    kw = dict(decode="ppd", scheduler="continuous", capacity=256,
+              batch_size=3)
+    kw.update(overrides)
+    config = EngineConfig(**kw)
+    return LLMEngine(config, params=params, cfg=CFG, ppd_params=ppd)
+
+
+def _prompts(n, plen=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, size=plen) for _ in range(n)]
+
+
+def _run_all(llm):
+    results = {}
+    while llm.has_unfinished:
+        llm.step()
+        for r in llm.drain_results():
+            results[r.uid] = r
+    for r in llm.drain_results():
+        results[r.uid] = r
+    return results
+
+
+def _assert_pool_clean(llm):
+    bm = llm.engine.block_mgr
+    if bm is None:
+        return
+    assert bm.used_blocks == 0
+    assert len(bm._free) == bm.num_blocks
+
+
+@pytest.mark.parametrize("kv", ["ring", "paged"])
+@pytest.mark.parametrize("harvest", [0, 4])
+def test_abort_mid_decode_survivors_identical(model, san, kv, harvest):
+    """Aborting one in-flight request mid-decode frees its capacity and
+    leaves every other request's tokens untouched."""
+    prompts = _prompts(6)
+    victim = 2
+
+    ref = _build(model, kv=kv, harvest_every=harvest, sanitize=True)
+    for i, p in enumerate(prompts):
+        if i == victim:
+            continue
+        ref.add_request(p, SamplingParams(max_tokens=10), request_id=i)
+    ref_out = {u: r.tokens for u, r in _run_all(ref).items()}
+
+    llm = _build(model, kv=kv, harvest_every=harvest, sanitize=True)
+    for i, p in enumerate(prompts):
+        llm.add_request(p, SamplingParams(max_tokens=10), request_id=i)
+    results = {}
+    aborted = False
+    while llm.has_unfinished:
+        events = llm.step()
+        if not aborted and any(e.uid == victim and e.index >= 1
+                               for e in events):
+            assert llm.abort_request(victim) is True
+            aborted = True
+        for r in llm.drain_results():
+            results[r.uid] = r
+    for r in llm.drain_results():
+        results[r.uid] = r
+    assert aborted, "victim never produced a second token"
+    assert results[victim].finish_reason == "abort"
+    for uid, toks in ref_out.items():
+        assert np.array_equal(results[uid].tokens, toks), uid
+    _assert_pool_clean(llm)
+
+
+@pytest.mark.parametrize("kv", ["ring", "paged"])
+def test_abort_mid_prefill_chunked(model, san, kv):
+    """Aborting while a chunked prefill is in flight cancels the job,
+    returns its lane, and forgets the block reservation — the case
+    ``BlockManager.free_seq`` documents but nothing exercised."""
+    llm = _build(model, kv=kv, harvest_every=4, prefill_chunk=8,
+                 sanitize=True)
+    rng = np.random.default_rng(3)
+    llm.add_request(_prompts(1)[0], SamplingParams(max_tokens=6),
+                    request_id=0)
+    llm.add_request(rng.integers(0, CFG.vocab_size, size=64),
+                    SamplingParams(max_tokens=6), request_id=1)
+    results = {}
+    aborted = False
+    while llm.has_unfinished:
+        llm.step()
+        if not aborted:
+            mid = [s for s in llm.engine.slots
+                   if s.busy and s.req.uid == 1 and s.prefilling]
+            if mid:
+                assert llm.abort_request(1) is True
+                aborted = True
+                # the aborted job is gone and its lane is back in the
+                # pool (another request may legitimately still prefill)
+                assert all(j.req.uid != 1 for j in llm.engine._prefills)
+                assert (len(llm.engine._free_prows)
+                        + len(llm.engine._prefills)
+                        == llm.engine.prefill_parallelism)
+        for r in llm.drain_results():
+            results[r.uid] = r
+    for r in llm.drain_results():
+        results[r.uid] = r
+    assert aborted, "prefill finished before the abort fired"
+    assert results[1].finish_reason == "abort"
+    assert results[0].finish_reason == "length"
+    _assert_pool_clean(llm)
+
+
+@pytest.mark.parametrize("kv", ["ring", "paged"])
+@pytest.mark.parametrize("harvest", [0, 4])
+def test_abort_queued_and_post_finish(model, kv, harvest):
+    """A queued abort emits a zero-token Result without ever taking a
+    slot; aborting a finished or unknown uid is a no-op."""
+    llm = _build(model, kv=kv, harvest_every=harvest, batch_size=1)
+    prompts = _prompts(2)
+    a = llm.add_request(prompts[0], SamplingParams(max_tokens=4))
+    b = llm.add_request(prompts[1], SamplingParams(max_tokens=4))
+    llm.step()                      # admits a; b stays queued
+    assert llm.abort_request(b) is True
+    results = _run_all(llm)
+    assert results[b].finish_reason == "abort"
+    assert len(results[b].tokens) == 0
+    assert results[a].finish_reason == "length"
+    assert llm.abort_request(a) is False      # post-finish no-op
+    assert llm.abort_request(10_000) is False  # unknown uid no-op
+    _assert_pool_clean(llm)
+
+
+def test_abort_static_engine(model):
+    """Static scheduler: queued aborts drop out immediately; an
+    in-flight row stops harvesting and finishes with reason 'abort'."""
+    llm = _build(model, scheduler="static", batch_size=2)
+    prompts = _prompts(4)
+    uids = [llm.add_request(p, SamplingParams(max_tokens=6))
+            for p in prompts]
+    llm.step()                      # begins the first batch of 2
+    assert llm.abort_request(uids[3]) is True   # queued
+    assert llm.abort_request(uids[0]) is True   # in-flight row
+    assert llm.abort_request(uids[0]) is False  # already marked
+    results = _run_all(llm)
+    assert results[uids[0]].finish_reason == "abort"
+    assert results[uids[3]].finish_reason == "abort"
+    assert len(results[uids[3]].tokens) == 0
+    assert results[uids[1]].finish_reason == "length"
+    assert len(results[uids[1]].tokens) == 6
+
+
+def test_abort_reclaims_capacity_for_waiting_request(model, san):
+    """The point of the primitive: a waiting request is admitted into
+    the aborted request's freed capacity."""
+    llm = _build(model, kv="paged", harvest_every=4, batch_size=1,
+                 sanitize=True)
+    prompts = _prompts(2)
+    a = llm.add_request(prompts[0], SamplingParams(max_tokens=32))
+    b = llm.add_request(prompts[1], SamplingParams(max_tokens=4))
+    started = False
+    results = {}
+    while llm.has_unfinished:
+        events = llm.step()
+        if not started and any(e.uid == a for e in events):
+            started = True
+            assert llm.abort_request(a) is True
+        for r in llm.drain_results():
+            results[r.uid] = r
+    for r in llm.drain_results():
+        results[r.uid] = r
+    assert results[a].finish_reason == "abort"
+    assert results[b].finish_reason == "length"
+    assert len(results[b].tokens) == 4
+    # b waited in the queue until a's abort freed the only slot
+    assert results[b].queue_wait_s >= 0.0
+    assert llm.engine.stats["admitted"] == 2
+    _assert_pool_clean(llm)
+
+
+def test_abort_result_has_arrival_echo(model):
+    """Result.arrival_s echoes the request's arrival offset (the fleet
+    max-concurrency sweep reconstructs intervals from it)."""
+    llm = _build(model, batch_size=2)
+    u = llm.add_request(_prompts(1)[0], SamplingParams(max_tokens=3),
+                        arrival_s=0.25)
+    # queued abort before the engine ever steps
+    assert llm.abort_request(u) is True
+    (r,) = llm.drain_results()
+    assert r.uid == u and r.arrival_s == 0.25

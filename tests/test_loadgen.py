@@ -1,0 +1,199 @@
+"""Load-harness tests: the arrival-trace generators (rate / CV /
+determinism), the new aggregate_metrics fields (TPOT percentiles,
+observed max concurrency), the SLO-goodput accounting in
+``loadgen.summarize``, and one over-the-wire open-loop run with
+mid-stream disconnects against a live server.
+"""
+import asyncio
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving import (Result, aggregate_metrics, gamma_arrivals,
+                           gamma_trace, max_concurrency_observed,
+                           onoff_arrivals, onoff_trace,
+                           poisson_arrivals, poisson_trace)
+from repro.serving.loadgen import (SLO, RequestRecord, make_arrivals,
+                                   run_load, summarize)
+
+
+# ------------------------------------------------- arrival generators
+def _stats(arr):
+    gaps = np.diff(np.concatenate([[0.0], arr]))
+    mean = gaps.mean()
+    cv = gaps.std() / mean
+    return mean, cv
+
+
+def test_poisson_arrivals_rate_and_cv():
+    arr = poisson_arrivals(5000, rate_per_s=50.0, seed=0)
+    assert np.all(np.diff(arr) > 0) and arr[0] > 0
+    mean, cv = _stats(arr)
+    assert mean == pytest.approx(1 / 50.0, rel=0.1)
+    assert cv == pytest.approx(1.0, abs=0.15)       # exponential: CV=1
+
+
+def test_gamma_arrivals_rate_and_cv():
+    arr = gamma_arrivals(5000, rate_per_s=50.0, cv=2.0, seed=1)
+    mean, cv = _stats(arr)
+    assert mean == pytest.approx(1 / 50.0, rel=0.1)  # same mean rate
+    assert cv == pytest.approx(2.0, abs=0.3)         # but heavy-tailed
+    with pytest.raises(ValueError):
+        gamma_arrivals(10, 1.0, cv=0.0)
+
+
+def test_onoff_arrivals_rate_and_burstiness():
+    arr = onoff_arrivals(5000, rate_per_s=100.0, seed=2,
+                         duty=0.25, mean_on_s=0.5)
+    mean, cv = _stats(arr)
+    # long-run mean rate matches the requested rate; the OFF gaps make
+    # the interarrival CV strictly burstier than Poisson
+    assert mean == pytest.approx(1 / 100.0, rel=0.15)
+    assert cv > 1.2
+    with pytest.raises(ValueError):
+        onoff_arrivals(10, 1.0, duty=0.0)
+    with pytest.raises(ValueError):
+        onoff_arrivals(10, 1.0, duty=1.5)
+
+
+def test_arrivals_deterministic_and_dispatch():
+    for kind in ("poisson", "onoff", "gamma"):
+        a = make_arrivals(kind, 64, 20.0, seed=7)
+        b = make_arrivals(kind, 64, 20.0, seed=7)
+        assert np.array_equal(a, b), kind
+        assert not np.array_equal(a, make_arrivals(kind, 64, 20.0,
+                                                   seed=8))
+    with pytest.raises(ValueError):
+        make_arrivals("uniform", 8, 1.0)
+
+
+def test_trace_wrappers_stamp_requests():
+    from repro.serving import Request
+
+    def reqs(n):
+        return [Request(uid=i, prompt=np.arange(4), max_new_tokens=2)
+                for i in range(n)]
+
+    for trace in (poisson_trace, onoff_trace, gamma_trace):
+        out = trace(reqs(32), rate_per_s=40.0, seed=3)
+        arr = [r.arrival_s for r in out]
+        assert arr == sorted(arr) and arr[0] > 0
+        # rate<=0 disables stamping (the benchmarks' "no trace" path)
+        untouched = trace(reqs(4), rate_per_s=0.0)
+        assert all(r.arrival_s == 0.0 for r in untouched)
+
+
+# ------------------------------------------- aggregate_metrics growth
+def _res(uid, arrival, queue_wait, wall, n=4, tpot=0.1):
+    return Result(uid=uid, tokens=np.arange(n), steps=n, wall_s=wall,
+                  ttft_s=0.05, tpot_s=tpot, goodput_tok_s=n / wall,
+                  queue_wait_s=queue_wait, arrival_s=arrival)
+
+
+def test_max_concurrency_observed():
+    # service intervals: [0,2) [1,3) [2,3) and one queued arrival whose
+    # service only starts at 1.5 — peak overlap is {r2, r3@queued, r1}=3
+    rs = [_res(0, 0.0, 0.0, 2.0),
+          _res(1, 1.0, 0.0, 2.0),      # wall measured from arrival
+          _res(2, 2.0, 0.0, 1.0),
+          _res(3, 0.5, 1.0, 2.5)]      # in service 1.5 .. 3.0
+    assert max_concurrency_observed(rs) == 3
+    assert max_concurrency_observed([]) == 0
+    # back-to-back at the same instant: departure precedes arrival
+    rs = [_res(0, 0.0, 0.0, 1.0), _res(1, 1.0, 0.0, 1.0)]
+    assert max_concurrency_observed(rs) == 1
+
+
+def test_aggregate_metrics_tpot_percentiles():
+    rs = [_res(i, 0.0, 0.0, 1.0, tpot=0.01 * (i + 1))
+          for i in range(100)]
+    rs.append(_res(100, 0.0, 0.0, 1.0, n=1, tpot=math.nan))
+    m = aggregate_metrics(rs, makespan_s=1.0)
+    assert m["p50_tpot_s"] == pytest.approx(0.505, abs=0.02)
+    assert m["p99_tpot_s"] == pytest.approx(1.0 * 0.99, abs=0.02)
+    assert m["max_concurrency_observed"] == 101
+    assert m["tpot_defined_requests"] == 100
+
+
+# --------------------------------------------------- SLO accounting
+def _rec(idx, status="ok", ttft=0.1, tpot=0.05, tokens=8):
+    r = RequestRecord(idx=idx, scheduled_s=float(idx))
+    r.status, r.ttft_s, r.tpot_s, r.tokens = status, ttft, tpot, tokens
+    return r
+
+
+def test_summarize_slo_goodput():
+    slo = SLO(ttft_s=1.0, tpot_s=0.1)
+    recs = [
+        _rec(0),                                   # meets both
+        _rec(1, ttft=5.0),                         # late first token
+        _rec(2, tpot=0.5),                         # slow decode
+        _rec(3, status="rejected", tokens=0),      # 429
+        _rec(4, status="disconnect", tokens=2),    # client hangup
+        _rec(5, tpot=math.nan, tokens=1),          # 1 token: TTFT only
+    ]
+    s = summarize(recs, makespan_s=2.0, slo=slo)
+    assert s["requests"] == 6
+    assert s["completed"] == 4
+    assert s["rejected"] == 1 and s["disconnects"] == 1
+    assert s["slo_attained"] == 2                  # recs 0 and 5
+    assert s["slo_attainment"] == pytest.approx(2 / 6)
+    # goodput counts only SLO-met tokens: 8 + 1 over 2 s
+    assert s["slo_goodput_tok_s"] == pytest.approx(9 / 2.0)
+    # raw throughput counts every completed token: 8+8+8+1
+    assert s["throughput_tok_s"] == pytest.approx(25 / 2.0)
+
+
+# ------------------------------------------------- over-the-wire run
+def test_open_loop_trace_against_live_server():
+    """A bursty open-loop trace with periodic mid-stream disconnects:
+    zero engine-side errors, every record classified, aborted capacity
+    reclaimed (pool empty afterwards)."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import init_prompt_params
+    from repro.models import init_params
+    from repro.serving import EngineConfig, LLMEngine
+    from repro.serving.server import make_server
+
+    cfg = get_smoke_config("granite-3-2b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(cfg, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    llm = LLMEngine(EngineConfig(decode="ppd", scheduler="continuous",
+                                 kv="paged", capacity=256, batch_size=4,
+                                 harvest_every=2),
+                    params=params, cfg=cfg, ppd_params=ppd)
+
+    async def body():
+        server = make_server(llm, port=0, max_queue_depth=32)
+        await server.start()
+        try:
+            n = 24
+            arrivals = make_arrivals("onoff", n, 40.0, seed=5)
+            rng = np.random.default_rng(5)
+            prompts = rng.integers(0, cfg.vocab_size, size=(n, 8))
+            report = await run_load(
+                "127.0.0.1", server.port, arrivals, prompts,
+                max_tokens=8, slo=SLO(ttft_s=30.0, tpot_s=5.0),
+                disconnect_every=6, disconnect_after=2)
+            assert report["errors"] == 0
+            assert report["disconnects"] == 4          # every 6th of 24
+            assert report["completed"] + report["rejected"] \
+                + report["disconnects"] == n
+            assert report["completed"] >= 1
+            assert report["slo_goodput_tok_s"] >= 0.0
+            assert server.bridge.counters["engine_errors"] == 0
+            assert server.bridge.counters["aborted"] >= 4
+
+            deadline = asyncio.get_running_loop().time() + 15.0
+            while (asyncio.get_running_loop().time() < deadline
+                   and server.bridge._depth > 0):
+                await asyncio.sleep(0.05)
+            assert server.bridge._depth == 0
+            assert llm.engine.block_mgr.used_blocks == 0
+        finally:
+            await server.stop()
+    asyncio.run(body())

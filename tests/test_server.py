@@ -1,0 +1,284 @@
+"""HTTP front-end tests (serving/server.py): the `server-smoke`
+scenarios — non-streaming completion, SSE stream, mid-stream client
+disconnect (capacity reclaimed), 429 under burst, graceful shutdown —
+plus request validation and the /healthz, /metrics endpoints.
+
+Each test boots a real asyncio server on an ephemeral port over a
+module-shared engine; the bridge (and its engine thread) is torn down
+per test so exactly one thread ever steps the engine.
+"""
+import asyncio
+import contextlib
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import kvsan
+from repro.configs import get_smoke_config
+from repro.core import init_prompt_params
+from repro.models import init_params
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
+from repro.serving.server import make_server
+
+CFG = get_smoke_config("granite-3-2b")
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ppd = init_prompt_params(CFG, jax.random.PRNGKey(1), m=3,
+                             base_embed=params["embed"])
+    return params, ppd
+
+
+@pytest.fixture(scope="module")
+def llm(model):
+    params, ppd = model
+    config = EngineConfig(decode="ppd", scheduler="continuous",
+                          kv="paged", capacity=256, batch_size=3,
+                          harvest_every=2)
+    return LLMEngine(config, params=params, cfg=CFG, ppd_params=ppd)
+
+
+@contextlib.asynccontextmanager
+async def serve(llm, **kw):
+    server = make_server(llm, port=0, **kw)
+    await server.start()
+    try:
+        yield server
+    finally:
+        await server.stop()
+
+
+async def http(port, method, path, payload=None):
+    """One request; returns (status, headers, body_bytes)."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps(payload).encode() if payload is not None else b""
+    writer.write(f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(body)}\r\n"
+                 f"Connection: close\r\n\r\n".encode() + body)
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    with contextlib.suppress(Exception):
+        await writer.wait_closed()
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    status = int(lines[0].split()[1])
+    headers = {}
+    for ln in lines[1:]:
+        k, _, v = ln.partition(":")
+        headers[k.strip().lower()] = v.strip()
+    return status, headers, rest
+
+
+async def sse_events(reader):
+    """Parse one SSE stream to completion; returns the event list."""
+    events = []
+    while True:
+        line = await reader.readline()
+        if not line:
+            return events, False
+        line = line.strip()
+        if not line.startswith(b"data: "):
+            continue
+        data = line[len(b"data: "):]
+        if data == b"[DONE]":
+            return events, True
+        events.append(json.loads(data))
+
+
+def test_non_streaming_completion(llm):
+    async def body():
+        async with serve(llm) as srv:
+            status, _, raw = await http(
+                srv.port, "POST", "/v1/completions",
+                {"prompt": [1, 2, 3, 4], "max_tokens": 5})
+            assert status == 200
+            out = json.loads(raw)
+            choice = out["choices"][0]
+            assert len(choice["token_ids"]) == 5
+            assert choice["finish_reason"] == "length"
+            assert out["usage"] == {"prompt_tokens": 4,
+                                    "completion_tokens": 5,
+                                    "total_tokens": 9}
+            assert out["object"] == "text_completion"
+            return choice["token_ids"]
+    ids = asyncio.run(body())
+    assert all(isinstance(t, int) for t in ids)
+
+
+def test_sse_stream_matches_non_streaming(llm):
+    async def body():
+        async with serve(llm) as srv:
+            payload = {"prompt": [7, 8, 9], "max_tokens": 6}
+            status, _, raw = await http(srv.port, "POST",
+                                        "/v1/completions", payload)
+            assert status == 200
+            plain = json.loads(raw)["choices"][0]["token_ids"]
+
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", srv.port)
+            pb = json.dumps({**payload, "stream": True}).encode()
+            writer.write(b"POST /v1/completions HTTP/1.1\r\n"
+                         b"Content-Length: %d\r\n\r\n" % len(pb) + pb)
+            await writer.drain()
+            head = await reader.readuntil(b"\r\n\r\n")
+            assert b"200" in head.split(b"\r\n")[0]
+            assert b"text/event-stream" in head
+            events, done = await sse_events(reader)
+            writer.close()
+            assert done, "stream must terminate with data: [DONE]"
+            streamed = [t for e in events
+                        for t in e["choices"][0]["token_ids"]]
+            finals = [e["choices"][0]["finish_reason"]
+                      for e in events if e["choices"][0]["finish_reason"]]
+            # greedy decode: streamed tokens == non-streaming tokens
+            assert streamed == plain
+            assert finals == ["length"]
+    asyncio.run(body())
+
+
+def test_backpressure_429_under_burst(llm):
+    async def body():
+        async with serve(llm, max_queue_depth=2) as srv:
+            results = await asyncio.gather(*[
+                http(srv.port, "POST", "/v1/completions",
+                     {"prompt": [1, 2, 3], "max_tokens": 8})
+                for _ in range(8)])
+            statuses = [s for s, _, _ in results]
+            assert statuses.count(200) >= 1
+            assert 429 in statuses, statuses
+            for s, headers, raw in results:
+                if s != 429:
+                    continue
+                assert float(headers["retry-after"]) >= 0.0
+                err = json.loads(raw)["error"]
+                assert err["type"] == "rate_limit_error"
+            assert srv.bridge.counters["engine_errors"] == 0
+            assert srv.bridge.counters["rejected"] == \
+                statuses.count(429)
+    asyncio.run(body())
+
+
+def test_mid_stream_disconnect_reclaims_blocks(llm):
+    """Dropping an SSE connection mid-stream aborts the request: open
+    depth returns to zero, the paged pool's blocks are all free (kvsan
+    conservation audits every free), and a later identical request
+    decodes the same tokens as one that was never disturbed."""
+    was = kvsan.active()
+    kvsan.enable()
+    try:
+        async def body():
+            async with serve(llm) as srv:
+                payload = {"prompt": [5, 6, 7], "max_tokens": 40,
+                           "stream": True}
+                reader, writer = await asyncio.open_connection(
+                    "127.0.0.1", srv.port)
+                pb = json.dumps(payload).encode()
+                writer.write(b"POST /v1/completions HTTP/1.1\r\n"
+                             b"Content-Length: %d\r\n\r\n" % len(pb)
+                             + pb)
+                await writer.drain()
+                await reader.readuntil(b"\r\n\r\n")
+                got = 0
+                while got < 2:          # two streamed tokens, then drop
+                    line = await reader.readline()
+                    if line.startswith(b"data: ") \
+                            and b"token_ids" in line:
+                        got += 1
+                writer.transport.abort()   # hard hangup mid-stream
+
+                deadline = asyncio.get_running_loop().time() + 15.0
+                while asyncio.get_running_loop().time() < deadline:
+                    if (srv.bridge.counters["aborted"] >= 1
+                            and srv.bridge._depth == 0):
+                        break
+                    await asyncio.sleep(0.05)
+                assert srv.bridge.counters["aborted"] >= 1
+                assert srv.bridge._depth == 0
+                bm = llm.engine.block_mgr
+                assert bm.used_blocks == 0
+
+                # survivors unaffected: same prompt, undisturbed, twice
+                s1, _, r1 = await http(
+                    srv.port, "POST", "/v1/completions",
+                    {"prompt": [5, 6, 7], "max_tokens": 6})
+                s2, _, r2 = await http(
+                    srv.port, "POST", "/v1/completions",
+                    {"prompt": [5, 6, 7], "max_tokens": 6})
+                assert s1 == 200 and s2 == 200
+                assert (json.loads(r1)["choices"][0]["token_ids"]
+                        == json.loads(r2)["choices"][0]["token_ids"])
+                assert srv.bridge.counters["engine_errors"] == 0
+        asyncio.run(body())
+    finally:
+        if not was:
+            kvsan.disable()
+        kvsan.set_current(None)
+        kvsan.clear_report()
+        kvsan.clear_donated()
+
+
+def test_healthz_metrics_and_validation(llm):
+    async def body():
+        async with serve(llm) as srv:
+            status, _, raw = await http(srv.port, "GET", "/healthz")
+            assert status == 200 and json.loads(raw)["status"] == "ok"
+
+            # exercise one request so the aggregate is non-trivial
+            await http(srv.port, "POST", "/v1/completions",
+                       {"prompt": [1, 2], "max_tokens": 3})
+            status, _, raw = await http(srv.port, "GET", "/metrics")
+            assert status == 200
+            m = json.loads(raw)
+            assert m["server"]["completed"] >= 1
+            assert "p99_ttft_s" in m["aggregate"]
+            assert "p99_tpot_s" in m["aggregate"]
+            assert "max_concurrency_observed" in m["aggregate"]
+            assert "depth" in m["load"]
+
+            # string prompts use the deterministic byte fallback
+            status, _, raw = await http(
+                srv.port, "POST", "/v1/completions",
+                {"prompt": "hi there", "max_tokens": 2})
+            assert status == 200
+
+            # malformed prompts are a 400, not an engine error
+            for bad in ({"prompt": [], "max_tokens": 2},
+                        {"prompt": [[1, 2]], "max_tokens": 2},
+                        {"prompt": {"x": 1}}):
+                status, _, raw = await http(srv.port, "POST",
+                                            "/v1/completions", bad)
+                assert status == 400
+                assert json.loads(raw)["error"]["type"] == \
+                    "invalid_request_error"
+            status, _, _ = await http(srv.port, "GET", "/nope")
+            assert status == 404
+            status, _, _ = await http(srv.port, "GET",
+                                      "/v1/completions")
+            assert status == 405
+            assert srv.bridge.counters["engine_errors"] == 0
+    asyncio.run(body())
+
+
+def test_graceful_shutdown_drains_inflight(llm):
+    """stop() lets an in-flight request finish, then joins the engine
+    thread; afterwards the port refuses connections."""
+    async def body():
+        server = make_server(llm, port=0)
+        await server.start()
+        task = asyncio.create_task(http(
+            server.port, "POST", "/v1/completions",
+            {"prompt": [9, 9, 9], "max_tokens": 6}))
+        await asyncio.sleep(0.05)       # let it get submitted
+        await server.stop()
+        status, _, raw = await task
+        assert status == 200
+        assert len(json.loads(raw)["choices"][0]["token_ids"]) == 6
+        assert not server.bridge._thread.is_alive()
+        with pytest.raises(OSError):
+            await asyncio.open_connection("127.0.0.1", server.port)
+    asyncio.run(body())
